@@ -1,0 +1,47 @@
+//! Quickstart: the TRACE device in ten lines.
+//!
+//! Write a KV window and a weight block into each device design, read them
+//! back bit-exactly, and compare stored footprints and reduced-precision
+//! fetch traffic.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use trace_cxl::bitplane::{KvWindow, PrecisionView};
+use trace_cxl::codec::CodecPolicy;
+use trace_cxl::cxl::{CxlDevice, Design};
+use trace_cxl::gen::{KvGen, WeightGen};
+use trace_cxl::util::stats::human_bytes;
+use trace_cxl::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(1);
+    let kv = KvGen::default_for(64).generate(&mut rng, 64); // 64 tokens x 64 ch
+    let weights = WeightGen::default_for(512).generate(&mut rng, 2048); // one 4 KB block
+
+    println!("== TRACE quickstart: one KV window + one weight block ==\n");
+    for design in [Design::Plain, Design::GComp, Design::Trace] {
+        let mut dev = CxlDevice::new(design, CodecPolicy::AllBest);
+        dev.write_kv(0x0000, &kv, KvWindow::new(64, 64));
+        dev.write_weights(0x4000, &weights, trace_cxl::formats::Fmt::Bf16);
+
+        // lossless read-back is bit-exact on every design
+        assert_eq!(dev.read(0x0000)?, kv);
+        assert_eq!(dev.read(0x4000)?, weights);
+
+        // a reduced-precision alias read (sign+exp+3 mantissa planes)
+        let before = dev.stats.dram_bytes_read;
+        dev.read_view(0x0000, &PrecisionView::bf16_mantissa(3, 1))?;
+        let view_bytes = dev.stats.dram_bytes_read - before;
+
+        println!(
+            "{:<10}  stored {:>10}  (ratio {:>5.2}x)   FP12-alias fetch: {:>8}",
+            design.name(),
+            human_bytes(dev.footprint_bytes() as f64),
+            dev.overall_ratio(),
+            human_bytes(view_bytes as f64),
+        );
+    }
+    println!("\nTRACE stores less and fetches fewer bytes for reduced-precision views,");
+    println!("while every design returns identical host-visible values (paper §III-D).");
+    Ok(())
+}

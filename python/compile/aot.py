@@ -1,0 +1,173 @@
+"""AOT driver: lower the L2 model to HLO *text* + emit params.bin and
+manifest.json for the Rust runtime.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Optionally runs a short calibration training loop on the synthetic corpus
+(Zipf + Markov, mirroring rust `gen::workload::SynthCorpus`) so the
+exported weights and the KV they produce have non-degenerate statistics;
+the loss curve is logged to artifacts/train_log.json and EXPERIMENTS.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--train-steps N]
+        [--test-dims]  (tiny shapes, used by pytest)
+"""
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import Dims, TEST_DIMS, PARAM_ORDER, decode_step, init_params, loss_fn, prefill
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def synth_corpus(vocab: int, n: int, seed: int) -> np.ndarray:
+    """Zipf + Markov synthetic token stream (mirrors the Rust generator)."""
+    rng = np.random.default_rng(seed)
+    toks = np.zeros(n, np.int32)
+    prev = 0
+    for i in range(n):
+        if rng.random() < 0.45:
+            tok = (prev + 1 + rng.integers(0, 7)) % vocab
+        else:
+            u = max(rng.random(), 1e-9)
+            tok = int(u ** -0.8 - 1.0) % vocab
+        toks[i] = tok
+        prev = tok
+    return toks
+
+
+def train(params, dims: Dims, steps: int, seed: int):
+    """Brief Adam calibration training; returns (params, loss_log)."""
+    if steps <= 0:
+        return params, []
+    lr = 3e-4
+    b, t = 4, min(dims.t_prompt * 2, dims.t_max)
+    corpus = synth_corpus(dims.vocab, b * t * (steps + 1) + 1, seed)
+
+    grad_fn = jax.jit(jax.value_and_grad(lambda p, x: loss_fn(p, x, dims)))
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    log = []
+    for step in range(steps):
+        off = step * b * t
+        batch = corpus[off:off + b * t].reshape(b, t)
+        loss, g = grad_fn(params, jnp.asarray(batch))
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree.map(lambda a, gg: b1 * a + (1 - b1) * gg, m, g)
+        v = jax.tree.map(lambda a, gg: b2 * a + (1 - b2) * gg * gg, v, g)
+        tcorr = step + 1
+        params = jax.tree.map(
+            lambda p, mm, vv: p - lr * (mm / (1 - b1 ** tcorr))
+            / (jnp.sqrt(vv / (1 - b2 ** tcorr)) + eps),
+            params, m, v,
+        )
+        log.append(float(loss))
+        if step % 5 == 0 or step == steps - 1:
+            print(f"  train step {step:4d} loss {float(loss):.4f}", flush=True)
+    return params, log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=int(os.environ.get("TRACE_TRAIN_STEPS", "30")))
+    ap.add_argument("--test-dims", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    dims = TEST_DIMS if args.test_dims else Dims()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    print(f"init params ({dims})", flush=True)
+    params = init_params(dims, jax.random.PRNGKey(args.seed))
+    params, loss_log = train(params, dims, args.train_steps, args.seed + 1)
+
+    # ---- params.bin (f32 LE, PARAM_ORDER) + manifest entries
+    specs = []
+    offset = 0
+    with open(os.path.join(args.out_dir, "params.bin"), "wb") as f:
+        for name in PARAM_ORDER:
+            arr = np.asarray(params[name], np.float32)
+            f.write(arr.tobytes())
+            specs.append({"name": name, "shape": list(arr.shape), "offset": offset})
+            offset += arr.nbytes
+    print(f"params.bin: {offset / 1e6:.1f} MB", flush=True)
+
+    # ---- lower both entry points
+    def decode_fn(*flat):
+        p = dict(zip(PARAM_ORDER, flat[: len(PARAM_ORDER)]))
+        k, v, toks, pos = flat[len(PARAM_ORDER):]
+        return decode_step(p, k, v, toks, pos, dims)
+
+    def prefill_fn(*flat):
+        p = dict(zip(PARAM_ORDER, flat[: len(PARAM_ORDER)]))
+        (toks,) = flat[len(PARAM_ORDER):]
+        return prefill(p, toks, dims)
+
+    param_specs = [
+        jax.ShapeDtypeStruct(np.asarray(params[n]).shape, jnp.float32) for n in PARAM_ORDER
+    ]
+    kv_spec = jax.ShapeDtypeStruct(
+        (dims.layers, dims.batch, dims.t_max, dims.heads, dims.head_dim), jnp.float32
+    )
+    tok_spec = jax.ShapeDtypeStruct((dims.batch,), jnp.int32)
+    pos_spec = jax.ShapeDtypeStruct((1,), jnp.int32)
+    prompt_spec = jax.ShapeDtypeStruct((dims.batch, dims.t_prompt), jnp.int32)
+
+    print("lowering decode_step ...", flush=True)
+    dec = jax.jit(decode_fn).lower(*param_specs, kv_spec, kv_spec, tok_spec, pos_spec)
+    dec_text = to_hlo_text(dec)
+    with open(os.path.join(args.out_dir, "decode_step.hlo.txt"), "w") as f:
+        f.write(dec_text)
+    print(f"decode_step.hlo.txt: {len(dec_text) / 1e6:.2f} MB", flush=True)
+
+    print("lowering prefill ...", flush=True)
+    pre = jax.jit(prefill_fn).lower(*param_specs, prompt_spec)
+    pre_text = to_hlo_text(pre)
+    with open(os.path.join(args.out_dir, "prefill.hlo.txt"), "w") as f:
+        f.write(pre_text)
+    print(f"prefill.hlo.txt: {len(pre_text) / 1e6:.2f} MB", flush=True)
+
+    manifest = {
+        "dims": {
+            "layers": dims.layers,
+            "batch": dims.batch,
+            "t_max": dims.t_max,
+            "t_prompt": dims.t_prompt,
+            "d_model": dims.d_model,
+            "heads": dims.heads,
+            "head_dim": dims.head_dim,
+            "ffn": dims.ffn,
+            "vocab": dims.vocab,
+        },
+        "decode_hlo": "decode_step.hlo.txt",
+        "prefill_hlo": "prefill.hlo.txt",
+        "params_bin": "params.bin",
+        "params": specs,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(args.out_dir, "train_log.json"), "w") as f:
+        json.dump({"steps": len(loss_log), "loss": loss_log}, f)
+    print("manifest.json written; artifacts complete.", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

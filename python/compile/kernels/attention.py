@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: single-token decode attention.
+
+The serving hot path: one query token attends over the KV cache. The
+kernel is written TPU-style — the grid tiles (batch, head), each program
+instance holds one head's (T, head_dim) K/V tile in VMEM, computes masked
+softmax scores, and writes one (head_dim,) output row.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+contribution is a memory controller, not a GPU kernel, so L1's job here is
+the *consumer* of TRACE-served KV (decode attention) plus the
+reconstruction math (see planes.py). BlockSpec expresses the HBM->VMEM
+schedule: K/V stream in per (b, h) tile; validity is bounded by ``pos``
+masking.
+
+Lowered with ``interpret=True`` so the CPU PJRT client can execute the
+resulting HLO (real-TPU lowering emits a Mosaic custom call).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref):
+    """One (batch, head) tile: out = softmax(mask(K q / sqrt(d))) @ V.
+
+    Block shapes (grid dims collapsed to 1):
+      pos_ref: [1]  q_ref: [1, 1, hd]  k_ref/v_ref: [1, T, 1, hd]
+      o_ref: [1, 1, hd]
+    """
+    q = q_ref[0, 0, :]  # [hd]
+    k = k_ref[0, :, 0, :]  # [T, hd]
+    v = v_ref[0, :, 0, :]  # [T, hd]
+    t = k.shape[0]
+    hd = q.shape[0]
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.sum(k * q[None, :], axis=-1) * scale  # [T]
+
+    pos = pos_ref[0]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
+    valid = idx < pos
+    scores = jnp.where(valid, scores, jnp.float32(-1e30))
+
+    m = jnp.max(scores)
+    p = jnp.where(valid, jnp.exp(scores - m), 0.0)
+    denom = jnp.sum(p)
+    o_ref[0, 0, :] = jnp.sum(p[:, None] * v, axis=0) / denom
+
+
+def decode_attention(q, k, v, pos):
+    """Masked decode attention via the Pallas kernel.
+
+    Args:
+      q: [B, H, hd] current-token queries (f32).
+      k, v: [B, T, H, hd] KV cache (entries at index >= pos are ignored).
+      pos: scalar int32 — attend over cache positions [0, pos).
+
+    Returns: [B, H, hd] attention outputs (f32).
+    """
+    b, h, hd = q.shape
+    t = k.shape[1]
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        _decode_attn_kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1, 1, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, t, 1, hd), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, t, 1, hd), lambda i, j: (i, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
+        interpret=True,
+    )(pos_arr, q, k, v)

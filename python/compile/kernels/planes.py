@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: bit-plane reconstruction (the paper's R operator).
+
+Reassembles BF16 values from disaggregated bit-planes under a plane mask —
+the arithmetic-reconstruction stage of TRACE's read path (Eq. 7, step 2),
+expressed as a TPU-style kernel: each grid program reconstructs one tile
+of M elements from its 16 plane rows held in VMEM, then bit-casts the
+assembled word to f32 (BF16 occupies the high half of an f32 word).
+
+This is where the paper's controller logic meets the accelerator: a
+software fallback for hosts whose CXL device is a plain (non-TRACE)
+expander — fetch raw planes, reconstruct on-chip. Validated against the
+pure-jnp oracle in ref.py and, transitively, against the Rust
+`bitplane::transpose_from_planes` via the shared test vectors.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BITS = 16
+
+
+def _recon_kernel(planes_ref, mask_ref, o_ref):
+    """planes_ref: [BITS, M] int32 (0/1); mask_ref: [BITS] int32 (0/1);
+    o_ref: [M] f32 — bf16 value assembled from masked planes."""
+    m = o_ref.shape[0]
+    word = jnp.zeros((m,), jnp.int32)
+    for i in range(BITS):  # bit position i contributes plane row BITS-1-i
+        plane = planes_ref[BITS - 1 - i, :]
+        word = word | ((plane & mask_ref[i]) << i)
+    # BF16 word -> f32 bits (<< 16), then bitcast
+    o_ref[:] = jax.lax.bitcast_convert_type(word << 16, jnp.float32)
+
+
+def reconstruct_bf16(planes, mask):
+    """Reconstruct BF16 values (as f32) from bit-planes.
+
+    Args:
+      planes: [16, M] int32 of 0/1 — row 0 is the MSB plane (paper Eq. 2
+        ordering), row 15 the LSB plane.
+      mask: [16] int32 of 0/1 — mask[i] selects the plane for *bit
+        position* i (the S_req row filter of Eq. 6).
+
+    Returns: [M] f32 — the BF16 values with unselected planes zeroed.
+    """
+    _, m = planes.shape
+    tile = min(m, 512)
+    assert m % tile == 0, "M must divide into tiles"
+    return pl.pallas_call(
+        _recon_kernel,
+        grid=(m // tile,),
+        in_specs=[
+            pl.BlockSpec((BITS, tile), lambda i: (0, i)),
+            pl.BlockSpec((BITS,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(planes.astype(jnp.int32), mask.astype(jnp.int32))

@@ -1,0 +1,61 @@
+"""Pure-jnp / numpy oracles for the L1 kernels — the CORE correctness
+signal: every Pallas kernel must match its reference bit-for-bit (planes)
+or to float tolerance (attention)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_decode_attention(q, k, v, pos):
+    """Reference masked decode attention.
+
+    q: [B, H, hd]; k, v: [B, T, H, hd]; pos: int — attend over [0, pos).
+    Returns [B, H, hd].
+    """
+    b, h, hd = q.shape
+    t = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    # scores[b, h, t]
+    scores = jnp.einsum("bhd,bthd->bht", q, k) * scale
+    idx = jnp.arange(t)[None, None, :]
+    valid = idx < pos
+    scores = jnp.where(valid, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(valid, p, 0.0)
+    return jnp.einsum("bht,bthd->bhd", p, v)
+
+
+def ref_reconstruct_bf16(planes, mask):
+    """Reference bit-plane reconstruction (numpy).
+
+    planes: [16, M] 0/1, row 0 = MSB plane; mask: [16] 0/1 over bit
+    positions. Returns [M] f32.
+    """
+    planes = np.asarray(planes, np.uint32)
+    mask = np.asarray(mask, np.uint32)
+    m = planes.shape[1]
+    word = np.zeros(m, np.uint32)
+    for i in range(16):
+        word |= (planes[15 - i, :] & mask[i]) << i
+    return (word.astype(np.uint32) << 16).view(np.float32)
+
+
+def bf16_round(x):
+    """Round f32 to bf16 and back (RTNE), numpy."""
+    bits = np.asarray(x, np.float32).view(np.uint32)
+    lsb = (bits >> 16) & 1
+    rounded = bits + 0x7FFF + lsb
+    out = (rounded & 0xFFFF0000).astype(np.uint32)
+    return out.view(np.float32)
+
+
+def to_planes(values_f32):
+    """Disaggregate f32-held BF16 values into [16, M] 0/1 planes
+    (row 0 = MSB), numpy — mirrors rust `transpose_to_planes`."""
+    words = (np.asarray(values_f32, np.float32).view(np.uint32) >> 16).astype(np.uint32)
+    m = words.shape[0]
+    planes = np.zeros((16, m), np.int32)
+    for i in range(16):
+        planes[15 - i, :] = (words >> i) & 1
+    return planes

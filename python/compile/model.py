@@ -1,0 +1,165 @@
+"""L2: the ~100M-parameter GPT-style transformer (JAX), calling the L1
+Pallas decode-attention kernel on the serving hot path.
+
+Architecture: pre-RMSNorm decoder blocks, learned positional embeddings,
+tied input/output embedding. Parameters are stacked per layer so both
+executables take a flat 9-tensor parameter list (see PARAM_ORDER), which
+is also the order `rust/src/runtime/pjrt.rs` feeds them in.
+
+Exported entry points (AOT-lowered by aot.py):
+  * prefill(params, tokens[B,Tp]) -> (logits[B,V], k[L,B,Tp,H,hd], v[...])
+  * decode_step(params, k[L,B,T,H,hd], v[...], tokens[B], pos[1])
+      -> (logits[B,V], k_new[L,B,H,hd], v_new[L,B,H,hd])
+  * train_forward — all-position logits, used by the optional calibration
+    training in aot.py (build-time only).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import decode_attention
+
+
+@dataclass(frozen=True)
+class Dims:
+    layers: int = 12
+    batch: int = 2
+    t_max: int = 256
+    t_prompt: int = 32
+    d_model: int = 768
+    heads: int = 12
+    head_dim: int = 64
+    ffn: int = 3072
+    vocab: int = 16384
+
+    @property
+    def kv_channels(self):
+        return 2 * self.heads * self.head_dim
+
+
+# Tiny dims for fast tests.
+TEST_DIMS = Dims(layers=2, batch=2, t_max=32, t_prompt=8, d_model=32,
+                 heads=2, head_dim=16, ffn=64, vocab=128)
+
+PARAM_ORDER = [
+    "emb", "pos_emb", "ln1", "wqkv", "wo", "ln2", "win", "wout", "lnf",
+]
+
+
+def init_params(dims: Dims, key):
+    """Seeded initialization (scaled-normal, GPT-2-style)."""
+    d, f, v = dims.d_model, dims.ffn, dims.vocab
+    L = dims.layers
+    ks = jax.random.split(key, 8)
+    s = 0.02
+    return {
+        "emb": jax.random.normal(ks[0], (v, d), jnp.float32) * s,
+        "pos_emb": jax.random.normal(ks[1], (dims.t_max, d), jnp.float32) * s,
+        "ln1": jnp.ones((L, d), jnp.float32),
+        "wqkv": jax.random.normal(ks[2], (L, d, 3 * d), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (L, d, d), jnp.float32) * (s / jnp.sqrt(2.0 * L)),
+        "ln2": jnp.ones((L, d), jnp.float32),
+        "win": jax.random.normal(ks[4], (L, d, f), jnp.float32) * s,
+        "wout": jax.random.normal(ks[5], (L, f, d), jnp.float32) * (s / jnp.sqrt(2.0 * L)),
+        "lnf": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _rms(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * g
+
+
+def _split_heads(x, dims: Dims):
+    # [..., D] -> [..., H, hd]
+    return x.reshape(x.shape[:-1] + (dims.heads, dims.head_dim))
+
+
+def decode_step(params, k_cache, v_cache, tokens, pos, dims: Dims):
+    """One decode step for the whole batch.
+
+    k_cache/v_cache: [L, B, T, H, hd] with valid entries in [0, pos).
+    tokens: [B] int32 current tokens. pos: [1] int32.
+    Returns (logits [B, V], k_new [L, B, H, hd], v_new [L, B, H, hd]).
+    """
+    p = pos[0]
+    x = params["emb"][tokens] + jax.lax.dynamic_index_in_dim(
+        params["pos_emb"], p, axis=0, keepdims=False)
+    k_news, v_news = [], []
+    for l in range(dims.layers):
+        h = _rms(x, params["ln1"][l])
+        qkv = h @ params["wqkv"][l]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = _split_heads(q, dims)  # [B, H, hd]
+        k = _split_heads(k, dims)
+        v = _split_heads(v, dims)
+        k_news.append(k)
+        v_news.append(v)
+        # place the current entry at index p so attention covers [0, p]
+        k_full = jax.lax.dynamic_update_slice_in_dim(
+            k_cache[l], k[:, None], p, axis=1)  # [B, T, H, hd]
+        v_full = jax.lax.dynamic_update_slice_in_dim(
+            v_cache[l], v[:, None], p, axis=1)
+        attn = decode_attention(q, k_full, v_full, p + 1)  # [B, H, hd]
+        x = x + attn.reshape(attn.shape[0], -1) @ params["wo"][l]
+        h2 = _rms(x, params["ln2"][l])
+        x = x + jax.nn.gelu(h2 @ params["win"][l]) @ params["wout"][l]
+    logits = _rms(x, params["lnf"]) @ params["emb"].T
+    return logits, jnp.stack(k_news), jnp.stack(v_news)
+
+
+def _causal_forward(params, tokens, dims: Dims):
+    """Full-sequence forward (jnp attention): returns (x_all, k_all, v_all).
+
+    tokens: [B, T]. x_all: [B, T, D]; k_all/v_all: [L, B, T, H, hd].
+    """
+    b, t = tokens.shape
+    x = params["emb"][tokens] + params["pos_emb"][:t][None]
+    idx = jnp.arange(t)
+    causal = idx[None, :] <= idx[:, None]  # [Tq, Tk]
+    ks, vs = [], []
+    scale = 1.0 / jnp.sqrt(jnp.float32(dims.head_dim))
+    for l in range(dims.layers):
+        h = _rms(x, params["ln1"][l])
+        qkv = h @ params["wqkv"][l]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = _split_heads(q, dims)  # [B, T, H, hd]
+        k = _split_heads(k, dims)
+        v = _split_heads(v, dims)
+        ks.append(k)
+        vs.append(v)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+        scores = jnp.where(causal[None, None], scores, -1e30)
+        pr = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", pr, v)
+        x = x + attn.reshape(b, t, -1) @ params["wo"][l]
+        h2 = _rms(x, params["ln2"][l])
+        x = x + jax.nn.gelu(h2 @ params["win"][l]) @ params["wout"][l]
+    return _rms(x, params["lnf"]), jnp.stack(ks), jnp.stack(vs)
+
+
+def prefill(params, tokens, dims: Dims):
+    """Prefill over fixed-length prompts.
+
+    tokens: [B, Tp] int32 (0-padded). Returns (last-position logits
+    [B, V], k [L, B, Tp, H, hd], v [L, B, Tp, H, hd]).
+    """
+    x, k, v = _causal_forward(params, tokens, dims)
+    logits = x[:, -1] @ params["emb"].T
+    return logits, k, v
+
+
+def train_forward(params, tokens, dims: Dims):
+    """All-position logits [B, T, V] (build-time calibration training)."""
+    x, _, _ = _causal_forward(params, tokens, dims)
+    return x @ params["emb"].T
+
+
+def loss_fn(params, tokens, dims: Dims):
+    """Next-token cross entropy over a [B, T] batch."""
+    logits = train_forward(params, tokens[:, :-1], dims)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

@@ -1,0 +1,65 @@
+"""AOT pipeline test: run aot.py with tiny dims into a temp dir and check
+that the artifacts are complete and well-formed (HLO text parses as text,
+manifest fields match the model, params.bin has the declared size)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO_PY = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    env = dict(os.environ)
+    env["TRACE_TRAIN_STEPS"] = "2"
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--test-dims"],
+        cwd=REPO_PY,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    return out
+
+
+def test_all_files_present(artifacts):
+    for f in ["manifest.json", "decode_step.hlo.txt", "prefill.hlo.txt", "params.bin", "train_log.json"]:
+        assert (artifacts / f).exists(), f
+
+
+def _numel(shape):
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def test_manifest_consistent(artifacts):
+    m = json.loads((artifacts / "manifest.json").read_text())
+    d = m["dims"]
+    assert d["layers"] == 2 and d["vocab"] == 128  # TEST_DIMS
+    total = sum(4 * _numel(p["shape"]) for p in m["params"])
+    assert (artifacts / "params.bin").stat().st_size == total
+    # offsets are sorted and contiguous
+    offs = [p["offset"] for p in m["params"]]
+    assert offs == sorted(offs)
+
+
+def test_hlo_is_text(artifacts):
+    head = (artifacts / "decode_step.hlo.txt").read_text()[:200]
+    assert "HloModule" in head
+    head2 = (artifacts / "prefill.hlo.txt").read_text()[:200]
+    assert "HloModule" in head2
+
+
+def test_train_log_has_losses(artifacts):
+    log = json.loads((artifacts / "train_log.json").read_text())
+    assert log["steps"] == 2
+    assert all(l > 0 for l in log["loss"])

@@ -1,0 +1,41 @@
+//! Fig. 14 — throughput sensitivity to the HBM partition α under weight
+//! spill (GPT-OSS-120B BF16): unimodal in α for every design; TRACE raises
+//! the peak and shifts it toward larger α.
+
+use trace_cxl::cxl::Design;
+use trace_cxl::sysmodel::{ModelShape, SystemConfig, ThroughputModel};
+
+fn main() {
+    let mut shape = ModelShape::gpt_oss_120b_bf16();
+    shape.kv_heads = 64;
+    let m = ThroughputModel::new(SystemConfig::paper_default(), shape);
+    let ctx = 65536;
+    let alphas: Vec<f64> = (2..=19).map(|i| i as f64 * 0.05).collect();
+
+    println!("# Fig 14: tok/s vs alpha (GPT-OSS-120B BF16, ctx=64k)");
+    println!("{:<8} {:>10} {:>10} {:>10}", "alpha", "Plain", "GComp", "TRACE");
+    let mut peaks = vec![(0.0f64, 0.0f64); 3];
+    for &a in &alphas {
+        let row: Vec<f64> = [Design::Plain, Design::GComp, Design::Trace]
+            .iter()
+            .map(|&d| {
+                let mut cfg = SystemConfig::paper_default();
+                cfg.alpha = a;
+                ThroughputModel::new(cfg, m.shape.clone()).eval(ctx, d).tok_s
+            })
+            .collect();
+        println!("{a:<8.3} {:>10.2} {:>10.2} {:>10.2}", row[0], row[1], row[2]);
+        for (i, &t) in row.iter().enumerate() {
+            if t > peaks[i].1 {
+                peaks[i] = (a, t);
+            }
+        }
+    }
+    println!(
+        "\npeaks: Plain {:.2} tok/s @ a={:.2}; GComp {:.2} @ a={:.2}; TRACE {:.2} @ a={:.2}",
+        peaks[0].1, peaks[0].0, peaks[1].1, peaks[1].0, peaks[2].1, peaks[2].0
+    );
+    assert!(peaks[2].1 > peaks[1].1 && peaks[1].1 > peaks[0].1, "TRACE raises the peak");
+    assert!(peaks[2].0 >= peaks[0].0, "TRACE peak alpha shifted right");
+    println!("paper: Plain 30.89 @ 0.592, GComp 33.98 @ 0.592, TRACE 41.51 @ 0.771");
+}

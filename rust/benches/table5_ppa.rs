@@ -1,0 +1,61 @@
+//! Table V — hardware cost (ASAP7 7 nm @ 2 GHz, 0.7 V): area, power,
+//! load-to-use, and the component breakdown, from the calibrated PPA
+//! inventory model (`cxl::ppa`, see DESIGN.md §Substitutions).
+
+use trace_cxl::cxl::{ppa_for, Design};
+
+fn main() {
+    println!("# Table V: hardware cost (ASAP7 7nm @ 2GHz, 0.7V)");
+    let reports: Vec<_> = [Design::Plain, Design::GComp, Design::Trace]
+        .iter()
+        .map(|&d| ppa_for(d))
+        .collect();
+    println!("{:<20} {:>12} {:>12} {:>12}", "", "CXL-Plain", "CXL-GComp", "TRACE");
+    println!(
+        "{:<20} {:>12.2} {:>12.2} {:>12.2}",
+        "Area (mm2)",
+        reports[0].area_mm2(),
+        reports[1].area_mm2(),
+        reports[2].area_mm2()
+    );
+    println!(
+        "{:<20} {:>12.1} {:>12.1} {:>12.1}",
+        "Power (W)",
+        reports[0].power_w(),
+        reports[1].power_w(),
+        reports[2].power_w()
+    );
+    println!(
+        "{:<20} {:>12} {:>12} {:>12}",
+        "Load-to-use (cyc)",
+        reports[0].load_to_use_cycles,
+        reports[1].load_to_use_cycles,
+        reports[2].load_to_use_cycles
+    );
+    println!("\nArea breakdown (mm2):");
+    for comp in ["PHY", "Codec", "Codec SRAM", "Metadata", "Scheduler", "Transpose/Recon.", "Other"] {
+        let cell = |r: &trace_cxl::cxl::PpaReport| {
+            r.component(comp).map(|c| format!("{:.2}", c.area_mm2)).unwrap_or_else(|| "-".into())
+        };
+        println!(
+            "{:<20} {:>12} {:>12} {:>12}",
+            comp,
+            cell(&reports[0]),
+            cell(&reports[1]),
+            cell(&reports[2])
+        );
+    }
+    let delta_area =
+        (reports[2].area_mm2() - reports[1].area_mm2()) / reports[1].area_mm2() * 100.0;
+    let delta_pow = (reports[2].power_w() - reports[1].power_w()) / reports[1].power_w() * 100.0;
+    let delta_lat = (reports[2].load_to_use_cycles as f64 - reports[1].load_to_use_cycles as f64)
+        / reports[1].load_to_use_cycles as f64
+        * 100.0;
+    println!(
+        "\nTRACE vs CXL-GComp: +{delta_area:.1}% area, +{delta_pow:.1}% power, +{delta_lat:.1}% load-to-use"
+    );
+    assert!((delta_area - 7.2).abs() < 0.5);
+    assert!((delta_pow - 4.7).abs() < 0.7);
+    assert!((delta_lat - 6.0).abs() < 0.5);
+    println!("paper: +7.2% area, +4.7% power, +6.0% load-to-use");
+}

@@ -1,0 +1,357 @@
+//! The device-internal 4 KB block container (paper §III-B/III-D).
+//!
+//! A logical 4 KB host block is stored as `B` independently compressed
+//! plane streams plus a compact header. The plane-index metadata entry
+//! (64 B per 4 KB block ⇒ 1.56 % capacity overhead, §III-D) records the
+//! bundle base pointer, per-plane compressed lengths, and codec/bypass
+//! flags so one metadata read locates any subset of planes.
+
+use crate::codec::{self, CodecKind, CodecPolicy};
+use crate::formats::Fmt;
+use crate::util::bytes;
+
+use super::kvtransform::{KvTransform, KvWindow};
+use super::layout::{plane_len, transpose_from_planes, transpose_to_planes};
+use super::planes::{PlaneMask, PrecisionView, reconstruct_bf16_view};
+
+/// Logical block size served at cache-line granularity by the host.
+pub const BLOCK_BYTES: usize = 4096;
+
+/// How the block's content was transformed before plane packing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Transform {
+    /// Weights / generic tensors: direct bit-plane encoding.
+    None,
+    /// KV: cross-token channel grouping + exponent-delta (Mechanism I).
+    Kv { window: KvWindow, base_exp: Vec<u8> },
+}
+
+/// One compressed plane stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlaneStream {
+    pub codec: CodecKind,
+    pub data: Vec<u8>,
+}
+
+/// A device-resident block: header + per-plane compressed streams.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceBlock {
+    pub fmt: Fmt,
+    /// Number of logical elements in the block.
+    pub n_elem: usize,
+    pub transform: Transform,
+    /// Plane streams indexed by *bit position* (0 = LSB plane).
+    pub planes: Vec<PlaneStream>,
+}
+
+/// The 64-byte plane-index metadata entry (paper §III-D): what the
+/// controller must read to locate a block's planes without touching the
+/// data region. We model the exact information content; the bench asserts
+/// that it serializes within 64 bytes for 16-plane BF16 blocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlaneIndexEntry {
+    /// Device address of the plane bundle.
+    pub base: u64,
+    /// Compressed length of each plane (bit position order, LSB..MSB).
+    pub plane_lens: Vec<u16>,
+    /// Codec tag per plane (2 bits each in hardware).
+    pub codecs: Vec<CodecKind>,
+    /// Uncompressed plane length (same for all planes of a block).
+    pub raw_plane_len: u16,
+}
+
+impl PlaneIndexEntry {
+    /// Serialized size in bytes (base: 6, raw len: 2, per plane: 2 len +
+    /// 2-bit codec tag packed 4/byte).
+    pub fn wire_bytes(&self) -> usize {
+        6 + 2 + self.plane_lens.len() * 2 + self.codecs.len().div_ceil(4)
+    }
+
+    /// Compressed bytes that a fetch of `mask` must read from DRAM.
+    pub fn bytes_for_mask(&self, mask: PlaneMask) -> usize {
+        self.plane_lens
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| mask.contains(*i))
+            .map(|(_, &l)| l as usize)
+            .sum()
+    }
+}
+
+impl DeviceBlock {
+    /// Encode a weight/generic block: direct bit-plane compression.
+    pub fn encode_weights(words: &[u16], fmt: Fmt, policy: CodecPolicy) -> DeviceBlock {
+        Self::encode_words(words, fmt, Transform::None, policy)
+    }
+
+    /// Encode a KV window: Mechanism I chain then plane compression.
+    pub fn encode_kv(kv_token_major: &[u16], window: KvWindow, policy: CodecPolicy) -> DeviceBlock {
+        let t = KvTransform::forward(kv_token_major, window);
+        let mut blk = Self::encode_words(&t.words, Fmt::Bf16, Transform::None, policy);
+        blk.transform = Transform::Kv { window, base_exp: t.base_exp };
+        blk
+    }
+
+    fn encode_words(words: &[u16], fmt: Fmt, transform: Transform, policy: CodecPolicy) -> DeviceBlock {
+        let bits = fmt.bits();
+        let flat = transpose_to_planes(words, bits);
+        let pl = plane_len(words.len());
+        let mut planes = Vec::with_capacity(bits);
+        // store by bit position: plane for bit i is row (bits-1-i)
+        for i in 0..bits {
+            let row = bits - 1 - i;
+            let stream = &flat[row * pl..(row + 1) * pl];
+            let (kind, data) = codec::compress_best(policy, stream);
+            planes.push(PlaneStream { codec: kind, data });
+        }
+        DeviceBlock { fmt, n_elem: words.len(), transform, planes }
+    }
+
+    /// Header bytes stored alongside the planes (KV base exponents +
+    /// per-stream constant state, paper §III-D "metadata management").
+    pub fn header_bytes(&self) -> usize {
+        match &self.transform {
+            Transform::None => 2,
+            Transform::Kv { base_exp, .. } => 2 + base_exp.len() + 4,
+        }
+    }
+
+    /// Total compressed footprint (all planes + header) in bytes.
+    pub fn compressed_bytes(&self) -> usize {
+        self.header_bytes() + self.planes.iter().map(|p| p.data.len()).sum::<usize>()
+    }
+
+    /// Uncompressed footprint of the logical block in bytes.
+    pub fn raw_bytes(&self) -> usize {
+        self.n_elem * self.fmt.bits() / 8
+    }
+
+    /// Compression ratio `S_orig / S_comp` (≥ 1 means it helped).
+    pub fn ratio(&self) -> f64 {
+        self.raw_bytes() as f64 / self.compressed_bytes() as f64
+    }
+
+    /// Compressed bytes fetched for a given plane mask (+ header).
+    pub fn fetched_bytes(&self, mask: PlaneMask) -> usize {
+        self.header_bytes()
+            + self
+                .planes
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| mask.contains(*i))
+                .map(|(_, p)| p.data.len())
+                .sum::<usize>()
+    }
+
+    /// Build the plane-index metadata entry for this block.
+    pub fn index_entry(&self, base: u64) -> PlaneIndexEntry {
+        PlaneIndexEntry {
+            base,
+            plane_lens: self.planes.iter().map(|p| p.data.len() as u16).collect(),
+            codecs: self.planes.iter().map(|p| p.codec).collect(),
+            raw_plane_len: plane_len(self.n_elem) as u16,
+        }
+    }
+
+    /// Decompress the selected planes and reassemble words; unselected
+    /// planes are zero (𝒟 then the zero-padding part of ℛ, Eq. 7).
+    pub fn decode_words(&self, mask: PlaneMask) -> anyhow::Result<Vec<u16>> {
+        let bits = self.fmt.bits();
+        let pl = plane_len(self.n_elem);
+        let mut flat = vec![0u8; bits * pl];
+        for i in 0..bits {
+            if !mask.contains(i) {
+                continue;
+            }
+            let row = bits - 1 - i;
+            let dec = codec::decompress(self.planes[i].codec, &self.planes[i].data, pl)?;
+            flat[row * pl..(row + 1) * pl].copy_from_slice(&dec);
+        }
+        Ok(transpose_from_planes(&flat, self.n_elem, bits, mask.0))
+    }
+
+    /// Full lossless read-back: 𝒯⁻¹ ∘ ℛ ∘ 𝒟 with all planes (Eq. 7–8).
+    /// Returns the exact words the host originally wrote.
+    pub fn decode_full(&self) -> anyhow::Result<Vec<u16>> {
+        let words = self.decode_words(PlaneMask::full(self.fmt))?;
+        Ok(self.apply_inverse_topology(words))
+    }
+
+    /// Reduced-precision read: fetch `view.mask()` planes, restore the
+    /// host topology 𝒯⁻¹ (which for KV also de-zigzags the exponent), then
+    /// apply guard rounding (ℛ) in the host-value domain. BF16 only (the
+    /// KV and weight base format of the paper's elastic-precision
+    /// evaluation). The exponent carry of round-to-nearest must happen on
+    /// real exponents, hence ℛ after 𝒯⁻¹ for the exponent-transformed KV
+    /// path (the controller holds β_j on-chip, §III-D).
+    pub fn decode_view(&self, view: &PrecisionView) -> anyhow::Result<Vec<u16>> {
+        anyhow::ensure!(view.fmt == self.fmt, "view format mismatch");
+        let words = self.decode_words(view.mask())?;
+        let mut words = self.apply_inverse_topology(words);
+        if view.fmt == Fmt::Bf16 {
+            reconstruct_bf16_view(&mut words, view);
+        }
+        Ok(words)
+    }
+
+    fn apply_inverse_topology(&self, words: Vec<u16>) -> Vec<u16> {
+        match &self.transform {
+            Transform::None => words,
+            Transform::Kv { window, base_exp } => {
+                let t = KvTransform {
+                    window: *window,
+                    base_exp: base_exp.clone(),
+                    words: vec![],
+                };
+                t.inverse_words(&words)
+            }
+        }
+    }
+
+    /// Host-facing convenience: encode an f32 tensor as BF16 weights.
+    pub fn encode_weights_f32(xs: &[f32], policy: CodecPolicy) -> DeviceBlock {
+        Self::encode_weights(&bytes::f32s_to_bf16(xs), Fmt::Bf16, policy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::props;
+    use crate::util::Rng;
+    use crate::formats::bf16_from_f32;
+
+    fn smooth_kv(r: &mut Rng, n: usize, c: usize) -> Vec<u16> {
+        let mut kv = vec![0u16; n * c];
+        for j in 0..c {
+            let scale = 2f64.powi(r.range(-3, 3) as i32);
+            let mut v = r.normal() * scale;
+            for t in 0..n {
+                v = 0.97 * v + 0.03 * r.normal() * scale;
+                kv[t * c + j] = bf16_from_f32(v as f32);
+            }
+        }
+        kv
+    }
+
+    #[test]
+    fn weights_lossless_roundtrip() {
+        props(111, 100, |r| {
+            let n = 1 + r.below(2048);
+            let words: Vec<u16> = (0..n).map(|_| r.next_u32() as u16).collect();
+            for policy in [CodecPolicy::FastBest, CodecPolicy::AllBest] {
+                let blk = DeviceBlock::encode_weights(&words, Fmt::Bf16, policy);
+                assert_eq!(blk.decode_full().unwrap(), words);
+            }
+        });
+    }
+
+    #[test]
+    fn kv_lossless_roundtrip() {
+        props(112, 60, |r| {
+            let n = 1 + r.below(64);
+            let c = 1 + r.below(64);
+            let kv: Vec<u16> = (0..n * c).map(|_| r.next_u32() as u16).collect();
+            let blk = DeviceBlock::encode_kv(&kv, KvWindow::new(n, c), CodecPolicy::AllBest);
+            assert_eq!(blk.decode_full().unwrap(), kv);
+        });
+    }
+
+    #[test]
+    fn kv_smooth_compresses_well() {
+        let mut r = Rng::new(113);
+        let kv = smooth_kv(&mut r, 32, 64); // 2048 elements = 4KB BF16
+        let trace = DeviceBlock::encode_kv(&kv, KvWindow::new(32, 64), CodecPolicy::ZstdOnly);
+        // GComp equivalent: compress the raw token-major words directly
+        let raw = crate::util::bytes::u16s_to_bytes(&kv);
+        let gcomp = crate::codec::compress(CodecKind::Zstd, &raw);
+        let trace_ratio = trace.ratio();
+        let gcomp_ratio = raw.len() as f64 / gcomp.len() as f64;
+        assert!(
+            trace_ratio > gcomp_ratio * 1.1,
+            "trace={trace_ratio:.2} gcomp={gcomp_ratio:.2}"
+        );
+        assert!(trace_ratio > 1.3, "trace={trace_ratio:.2}");
+    }
+
+    #[test]
+    fn fetched_bytes_scale_with_precision() {
+        let mut r = Rng::new(114);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let blk = DeviceBlock::encode_kv(&kv, KvWindow::new(32, 64), CodecPolicy::AllBest);
+        let full = blk.fetched_bytes(PrecisionView::full(Fmt::Bf16).mask());
+        let half = blk.fetched_bytes(PrecisionView::bf16_mantissa(3, 0).mask());
+        let tiny = blk.fetched_bytes(PrecisionView::bf16_mantissa(0, 0).mask());
+        assert!(half < full, "half={half} full={full}");
+        assert!(tiny < half, "tiny={tiny} half={half}");
+    }
+
+    #[test]
+    fn view_decode_matches_mask_semantics() {
+        let mut r = Rng::new(115);
+        let kv = smooth_kv(&mut r, 16, 32);
+        let blk = DeviceBlock::encode_kv(&kv, KvWindow::new(16, 32), CodecPolicy::FastBest);
+        let full = blk.decode_full().unwrap();
+        let v = PrecisionView::bf16_mantissa(3, 0);
+        let got = blk.decode_view(&v).unwrap();
+        // truncated view == full value with low 4 mantissa bits cleared
+        for (g, f) in got.iter().zip(full.iter()) {
+            assert_eq!(*g, f & !0x000f);
+        }
+    }
+
+    #[test]
+    fn guard_view_error_le_truncation() {
+        let mut r = Rng::new(116);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let blk = DeviceBlock::encode_kv(&kv, KvWindow::new(32, 64), CodecPolicy::FastBest);
+        let full: Vec<f32> = blk
+            .decode_full()
+            .unwrap()
+            .iter()
+            .map(|&w| crate::formats::bf16_to_f32(w))
+            .collect();
+        let err = |ws: &[u16]| -> f64 {
+            ws.iter()
+                .zip(&full)
+                .map(|(&w, &f)| ((crate::formats::bf16_to_f32(w) - f) as f64).powi(2))
+                .sum()
+        };
+        let t = blk.decode_view(&PrecisionView::bf16_mantissa(2, 0)).unwrap();
+        let g = blk.decode_view(&PrecisionView::bf16_mantissa(2, 2)).unwrap();
+        assert!(err(&g) <= err(&t), "guard={} trunc={}", err(&g), err(&t));
+    }
+
+    #[test]
+    fn index_entry_fits_64_bytes() {
+        let mut r = Rng::new(117);
+        let words: Vec<u16> = (0..2048).map(|_| r.next_u32() as u16).collect();
+        let blk = DeviceBlock::encode_weights(&words, Fmt::Bf16, CodecPolicy::AllBest);
+        let entry = blk.index_entry(0x1000);
+        assert!(entry.wire_bytes() <= 64, "entry={} bytes", entry.wire_bytes());
+        // bytes_for_mask consistency
+        let full = entry.bytes_for_mask(PlaneMask::full(Fmt::Bf16));
+        let sum: usize = blk.planes.iter().map(|p| p.data.len()).sum();
+        assert_eq!(full, sum);
+    }
+
+    #[test]
+    fn incompressible_block_bypasses() {
+        let mut r = Rng::new(118);
+        let words: Vec<u16> = (0..2048).map(|_| r.next_u32() as u16).collect();
+        let blk = DeviceBlock::encode_weights(&words, Fmt::Bf16, CodecPolicy::FastBest);
+        // random data: most planes should be raw (bypass)
+        let raw_planes = blk.planes.iter().filter(|p| p.codec == CodecKind::Raw).count();
+        assert!(raw_planes >= 12, "raw_planes={raw_planes}");
+        assert!(blk.ratio() <= 1.02);
+    }
+
+    #[test]
+    fn block_constant_is_4k() {
+        assert_eq!(BLOCK_BYTES, 4096);
+        // 2048 BF16 elements fill one logical block
+        let words = vec![0u16; 2048];
+        let blk = DeviceBlock::encode_weights(&words, Fmt::Bf16, CodecPolicy::FastBest);
+        assert_eq!(blk.raw_bytes(), BLOCK_BYTES);
+    }
+}

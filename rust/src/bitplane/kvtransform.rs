@@ -1,0 +1,252 @@
+//! Mechanism I's KV-specific transform (paper §III-B, Eq. 3–5, Fig. 8).
+//!
+//! KV arrives token-major: token `t`'s vector of `C` channels is contiguous.
+//! Adjacent channels have disparate scales, so the raw stream is
+//! high-entropy. But along a *channel*, values evolve smoothly across tokens
+//! (paper Fig. 2). The transform chain:
+//!
+//! 1. **Cross-token transpose** — buffer a window of `n` tokens and regroup
+//!    into channel-major groups `G_j = { k_{t,j} : t }` (Eq. 3).
+//! 2. **Exponent-delta normalization** — per channel pick a base exponent
+//!    `β_j` and replace each element's exponent with `δ = exp − β_j`
+//!    (Eq. 5, stored as an 8-bit wrap-around difference, hence exactly
+//!    invertible).
+//! 3. **Bit-plane packing** — small deltas make the high-order delta planes
+//!    all-zero runs, which generic codecs then crush.
+//!
+//! Everything here is bit-exact invertible: `inverse(forward(x)) == x` for
+//! every BF16 word including NaN/Inf/subnormals.
+
+use crate::formats::{bf16_assemble, bf16_fields};
+
+/// SRAM staging-buffer model: sizing per paper Eq. (4),
+/// `S_buf = n·C·b + S_ovhd`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvWindow {
+    /// Tokens buffered per window (`n`).
+    pub tokens: usize,
+    /// Channels per token (`C`).
+    pub channels: usize,
+}
+
+impl KvWindow {
+    pub fn new(tokens: usize, channels: usize) -> Self {
+        assert!(tokens > 0 && channels > 0);
+        KvWindow { tokens, channels }
+    }
+
+    /// Elements per window.
+    pub fn elems(&self) -> usize {
+        self.tokens * self.channels
+    }
+
+    /// Staging-buffer bytes for one stream (Eq. 4), BF16 elements plus the
+    /// per-channel base-exponent header.
+    pub fn staging_bytes(&self, overhead: usize) -> usize {
+        self.tokens * self.channels * 2 + self.channels + overhead
+    }
+}
+
+/// Result of the forward KV transform over one window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvTransform {
+    pub window: KvWindow,
+    /// Per-channel base exponents `β_j` (stored in the block header).
+    pub base_exp: Vec<u8>,
+    /// Channel-major, exponent-delta'd BF16 words (length n·C).
+    pub words: Vec<u16>,
+}
+
+/// Zigzag-map a signed 8-bit difference to u8 so that small |δ| uses only
+/// low bit positions: 0→0, −1→1, +1→2, −2→3, … Without this, δ=−1 would
+/// store as 0xFF and set *every* delta bit-plane, destroying plane
+/// sparsity. Bijective, hence exactly invertible.
+#[inline]
+fn zigzag8(d: u8) -> u8 {
+    let s = d as i8;
+    ((s << 1) ^ (s >> 7)) as u8
+}
+
+#[inline]
+fn unzigzag8(z: u8) -> u8 {
+    (z >> 1) ^ 0u8.wrapping_sub(z & 1)
+}
+
+/// Pick the base exponent for a channel group: the *mode* of the exponent
+/// field. Mode (not min) keeps |δ| small on both sides and is robust to a
+/// single outlier token.
+fn mode_exponent(group: impl Iterator<Item = u16>) -> u8 {
+    let mut counts = [0u32; 256];
+    for e in group {
+        counts[(e & 0xff) as usize] += 1;
+    }
+    let mut best = 0usize;
+    for i in 1..256 {
+        if counts[i] > counts[best] {
+            best = i;
+        }
+    }
+    best as u8
+}
+
+impl KvTransform {
+    /// Forward transform 𝒯: token-major BF16 words (`token t` at
+    /// `kv[t*C .. (t+1)*C]`) → channel-major exponent-delta words.
+    pub fn forward(kv_token_major: &[u16], window: KvWindow) -> KvTransform {
+        let (n, c) = (window.tokens, window.channels);
+        assert_eq!(kv_token_major.len(), n * c, "window shape mismatch");
+
+        let mut base_exp = vec![0u8; c];
+        let mut words = vec![0u16; n * c];
+
+        for j in 0..c {
+            let beta = mode_exponent((0..n).map(|t| {
+                let (_, e, _) = bf16_fields(kv_token_major[t * c + j]);
+                e
+            }));
+            base_exp[j] = beta;
+            for t in 0..n {
+                let w = kv_token_major[t * c + j];
+                let (s, e, m) = bf16_fields(w);
+                let delta = zigzag8((e as u8).wrapping_sub(beta));
+                // channel-major placement: group j occupies [j*n, (j+1)*n)
+                words[j * n + t] = bf16_assemble(s, delta as u16, m);
+            }
+        }
+        KvTransform { window, base_exp, words }
+    }
+
+    /// Inverse transform 𝒯⁻¹: reconstruct the token-major BF16 stream.
+    pub fn inverse(&self) -> Vec<u16> {
+        let (n, c) = (self.window.tokens, self.window.channels);
+        let mut out = vec![0u16; n * c];
+        for j in 0..c {
+            let beta = self.base_exp[j];
+            for t in 0..n {
+                let w = self.words[j * n + t];
+                let (s, z, m) = bf16_fields(w);
+                let e = unzigzag8(z as u8).wrapping_add(beta);
+                out[t * c + j] = bf16_assemble(s, e as u16, m);
+            }
+        }
+        out
+    }
+
+    /// Inverse for a *partial* (reduced-precision view) word buffer: same
+    /// layout restore + base-exponent re-add, applied to externally
+    /// reconstructed words (used by the device read path for alias views).
+    pub fn inverse_words(&self, words: &[u16]) -> Vec<u16> {
+        let (n, c) = (self.window.tokens, self.window.channels);
+        assert_eq!(words.len(), n * c, "window shape mismatch");
+        let mut out = vec![0u16; n * c];
+        for j in 0..c {
+            let beta = self.base_exp[j];
+            for t in 0..n {
+                let w = words[j * n + t];
+                let (s, z, m) = bf16_fields(w);
+                let e = unzigzag8(z as u8).wrapping_add(beta);
+                out[t * c + j] = bf16_assemble(s, e as u16, m);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::bf16_from_f32;
+    use crate::util::check::props;
+    use crate::util::stats::byte_entropy;
+    use crate::util::{bytes::u16s_to_bytes, Rng};
+
+    fn smooth_kv(r: &mut Rng, n: usize, c: usize) -> Vec<u16> {
+        // per-channel scale + AR(1) over tokens: the regime of paper Fig. 2
+        let mut kv = vec![0u16; n * c];
+        for j in 0..c {
+            let scale = 2f64.powi(r.range(-4, 4) as i32);
+            let mut v = r.normal() * scale;
+            for t in 0..n {
+                v = 0.98 * v + 0.02 * r.normal() * scale;
+                kv[t * c + j] = bf16_from_f32(v as f32);
+            }
+        }
+        kv
+    }
+
+    #[test]
+    fn forward_inverse_bit_exact() {
+        props(51, 200, |r| {
+            let n = 1 + r.below(64);
+            let c = 1 + r.below(64);
+            // fully random words, including NaN/Inf patterns
+            let kv: Vec<u16> = (0..n * c).map(|_| r.next_u32() as u16).collect();
+            let t = KvTransform::forward(&kv, KvWindow::new(n, c));
+            assert_eq!(t.inverse(), kv);
+        });
+    }
+
+    #[test]
+    fn inverse_words_matches_inverse() {
+        let mut r = Rng::new(52);
+        let kv = smooth_kv(&mut r, 32, 16);
+        let t = KvTransform::forward(&kv, KvWindow::new(32, 16));
+        assert_eq!(t.inverse_words(&t.words), t.inverse());
+    }
+
+    #[test]
+    fn deltas_are_small_for_smooth_kv() {
+        let mut r = Rng::new(53);
+        let kv = smooth_kv(&mut r, 64, 32);
+        let t = KvTransform::forward(&kv, KvWindow::new(64, 32));
+        // majority of zigzag deltas should be in {0,1,2} (δ ∈ {0,−1,+1}),
+        // touching only the two lowest delta planes
+        let small = t
+            .words
+            .iter()
+            .filter(|&&w| {
+                let (_, d, _) = bf16_fields(w);
+                d <= 2
+            })
+            .count();
+        assert!(small as f64 > 0.8 * t.words.len() as f64, "small={small}/{}", t.words.len());
+    }
+
+    #[test]
+    fn transform_reduces_entropy() {
+        let mut r = Rng::new(54);
+        let kv = smooth_kv(&mut r, 128, 64);
+        let raw_entropy = byte_entropy(&u16s_to_bytes(&kv));
+        let t = KvTransform::forward(&kv, KvWindow::new(128, 64));
+        let planes = crate::bitplane::transpose_to_planes(&t.words, 16);
+        let plane_entropy = byte_entropy(&planes);
+        assert!(
+            plane_entropy < raw_entropy - 0.5,
+            "raw={raw_entropy:.2} planes={plane_entropy:.2}"
+        );
+    }
+
+    #[test]
+    fn staging_bytes_eq4() {
+        let w = KvWindow::new(64, 128);
+        // n*C*b = 64*128*2 = 16384, + C header + overhead
+        assert_eq!(w.staging_bytes(64), 16384 + 128 + 64);
+    }
+
+    #[test]
+    fn channel_major_grouping() {
+        // token-major input [t0c0, t0c1, t1c0, t1c1] -> group_j = column j
+        let kv = [
+            bf16_from_f32(1.0),
+            bf16_from_f32(100.0),
+            bf16_from_f32(1.1),
+            bf16_from_f32(101.0),
+        ];
+        let t = KvTransform::forward(&kv, KvWindow::new(2, 2));
+        // channel 0 occupies words[0..2] and both elements have tiny deltas
+        let (_, d0, _) = bf16_fields(t.words[0]);
+        let (_, d1, _) = bf16_fields(t.words[1]);
+        assert!(d0 <= 2, "d0={d0}");
+        assert!(d1 <= 2, "d1={d1}");
+    }
+}

@@ -1,0 +1,295 @@
+//! Word-major ↔ plane-major bit transposition (paper Eq. 1–2).
+//!
+//! Elements are presented as `u16` codes (BF16/FP16 words, or zero-extended
+//! INT8/FP8/INT4 codes). Plane `i` is a packed bit stream: element `j` lands
+//! in byte `j/8`, bit `j%8` (LSB-first). Planes are laid out contiguously,
+//! MSB plane first — matching the paper's Eq. (2) ordering where the most
+//! significant plane `P_{B-1}` heads the block.
+//!
+//! The hot loop uses a SWAR 8×8 bit-matrix transpose over `u64` lanes
+//! (Hacker's Delight §7-3), processing 8 elements × 8 bit positions per
+//! step; this is the line-rate path the paper's controller performs in its
+//! staging SRAM.
+
+/// Packed length in bytes of one plane holding `m` elements.
+#[inline]
+pub fn plane_len(m: usize) -> usize {
+    m.div_ceil(8)
+}
+
+/// Split a u128 of 8 little-endian u16 words into (low-byte lanes,
+/// high-byte lanes), each a u64 with lane `j` = byte `j` of word `j`.
+/// Three SWAR gather rounds (Hacker's Delight §7-2 style compress).
+#[inline]
+fn deinterleave_bytes(x: u128) -> (u64, u64) {
+    // round 1: group bytes in pairs -> 16-bit cells hold [lo, hi]
+    // gather even bytes (lo) and odd bytes (hi) by successive doubling
+    let mut lo = x & 0x00ff00ff_00ff00ff_00ff00ff_00ff00ffu128;
+    let mut hi = (x >> 8) & 0x00ff00ff_00ff00ff_00ff00ff_00ff00ffu128;
+    lo = (lo | (lo >> 8)) & 0x0000ffff_0000ffff_0000ffff_0000ffffu128;
+    hi = (hi | (hi >> 8)) & 0x0000ffff_0000ffff_0000ffff_0000ffffu128;
+    lo = (lo | (lo >> 16)) & 0x00000000_ffffffff_00000000_ffffffffu128;
+    hi = (hi | (hi >> 16)) & 0x00000000_ffffffff_00000000_ffffffffu128;
+    lo |= lo >> 32;
+    hi |= hi >> 32;
+    ((lo as u64 & 0xffff_ffff) | ((lo >> 64) as u64) << 32,
+     (hi as u64 & 0xffff_ffff) | ((hi >> 64) as u64) << 32)
+}
+
+/// Transpose an 8×8 bit matrix held in a u64 (row j = byte j, bit i).
+/// After the transpose, row i = original column i.
+#[inline]
+fn transpose8(x: u64) -> u64 {
+    // Hacker's Delight 7-3 (straight-line version).
+    let mut x = x;
+    let mut t;
+    t = (x ^ (x >> 7)) & 0x00AA00AA00AA00AA;
+    x ^= t ^ (t << 7);
+    t = (x ^ (x >> 14)) & 0x0000CCCC0000CCCC;
+    x ^= t ^ (t << 14);
+    t = (x ^ (x >> 28)) & 0x00000000F0F0F0F0;
+    x ^= t ^ (t << 28);
+    x
+}
+
+/// Disaggregate `words` (each using the low `bits` bits) into `bits` planes.
+///
+/// Returns a flat buffer of `bits * plane_len(m)` bytes; plane `i` (bit
+/// position `i`) occupies the slice starting at `(bits-1-i) * plane_len(m)`
+/// — i.e. MSB plane first.
+pub fn transpose_to_planes(words: &[u16], bits: usize) -> Vec<u8> {
+    assert!(bits >= 1 && bits <= 16);
+    let m = words.len();
+    let pl = plane_len(m);
+    let mut out = vec![0u8; bits * pl];
+
+    // Process groups of 8 elements; each group contributes one byte to every
+    // plane. Within a group, build two u64s: low byte lanes and high byte
+    // lanes of the 8 words, then bit-transpose each 8x8 block.
+    //
+    // Perf (§Perf in EXPERIMENTS.md): `chunks_exact` + row-slice writes
+    // eliminate bounds checks in the hot loop; the 8x8 SWAR transpose does
+    // the bit work in registers. ~4.5 GB/s single-core.
+    let groups = m / 8;
+    if bits == 16 {
+        // Specialized BF16/FP16 path, tiled 64 elements at a time: the
+        // per-row bytes of 8 groups accumulate in sixteen u64 registers and
+        // flush with one unaligned 8-byte store per row per tile —
+        // eliminating the per-byte row-slice reloads that dominated the
+        // scalar profile (§Perf: 0.22 -> 4.6 GB/s).
+        let tiles = groups / 8;
+        for t in 0..tiles {
+            let mut acc = [0u64; 16];
+            let base = t * 64;
+            for gi in 0..8 {
+                // SAFETY: base+gi*8+8 <= groups*8 <= m words.
+                let x = unsafe {
+                    (words.as_ptr().add(base + gi * 8) as *const u128).read_unaligned()
+                }
+                .to_le();
+                let (lo, hi) = deinterleave_bytes(x);
+                let tlo = transpose8(lo);
+                let thi = transpose8(hi);
+                let sh = 8 * gi as u32;
+                // byte i of tlo = bit position i -> plane row 15-i
+                for i in 0..8 {
+                    acc[15 - i] |= ((tlo >> (8 * i as u32)) & 0xff) << sh;
+                    acc[7 - i] |= ((thi >> (8 * i as u32)) & 0xff) << sh;
+                }
+            }
+            let col = t * 8;
+            for (row, &a) in acc.iter().enumerate() {
+                // SAFETY: row < 16 = bits, col+8 <= pl for full tiles.
+                unsafe {
+                    (out.as_mut_ptr().add(row * pl + col) as *mut u64)
+                        .write_unaligned(a.to_le());
+                }
+            }
+        }
+        // tail groups (groups not a multiple of 8) + tail elements
+        let mut rows: Vec<&mut [u8]> = out.chunks_exact_mut(pl).collect();
+        for g in tiles * 8..groups {
+            let chunk = &words[g * 8..g * 8 + 8];
+            let x = unsafe { (chunk.as_ptr() as *const u128).read_unaligned() }.to_le();
+            let (lo, hi) = deinterleave_bytes(x);
+            let lb = transpose8(lo).to_le_bytes();
+            let hb = transpose8(hi).to_le_bytes();
+            for i in 0..8 {
+                rows[15 - i][g] = lb[i];
+                rows[7 - i][g] = hb[i];
+            }
+        }
+    } else {
+        // one mutable slice per plane row so inner writes are check-free
+        let mut rows: Vec<&mut [u8]> = out.chunks_exact_mut(pl).collect();
+        for (g, chunk) in words.chunks_exact(8).enumerate() {
+            // load the 8 words as one u128 and deinterleave low/high bytes
+            // with a SWAR shuffle instead of 8 per-word extracts
+            // SAFETY: as above.
+            let x = unsafe { (chunk.as_ptr() as *const u128).read_unaligned() }.to_le();
+            let (lo, hi) = deinterleave_bytes(x);
+            // After transpose8, byte `i` of `tlo` holds bit `i` of each of
+            // the 8 words (element j in bit j).
+            let lb = transpose8(lo).to_le_bytes();
+            let hb = transpose8(hi).to_le_bytes();
+            for i in 0..bits.min(8) {
+                rows[bits - 1 - i][g] = lb[i];
+            }
+            for i in 8..bits {
+                rows[bits - 1 - i][g] = hb[i - 8];
+            }
+        }
+    }
+    let _ = groups;
+
+    // Tail elements (m % 8 != 0): bit-by-bit.
+    for j in groups * 8..m {
+        let w = words[j];
+        for i in 0..bits {
+            if (w >> i) & 1 != 0 {
+                let plane_row = bits - 1 - i;
+                out[plane_row * pl + j / 8] |= 1 << (j % 8);
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`transpose_to_planes`]: reassemble `m` words from the flat
+/// plane buffer. Planes absent from `mask` (bit `i` of `mask` = plane for
+/// bit position `i`) are treated as zero — this is exactly what a
+/// plane-aligned reduced-precision fetch produces before ℛ's zero-padding.
+pub fn transpose_from_planes(planes: &[u8], m: usize, bits: usize, mask: u32) -> Vec<u16> {
+    assert!(bits >= 1 && bits <= 16);
+    let pl = plane_len(m);
+    assert!(planes.len() >= bits * pl, "plane buffer too short");
+    let mut words = vec![0u16; m];
+
+    let groups = m / 8;
+    {
+        // per-plane row slices + precomputed (row, shift) lists keep the
+        // hot loop free of bounds checks and mask tests (§Perf).
+        let rows: Vec<&[u8]> = planes[..bits * pl].chunks_exact(pl).collect();
+        let lo_sel: Vec<(usize, u32)> = (0..bits.min(8))
+            .filter(|i| mask >> i & 1 != 0)
+            .map(|i| (bits - 1 - i, 8 * i as u32))
+            .collect();
+        let hi_sel: Vec<(usize, u32)> = (8..bits)
+            .filter(|i| mask >> i & 1 != 0)
+            .map(|i| (bits - 1 - i, 8 * (i as u32 - 8)))
+            .collect();
+        for (g, outw) in words.chunks_exact_mut(8).enumerate() {
+            let mut lo: u64 = 0;
+            let mut hi: u64 = 0;
+            for &(row, sh) in &lo_sel {
+                lo |= (rows[row][g] as u64) << sh;
+            }
+            for &(row, sh) in &hi_sel {
+                hi |= (rows[row][g] as u64) << sh;
+            }
+            let lb = transpose8(lo).to_le_bytes();
+            let hb = transpose8(hi).to_le_bytes();
+            for j in 0..8 {
+                outw[j] = lb[j] as u16 | ((hb[j] as u16) << 8);
+            }
+        }
+        let _ = groups;
+    }
+
+    for j in groups * 8..m {
+        let mut w = 0u16;
+        for i in 0..bits {
+            if mask >> i & 1 != 0 {
+                let plane_row = bits - 1 - i;
+                if planes[plane_row * pl + j / 8] >> (j % 8) & 1 != 0 {
+                    w |= 1 << i;
+                }
+            }
+        }
+        words[j] = w;
+    }
+    words
+}
+
+/// View of a single plane (bit position `i`) within a flat plane buffer.
+pub fn plane_slice(planes: &[u8], m: usize, bits: usize, bit_pos: usize) -> &[u8] {
+    let pl = plane_len(m);
+    let row = bits - 1 - bit_pos;
+    &planes[row * pl..(row + 1) * pl]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::props;
+
+    #[test]
+    fn transpose8_involution() {
+        props(41, 300, |r| {
+            let x = r.next_u64();
+            assert_eq!(transpose8(transpose8(x)), x);
+        });
+    }
+
+    #[test]
+    fn transpose8_known() {
+        // identity matrix transposes to itself
+        let id: u64 = (0..8).fold(0u64, |acc, i| acc | (1u64 << (9 * i)));
+        assert_eq!(transpose8(id), id);
+        // single bit: row 0 bit 7 -> row 7 bit 0
+        assert_eq!(transpose8(1u64 << 7), 1u64 << 56);
+    }
+
+    #[test]
+    fn roundtrip_full_mask() {
+        props(42, 300, |r| {
+            let bits = [4usize, 8, 12, 16][r.below(4)];
+            let m = 1 + r.below(600);
+            let mask_all = if bits == 16 { 0xffff } else { (1u32 << bits) - 1 };
+            let words: Vec<u16> = (0..m)
+                .map(|_| (r.next_u32() as u16) & (mask_all as u16))
+                .collect();
+            let planes = transpose_to_planes(&words, bits);
+            assert_eq!(planes.len(), bits * plane_len(m));
+            let back = transpose_from_planes(&planes, m, bits, mask_all);
+            assert_eq!(back, words);
+        });
+    }
+
+    #[test]
+    fn partial_mask_zeroes_dropped_planes() {
+        props(43, 200, |r| {
+            let m = 8 + r.below(256);
+            let words: Vec<u16> = (0..m).map(|_| r.next_u32() as u16).collect();
+            let planes = transpose_to_planes(&words, 16);
+            // keep only the top 9 planes (sign + 8 exponent bits of BF16)
+            let mask: u32 = 0xffff & !((1 << 7) - 1);
+            let back = transpose_from_planes(&planes, m, 16, mask);
+            for (w, b) in words.iter().zip(back.iter()) {
+                assert_eq!(*b, w & 0xff80);
+            }
+        });
+    }
+
+    #[test]
+    fn plane_slice_is_msb_first() {
+        // all elements have only the sign bit (bit 15) set
+        let words = vec![0x8000u16; 16];
+        let planes = transpose_to_planes(&words, 16);
+        assert!(plane_slice(&planes, 16, 16, 15).iter().all(|&b| b == 0xff));
+        assert!(plane_slice(&planes, 16, 16, 0).iter().all(|&b| b == 0));
+        // MSB plane is the first plane_len bytes
+        assert_eq!(&planes[..2], &[0xff, 0xff]);
+    }
+
+    #[test]
+    fn sparse_high_planes_are_zero_runs() {
+        // small-magnitude exponent-delta words: high planes must be all zeros
+        let words = vec![0x0003u16; 4096];
+        let planes = transpose_to_planes(&words, 16);
+        let pl = plane_len(4096);
+        // planes 15..2 all zero -> first 14*pl bytes zero
+        assert!(planes[..14 * pl].iter().all(|&b| b == 0));
+        assert!(planes[14 * pl..].iter().all(|&b| b == 0xff));
+    }
+}

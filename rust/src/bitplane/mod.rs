@@ -1,0 +1,25 @@
+//! Bit-plane disaggregation — the physical substrate of TRACE (paper §III-A).
+//!
+//! A block of `m` values of `B` bits is stored as the *transpose* of its
+//! logical bit-matrix (paper Eq. 1–2): `B` contiguous plane streams, where
+//! plane `i` collects bit `i` of every element. High-order planes (sign,
+//! exponent) carry the "compressible core"; low-order mantissa planes carry
+//! "elastic detail" that precision views may skip.
+//!
+//! * [`layout`] — word-major ↔ plane-major bit transposition.
+//! * [`kvtransform`] — Mechanism I's KV chain: cross-token channel-major
+//!   transpose + per-channel exponent-delta normalization (Eq. 3–5).
+//! * [`planes`] — plane masks / alias views (Eq. 6), guard-plane rounding,
+//!   and the reconstruction pipeline 𝒯⁻¹ ∘ ℛ ∘ 𝒟 (Eq. 7–8).
+//! * [`block`] — the device-internal 4 KB block container: header, per-plane
+//!   codec selection, plane-index entry (64 B metadata per block).
+
+pub mod layout;
+pub mod kvtransform;
+pub mod planes;
+pub mod block;
+
+pub use block::{DeviceBlock, PlaneIndexEntry, BLOCK_BYTES};
+pub use kvtransform::{KvTransform, KvWindow};
+pub use layout::{transpose_to_planes, transpose_from_planes, plane_len};
+pub use planes::{PlaneMask, PrecisionView, reconstruct_bf16_view};

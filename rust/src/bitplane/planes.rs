@@ -1,0 +1,267 @@
+//! Plane masks, alias precision views, and the reconstruction pipeline
+//! (paper §III-C, Eq. 6–8).
+//!
+//! A [`PrecisionView`] is the device-side meaning of an address alias
+//! `P_i`: how many exponent planes `r_E` and mantissa planes `r_M` to
+//! fetch, plus guard planes `(d_E, d_M)` used for on-device
+//! round-to-nearest before serialization. [`PlaneMask`] is the physical
+//! row-filter the controller derives from a view (Eq. 6) — the set of
+//! bit positions whose planes get DRAM reads; everything else stays
+//! dormant.
+
+use crate::formats::Fmt;
+
+/// Bitmask over plane (bit) positions: bit `i` set ⇒ plane for bit
+/// position `i` is fetched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlaneMask(pub u32);
+
+impl PlaneMask {
+    /// All planes of a format.
+    pub fn full(fmt: Fmt) -> PlaneMask {
+        PlaneMask(((1u64 << fmt.bits()) - 1) as u32)
+    }
+
+    pub fn none() -> PlaneMask {
+        PlaneMask(0)
+    }
+
+    /// Number of planes selected.
+    pub fn count(&self) -> usize {
+        self.0.count_ones() as usize
+    }
+
+    pub fn contains(&self, bit_pos: usize) -> bool {
+        self.0 >> bit_pos & 1 != 0
+    }
+
+    pub fn union(&self, other: PlaneMask) -> PlaneMask {
+        PlaneMask(self.0 | other.0)
+    }
+
+    /// Iterate selected bit positions, MSB first (device fetch order).
+    pub fn iter_msb_first(&self, bits: usize) -> impl Iterator<Item = usize> + '_ {
+        let m = self.0;
+        (0..bits).rev().filter(move |i| m >> i & 1 != 0)
+    }
+}
+
+/// A reduced-precision alias view (paper Fig. 9 / Eq. 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrecisionView {
+    /// Base element format the tensor was written in.
+    pub fmt: Fmt,
+    /// Exponent planes fetched (`r_E`), counted from the exponent MSB.
+    pub r_e: usize,
+    /// Mantissa planes fetched (`r_M`), counted from the mantissa MSB.
+    pub r_m: usize,
+    /// Guard exponent planes (`d_E`) fetched for rounding only.
+    pub d_e: usize,
+    /// Guard mantissa planes (`d_M`) fetched for rounding only.
+    pub d_m: usize,
+}
+
+impl PrecisionView {
+    /// The full-precision (lossless) view `P_1`.
+    pub fn full(fmt: Fmt) -> PrecisionView {
+        let (_, e, m) = fmt.fields();
+        PrecisionView { fmt, r_e: e, r_m: m, d_e: 0, d_m: 0 }
+    }
+
+    /// A BF16 view keeping the full exponent and `r_m` mantissa planes with
+    /// `guard` mantissa guard planes — the configuration used for the KV
+    /// quality tiers (dropping exponent MSBs is never useful numerically).
+    pub fn bf16_mantissa(r_m: usize, guard: usize) -> PrecisionView {
+        PrecisionView { fmt: Fmt::Bf16, r_e: 8, r_m: r_m.min(7), d_e: 0, d_m: guard }
+    }
+
+    /// Effective bits per element actually *returned* (sign + r_E + r_M).
+    pub fn returned_bits(&self) -> usize {
+        let (s, _, _) = self.fmt.fields();
+        s + self.r_e + self.r_m
+    }
+
+    /// Bits per element *fetched* from DRAM (returned + guard planes).
+    pub fn fetched_bits(&self) -> usize {
+        let (s, e, m) = self.fmt.fields();
+        s + (self.r_e + self.d_e).min(e) + (self.r_m + self.d_m).min(m)
+    }
+
+    /// Whether this view is lossless for its base format.
+    pub fn is_full(&self) -> bool {
+        let (_, e, m) = self.fmt.fields();
+        self.r_e >= e && self.r_m >= m
+    }
+
+    /// The plane row-filter `S_req` (Eq. 6): sign plane ∪ top `r_E+d_E`
+    /// exponent planes ∪ top `r_M+d_M` mantissa planes.
+    pub fn mask(&self) -> PlaneMask {
+        let (s, e, m) = self.fmt.fields();
+        let bits = self.fmt.bits();
+        let mut mask: u32 = 0;
+        // sign plane(s): topmost `s` bits
+        for i in (bits - s)..bits {
+            mask |= 1 << i;
+        }
+        // exponent planes occupy bit positions [m, m+e); take the top r_e+d_e
+        let e_take = (self.r_e + self.d_e).min(e);
+        for k in 0..e_take {
+            mask |= 1 << (m + e - 1 - k);
+        }
+        // mantissa planes occupy [0, m); take the top r_m+d_m
+        let m_take = (self.r_m + self.d_m).min(m);
+        for k in 0..m_take {
+            mask |= 1 << (m - 1 - k);
+        }
+        PlaneMask(mask)
+    }
+
+    /// Mask of planes fetched *only* as guards (rounded away before return).
+    pub fn guard_mask(&self) -> PlaneMask {
+        let keep = PrecisionView { d_e: 0, d_m: 0, ..*self }.mask();
+        PlaneMask(self.mask().0 & !keep.0)
+    }
+}
+
+/// ℛ for BF16 (Eq. 7 step 2): given words whose *fetched* planes are
+/// populated (others zero), apply guard-plane round-to-nearest at the
+/// mantissa cut and zero the guard bits, producing the host-visible view.
+///
+/// `view.r_m` mantissa bits are kept; `view.d_m` guard bits below the cut
+/// participate in rounding. Mantissa overflow carries into the exponent
+/// (standard float RTN behaviour, paper: "effectively act as the guard and
+/// round bits in standard floating-point arithmetic").
+pub fn reconstruct_bf16_view(words: &mut [u16], view: &PrecisionView) {
+    assert_eq!(view.fmt, Fmt::Bf16);
+    if view.is_full() {
+        return;
+    }
+    let keep = view.r_m.min(7);
+    let drop = 7 - keep;
+    for w in words.iter_mut() {
+        if view.d_m == 0 {
+            // pure truncation: fetched mask already zeroed the low planes
+            *w &= !(((1u16 << drop) - 1) & 0x7f);
+            continue;
+        }
+        let s = (*w >> 15) & 1;
+        let mut e = (*w >> 7) & 0xff;
+        let m = *w & 0x7f;
+        let round_add = 1u32 << (drop - 1);
+        let mut kept = ((m as u32) + round_add) >> drop;
+        if kept >= (1u32 << keep) {
+            kept = 0;
+            // The device rounds in the *stored* domain (for KV that is the
+            // exponent-delta domain), so the carry wraps mod 256; the
+            // inverse transform re-adds the base exponent. Wrapping keeps
+            // the operation identical in both domains.
+            e = (e + 1) & 0xff;
+        }
+        *w = (s << 15) | (e << 7) | ((kept << drop) as u16);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{bf16_from_f32, bf16_to_f32};
+    use crate::util::check::props;
+    use crate::util::Rng;
+
+    #[test]
+    fn full_view_mask_is_all_planes() {
+        for fmt in [Fmt::Bf16, Fmt::Fp8E4M3, Fmt::Int8, Fmt::Fp16] {
+            assert_eq!(PrecisionView::full(fmt).mask(), PlaneMask::full(fmt));
+        }
+    }
+
+    #[test]
+    fn eq6_mask_bf16() {
+        // BF16: sign bit 15, exponent bits [7..15), mantissa [0..7)
+        let v = PrecisionView { fmt: Fmt::Bf16, r_e: 3, r_m: 2, d_e: 0, d_m: 0 };
+        let m = v.mask();
+        assert!(m.contains(15)); // sign
+        assert!(m.contains(14) && m.contains(13) && m.contains(12)); // top-3 exp
+        assert!(!m.contains(11) && !m.contains(7));
+        assert!(m.contains(6) && m.contains(5)); // top-2 mantissa
+        assert!(!m.contains(4) && !m.contains(0));
+        assert_eq!(m.count(), 6);
+        assert_eq!(v.returned_bits(), 6);
+    }
+
+    #[test]
+    fn guard_mask_disjoint_from_kept() {
+        let v = PrecisionView::bf16_mantissa(3, 2);
+        let g = v.guard_mask();
+        let kept = PrecisionView::bf16_mantissa(3, 0).mask();
+        assert_eq!(g.0 & kept.0, 0);
+        assert_eq!(g.count(), 2);
+        assert_eq!(v.fetched_bits(), 1 + 8 + 5);
+    }
+
+    #[test]
+    fn fetched_bits_clamped() {
+        let v = PrecisionView { fmt: Fmt::Bf16, r_e: 8, r_m: 7, d_e: 3, d_m: 3 };
+        assert_eq!(v.fetched_bits(), 16);
+    }
+
+    #[test]
+    fn mask_msb_iteration_order() {
+        let v = PrecisionView::bf16_mantissa(1, 0);
+        let order: Vec<usize> = v.mask().iter_msb_first(16).collect();
+        assert_eq!(order[0], 15);
+        assert!(order.windows(2).all(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn reconstruct_rounding_beats_truncation() {
+        let mut r = Rng::new(61);
+        for keep in [2usize, 3, 4, 5] {
+            let xs: Vec<u16> = (0..4096).map(|_| bf16_from_f32((r.normal() * 4.0) as f32)).collect();
+            let full: Vec<f32> = xs.iter().map(|&w| bf16_to_f32(w)).collect();
+
+            let vt = PrecisionView::bf16_mantissa(keep, 0);
+            let mut trunc: Vec<u16> =
+                xs.iter().map(|&w| w & (((vt.mask().0) & 0xffff) as u16)).collect();
+            reconstruct_bf16_view(&mut trunc, &vt);
+
+            let vg = PrecisionView::bf16_mantissa(keep, 2);
+            let mut guard: Vec<u16> =
+                xs.iter().map(|&w| w & (((vg.mask().0) & 0xffff) as u16)).collect();
+            reconstruct_bf16_view(&mut guard, &vg);
+
+            let err = |ws: &[u16]| -> f64 {
+                ws.iter()
+                    .zip(&full)
+                    .map(|(&w, &f)| ((bf16_to_f32(w) - f) as f64).powi(2))
+                    .sum()
+            };
+            assert!(err(&guard) < err(&trunc), "keep={keep}");
+        }
+    }
+
+    #[test]
+    fn reconstruct_full_is_identity() {
+        props(62, 300, |r| {
+            let mut ws = vec![r.next_u32() as u16; 8];
+            let orig = ws.clone();
+            reconstruct_bf16_view(&mut ws, &PrecisionView::full(Fmt::Bf16));
+            assert_eq!(ws, orig);
+        });
+    }
+
+    #[test]
+    fn rounded_guard_bits_are_zero() {
+        props(63, 300, |r| {
+            let v = PrecisionView::bf16_mantissa(1 + r.below(6), 1 + r.below(2));
+            let fetch_mask = (v.mask().0 & 0xffff) as u16;
+            let mut ws: Vec<u16> =
+                (0..64).map(|_| (r.next_u32() as u16) & fetch_mask).collect();
+            reconstruct_bf16_view(&mut ws, &v);
+            let drop = 7 - v.r_m;
+            for &w in &ws {
+                assert_eq!(w & ((1 << drop) - 1), 0, "guard bits not cleared");
+            }
+        });
+    }
+}

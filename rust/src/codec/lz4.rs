@@ -1,0 +1,265 @@
+//! LZ4 block-format codec, implemented from scratch.
+//!
+//! This mirrors the hardware engine in the paper's codec complex (a 32-lane
+//! LZ4 datapath): greedy hash-chain-free match finding over 4-byte windows,
+//! standard LZ4 block encoding (token, literal run, little-endian offset,
+//! match-length extension bytes). The output is valid LZ4 block data and the
+//! decoder accepts any valid LZ4 block.
+//!
+//! Constraints honoured from the spec: minimum match 4, offset ≤ 65535,
+//! the last 5 bytes are always literals, and the last match must begin at
+//! least 12 bytes before the end of the block.
+
+const MIN_MATCH: usize = 4;
+const HASH_LOG: usize = 14;
+const HASH_SIZE: usize = 1 << HASH_LOG;
+const MAX_OFFSET: usize = 0xffff;
+
+#[inline]
+fn hash4(v: u32) -> usize {
+    (v.wrapping_mul(2654435761) >> (32 - HASH_LOG as u32)) as usize
+}
+
+#[inline]
+fn read_u32(b: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes([b[i], b[i + 1], b[i + 2], b[i + 3]])
+}
+
+fn write_length(out: &mut Vec<u8>, mut len: usize) {
+    while len >= 255 {
+        out.push(255);
+        len -= 255;
+    }
+    out.push(len as u8);
+}
+
+fn emit_sequence(out: &mut Vec<u8>, literals: &[u8], offset: usize, match_len: usize) {
+    let lit_len = literals.len();
+    let ml_code = match_len.saturating_sub(MIN_MATCH);
+    let token_lit = lit_len.min(15) as u8;
+    let token_ml = if match_len > 0 { ml_code.min(15) as u8 } else { 0 };
+    out.push((token_lit << 4) | token_ml);
+    if lit_len >= 15 {
+        write_length(out, lit_len - 15);
+    }
+    out.extend_from_slice(literals);
+    if match_len > 0 {
+        out.push((offset & 0xff) as u8);
+        out.push((offset >> 8) as u8);
+        if ml_code >= 15 {
+            write_length(out, ml_code - 15);
+        }
+    }
+}
+
+/// Compress into LZ4 block format.
+pub fn compress(src: &[u8]) -> Vec<u8> {
+    let n = src.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    // Blocks too small for matches are pure literals.
+    if n < MIN_MATCH + 12 {
+        emit_sequence(&mut out, src, 0, 0);
+        return out;
+    }
+
+    let mut table = vec![0u32; HASH_SIZE]; // position + 1 (0 = empty)
+    let mut anchor = 0usize; // start of pending literals
+    let mut i = 0usize;
+    // spec: last match must start >= 12 bytes before end; need 4 readable
+    let match_limit = n - 5; // matches may not cover the final 5 bytes
+    let search_end = n.saturating_sub(12);
+
+    while i <= search_end {
+        let h = hash4(read_u32(src, i));
+        let cand = table[h] as usize;
+        table[h] = (i + 1) as u32;
+        if cand > 0 {
+            let c = cand - 1;
+            if i - c <= MAX_OFFSET && read_u32(src, c) == read_u32(src, i) {
+                // extend the match forward
+                let mut ml = MIN_MATCH;
+                while i + ml < match_limit && src[c + ml] == src[i + ml] {
+                    ml += 1;
+                }
+                // extend backwards into pending literals
+                let mut back = 0usize;
+                while i - back > anchor && c > back && src[c - back - 1] == src[i - back - 1] {
+                    back += 1;
+                }
+                let mstart = i - back;
+                let moff = mstart - (c - back);
+                emit_sequence(&mut out, &src[anchor..mstart], moff, ml + back);
+                i += ml;
+                anchor = i;
+                // prime the table inside the match region (sparse, every 2)
+                let mut j = mstart + 1;
+                while j + MIN_MATCH <= i && j <= search_end {
+                    table[hash4(read_u32(src, j))] = (j + 1) as u32;
+                    j += 2;
+                }
+                continue;
+            }
+        }
+        i += 1;
+    }
+    // trailing literals
+    emit_sequence(&mut out, &src[anchor..], 0, 0);
+    out
+}
+
+/// Decompress an LZ4 block. `n` is the exact decompressed size.
+pub fn decompress(src: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
+    let mut out: Vec<u8> = Vec::with_capacity(n);
+    let mut i = 0usize;
+    if n == 0 {
+        // an empty block is encoded as a single zero token
+        anyhow::ensure!(src.len() <= 1, "trailing bytes in empty block");
+        return Ok(out);
+    }
+    loop {
+        anyhow::ensure!(i < src.len(), "truncated block (token)");
+        let token = src[i];
+        i += 1;
+        // literals
+        let mut lit_len = (token >> 4) as usize;
+        if lit_len == 15 {
+            loop {
+                anyhow::ensure!(i < src.len(), "truncated literal length");
+                let b = src[i];
+                i += 1;
+                lit_len += b as usize;
+                if b != 255 {
+                    break;
+                }
+            }
+        }
+        anyhow::ensure!(i + lit_len <= src.len(), "truncated literals");
+        out.extend_from_slice(&src[i..i + lit_len]);
+        i += lit_len;
+        if i == src.len() {
+            break; // final sequence has no match part
+        }
+        // match
+        anyhow::ensure!(i + 2 <= src.len(), "truncated offset");
+        let offset = src[i] as usize | ((src[i + 1] as usize) << 8);
+        i += 2;
+        anyhow::ensure!(offset > 0 && offset <= out.len(), "bad offset {offset} at {}", out.len());
+        let mut ml = (token & 0x0f) as usize;
+        if ml == 15 {
+            loop {
+                anyhow::ensure!(i < src.len(), "truncated match length");
+                let b = src[i];
+                i += 1;
+                ml += b as usize;
+                if b != 255 {
+                    break;
+                }
+            }
+        }
+        ml += MIN_MATCH;
+        // overlapping copy
+        let start = out.len() - offset;
+        if offset >= ml {
+            out.extend_from_within(start..start + ml);
+        } else {
+            for k in 0..ml {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+        anyhow::ensure!(out.len() <= n, "output overrun ({} > {n})", out.len());
+    }
+    anyhow::ensure!(out.len() == n, "decompressed size {} != expected {n}", out.len());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{arb_bytes, props};
+
+    #[test]
+    fn roundtrip_property() {
+        props(81, 500, |r| {
+            let data = arb_bytes(r, 8192);
+            let enc = compress(&data);
+            let dec = decompress(&enc, data.len()).unwrap();
+            assert_eq!(dec, data);
+        });
+    }
+
+    #[test]
+    fn roundtrip_edge_sizes() {
+        for n in [0usize, 1, 4, 11, 12, 13, 15, 16, 17, 64, 255, 256, 257, 4096] {
+            let data: Vec<u8> = (0..n).map(|i| (i % 7) as u8).collect();
+            let enc = compress(&data);
+            assert_eq!(decompress(&enc, n).unwrap(), data, "n={n}");
+        }
+    }
+
+    #[test]
+    fn compresses_runs_well() {
+        let data = vec![0xAAu8; 4096];
+        let enc = compress(&data);
+        assert!(enc.len() < 40, "len={}", enc.len());
+    }
+
+    #[test]
+    fn compresses_periodic() {
+        let data: Vec<u8> = (0..4096).map(|i| ((i % 16) * 3) as u8).collect();
+        let enc = compress(&data);
+        assert!(enc.len() < data.len() / 8, "len={}", enc.len());
+    }
+
+    #[test]
+    fn long_literal_runs() {
+        // incompressible stretch > 255 literals exercises length extension
+        let mut r = crate::util::Rng::new(82);
+        let mut data = vec![0u8; 1000];
+        r.fill_bytes(&mut data);
+        data.extend_from_slice(&[7u8; 500]); // then a big run
+        let enc = compress(&data);
+        assert_eq!(decompress(&enc, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn overlapping_match_copy() {
+        // "abcabcabc..." produces matches with offset < length
+        let data: Vec<u8> = b"abc".iter().cycle().take(999).copied().collect();
+        let enc = compress(&data);
+        assert_eq!(decompress(&enc, data.len()).unwrap(), data);
+        assert!(enc.len() < 64);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let data = vec![1u8; 256];
+        let mut enc = compress(&data);
+        // corrupt the offset of the first match if present
+        if enc.len() > 4 {
+            let last = enc.len() - 1;
+            enc.truncate(last); // truncation must not panic, must error or mismatch
+            let _ = decompress(&enc, data.len()).map(|d| assert_ne!(d, data));
+        }
+        assert!(decompress(&[0xF0], 100).is_err()); // claims 15+ literals, none present
+    }
+
+    #[test]
+    fn wrong_expected_size_errors() {
+        let data = vec![3u8; 100];
+        let enc = compress(&data);
+        assert!(decompress(&enc, 99).is_err());
+        assert!(decompress(&enc, 101).is_err());
+    }
+
+    #[test]
+    fn never_reads_past_window() {
+        // offsets near 64k boundary
+        let mut data = vec![0u8; 70000];
+        for (i, b) in data.iter_mut().enumerate() {
+            *b = (i / 1000) as u8;
+        }
+        let enc = compress(&data);
+        assert_eq!(decompress(&enc, data.len()).unwrap(), data);
+    }
+}

@@ -1,0 +1,176 @@
+//! Lossless codecs (paper §III-B "write path and codec integration").
+//!
+//! TRACE deliberately reuses *commodity* codecs — the gain comes from
+//! feeding them low-entropy plane streams instead of mixed-field words.
+//! We provide:
+//!
+//! * [`lz4`] — an LZ4 block codec implemented from scratch (the paper's
+//!   controller integrates a 32-lane LZ4 engine; latency-sensitive path).
+//! * [`zstdc`] — real ZSTD via the vendored `zstd` crate (amortized path).
+//! * [`rle`] — byte run-length coding, a cheap winner on all-zero planes.
+//!
+//! [`compress_best`] mirrors the controller's per-plane codec/bypass flag:
+//! each plane stream is stored under whichever codec wins, or raw when
+//! nothing helps (the bypass path of paper §III-D).
+
+pub mod lz4;
+pub mod rle;
+pub mod zstdc;
+
+/// Codec identifiers, stored per plane in the plane-index metadata.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CodecKind {
+    /// Stored raw (bypass).
+    Raw,
+    /// Byte RLE.
+    Rle,
+    /// LZ4 block format (from-scratch implementation).
+    Lz4,
+    /// Zstandard (vendored library), level 3.
+    Zstd,
+}
+
+impl CodecKind {
+    pub fn tag(self) -> u8 {
+        match self {
+            CodecKind::Raw => 0,
+            CodecKind::Rle => 1,
+            CodecKind::Lz4 => 2,
+            CodecKind::Zstd => 3,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Option<CodecKind> {
+        Some(match t {
+            0 => CodecKind::Raw,
+            1 => CodecKind::Rle,
+            2 => CodecKind::Lz4,
+            3 => CodecKind::Zstd,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CodecKind::Raw => "raw",
+            CodecKind::Rle => "rle",
+            CodecKind::Lz4 => "LZ4",
+            CodecKind::Zstd => "ZSTD",
+        }
+    }
+}
+
+/// Compress with a specific codec. Returns the encoded bytes.
+pub fn compress(kind: CodecKind, data: &[u8]) -> Vec<u8> {
+    match kind {
+        CodecKind::Raw => data.to_vec(),
+        CodecKind::Rle => rle::compress(data),
+        CodecKind::Lz4 => lz4::compress(data),
+        CodecKind::Zstd => zstdc::compress(data),
+    }
+}
+
+/// Decompress; `n` is the known decompressed length (from metadata).
+pub fn decompress(kind: CodecKind, data: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
+    match kind {
+        CodecKind::Raw => {
+            anyhow::ensure!(data.len() == n, "raw length mismatch");
+            Ok(data.to_vec())
+        }
+        CodecKind::Rle => rle::decompress(data, n),
+        CodecKind::Lz4 => lz4::decompress(data, n),
+        CodecKind::Zstd => zstdc::decompress(data, n),
+    }
+}
+
+/// The candidate set a device generation supports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodecPolicy {
+    /// LZ4 only (latency-sensitive inline path).
+    Lz4Only,
+    /// ZSTD only.
+    ZstdOnly,
+    /// Best of {RLE, LZ4} (hardware-friendly set).
+    FastBest,
+    /// Best of {RLE, LZ4, ZSTD}.
+    AllBest,
+}
+
+impl CodecPolicy {
+    fn candidates(self) -> &'static [CodecKind] {
+        match self {
+            CodecPolicy::Lz4Only => &[CodecKind::Lz4],
+            CodecPolicy::ZstdOnly => &[CodecKind::Zstd],
+            CodecPolicy::FastBest => &[CodecKind::Rle, CodecKind::Lz4],
+            CodecPolicy::AllBest => &[CodecKind::Rle, CodecKind::Lz4, CodecKind::Zstd],
+        }
+    }
+}
+
+/// Compress `data` under `policy`, returning the winning codec and bytes;
+/// falls back to `Raw` (bypass) if no candidate actually shrinks the data.
+pub fn compress_best(policy: CodecPolicy, data: &[u8]) -> (CodecKind, Vec<u8>) {
+    let mut best_kind = CodecKind::Raw;
+    let mut best: Vec<u8> = data.to_vec();
+    for &k in policy.candidates() {
+        let c = compress(k, data);
+        if c.len() < best.len() {
+            best = c;
+            best_kind = k;
+        }
+    }
+    (best_kind, best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{arb_bytes, props};
+
+    #[test]
+    fn best_roundtrip_all_shapes() {
+        props(71, 200, |r| {
+            let data = arb_bytes(r, 6000);
+            for policy in [CodecPolicy::Lz4Only, CodecPolicy::FastBest, CodecPolicy::AllBest] {
+                let (kind, enc) = compress_best(policy, &data);
+                let dec = decompress(kind, &enc, data.len()).unwrap();
+                assert_eq!(dec, data, "policy={policy:?} kind={kind:?}");
+                assert!(enc.len() <= data.len(), "never expands past raw");
+            }
+        });
+    }
+
+    #[test]
+    fn zeros_compress_hugely() {
+        let zeros = vec![0u8; 4096];
+        let (kind, enc) = compress_best(CodecPolicy::AllBest, &zeros);
+        assert!(enc.len() < 64, "kind={kind:?} len={}", enc.len());
+    }
+
+    #[test]
+    fn random_bypasses() {
+        let mut r = crate::util::Rng::new(72);
+        let mut data = vec![0u8; 4096];
+        r.fill_bytes(&mut data);
+        let (kind, enc) = compress_best(CodecPolicy::FastBest, &data);
+        assert_eq!(kind, CodecKind::Raw);
+        assert_eq!(enc.len(), data.len());
+    }
+
+    #[test]
+    fn tags_roundtrip() {
+        for k in [CodecKind::Raw, CodecKind::Rle, CodecKind::Lz4, CodecKind::Zstd] {
+            assert_eq!(CodecKind::from_tag(k.tag()), Some(k));
+        }
+        assert_eq!(CodecKind::from_tag(9), None);
+    }
+
+    #[test]
+    fn empty_input() {
+        for k in [CodecKind::Raw, CodecKind::Rle, CodecKind::Lz4, CodecKind::Zstd] {
+            let enc = compress(k, &[]);
+            let dec = decompress(k, &enc, 0).unwrap();
+            assert!(dec.is_empty());
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Byte run-length codec.
+//!
+//! The cheapest hardware codec for the all-zero / near-constant high-order
+//! delta planes Mechanism I produces. Encoding: `(count-1: u8, byte)` pairs
+//! for runs, with a literal-escape for mixed content:
+//! control byte `c`: `c < 0x80` ⇒ run of length `c+1` of the next byte;
+//! `c >= 0x80` ⇒ `c-0x7f` literal bytes follow.
+
+pub fn compress(src: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(src.len() / 4 + 8);
+    let n = src.len();
+    let mut i = 0;
+    let mut lit_start = 0usize;
+
+    let flush_literals = |out: &mut Vec<u8>, from: usize, to: usize, src: &[u8]| {
+        let mut s = from;
+        while s < to {
+            let chunk = (to - s).min(0x80);
+            out.push(0x7f + chunk as u8);
+            out.extend_from_slice(&src[s..s + chunk]);
+            s += chunk;
+        }
+    };
+
+    while i < n {
+        // measure run at i
+        let b = src[i];
+        let mut j = i + 1;
+        while j < n && src[j] == b && j - i < 128 {
+            j += 1;
+        }
+        let run = j - i;
+        if run >= 3 {
+            flush_literals(&mut out, lit_start, i, src);
+            out.push((run - 1) as u8);
+            out.push(b);
+            i = j;
+            lit_start = i;
+        } else {
+            i = j;
+        }
+    }
+    flush_literals(&mut out, lit_start, n, src);
+    out
+}
+
+pub fn decompress(src: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(n);
+    let mut i = 0;
+    while i < src.len() {
+        let c = src[i];
+        i += 1;
+        if c < 0x80 {
+            anyhow::ensure!(i < src.len(), "truncated run");
+            let b = src[i];
+            i += 1;
+            out.extend(std::iter::repeat(b).take(c as usize + 1));
+        } else {
+            let cnt = (c - 0x7f) as usize;
+            anyhow::ensure!(i + cnt <= src.len(), "truncated literals");
+            out.extend_from_slice(&src[i..i + cnt]);
+            i += cnt;
+        }
+        anyhow::ensure!(out.len() <= n, "overrun");
+    }
+    anyhow::ensure!(out.len() == n, "size mismatch {} != {n}", out.len());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{arb_bytes, props};
+
+    #[test]
+    fn roundtrip() {
+        props(91, 500, |r| {
+            let data = arb_bytes(r, 4096);
+            let enc = compress(&data);
+            assert_eq!(decompress(&enc, data.len()).unwrap(), data);
+        });
+    }
+
+    #[test]
+    fn zeros_ratio() {
+        let data = vec![0u8; 4096];
+        let enc = compress(&data);
+        assert!(enc.len() <= 64, "len={}", enc.len());
+    }
+
+    #[test]
+    fn alternating_does_not_explode() {
+        let data: Vec<u8> = (0..4096).map(|i| (i & 1) as u8).collect();
+        let enc = compress(&data);
+        // worst case ~ n + n/128 control bytes
+        assert!(enc.len() <= data.len() + data.len() / 100 + 34);
+        assert_eq!(decompress(&enc, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn errors_on_truncation() {
+        let enc = compress(&[5u8; 100]);
+        assert!(decompress(&enc[..enc.len() - 1], 100).is_err());
+    }
+}

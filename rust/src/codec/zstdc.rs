@@ -1,0 +1,46 @@
+//! Zstandard wrapper (vendored `zstd` crate), level 3 — the "amortizable"
+//! codec of the paper's evaluation (§IV-C uses LZ4 and ZSTD on 4 KB blocks).
+
+/// Compression level used device-wide. Level 3 matches common inline-zstd
+/// hardware IP and the paper's "commodity codec" framing.
+pub const LEVEL: i32 = 3;
+
+pub fn compress(src: &[u8]) -> Vec<u8> {
+    zstd::bulk::compress(src, LEVEL).expect("zstd compress cannot fail on memory buffers")
+}
+
+pub fn decompress(src: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
+    let out = zstd::bulk::decompress(src, n)
+        .map_err(|e| anyhow::anyhow!("zstd decompress: {e}"))?;
+    anyhow::ensure!(out.len() == n, "zstd size mismatch {} != {n}", out.len());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{arb_bytes, props};
+
+    #[test]
+    fn roundtrip() {
+        props(101, 200, |r| {
+            let data = arb_bytes(r, 8192);
+            let enc = compress(&data);
+            assert_eq!(decompress(&enc, data.len()).unwrap(), data);
+        });
+    }
+
+    #[test]
+    fn beats_lz4_on_text_like() {
+        let mut r = crate::util::Rng::new(102);
+        let data: Vec<u8> = (0..16384).map(|_| b'a' + r.below(20) as u8).collect();
+        let z = compress(&data);
+        let l = crate::codec::lz4::compress(&data);
+        assert!(z.len() < l.len(), "zstd={} lz4={}", z.len(), l.len());
+    }
+
+    #[test]
+    fn bad_data_errors() {
+        assert!(decompress(&[1, 2, 3, 4], 100).is_err());
+    }
+}

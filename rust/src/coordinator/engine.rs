@@ -1,0 +1,409 @@
+//! The serving engine: continuous batching over a fixed slot count, with
+//! KV pages placed across HBM and the simulated TRACE CXL device.
+
+use super::metrics::Metrics;
+use super::request::{AdmissionQueue, Request, RequestState, Response};
+use crate::bitplane::KvWindow;
+use crate::codec::CodecPolicy;
+use crate::cxl::{CxlDevice, Design};
+use crate::formats::{bf16_from_f32, bf16_to_f32};
+use crate::runtime::ModelBackend;
+use crate::tier::{HbmPartition, KvPolicy, PageTier, PAGE_TOKENS};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Device design serving spilled KV.
+    pub design: Design,
+    pub codec: CodecPolicy,
+    /// HBM bytes available to the hot KV set (weights assumed resident).
+    pub hbm_kv_bytes: u64,
+    /// Page policy applied to spilled pages (tier ladder).
+    pub policy: KvPolicy,
+    /// Greedy (argmax) decoding.
+    pub greedy: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            design: Design::Trace,
+            codec: CodecPolicy::FastBest,
+            hbm_kv_bytes: 1 << 20,
+            policy: KvPolicy::FullKv,
+            greedy: true,
+        }
+    }
+}
+
+/// One batch slot's sequence state.
+struct Slot {
+    req: Option<Request>,
+    /// Token-major BF16-rounded KV history (f32 working copy)
+    /// `[pos][layer][kv_channels]`, *HBM-resident portion only* for pages
+    /// committed to HBM; spilled pages hold placeholders re-fetched from
+    /// the device each step.
+    kv: Vec<f32>,
+    /// Number of cached tokens.
+    pos: usize,
+    /// Committed pages: (page index, spilled?, device addr).
+    pages: Vec<(usize, bool, u64)>,
+    cur_token: u32,
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot { req: None, kv: Vec::new(), pos: 0, pages: Vec::new(), cur_token: 0 }
+    }
+}
+
+/// The coordinator engine.
+pub struct Engine<B: ModelBackend> {
+    pub cfg: EngineConfig,
+    backend: B,
+    pub device: CxlDevice,
+    pub hbm: HbmPartition,
+    queue: AdmissionQueue,
+    slots: Vec<Slot>,
+    pub metrics: Metrics,
+    responses: Vec<Response>,
+    next_addr: u64,
+    kv_entry_len: usize,
+}
+
+impl<B: ModelBackend> Engine<B> {
+    pub fn new(backend: B, cfg: EngineConfig) -> Engine<B> {
+        let dims = backend.dims().clone();
+        let slots = (0..dims.batch).map(|_| Slot::empty()).collect();
+        let device = CxlDevice::new(cfg.design, cfg.codec);
+        let hbm = HbmPartition::new(cfg.hbm_kv_bytes, 0.0, 0);
+        Engine {
+            kv_entry_len: dims.kv_entry_len(),
+            cfg,
+            backend,
+            device,
+            hbm,
+            queue: AdmissionQueue::new(),
+            slots,
+            metrics: Metrics::new(),
+            responses: Vec::new(),
+            next_addr: 0x1000,
+        }
+    }
+
+    pub fn submit(&mut self, prompt: Vec<u32>, max_new: usize) -> u64 {
+        let id = self.queue.submitted;
+        self.queue.submit(Request::new(id, prompt, max_new));
+        id
+    }
+
+    pub fn take_responses(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.responses)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.slots.iter().filter(|s| s.req.is_some()).count()
+    }
+
+    /// Page-size in bytes (BF16 storage).
+    fn page_bytes(&self) -> u64 {
+        (PAGE_TOKENS * self.kv_entry_len * 2) as u64
+    }
+
+    /// Admit queued requests into free slots and prefill them.
+    fn admit(&mut self) -> Result<()> {
+        let dims = self.backend.dims().clone();
+        // find free slots
+        let free: Vec<usize> =
+            (0..self.slots.len()).filter(|&i| self.slots[i].req.is_none()).collect();
+        if free.is_empty() || self.queue.is_empty() {
+            return Ok(());
+        }
+        let mut admitted = Vec::new();
+        for &slot in &free {
+            if let Some(mut req) = self.queue.pop() {
+                req.state = RequestState::Prefilling;
+                req.admitted_step = Some(self.metrics.engine_steps);
+                admitted.push((slot, req));
+            }
+        }
+        if admitted.is_empty() {
+            return Ok(());
+        }
+        // Prefill runs over the whole batch; inactive slots get empty prompts.
+        let mut batch_prompts = vec![Vec::new(); dims.batch];
+        for (slot, req) in &admitted {
+            batch_prompts[*slot] = req.prompt.clone();
+        }
+        let out = self.backend.prefill(&batch_prompts)?;
+        self.metrics.prefills += 1;
+        for (slot, mut req) in admitted {
+            let plen = req.prompt.len().min(dims.t_prompt);
+            // round prefill KV through BF16 (the storage format)
+            let take = plen * self.kv_entry_len;
+            let kv: Vec<f32> = out.kv[slot][..take]
+                .iter()
+                .map(|&x| bf16_to_f32(bf16_from_f32(x)))
+                .collect();
+            let first = Self::sample(&out.logits[slot]);
+            req.state = RequestState::Decoding;
+            let s = &mut self.slots[slot];
+            s.kv = kv;
+            s.pos = plen;
+            s.pages.clear();
+            s.cur_token = first;
+            s.req = Some(req);
+            // commit full prompt pages
+            let full_pages = plen / PAGE_TOKENS;
+            for p in 0..full_pages {
+                self.commit_page(slot, p)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn sample(logits: &[f32]) -> u32 {
+        // greedy argmax
+        let mut best = 0usize;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > logits[best] {
+                best = i;
+            }
+        }
+        best as u32
+    }
+
+    /// Commit page `p` of `slot`: HBM if it fits, else spill to the device.
+    fn commit_page(&mut self, slot: usize, page: usize) -> Result<()> {
+        let pb = self.page_bytes();
+        if self.hbm.try_alloc_kv(pb) {
+            self.metrics.pages_hbm += 1;
+            self.slots[slot].pages.push((page, false, 0));
+            return Ok(());
+        }
+        // spill: BF16-round the page and write through Mechanism I
+        self.metrics.pages_spilled += 1;
+        let el = self.kv_entry_len;
+        let start = page * PAGE_TOKENS * el;
+        let end = start + PAGE_TOKENS * el;
+        let words: Vec<u16> =
+            self.slots[slot].kv[start..end].iter().map(|&x| bf16_from_f32(x)).collect();
+        let addr = self.next_addr;
+        self.next_addr += 0x10000;
+        self.device.write_kv(addr, &words, KvWindow::new(PAGE_TOKENS, el));
+        self.slots[slot].pages.push((page, true, addr));
+        Ok(())
+    }
+
+    /// Rebuild the attention KV for a slot, fetching spilled pages through
+    /// the device (at the tier the policy assigns).
+    fn materialize_kv(&mut self, slot: usize) -> Result<Vec<f32>> {
+        let el = self.kv_entry_len;
+        let mut kv = self.slots[slot].kv.clone();
+        let n_pages = self.slots[slot].pages.len();
+        let pages = self.slots[slot].pages.clone();
+        // importance: recency-weighted (newest hottest), page 0 coldest
+        let imp: Vec<f64> = (0..n_pages).map(|i| (i + 1) as f64).collect();
+        let tiers = self.cfg.policy.assign(&imp);
+        for (k, (page, spilled, addr)) in pages.iter().enumerate() {
+            if !spilled {
+                continue;
+            }
+            let tier = tiers.get(k).copied().unwrap_or(PageTier::Bf16);
+            let words = match tier.view() {
+                None => continue, // dropped page: leave zeros (masked out upstream)
+                Some(v) if v.is_full() => self.device.read(*addr)?,
+                Some(v) => self.device.read_view(*addr, &v)?,
+            };
+            self.metrics.kv_recall_bytes += (words.len() * 2) as u64;
+            let start = page * PAGE_TOKENS * el;
+            for (i, &w) in words.iter().enumerate() {
+                kv[start + i] = bf16_to_f32(w);
+            }
+        }
+        Ok(kv)
+    }
+
+    /// Run one engine step: admit + decode one token for all active slots.
+    /// Returns the number of tokens generated this step.
+    pub fn step(&mut self) -> Result<usize> {
+        self.admit()?;
+        let active: Vec<usize> =
+            (0..self.slots.len()).filter(|&i| self.slots[i].req.is_some()).collect();
+        if active.is_empty() {
+            return Ok(0);
+        }
+        let t0 = Instant::now();
+        let dims = self.backend.dims().clone();
+        // all slots share one position counter (the max); shorter slots are
+        // right-aligned by zero-padding their KV history
+        let pos = self.slots.iter().map(|s| s.pos).max().unwrap_or(0);
+        anyhow::ensure!(pos < dims.t_max, "KV capacity exceeded: {pos}");
+
+        let mut tokens = vec![0u32; dims.batch];
+        let mut kvs: Vec<Vec<f32>> = Vec::with_capacity(dims.batch);
+        for i in 0..dims.batch {
+            tokens[i] = self.slots[i].cur_token;
+            if self.slots[i].req.is_some() {
+                kvs.push(self.materialize_kv(i)?);
+            } else {
+                kvs.push(Vec::new());
+            }
+        }
+        let out = self.backend.decode(&tokens, &kvs, pos)?;
+        let mut generated = 0usize;
+
+        for &i in &active {
+            let tok = Self::sample(&out.logits[i]);
+            // append BF16-rounded KV entry
+            let entry: Vec<f32> =
+                out.kv_new[i].iter().map(|&x| bf16_to_f32(bf16_from_f32(x))).collect();
+            let s = &mut self.slots[i];
+            s.kv.extend_from_slice(&entry);
+            s.pos += 1;
+            s.cur_token = tok;
+            let req = s.req.as_mut().unwrap();
+            req.generated.push(tok);
+            generated += 1;
+            let finished_page = s.pos % PAGE_TOKENS == 0;
+            let page_idx = s.pos / PAGE_TOKENS - if finished_page { 1 } else { 0 };
+            if finished_page {
+                self.commit_page(i, page_idx)?;
+            }
+            // completion
+            let s = &mut self.slots[i];
+            let req = s.req.as_mut().unwrap();
+            if req.is_done() || s.pos + 1 >= dims.t_max {
+                let mut done = s.req.take().unwrap();
+                done.state = RequestState::Finished;
+                done.finished_step = Some(self.metrics.engine_steps);
+                let steps =
+                    done.finished_step.unwrap() - done.admitted_step.unwrap_or(0) + 1;
+                self.metrics.request_steps.push(steps as f64);
+                self.metrics.requests_finished += 1;
+                self.responses.push(Response {
+                    id: done.id,
+                    prompt_len: done.prompt.len(),
+                    tokens: done.generated.clone(),
+                    steps_in_flight: steps,
+                });
+                // release HBM pages
+                let hbm_pages =
+                    self.slots[i].pages.iter().filter(|(_, sp, _)| !sp).count() as u64;
+                self.hbm.free_kv(hbm_pages * self.page_bytes());
+                self.slots[i] = Slot::empty();
+            }
+        }
+        self.metrics.engine_steps += 1;
+        self.metrics.tokens_generated += generated as u64;
+        self.metrics.step_ms.push(t0.elapsed().as_secs_f64() * 1000.0);
+        Ok(generated)
+    }
+
+    /// Drive the engine until all submitted work completes (or `max_steps`).
+    pub fn run_to_completion(&mut self, max_steps: usize) -> Result<()> {
+        for _ in 0..max_steps {
+            if self.pending() == 0 {
+                break;
+            }
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockBackend;
+
+    fn engine(hbm_bytes: u64) -> Engine<MockBackend> {
+        Engine::new(
+            MockBackend::tiny(),
+            EngineConfig { hbm_kv_bytes: hbm_bytes, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn completes_requests() {
+        let mut e = engine(1 << 20);
+        e.submit(vec![1, 2, 3], 10);
+        e.submit(vec![4, 5], 12);
+        e.run_to_completion(200).unwrap();
+        let rs = e.take_responses();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs.iter().find(|r| r.id == 0).unwrap().tokens.len(), 10);
+        assert_eq!(rs.iter().find(|r| r.id == 1).unwrap().tokens.len(), 12);
+        assert_eq!(e.metrics.requests_finished, 2);
+        assert!(e.metrics.tokens_generated >= 22);
+    }
+
+    #[test]
+    fn continuous_batching_admits_from_queue() {
+        let mut e = engine(1 << 20);
+        for i in 0..6 {
+            e.submit(vec![i as u32 + 1], 5);
+        }
+        e.run_to_completion(500).unwrap();
+        assert_eq!(e.take_responses().len(), 6);
+        // only 2 slots: the queue must have drained across multiple waves
+        assert!(e.metrics.prefills >= 3);
+    }
+
+    #[test]
+    fn kv_spills_when_hbm_tiny_and_results_match_hbm_run() {
+        // determinism + losslessness: tiny-HBM (spilling) run must produce
+        // identical tokens to an all-HBM run, because TRACE is lossless.
+        let run = |hbm: u64| -> Vec<Vec<u32>> {
+            let mut e = engine(hbm);
+            e.submit(vec![1, 2, 3, 4, 5, 6, 7, 8], 80);
+            e.submit(vec![9, 8, 7], 80);
+            e.run_to_completion(400).unwrap();
+            let mut rs = e.take_responses();
+            rs.sort_by_key(|r| r.id);
+            let spilled = e.metrics.pages_spilled;
+            if hbm < 1024 {
+                assert!(spilled > 0, "expected spill with hbm={hbm}");
+            }
+            rs.into_iter().map(|r| r.tokens).collect()
+        };
+        let big = run(16 << 20);
+        let tiny = run(64); // nothing fits -> every page spills
+        assert_eq!(big, tiny);
+    }
+
+    #[test]
+    fn device_sees_traffic_on_spill() {
+        let mut e = engine(0);
+        e.submit(vec![1; 8], 70);
+        e.run_to_completion(200).unwrap();
+        assert!(e.metrics.pages_spilled > 0);
+        assert!(e.device.stats.dram_bytes_written > 0);
+        assert!(e.device.stats.dram_bytes_read > 0);
+        assert!(e.metrics.kv_recall_bytes > 0);
+        // TRACE compresses the smooth mock KV
+        assert!(e.device.overall_ratio() > 1.05, "ratio={}", e.device.overall_ratio());
+    }
+
+    #[test]
+    fn tiered_policy_reduces_device_bytes() {
+        let traffic = |policy: KvPolicy| -> u64 {
+            let mut e = Engine::new(
+                MockBackend::tiny(),
+                EngineConfig { hbm_kv_bytes: 0, policy, ..Default::default() },
+            );
+            e.submit(vec![1; 8], 90);
+            e.run_to_completion(300).unwrap();
+            e.device.stats.dram_bytes_read
+        };
+        let full = traffic(KvPolicy::FullKv);
+        let tiered = traffic(KvPolicy::DynamicQuant { bf16: 2, fp8: 2, fp4: 30 });
+        assert!(tiered < full, "tiered={tiered} full={full}");
+    }
+}

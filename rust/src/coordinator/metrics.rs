@@ -1,0 +1,108 @@
+//! Serving metrics: token throughput, latency distributions, and the
+//! tier/device counters the experiment harnesses consume.
+
+use crate::cxl::DeviceStats;
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Engine-wide metrics.
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    pub engine_steps: u64,
+    pub prefills: u64,
+    pub tokens_generated: u64,
+    pub requests_finished: u64,
+    /// Per-request end-to-end latency in engine steps.
+    pub request_steps: Vec<f64>,
+    /// Wall time per decode step (ms).
+    pub step_ms: Vec<f64>,
+    /// KV pages committed to HBM / spilled to CXL.
+    pub pages_hbm: u64,
+    pub pages_spilled: u64,
+    /// Raw KV bytes recalled from the CXL tier.
+    pub kv_recall_bytes: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            started: Instant::now(),
+            engine_steps: 0,
+            prefills: 0,
+            tokens_generated: 0,
+            requests_finished: 0,
+            request_steps: Vec::new(),
+            step_ms: Vec::new(),
+            pages_hbm: 0,
+            pages_spilled: 0,
+            kv_recall_bytes: 0,
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Generated tokens per wall-clock second.
+    pub fn tok_per_s(&self) -> f64 {
+        let e = self.elapsed_s();
+        if e == 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / e
+        }
+    }
+
+    pub fn step_latency(&self) -> Summary {
+        Summary::of(&self.step_ms)
+    }
+
+    pub fn request_latency_steps(&self) -> Summary {
+        Summary::of(&self.request_steps)
+    }
+
+    /// One-line human report, including the device counters.
+    pub fn report(&self, dev: &DeviceStats) -> String {
+        let s = self.step_latency();
+        format!(
+            "steps={} tokens={} finished={} tok/s={:.2} step_ms p50={:.2} p99={:.2} \
+             pages[hbm={} cxl={}] dev[dram_rd={} dram_wr={} link_out={} meta_miss={}]",
+            self.engine_steps,
+            self.tokens_generated,
+            self.requests_finished,
+            self.tok_per_s(),
+            s.p50,
+            s.p99,
+            self.pages_hbm,
+            self.pages_spilled,
+            self.kv_recall_bytes,
+            dev.dram_bytes_written,
+            dev.link_bytes_out,
+            dev.metadata_dram_reads,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_counts() {
+        let mut m = Metrics::new();
+        m.tokens_generated = 100;
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(m.tok_per_s() > 0.0);
+        m.step_ms = vec![1.0, 2.0, 3.0];
+        assert_eq!(m.step_latency().n, 3);
+        let r = m.report(&DeviceStats::default());
+        assert!(r.contains("tokens=100"));
+    }
+}

@@ -1,0 +1,28 @@
+//! Serving coordinator (Layer 3): request router, continuous batcher, and
+//! the decode loop that places KV across the HBM/CXL tiers.
+//!
+//! The control flow mirrors a vLLM-style engine scaled to this repo's
+//! single-node CPU testbed:
+//!
+//! 1. requests arrive in an admission queue;
+//! 2. free batch slots are filled (continuous batching), prompts prefilled;
+//! 3. every engine step decodes one token for all active slots;
+//! 4. generated KV appends to the slot's page buffer; full pages commit to
+//!    HBM while it has room, else they spill into the simulated TRACE CXL
+//!    device (compressed, bit-plane form);
+//! 5. at each step, spilled pages are fetched back through the device
+//!    (decompressed, optionally via a reduced-precision alias per the
+//!    page-tier policy) to rebuild the attention context — so every token
+//!    pays exactly the device traffic the paper models.
+//!
+//! Wall-clock throughput plus device byte counters feed the benches; the
+//! trace-driven model (`sysmodel`) converts the same counters into the
+//! paper's bandwidth-ceiling projections.
+
+pub mod request;
+pub mod engine;
+pub mod metrics;
+
+pub use engine::{Engine, EngineConfig};
+pub use metrics::Metrics;
+pub use request::{Request, RequestState, Response};

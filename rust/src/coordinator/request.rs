@@ -1,0 +1,108 @@
+//! Request/response types and the admission queue.
+
+use std::collections::VecDeque;
+
+/// Lifecycle state of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    Queued,
+    Prefilling,
+    Decoding,
+    Finished,
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub state: RequestState,
+    pub generated: Vec<u32>,
+    /// Engine step at which the request was admitted / finished.
+    pub admitted_step: Option<u64>,
+    pub finished_step: Option<u64>,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            state: RequestState::Queued,
+            generated: Vec::new(),
+            admitted_step: None,
+            finished_step: None,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.generated.len() >= self.max_new_tokens
+    }
+}
+
+/// Completed request summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub prompt_len: usize,
+    pub steps_in_flight: u64,
+}
+
+/// FIFO admission queue with basic accounting.
+#[derive(Debug, Default)]
+pub struct AdmissionQueue {
+    queue: VecDeque<Request>,
+    pub submitted: u64,
+}
+
+impl AdmissionQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.submitted += 1;
+        self.queue.push_back(req);
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.queue.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut q = AdmissionQueue::new();
+        q.submit(Request::new(1, vec![1], 4));
+        q.submit(Request::new(2, vec![2], 4));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert!(q.pop().is_none());
+        assert_eq!(q.submitted, 2);
+    }
+
+    #[test]
+    fn done_condition() {
+        let mut r = Request::new(1, vec![1, 2], 2);
+        assert!(!r.is_done());
+        r.generated.push(5);
+        r.generated.push(6);
+        assert!(r.is_done());
+    }
+}

@@ -1,0 +1,128 @@
+//! Precision-partitioned address aliasing (paper §III-C, Fig. 9).
+//!
+//! The device exposes `k` virtual-address regions `P_1..P_k` that all map
+//! to the same physical bit-planes. `P_1` is the full-precision (lossless)
+//! view; each `P_i, i>1` is a reduced-precision view. The accessed alias
+//! alone determines which planes the controller returns — load/store
+//! semantics and cache-line transfers are unchanged and no sideband
+//! signaling exists. Because all views alias the same planes, extra views
+//! cost no DRAM capacity.
+
+use crate::bitplane::PrecisionView;
+use crate::formats::Fmt;
+
+/// The device's alias map: view index → [`PrecisionView`].
+#[derive(Debug, Clone)]
+pub struct AliasSpace {
+    /// Size of the underlying physical region in logical bytes.
+    pub region_bytes: u64,
+    /// Views, `views[0]` = P1 (full precision).
+    pub views: Vec<PrecisionView>,
+}
+
+impl AliasSpace {
+    /// Standard BF16 alias ladder used in the evaluation: P1 full (16b),
+    /// P2 sign+exp+3-mantissa "FP12-ish", P3 sign+exp "E8M0-ish", plus an
+    /// FP8-shaped alias. Guard planes default to 1 mantissa guard on
+    /// reduced views (on-device rounding, §III-C).
+    pub fn bf16_default(region_bytes: u64) -> AliasSpace {
+        AliasSpace {
+            region_bytes,
+            views: vec![
+                PrecisionView::full(Fmt::Bf16),
+                PrecisionView::bf16_mantissa(5, 1),
+                PrecisionView::bf16_mantissa(3, 1),
+                PrecisionView::bf16_mantissa(0, 1),
+            ],
+        }
+    }
+
+    /// Number of views `k`.
+    pub fn k(&self) -> usize {
+        self.views.len()
+    }
+
+    /// Total *virtual* span: each view `P_i` spans `L·N_i` bits where `L`
+    /// is the element count of the region (Fig. 9).
+    pub fn virtual_span_bytes(&self) -> u64 {
+        let elems = self.region_bytes * 8 / self.views[0].fmt.bits() as u64;
+        self.views
+            .iter()
+            .map(|v| (elems * v.returned_bits() as u64).div_ceil(8))
+            .sum()
+    }
+
+    /// Decode a host virtual address within the alias window into
+    /// (view index, byte offset within the view's logical tensor).
+    ///
+    /// The alias window lays views out back-to-back: P1 at 0, P2 after P1,
+    /// etc. (a real driver would mmap each separately; contiguity is just
+    /// the model's convention).
+    pub fn decode(&self, vaddr: u64) -> Option<(usize, u64)> {
+        let elems = self.region_bytes * 8 / self.views[0].fmt.bits() as u64;
+        let mut base = 0u64;
+        for (i, v) in self.views.iter().enumerate() {
+            let span = (elems * v.returned_bits() as u64).div_ceil(8);
+            if vaddr < base + span {
+                return Some((i, vaddr - base));
+            }
+            base += span;
+        }
+        None
+    }
+
+    /// Translate a view-relative element index to the logical element index
+    /// in the physical region (identity: views are same-shape projections).
+    pub fn element_of(&self, view: usize, offset_bytes: u64) -> u64 {
+        let v = &self.views[view];
+        offset_bytes * 8 / v.returned_bits() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_ladder_shapes() {
+        let a = AliasSpace::bf16_default(4096);
+        assert_eq!(a.k(), 4);
+        assert!(a.views[0].is_full());
+        assert!(!a.views[1].is_full());
+        // returned bits strictly decreasing along the ladder
+        for w in a.views.windows(2) {
+            assert!(w[0].returned_bits() > w[1].returned_bits());
+        }
+    }
+
+    #[test]
+    fn no_extra_physical_capacity() {
+        // virtual span exceeds physical, but physical stays region_bytes —
+        // the defining property of aliasing (paper: "exposing additional
+        // views incurs no extra device DRAM capacity").
+        let a = AliasSpace::bf16_default(4096);
+        assert!(a.virtual_span_bytes() > a.region_bytes);
+    }
+
+    #[test]
+    fn decode_assigns_each_byte_to_one_view() {
+        let a = AliasSpace::bf16_default(4096);
+        let (v0, off0) = a.decode(0).unwrap();
+        assert_eq!((v0, off0), (0, 0));
+        let p1_span = 4096u64;
+        let (v1, off1) = a.decode(p1_span).unwrap();
+        assert_eq!(v1, 1);
+        assert_eq!(off1, 0);
+        assert!(a.decode(a.virtual_span_bytes()).is_none());
+    }
+
+    #[test]
+    fn element_translation() {
+        let a = AliasSpace::bf16_default(4096);
+        // view 0: 16-bit elements -> byte 32 = element 16
+        assert_eq!(a.element_of(0, 32), 16);
+        // view 3: sign+exp = 9 bits
+        assert_eq!(a.views[3].returned_bits(), 9);
+        assert_eq!(a.element_of(3, 9), 8);
+    }
+}

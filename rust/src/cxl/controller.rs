@@ -1,0 +1,202 @@
+//! Controller pipeline latency model (paper Fig. 11, Fig. 22, Fig. 23,
+//! Table V latency row).
+//!
+//! The controller is a four-stage pipeline: request front-end (F),
+//! metadata resolution (M), DDR scheduling (S), then the DRAM access
+//! window (tRCD + tCL + burst). The codec is *streaming* and overlaps the
+//! DRAM window; only its non-overlapped tail is exposed. All numbers are
+//! cycles at 2 GHz (0.5 ns/cycle), calibrated so the three designs land on
+//! the paper's measured service times:
+//!
+//! * CXL-Plain  — 71 cycles (35.5 ns)
+//! * CXL-GComp  — 84 cycles (42.0 ns), +13 over Plain (variable-length
+//!   block lookup + codec bookkeeping)
+//! * TRACE      — 89 cycles (44.5 ns), +5 over GComp (alias/plane-mask
+//!   front-end 5 vs 3, plane-aware scheduling 10 vs 8)
+//! * TRACE @3× compression — 85 cycles (shorter burst + less codec tail)
+//! * TRACE bypass (incompressible) — 76 cycles (codec skipped)
+//! * metadata-cache miss — one extra DRAM access window before data reads
+
+/// Clock frequency (GHz) of the synthesized controller.
+pub const CLOCK_GHZ: f64 = 2.0;
+
+/// Which design's pipeline to evaluate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LatencyCase {
+    Plain,
+    GComp {
+        metadata_hit: bool,
+    },
+    Trace {
+        metadata_hit: bool,
+        /// Block compression ratio seen by this fetch (≥ 1.0).
+        ratio: f64,
+        /// Incompressible block served via the bypass path.
+        bypass: bool,
+    },
+}
+
+/// Stage-by-stage cycle breakdown (Fig. 22's bars).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyBreakdown {
+    pub frontend: u32,
+    pub metadata: u32,
+    pub scheduler: u32,
+    pub trcd: u32,
+    pub tcl: u32,
+    pub burst: u32,
+    /// Exposed (non-overlapped) codec cycles.
+    pub codec: u32,
+    /// Extra DRAM window for a metadata-cache miss.
+    pub meta_miss: u32,
+}
+
+impl LatencyBreakdown {
+    pub fn total_cycles(&self) -> u32 {
+        self.frontend
+            + self.metadata
+            + self.scheduler
+            + self.trcd
+            + self.tcl
+            + self.burst
+            + self.codec
+            + self.meta_miss
+    }
+
+    pub fn total_ns(&self) -> f64 {
+        self.total_cycles() as f64 / CLOCK_GHZ
+    }
+}
+
+/// DRAM access window constants (cycles @2 GHz): tRCD 13 ns, tCL 10 ns.
+const TRCD: u32 = 26;
+const TCL: u32 = 20;
+/// One extra DRAM round (activation + CAS + index-entry burst) on an
+/// index-cache miss (paper: "roughly one extra DRAM access window").
+const META_MISS_WINDOW: u32 = TRCD + TCL + 4;
+
+/// Load-to-use service time for one request (paper Figs 22–23).
+pub fn latency(case: LatencyCase) -> LatencyBreakdown {
+    match case {
+        // 3 + 2 + 8 + (26+20+12) = 71 cycles
+        LatencyCase::Plain => LatencyBreakdown {
+            frontend: 3,
+            metadata: 2,
+            scheduler: 8,
+            trcd: TRCD,
+            tcl: TCL,
+            burst: 12,
+            codec: 0,
+            meta_miss: 0,
+        },
+        // 3 + 8 + 8 + (26+20+11) + 8 = 84 cycles on a hit
+        LatencyCase::GComp { metadata_hit } => LatencyBreakdown {
+            frontend: 3,
+            metadata: 8, // variable-length block pointer + codec flags
+            scheduler: 8,
+            trcd: TRCD,
+            tcl: TCL,
+            burst: 11, // compressed block burst (~1.5x typical ratio)
+            codec: 8,  // exposed codec bookkeeping tail
+            meta_miss: if metadata_hit { 0 } else { META_MISS_WINDOW },
+        },
+        LatencyCase::Trace { metadata_hit, ratio, bypass } => {
+            let ratio = ratio.max(1.0);
+            if bypass {
+                // 5 + 2 + 8 + (26+20+15) = 76 cycles: codec skipped, raw
+                // planes burst slightly longer, plane scheduling relaxes
+                // to the generic row policy.
+                return LatencyBreakdown {
+                    frontend: 5,
+                    metadata: 2,
+                    scheduler: 8,
+                    trcd: TRCD,
+                    tcl: TCL,
+                    burst: 15,
+                    codec: 0,
+                    meta_miss: if metadata_hit { 0 } else { META_MISS_WINDOW },
+                };
+            }
+            // fixed: F5 (alias decode + plane-mask gen) + M2 (plane-index
+            // cache hit) + S10 (plane-aware scheduling) + tRCD + tCL = 63.
+            // variable: burst + exposed codec tail shrink with compression,
+            // fit to the paper's endpoints (89 @1.5x, 85 @3x):
+            // burst+codec = 18 + 12/ratio.
+            let burst = 10 + (7.0 / ratio).round() as u32;
+            let codec = 8 + (5.0 / ratio).round() as u32;
+            LatencyBreakdown {
+                frontend: 5,
+                metadata: 2,
+                scheduler: 10,
+                trcd: TRCD,
+                tcl: TCL,
+                burst,
+                codec,
+                meta_miss: if metadata_hit { 0 } else { META_MISS_WINDOW },
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fig22_values() {
+        assert_eq!(latency(LatencyCase::Plain).total_cycles(), 71);
+        assert_eq!(latency(LatencyCase::GComp { metadata_hit: true }).total_cycles(), 84);
+        let t = latency(LatencyCase::Trace { metadata_hit: true, ratio: 1.5, bypass: false });
+        assert_eq!(t.total_cycles(), 89);
+        assert!((t.total_ns() - 44.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_fig23_ratio_scaling() {
+        let r15 = latency(LatencyCase::Trace { metadata_hit: true, ratio: 1.5, bypass: false });
+        let r20 = latency(LatencyCase::Trace { metadata_hit: true, ratio: 2.0, bypass: false });
+        let r30 = latency(LatencyCase::Trace { metadata_hit: true, ratio: 3.0, bypass: false });
+        assert_eq!(r15.total_cycles(), 89);
+        assert_eq!(r30.total_cycles(), 85);
+        assert!(r20.total_cycles() < r15.total_cycles());
+        assert!(r30.total_cycles() <= r20.total_cycles());
+    }
+
+    #[test]
+    fn paper_fig23_bypass() {
+        let b = latency(LatencyCase::Trace { metadata_hit: true, ratio: 1.0, bypass: true });
+        assert_eq!(b.total_cycles(), 76);
+        assert_eq!(b.codec, 0);
+    }
+
+    #[test]
+    fn trace_delta_over_gcomp_is_frontend_and_scheduler() {
+        let g = latency(LatencyCase::GComp { metadata_hit: true });
+        let t = latency(LatencyCase::Trace { metadata_hit: true, ratio: 1.5, bypass: false });
+        assert_eq!(t.frontend - g.frontend, 2); // 5 vs 3
+        assert_eq!(t.scheduler - g.scheduler, 2); // 10 vs 8
+        assert_eq!(t.metadata, 2); // plane-index cache keeps M at 2
+        assert_eq!(t.total_cycles() - g.total_cycles(), 5);
+    }
+
+    #[test]
+    fn metadata_miss_adds_one_dram_window() {
+        let hit = latency(LatencyCase::Trace { metadata_hit: true, ratio: 2.0, bypass: false });
+        let miss = latency(LatencyCase::Trace { metadata_hit: false, ratio: 2.0, bypass: false });
+        let delta = miss.total_cycles() - hit.total_cycles();
+        assert_eq!(delta, META_MISS_WINDOW);
+        assert!(delta >= TRCD + TCL);
+    }
+
+    #[test]
+    fn ordering_invariant() {
+        // Plain < bypass < GComp < TRACE at typical ratio
+        let p = latency(LatencyCase::Plain).total_cycles();
+        let by = latency(LatencyCase::Trace { metadata_hit: true, ratio: 1.0, bypass: true })
+            .total_cycles();
+        let g = latency(LatencyCase::GComp { metadata_hit: true }).total_cycles();
+        let t = latency(LatencyCase::Trace { metadata_hit: true, ratio: 1.5, bypass: false })
+            .total_cycles();
+        assert!(p < by && by < g && g < t);
+    }
+}

@@ -1,0 +1,69 @@
+//! CXL host-link transfer model.
+//!
+//! The link is modeled as a fixed per-direction bandwidth pipe with a fixed
+//! propagation cost — the paper's system model uses a 512 GB/s
+//! per-direction link (PCIe 7.0 x16 class is 256 GB/s; the paper's modeled
+//! device assumes a two-port or next-gen configuration, §IV-B) and treats
+//! queuing as out of scope, as do we.
+
+/// Link parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    /// Per-direction bandwidth, bytes/ns (== GB/s).
+    pub gbps: f64,
+    /// Fixed one-way latency in ns (flit + retimer path).
+    pub latency_ns: f64,
+}
+
+impl Link {
+    /// Paper §IV-B system model: 512 GB/s per direction.
+    pub fn paper_default() -> Link {
+        Link { gbps: 512.0, latency_ns: 70.0 }
+    }
+
+    /// PCIe 7.0 x16 per direction (paper §II-A).
+    pub fn pcie7_x16() -> Link {
+        Link { gbps: 256.0, latency_ns: 70.0 }
+    }
+
+    /// Time to move `bytes` one way, ns.
+    pub fn transfer_ns(&self, bytes: u64) -> f64 {
+        self.latency_ns + bytes as f64 / self.gbps
+    }
+
+    /// Sustainable bytes/token ceiling at a target tokens/s.
+    pub fn bytes_per_token_at(&self, tok_per_s: f64) -> f64 {
+        self.gbps * 1e9 / tok_per_s
+    }
+
+    /// Throughput ceiling (tokens/s) given bytes moved per token.
+    pub fn tokens_per_s(&self, bytes_per_token: f64) -> f64 {
+        if bytes_per_token <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.gbps * 1e9 / bytes_per_token
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales() {
+        let l = Link::paper_default();
+        let t1 = l.transfer_ns(4096);
+        let t2 = l.transfer_ns(8192);
+        assert!(t2 > t1);
+        assert!((t2 - t1 - 4096.0 / 512.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ceiling_inverse_relation() {
+        let l = Link::paper_default();
+        let bpt = 1 << 30; // 1 GiB per token
+        let tps = l.tokens_per_s(bpt as f64);
+        assert!((tps - 512e9 / bpt as f64).abs() < 1e-6);
+        assert!(l.tokens_per_s(0.0).is_infinite());
+    }
+}

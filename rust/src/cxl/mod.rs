@@ -1,0 +1,36 @@
+//! CXL Type-3 device models (paper §III-D, Table III, §IV-E).
+//!
+//! Three device generations share one host-visible CXL.mem cache-line
+//! interface and differ only inside the device (paper Table III):
+//!
+//! | | Plain | GComp | TRACE |
+//! |---|---|---|---|
+//! | DRAM layout | word | word | bit-plane |
+//! | 4 KB block codec + index + bypass | – | ✓ | ✓ |
+//! | KV cross-token transform | – | – | ✓ |
+//! | Plane-aligned fetch (alias views) | – | – | ✓ |
+//!
+//! * [`device`] — the functional model: write/read paths, per-design
+//!   storage, correctness invariants (identical host-visible values), and
+//!   byte-traffic accounting used by the throughput model.
+//! * [`metadata`] — plane-index store + on-chip index cache (64 B/4 KB
+//!   entry, hit/miss statistics; §III-D "metadata management").
+//! * [`alias`] — precision-partitioned address aliasing (paper Fig. 9).
+//! * [`controller`] — the 4-stage pipeline latency model reproducing the
+//!   load-to-use breakdowns of Figs 22–23 and Table V's latency row.
+//! * [`ppa`] — component-level area/power model (Table V).
+//! * [`link`] — CXL link transfer model (bandwidth ceilings).
+
+pub mod device;
+pub mod metadata;
+pub mod alias;
+pub mod controller;
+pub mod scheduler;
+pub mod ppa;
+pub mod link;
+
+pub use device::{CxlDevice, Design, DeviceStats};
+pub use metadata::{IndexCache, PlaneIndex};
+pub use alias::AliasSpace;
+pub use controller::{latency, LatencyBreakdown, LatencyCase};
+pub use ppa::{ppa_for, PpaReport};

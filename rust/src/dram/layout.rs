@@ -1,0 +1,193 @@
+//! Request-stream generation for the two device layouts the paper compares
+//! (§IV-D): conventional **word fetch** vs TRACE's **plane-aligned fetch**.
+//!
+//! A weight region holds `n_chunks` chunks (an expert, an attention head, or
+//! an MLP neuron — the paper's three granularities). The runtime assigns
+//! each fetched chunk an effective precision (bits/weight):
+//!
+//! * **Word fetch (CXL-Plain)** — chunks are stored as fixed-width words;
+//!   a fetch always moves the full container regardless of requested
+//!   precision. Requested precision only changes *host-side* conversion.
+//! * **Plane-aligned fetch (TRACE)** — each chunk's bits are stored as
+//!   plane stripes; a fetch at `k` effective bits touches only `k` stripes,
+//!   so bytes *and* row activations scale with precision (LSB-stripe rows
+//!   stay dormant, paper Fig. 10).
+//!
+//! Both generators emit burst-granular [`Request`]s for [`DramSim`];
+//! `plane_scale` models compressed stripes (< 1.0) when the codec is on.
+
+use super::addr::AddrMap;
+use super::sim::Request;
+
+/// A chunk fetch: which chunk, and at how many effective bits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChunkFetch {
+    pub chunk: usize,
+    /// Effective fetched bits per element (1..=container bits).
+    pub bits: usize,
+}
+
+/// Region geometry shared by both layouts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Region {
+    /// Device base address of the region.
+    pub base: u64,
+    /// Elements per chunk.
+    pub elems: usize,
+    /// Container bits per element (e.g. 16 for BF16).
+    pub container_bits: usize,
+}
+
+impl Region {
+    /// Bytes of one chunk in the word-major container layout.
+    pub fn chunk_bytes(&self) -> usize {
+        self.elems * self.container_bits / 8
+    }
+
+    /// Bytes of one plane stripe of one chunk.
+    pub fn stripe_bytes(&self) -> usize {
+        self.elems.div_ceil(8)
+    }
+}
+
+/// Word-fetch stream: every requested chunk moves its full container.
+pub fn word_fetch_requests(
+    map: &AddrMap,
+    region: Region,
+    fetches: &[ChunkFetch],
+    arrival_ns: f64,
+) -> Vec<Request> {
+    let mut out = Vec::new();
+    for f in fetches {
+        let addr = region.base + (f.chunk * region.chunk_bytes()) as u64;
+        for loc in map.bursts(addr, region.chunk_bytes()) {
+            out.push(Request { loc, is_write: false, arrival_ns });
+        }
+    }
+    out
+}
+
+/// Plane-aligned stream: chunk data is striped by plane; a fetch at
+/// `bits` effective bits touches the top `bits` stripes. Stripes of the
+/// same plane index are contiguous across chunks ("plane stripe" region),
+/// giving row locality for multi-chunk reads of the same plane.
+///
+/// `plane_scale[i]` scales stripe `i`'s stored size (compression); use 1.0
+/// for the uncompressed isolation experiments of §IV-D.
+pub fn plane_fetch_requests(
+    map: &AddrMap,
+    region: Region,
+    n_chunks: usize,
+    fetches: &[ChunkFetch],
+    plane_scale: &[f64],
+    arrival_ns: f64,
+) -> Vec<Request> {
+    assert_eq!(plane_scale.len(), region.container_bits);
+    let stripe = region.stripe_bytes();
+    // stripe region offsets: plane p (MSB=0) across all chunks is one stripe
+    // band: band p starts at base + p * n_chunks * stripe_p_bytes.
+    let mut band_off = vec![0u64; region.container_bits + 1];
+    for p in 0..region.container_bits {
+        let sb = (stripe as f64 * plane_scale[p]).ceil() as u64;
+        band_off[p + 1] = band_off[p] + sb * n_chunks as u64;
+    }
+    let mut out = Vec::new();
+    for f in fetches {
+        let take = f.bits.min(region.container_bits);
+        for p in 0..take {
+            let sb = (stripe as f64 * plane_scale[p]).ceil() as usize;
+            let addr = region.base + band_off[p] + (f.chunk * sb) as u64;
+            for loc in map.bursts(addr, sb) {
+                out.push(Request { loc, is_write: false, arrival_ns });
+            }
+        }
+    }
+    out
+}
+
+/// Uniform plane scales (no compression).
+pub fn unit_scales(bits: usize) -> Vec<f64> {
+    vec![1.0; bits]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::energy::EnergyParams;
+    use crate::dram::sim::DramSim;
+    use crate::dram::timing::DramConfig;
+
+    fn setup() -> (AddrMap, Region) {
+        let cfg = DramConfig::paper_default();
+        let map = AddrMap::new(cfg);
+        // an attention-head-ish chunk: 64k elements of BF16 = 128 KB
+        let region = Region { base: 0, elems: 65536, container_bits: 16 };
+        (map, region)
+    }
+
+    #[test]
+    fn word_fetch_ignores_precision() {
+        let (map, region) = setup();
+        let lo = word_fetch_requests(&map, region, &[ChunkFetch { chunk: 0, bits: 4 }], 0.0);
+        let hi = word_fetch_requests(&map, region, &[ChunkFetch { chunk: 0, bits: 16 }], 0.0);
+        assert_eq!(lo.len(), hi.len());
+        assert_eq!(lo.len() * 64, region.chunk_bytes());
+    }
+
+    #[test]
+    fn plane_fetch_scales_with_bits() {
+        let (map, region) = setup();
+        let scales = unit_scales(16);
+        let count = |bits| {
+            plane_fetch_requests(&map, region, 8, &[ChunkFetch { chunk: 3, bits }], &scales, 0.0)
+                .len()
+        };
+        assert_eq!(count(16) * 64, region.chunk_bytes());
+        assert_eq!(count(8), count(16) / 2);
+        assert_eq!(count(4), count(16) / 4);
+    }
+
+    #[test]
+    fn plane_fetch_fewer_activations_and_energy() {
+        let (map, region) = setup();
+        let cfg = DramConfig::paper_default();
+        let fetches: Vec<ChunkFetch> =
+            (0..8).map(|c| ChunkFetch { chunk: c, bits: 4 }).collect();
+
+        let mut s1 = DramSim::new(cfg, EnergyParams::ddr5_4800());
+        let word = s1.run_frfcfs(word_fetch_requests(&map, region, &fetches, 0.0), 16);
+
+        let mut s2 = DramSim::new(cfg, EnergyParams::ddr5_4800());
+        let plane = s2.run_frfcfs(
+            plane_fetch_requests(&map, region, 8, &fetches, &unit_scales(16), 0.0),
+            16,
+        );
+
+        assert!(plane.rd_bytes * 3 < word.rd_bytes, "plane={} word={}", plane.rd_bytes, word.rd_bytes);
+        assert!(plane.activations < word.activations);
+        assert!(plane.energy.total_pj() < 0.5 * word.energy.total_pj());
+        assert!(plane.finish_ns < word.finish_ns);
+    }
+
+    #[test]
+    fn full_precision_plane_fetch_moves_same_bytes() {
+        let (map, region) = setup();
+        let fetches = [ChunkFetch { chunk: 0, bits: 16 }, ChunkFetch { chunk: 1, bits: 16 }];
+        let w = word_fetch_requests(&map, region, &fetches, 0.0);
+        let p = plane_fetch_requests(&map, region, 4, &fetches, &unit_scales(16), 0.0);
+        assert_eq!(w.len(), p.len());
+    }
+
+    #[test]
+    fn compressed_stripes_reduce_bursts() {
+        let (map, region) = setup();
+        let mut scales = unit_scales(16);
+        for s in scales.iter_mut().take(8) {
+            *s = 0.25; // top planes compress 4x
+        }
+        let fetches = [ChunkFetch { chunk: 0, bits: 8 }];
+        let full = plane_fetch_requests(&map, region, 4, &fetches, &unit_scales(16), 0.0);
+        let comp = plane_fetch_requests(&map, region, 4, &fetches, &scales, 0.0);
+        assert!(comp.len() < full.len() / 2);
+    }
+}

@@ -1,0 +1,27 @@
+//! Device-side DRAM simulator (substitute for DRAMSim3, paper §IV-D).
+//!
+//! Models a CXL device's DDR5 subsystem at command granularity: per-bank
+//! state machines with tRCD/tRP/tCL/tRAS/tRRD/tFAW/tCCD constraints, a
+//! FR-FCFS scheduler with row-buffer prioritization, and DRAMPower-style
+//! energy accounting (activate / read / write / background components).
+//!
+//! The paper's Figs 18–21 compare *word fetch* (baseline CXL-Plain: every
+//! access moves full fixed-width containers) against *plane-aligned fetch*
+//! (TRACE: only the bit-planes a precision view requires are read, and
+//! plane stripes give those reads row locality — LSB-plane rows stay
+//! dormant). [`layout`] generates the request streams for both layouts;
+//! [`sim`] executes them and reports time, activations, bytes and energy.
+//!
+//! Configuration matches the paper: 4 channels per module, 10×4 DDR5-4800
+//! devices per channel.
+
+pub mod timing;
+pub mod energy;
+pub mod addr;
+pub mod sim;
+pub mod layout;
+
+pub use addr::{AddrMap, Loc};
+pub use energy::EnergyParams;
+pub use sim::{DramSim, Request, SimStats};
+pub use timing::{DdrTimings, DramConfig};

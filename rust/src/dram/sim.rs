@@ -1,0 +1,397 @@
+//! Bank-state DRAM timing simulator with FR-FCFS scheduling.
+//!
+//! A time-driven model: each bank tracks its open row and next-allowed
+//! command times; each channel tracks data-bus availability, rolling
+//! four-activate windows, and per-bank-group CAS/ACT spacing. Requests are
+//! burst-granular (64 B lines from [`super::AddrMap::bursts`]). The
+//! scheduler implements FR-FCFS with row-buffer prioritization — exactly
+//! the policy the paper's plane-aware scheduler augments with per-bank
+//! plane FIFOs (modeled by feeding plane-sorted request streams, see
+//! [`super::layout`]).
+
+use super::addr::Loc;
+use super::energy::{energy_of, EnergyBreakdown, EnergyParams};
+use super::timing::DramConfig;
+use std::collections::VecDeque;
+
+/// A burst-granular DRAM request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub loc: Loc,
+    pub is_write: bool,
+    /// Arrival time (ns) at the device queue.
+    pub arrival_ns: f64,
+}
+
+/// Aggregate simulation results.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimStats {
+    pub requests: u64,
+    pub activations: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub rd_bytes: u64,
+    pub wr_bytes: u64,
+    /// Completion time of the last burst (ns).
+    pub finish_ns: f64,
+    /// Sum of per-request latencies (ns).
+    pub total_latency_ns: f64,
+    pub energy: EnergyBreakdown,
+}
+
+impl SimStats {
+    pub fn row_hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.row_hits as f64 / self.requests as f64
+    }
+
+    pub fn avg_latency_ns(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.total_latency_ns / self.requests as f64
+    }
+
+    /// Achieved bandwidth in GB/s.
+    pub fn bandwidth_gbs(&self) -> f64 {
+        if self.finish_ns == 0.0 {
+            return 0.0;
+        }
+        (self.rd_bytes + self.wr_bytes) as f64 / self.finish_ns
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct BankState {
+    open_row: Option<u32>,
+    /// Earliest time the next ACT may issue (covers tRP after PRE).
+    next_act: f64,
+    /// Earliest time a CAS may issue to the open row.
+    next_cas: f64,
+    /// Earliest time a PRE may issue (tRAS from last ACT).
+    next_pre: f64,
+}
+
+impl Default for BankState {
+    fn default() -> Self {
+        BankState { open_row: None, next_act: 0.0, next_cas: 0.0, next_pre: 0.0 }
+    }
+}
+
+#[derive(Debug, Default)]
+struct ChannelState {
+    banks: Vec<BankState>,
+    /// Data-bus free time.
+    bus_free: f64,
+    /// Last ACT times for the tFAW window (up to 4 retained).
+    act_times: VecDeque<f64>,
+    /// Last ACT time per bank group (tRRD_L) and channel-wide (tRRD_S).
+    last_act_group: Vec<f64>,
+    last_act_any: f64,
+    /// Last CAS per bank group (tCCD_L) and channel-wide (tCCD_S).
+    last_cas_group: Vec<f64>,
+    last_cas_any: f64,
+}
+
+/// The DRAM module simulator.
+pub struct DramSim {
+    cfg: DramConfig,
+    energy: EnergyParams,
+    channels: Vec<ChannelState>,
+    stats: SimStats,
+}
+
+impl DramSim {
+    pub fn new(cfg: DramConfig, energy: EnergyParams) -> DramSim {
+        let banks = cfg.bank_groups * cfg.banks_per_group;
+        let channels = (0..cfg.channels)
+            .map(|_| ChannelState {
+                banks: vec![BankState::default(); banks],
+                last_act_group: vec![f64::NEG_INFINITY; cfg.bank_groups],
+                last_cas_group: vec![f64::NEG_INFINITY; cfg.bank_groups],
+                last_act_any: f64::NEG_INFINITY,
+                last_cas_any: f64::NEG_INFINITY,
+                ..Default::default()
+            })
+            .collect();
+        DramSim { cfg, energy, channels, stats: SimStats::default() }
+    }
+
+    pub fn config(&self) -> &DramConfig {
+        &self.cfg
+    }
+
+    /// Execute one burst request; returns its completion time (ns).
+    pub fn issue(&mut self, req: Request) -> f64 {
+        let t = &self.cfg.timings;
+        let bank_idx =
+            req.loc.bank_group as usize * self.cfg.banks_per_group + req.loc.bank as usize;
+        let ch = &mut self.channels[req.loc.channel as usize];
+        let bg = req.loc.bank_group as usize;
+
+        let mut now = req.arrival_ns;
+        let bank = &mut ch.banks[bank_idx];
+
+        // Row management
+        let hit = bank.open_row == Some(req.loc.row);
+        if !hit {
+            self.stats.row_misses += 1;
+            if bank.open_row.is_some() {
+                // PRE: must wait tRAS since ACT
+                let pre_at = now.max(bank.next_pre);
+                bank.next_act = bank.next_act.max(pre_at + t.t_rp);
+                now = pre_at;
+            }
+            // ACT: respect bank tRP, tRRD_S/L, tFAW
+            let mut act_at = now.max(bank.next_act);
+            act_at = act_at.max(ch.last_act_any + t.t_rrd_s);
+            act_at = act_at.max(ch.last_act_group[bg] + t.t_rrd_l);
+            if ch.act_times.len() == 4 {
+                act_at = act_at.max(ch.act_times[0] + t.t_faw);
+            }
+            bank.open_row = Some(req.loc.row);
+            bank.next_cas = act_at + t.t_rcd;
+            bank.next_pre = act_at + t.t_ras;
+            ch.last_act_any = act_at;
+            ch.last_act_group[bg] = act_at;
+            ch.act_times.push_back(act_at);
+            if ch.act_times.len() > 4 {
+                ch.act_times.pop_front();
+            }
+            self.stats.activations += 1;
+            now = act_at;
+        } else {
+            self.stats.row_hits += 1;
+        }
+
+        // CAS: respect tRCD (bank.next_cas), tCCD, bus availability
+        let bank = &mut ch.banks[bank_idx];
+        let mut cas_at = now.max(bank.next_cas);
+        cas_at = cas_at.max(ch.last_cas_any + t.t_ccd_s);
+        cas_at = cas_at.max(ch.last_cas_group[bg] + t.t_ccd_l);
+        // data occupies the bus [cas_at + tCL, + tBURST)
+        let data_start = (cas_at + t.t_cl).max(ch.bus_free);
+        let cas_at = data_start - t.t_cl;
+        let data_end = data_start + t.t_burst();
+        ch.bus_free = data_end;
+        ch.last_cas_any = cas_at;
+        ch.last_cas_group[bg] = cas_at;
+        let bank = &mut ch.banks[bank_idx];
+        if req.is_write {
+            bank.next_pre = bank.next_pre.max(data_end + t.t_wr);
+        }
+
+        // stats
+        let bytes = self.cfg.burst_bytes() as u64;
+        if req.is_write {
+            self.stats.wr_bytes += bytes;
+        } else {
+            self.stats.rd_bytes += bytes;
+        }
+        self.stats.requests += 1;
+        self.stats.total_latency_ns += data_end - req.arrival_ns;
+        self.stats.finish_ns = self.stats.finish_ns.max(data_end);
+        data_end
+    }
+
+    /// Run a batch with FR-FCFS reordering inside a lookahead window:
+    /// row-hit requests bypass older row-miss requests to the same channel
+    /// (bounded window keeps it fair, like real controllers' queue depth).
+    pub fn run_frfcfs(&mut self, mut reqs: Vec<Request>, window: usize) -> SimStats {
+        // stable arrival order per channel
+        reqs.sort_by(|a, b| a.arrival_ns.partial_cmp(&b.arrival_ns).unwrap());
+        let mut queues: Vec<VecDeque<Request>> =
+            vec![VecDeque::new(); self.cfg.channels];
+        for r in reqs {
+            queues[r.loc.channel as usize].push_back(r);
+        }
+        for q in queues.iter_mut() {
+            while !q.is_empty() {
+                // pick first row-hit within the window, else the oldest
+                let banks_per_group = self.cfg.banks_per_group;
+                let pick = {
+                    let ch = &self.channels[q[0].loc.channel as usize];
+                    (0..window.min(q.len()))
+                        .find(|&i| {
+                            let r = &q[i];
+                            let b = r.loc.bank_group as usize * banks_per_group
+                                + r.loc.bank as usize;
+                            ch.banks[b].open_row == Some(r.loc.row)
+                        })
+                        .unwrap_or(0)
+                };
+                let r = q.remove(pick).unwrap();
+                self.issue(r);
+            }
+        }
+        self.finalize()
+    }
+
+    /// Finish the run: fold busy time into background energy and return stats.
+    pub fn finalize(&mut self) -> SimStats {
+        let mut s = self.stats.clone();
+        s.energy = energy_of(
+            &self.energy,
+            s.activations,
+            s.rd_bytes,
+            s.wr_bytes,
+            s.finish_ns,
+            self.cfg.channels,
+        );
+        s
+    }
+
+    /// Reset statistics and bank state (new measurement epoch).
+    pub fn reset(&mut self) {
+        let cfg = self.cfg;
+        let energy = self.energy;
+        *self = DramSim::new(cfg, energy);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::addr::AddrMap;
+    use crate::dram::energy::EnergyParams;
+
+    fn sim() -> DramSim {
+        DramSim::new(DramConfig::paper_default(), EnergyParams::ddr5_4800())
+    }
+
+    fn seq_reads(map: &AddrMap, base: u64, len: usize) -> Vec<Request> {
+        map.bursts(base, len)
+            .into_iter()
+            .map(|loc| Request { loc, is_write: false, arrival_ns: 0.0 })
+            .collect()
+    }
+
+    #[test]
+    fn single_read_latency_is_trcd_tcl_burst() {
+        let mut s = sim();
+        let map = AddrMap::new(*s.config());
+        let reqs = seq_reads(&map, 0, 64);
+        let stats = s.run_frfcfs(reqs, 16);
+        let t = DramConfig::paper_default().timings;
+        let expect = t.t_rcd + t.t_cl + t.t_burst();
+        assert!((stats.finish_ns - expect).abs() < 1e-9, "{} vs {}", stats.finish_ns, expect);
+        assert_eq!(stats.activations, 1);
+        assert_eq!(stats.row_hits, 0);
+    }
+
+    #[test]
+    fn sequential_stream_mostly_row_hits() {
+        let mut s = sim();
+        let map = AddrMap::new(*s.config());
+        let stats = s.run_frfcfs(seq_reads(&map, 0, 256 * 1024), 16);
+        assert!(stats.row_hit_rate() > 0.95, "hit rate {}", stats.row_hit_rate());
+        // throughput should approach the module peak
+        assert!(stats.bandwidth_gbs() > 0.8 * DramConfig::paper_default().peak_gbs());
+    }
+
+    #[test]
+    fn random_rows_thrash() {
+        let mut s = sim();
+        let map = AddrMap::new(*s.config());
+        let mut r = crate::util::Rng::new(7);
+        let cfg = *s.config();
+        let span = (cfg.row_bytes * cfg.channels * cfg.total_banks() / cfg.channels * 64) as u64;
+        let reqs: Vec<Request> = (0..2000)
+            .map(|_| Request {
+                loc: map.decode(r.next_u64() % span & !63),
+                is_write: false,
+                arrival_ns: 0.0,
+            })
+            .collect();
+        let stats = s.run_frfcfs(reqs, 16);
+        assert!(stats.row_hit_rate() < 0.5, "hit rate {}", stats.row_hit_rate());
+        assert!(stats.bandwidth_gbs() < 0.8 * cfg.peak_gbs());
+    }
+
+    #[test]
+    fn bandwidth_never_exceeds_peak() {
+        let mut s = sim();
+        let map = AddrMap::new(*s.config());
+        let stats = s.run_frfcfs(seq_reads(&map, 0, 1024 * 1024), 32);
+        assert!(stats.bandwidth_gbs() <= DramConfig::paper_default().peak_gbs() * 1.001);
+    }
+
+    #[test]
+    fn conservation_bytes() {
+        let mut s = sim();
+        let map = AddrMap::new(*s.config());
+        let n = 128 * 1024;
+        let stats = s.run_frfcfs(seq_reads(&map, 0, n), 16);
+        assert_eq!(stats.rd_bytes as usize, n);
+        assert_eq!(stats.requests, (n / 64) as u64);
+        assert_eq!(stats.row_hits + stats.row_misses, stats.requests);
+    }
+
+    #[test]
+    fn writes_charge_write_energy() {
+        let mut s = sim();
+        let map = AddrMap::new(*s.config());
+        let reqs: Vec<Request> = map
+            .bursts(0, 4096)
+            .into_iter()
+            .map(|loc| Request { loc, is_write: true, arrival_ns: 0.0 })
+            .collect();
+        let stats = s.run_frfcfs(reqs, 16);
+        assert_eq!(stats.wr_bytes, 4096);
+        assert!(stats.energy.wr_pj > 0.0);
+        assert_eq!(stats.energy.rd_pj, 0.0);
+    }
+
+    #[test]
+    fn frfcfs_beats_fcfs_on_interleaved_rows() {
+        // alternate between two rows in the same bank: FCFS thrashes,
+        // FR-FCFS (window) groups row hits.
+        let cfg = DramConfig::paper_default();
+        let map = AddrMap::new(cfg);
+        let banks = cfg.total_banks() / cfg.channels;
+        let row_stride = (cfg.row_bytes * cfg.channels * banks) as u64;
+        let mut reqs = Vec::new();
+        for i in 0..64u64 {
+            // same channel/bank, rows 0 and 1, interleaved, 64B apart cols
+            let row = i % 2;
+            let addr = row * row_stride + (i / 2) * 64 * cfg.channels as u64;
+            reqs.push(Request { loc: map.decode(addr), is_write: false, arrival_ns: 0.0 });
+        }
+        let mut s1 = DramSim::new(cfg, EnergyParams::ddr5_4800());
+        let fcfs = s1.run_frfcfs(reqs.clone(), 1);
+        let mut s2 = DramSim::new(cfg, EnergyParams::ddr5_4800());
+        let frfcfs = s2.run_frfcfs(reqs, 32);
+        assert!(
+            frfcfs.finish_ns < fcfs.finish_ns,
+            "frfcfs={} fcfs={}",
+            frfcfs.finish_ns,
+            fcfs.finish_ns
+        );
+        assert!(frfcfs.activations < fcfs.activations);
+    }
+
+    #[test]
+    fn faw_throttles_activation_bursts() {
+        // >4 activations to distinct banks in a narrow window must take
+        // at least tFAW for the 5th.
+        let cfg = DramConfig::paper_default();
+        let map = AddrMap::new(cfg);
+        let banks = cfg.total_banks() / cfg.channels;
+        let bank_stride = (cfg.row_bytes * cfg.channels) as u64;
+        let reqs: Vec<Request> = (0..6u64)
+            .map(|b| Request {
+                loc: map.decode(b % banks as u64 * bank_stride),
+                is_write: false,
+                arrival_ns: 0.0,
+            })
+            .collect();
+        let mut s = DramSim::new(cfg, EnergyParams::ddr5_4800());
+        for r in reqs {
+            s.issue(r);
+        }
+        let stats = s.finalize();
+        assert!(stats.finish_ns >= cfg.timings.t_faw);
+    }
+}

@@ -1,0 +1,158 @@
+//! DDR timing parameters and module geometry.
+
+/// DDR device timing constraints, in nanoseconds.
+///
+/// Values follow JEDEC DDR5 speed-bin datasheets; the defaults are the
+/// DDR5-4800B bin the paper's DRAMSim3 configuration uses.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DdrTimings {
+    /// Clock period (ns). DDR5-4800: I/O clock 2400 MHz.
+    pub t_ck: f64,
+    /// ACT to internal read/write delay.
+    pub t_rcd: f64,
+    /// Precharge to ACT delay.
+    pub t_rp: f64,
+    /// CAS latency (read command to first data).
+    pub t_cl: f64,
+    /// ACT to PRE minimum.
+    pub t_ras: f64,
+    /// ACT-to-ACT different bank group.
+    pub t_rrd_s: f64,
+    /// ACT-to-ACT same bank group.
+    pub t_rrd_l: f64,
+    /// Four-activate window.
+    pub t_faw: f64,
+    /// CAS-to-CAS different bank group.
+    pub t_ccd_s: f64,
+    /// CAS-to-CAS same bank group.
+    pub t_ccd_l: f64,
+    /// Write recovery.
+    pub t_wr: f64,
+    /// Burst length (beats).
+    pub bl: u32,
+}
+
+impl DdrTimings {
+    /// JEDEC DDR5-4800B (CL40-39-39): the paper's configuration.
+    pub fn ddr5_4800() -> Self {
+        let t_ck = 1.0 / 2.4; // 2400 MHz I/O clock -> 0.4167 ns
+        DdrTimings {
+            t_ck,
+            t_rcd: 16.0,
+            t_rp: 16.0,
+            t_cl: 16.67, // CL40 @ 2400MHz
+            t_ras: 32.0,
+            t_rrd_s: 8.0 * t_ck,
+            t_rrd_l: 12.0 * t_ck,
+            t_faw: 32.0 * t_ck,
+            // BL16 occupies 8 clocks; tCCD min of 8 tCK makes same-row
+            // streaming seamless (gapless bursts), per JEDEC DDR5.
+            t_ccd_s: 8.0 * t_ck,
+            t_ccd_l: 8.0 * t_ck,
+            t_wr: 30.0,
+            bl: 16,
+        }
+    }
+
+    /// DDR5-6400 (projected 51.2 GB/s per 64-bit channel, paper §II-A).
+    pub fn ddr5_6400() -> Self {
+        let t_ck = 1.0 / 3.2;
+        DdrTimings {
+            t_ck,
+            t_rcd: 14.5,
+            t_rp: 14.5,
+            t_cl: 14.7,
+            t_ras: 32.0,
+            t_rrd_s: 8.0 * t_ck,
+            t_rrd_l: 12.0 * t_ck,
+            t_faw: 32.0 * t_ck,
+            t_ccd_s: 8.0 * t_ck,
+            t_ccd_l: 8.0 * t_ck,
+            t_wr: 30.0,
+            bl: 16,
+        }
+    }
+
+    /// Time for one burst of `bl` beats (data bus occupancy).
+    pub fn t_burst(&self) -> f64 {
+        // DDR: two beats per clock
+        self.bl as f64 * self.t_ck / 2.0
+    }
+}
+
+/// Module geometry: channels, banks, row size, bus width.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DramConfig {
+    pub timings: DdrTimings,
+    /// Independent channels per device module (paper: 4).
+    pub channels: usize,
+    /// Bank groups per channel.
+    pub bank_groups: usize,
+    /// Banks per bank group.
+    pub banks_per_group: usize,
+    /// Row (page) size in bytes per bank.
+    pub row_bytes: usize,
+    /// Data-bus width per channel in bytes (10×4 devices = 40 bits ≈
+    /// 32 data + 8 ECC; data payload is 4 bytes/beat ⇒ 8 B per clock).
+    pub bus_bytes: usize,
+}
+
+impl DramConfig {
+    /// The paper's DRAMSim3 setup: 4 channels, 10×4 DDR5-4800 per channel.
+    pub fn paper_default() -> Self {
+        DramConfig {
+            timings: DdrTimings::ddr5_4800(),
+            channels: 4,
+            bank_groups: 8,
+            banks_per_group: 4,
+            row_bytes: 8192,
+            bus_bytes: 4, // 32 data bits (x4 devices × 8 data devices)
+        }
+    }
+
+    pub fn total_banks(&self) -> usize {
+        self.channels * self.bank_groups * self.banks_per_group
+    }
+
+    /// Bytes transferred by one burst on one channel.
+    pub fn burst_bytes(&self) -> usize {
+        self.bus_bytes * self.timings.bl as usize
+    }
+
+    /// Peak per-channel bandwidth in GB/s.
+    pub fn channel_peak_gbs(&self) -> f64 {
+        self.burst_bytes() as f64 / self.timings.t_burst()
+    }
+
+    /// Peak module bandwidth in GB/s.
+    pub fn peak_gbs(&self) -> f64 {
+        self.channel_peak_gbs() * self.channels as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ddr5_4800_peak_bandwidth() {
+        let cfg = DramConfig::paper_default();
+        // 4800 MT/s × 4 B = 19.2 GB/s per channel, 76.8 GB/s module
+        assert!((cfg.channel_peak_gbs() - 19.2).abs() < 0.1, "{}", cfg.channel_peak_gbs());
+        assert!((cfg.peak_gbs() - 76.8).abs() < 0.4);
+    }
+
+    #[test]
+    fn burst_time_positive() {
+        let t = DdrTimings::ddr5_4800();
+        assert!(t.t_burst() > 3.0 && t.t_burst() < 4.0, "{}", t.t_burst());
+        assert!(DdrTimings::ddr5_6400().t_burst() < t.t_burst());
+    }
+
+    #[test]
+    fn geometry() {
+        let cfg = DramConfig::paper_default();
+        assert_eq!(cfg.total_banks(), 128);
+        assert_eq!(cfg.burst_bytes(), 64); // one cache line per burst
+    }
+}

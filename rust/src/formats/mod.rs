@@ -1,0 +1,223 @@
+//! Element formats and floating-point field structure.
+//!
+//! TRACE operates below the numeric format: it stores *whatever bits the host
+//! wrote* as bit-planes. But the evaluation needs the formats themselves —
+//! BF16 as the reference KV/weight format, FP8-E4M3 / INT8 / INT4 / MXFP4 as
+//! the quantized bases of Table IV and Figs 17–21, and the (sign, exponent,
+//! mantissa) field split that defines which planes are "compressible core"
+//! vs "elastic detail" (paper Fig. 7) and which planes an alias view fetches
+//! (paper Eq. 6).
+
+pub mod quant;
+
+pub use quant::*;
+
+/// A storage element format known to the device model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Fmt {
+    /// bfloat16: 1 sign, 8 exponent, 7 mantissa.
+    Bf16,
+    /// IEEE half: 1 sign, 5 exponent, 10 mantissa.
+    Fp16,
+    /// FP8 E4M3 (OCP): 1 sign, 4 exponent, 3 mantissa.
+    Fp8E4M3,
+    /// FP8 E5M2 (OCP): 1 sign, 5 exponent, 2 mantissa.
+    Fp8E5M2,
+    /// Signed 8-bit integer (per-channel scaled).
+    Int8,
+    /// Signed 4-bit integer (per-channel scaled, packed 2/byte).
+    Int4,
+    /// OCP MXFP4: FP4 E2M1 elements with a shared E8M0 scale per 32 elements.
+    Mxfp4,
+}
+
+impl Fmt {
+    /// Total storage bits per element (excluding any shared block scale).
+    pub fn bits(self) -> usize {
+        match self {
+            Fmt::Bf16 | Fmt::Fp16 => 16,
+            Fmt::Fp8E4M3 | Fmt::Fp8E5M2 | Fmt::Int8 => 8,
+            Fmt::Int4 | Fmt::Mxfp4 => 4,
+        }
+    }
+
+    /// Bytes per element as an f64 (INT4/MXFP4 are 0.5).
+    pub fn bytes(self) -> f64 {
+        self.bits() as f64 / 8.0
+    }
+
+    /// (sign, exponent, mantissa) bit counts. Integer formats report their
+    /// bits as "mantissa" with a 1-bit sign: their MSB planes still behave
+    /// like the compressible core (long zero runs from small magnitudes).
+    pub fn fields(self) -> (usize, usize, usize) {
+        match self {
+            Fmt::Bf16 => (1, 8, 7),
+            Fmt::Fp16 => (1, 5, 10),
+            Fmt::Fp8E4M3 => (1, 4, 3),
+            Fmt::Fp8E5M2 => (1, 5, 2),
+            Fmt::Int8 => (1, 0, 7),
+            Fmt::Int4 => (1, 0, 3),
+            Fmt::Mxfp4 => (1, 2, 1),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Fmt::Bf16 => "BF16",
+            Fmt::Fp16 => "FP16",
+            Fmt::Fp8E4M3 => "FP8",
+            Fmt::Fp8E5M2 => "FP8-E5M2",
+            Fmt::Int8 => "INT8",
+            Fmt::Int4 => "INT4",
+            Fmt::Mxfp4 => "MXFP4",
+        }
+    }
+
+    /// Bit index ranges of the fields within an element word, MSB-first:
+    /// sign plane indices, exponent plane indices, mantissa plane indices.
+    /// Bit index `bits()-1` is the MSB (sign).
+    pub fn plane_roles(self) -> PlaneRoles {
+        let (s, e, m) = self.fields();
+        let b = self.bits();
+        debug_assert_eq!(s + e + m, b);
+        PlaneRoles { sign_hi: b - 1, exp_hi: b - 1 - s, exp_lo: m, man_hi: m.saturating_sub(1), total: b }
+    }
+}
+
+/// Field boundaries in plane-index space (plane i = bit position i).
+#[derive(Debug, Clone, Copy)]
+pub struct PlaneRoles {
+    /// Plane index of the sign bit (the MSB).
+    pub sign_hi: usize,
+    /// Highest exponent plane index.
+    pub exp_hi: usize,
+    /// Lowest exponent plane index (= number of mantissa bits).
+    pub exp_lo: usize,
+    /// Highest mantissa plane index (exp_lo - 1), 0 if no mantissa.
+    pub man_hi: usize,
+    /// Total planes.
+    pub total: usize,
+}
+
+impl PlaneRoles {
+    /// Role of plane `i` as a short label.
+    pub fn role(&self, i: usize) -> &'static str {
+        if i == self.sign_hi {
+            "sign"
+        } else if i >= self.exp_lo && i <= self.exp_hi && self.exp_hi >= self.exp_lo {
+            "exp"
+        } else {
+            "man"
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BF16 conversions
+// ---------------------------------------------------------------------------
+
+/// f32 -> BF16 with round-to-nearest-even (matches JAX/XLA semantics).
+#[inline]
+pub fn bf16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // quiet NaN, preserve sign
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round_bit = 0x0000_8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
+    let _ = round_bit;
+    (rounded >> 16) as u16
+}
+
+/// BF16 -> f32 (exact).
+#[inline]
+pub fn bf16_to_f32(x: u16) -> f32 {
+    f32::from_bits((x as u32) << 16)
+}
+
+/// Split a BF16 word into (sign, exponent, mantissa).
+#[inline]
+pub fn bf16_fields(w: u16) -> (u16, u16, u16) {
+    ((w >> 15) & 1, (w >> 7) & 0xff, w & 0x7f)
+}
+
+/// Assemble a BF16 word from fields.
+#[inline]
+pub fn bf16_assemble(sign: u16, exp: u16, man: u16) -> u16 {
+    ((sign & 1) << 15) | ((exp & 0xff) << 7) | (man & 0x7f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::props;
+
+    #[test]
+    fn bf16_roundtrip_exact_values() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65280.0, 2.0f32.powi(-120)] {
+            let b = bf16_from_f32(x);
+            assert_eq!(bf16_to_f32(b), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn bf16_rtne() {
+        // 1.0 + 2^-8 rounds to 1.0 (ties-to-even on the 7-bit mantissa)
+        let x = 1.0f32 + 2.0_f32.powi(-8);
+        assert_eq!(bf16_to_f32(bf16_from_f32(x)), 1.0);
+        // 1.0 + 3*2^-8 rounds up
+        let y = 1.0f32 + 3.0 * 2.0_f32.powi(-8);
+        assert!(bf16_to_f32(bf16_from_f32(y)) > 1.0);
+    }
+
+    #[test]
+    fn bf16_nan_inf() {
+        assert!(bf16_to_f32(bf16_from_f32(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(bf16_from_f32(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(bf16_from_f32(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn bf16_relative_error_bound() {
+        props(21, 2000, |r| {
+            let x = (r.normal() * 10f64.powi(r.range(-6, 6) as i32)) as f32;
+            let y = bf16_to_f32(bf16_from_f32(x));
+            if x != 0.0 && x.is_finite() {
+                let rel = ((y - x) / x).abs();
+                assert!(rel <= 1.0 / 128.0 + 1e-7, "x={x} y={y} rel={rel}");
+            }
+        });
+    }
+
+    #[test]
+    fn fields_assemble_roundtrip() {
+        props(22, 2000, |r| {
+            let w = r.next_u32() as u16;
+            let (s, e, m) = bf16_fields(w);
+            assert_eq!(bf16_assemble(s, e, m), w);
+        });
+    }
+
+    #[test]
+    fn plane_roles_bf16() {
+        let pr = Fmt::Bf16.plane_roles();
+        assert_eq!(pr.role(15), "sign");
+        assert_eq!(pr.role(14), "exp");
+        assert_eq!(pr.role(7), "exp");
+        assert_eq!(pr.role(6), "man");
+        assert_eq!(pr.role(0), "man");
+    }
+
+    #[test]
+    fn fmt_bits() {
+        assert_eq!(Fmt::Bf16.bits(), 16);
+        assert_eq!(Fmt::Int4.bits(), 4);
+        assert_eq!(Fmt::Mxfp4.bytes(), 0.5);
+        for f in [Fmt::Bf16, Fmt::Fp16, Fmt::Fp8E4M3, Fmt::Fp8E5M2, Fmt::Int8, Fmt::Int4, Fmt::Mxfp4] {
+            let (s, e, m) = f.fields();
+            assert_eq!(s + e + m, f.bits(), "{:?}", f);
+        }
+    }
+}

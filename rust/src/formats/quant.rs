@@ -1,0 +1,420 @@
+//! Lossy quantizers for the *offline format choices* the paper layers TRACE
+//! under (Table IV "total savings", Figs 17–21 precision bases) and the
+//! runtime KV tier policies (Table II).
+//!
+//! These are simple, well-known schemes (absmax per-channel INT8/INT4,
+//! OCP FP8-E4M3 casts, OCP MXFP4 with shared E8M0 block scale). TRACE itself
+//! is lossless on top of whichever base the user picked.
+
+use super::{bf16_from_f32, bf16_to_f32};
+
+/// FP8 E4M3 (OCP variant: no infinities, max finite 448, NaN = 0x7f/0xff).
+#[inline]
+pub fn fp8_e4m3_from_f32(x: f32) -> u8 {
+    if x.is_nan() {
+        return 0x7f;
+    }
+    let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+    let a = x.abs();
+    if a == 0.0 {
+        return sign;
+    }
+    if a >= 448.0 {
+        return sign | 0x7e; // clamp to max finite (447 behaviour approximated by 448)
+    }
+    // Decompose into exponent/mantissa with bias 7, 3 mantissa bits.
+    let bits = a.to_bits();
+    let exp = ((bits >> 23) & 0xff) as i32 - 127;
+    let man = bits & 0x7f_ffff;
+    if exp < -6 {
+        // subnormal range: value = m * 2^-9, m in [0,7]
+        let scaled = a / 2f32.powi(-9);
+        let m = scaled.round() as u32;
+        if m == 0 {
+            return sign;
+        }
+        if m <= 7 {
+            return sign | m as u8;
+        }
+        // rounds up into the normal range
+        return sign | 0x08;
+    }
+    // normal: round mantissa to 3 bits (RTNE)
+    let shift = 23 - 3;
+    let lsb = (man >> shift) & 1;
+    let rounded = man + ((1 << (shift - 1)) - 1) + lsb;
+    let mut m3 = rounded >> shift;
+    let mut e = exp;
+    if m3 >= 8 {
+        m3 = 0;
+        e += 1;
+    }
+    if e > 8 {
+        return sign | 0x7e;
+    }
+    let ebits = (e + 7) as u8;
+    sign | (ebits << 3) | (m3 as u8)
+}
+
+/// FP8 E4M3 -> f32.
+#[inline]
+pub fn fp8_e4m3_to_f32(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((b >> 3) & 0xf) as i32;
+    let m = (b & 0x7) as f32;
+    if e == 0xf && (b & 0x7) == 0x7 {
+        return f32::NAN;
+    }
+    if e == 0 {
+        sign * m * 2f32.powi(-9)
+    } else {
+        sign * (1.0 + m / 8.0) * 2f32.powi(e - 7)
+    }
+}
+
+/// FP4 E2M1 code (0..15) -> value. Magnitudes: 0, .5, 1, 1.5, 2, 3, 4, 6.
+#[inline]
+pub fn fp4_e2m1_to_f32(code: u8) -> f32 {
+    const MAG: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+    let v = MAG[(code & 0x7) as usize];
+    if code & 0x8 != 0 {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Nearest FP4 E2M1 code for a value.
+#[inline]
+pub fn fp4_e2m1_from_f32(x: f32) -> u8 {
+    const MAG: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+    let sign = if x.is_sign_negative() { 0x8u8 } else { 0 };
+    let a = x.abs().min(6.0);
+    let mut best = 0usize;
+    let mut bd = f32::INFINITY;
+    for (i, &m) in MAG.iter().enumerate() {
+        let d = (a - m).abs();
+        if d < bd {
+            bd = d;
+            best = i;
+        }
+    }
+    sign | best as u8
+}
+
+/// An MXFP4 block: 32 FP4 codes + one shared E8M0 scale (power of two).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MxBlock {
+    /// Shared scale exponent (value = 2^(scale-127)), E8M0.
+    pub scale: u8,
+    /// 32 FP4 E2M1 codes.
+    pub codes: [u8; 32],
+}
+
+/// Quantize 32 f32 values to an MXFP4 block (OCP MX spec flow: scale =
+/// largest power of two such that max |x|/scale fits in FP4 range).
+pub fn mxfp4_quantize(xs: &[f32; 32]) -> MxBlock {
+    let amax = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    let scale_exp = if amax == 0.0 || !amax.is_finite() {
+        0i32
+    } else {
+        // FP4 max magnitude is 6 = 1.5 * 2^2 -> use exponent of amax minus 2
+        (amax.log2().floor() as i32) - 2
+    };
+    let scale = 2f32.powi(scale_exp);
+    let mut codes = [0u8; 32];
+    for (i, &x) in xs.iter().enumerate() {
+        codes[i] = fp4_e2m1_from_f32(x / scale);
+    }
+    MxBlock { scale: (scale_exp + 127).clamp(0, 255) as u8, codes }
+}
+
+/// Dequantize an MXFP4 block.
+pub fn mxfp4_dequantize(b: &MxBlock) -> [f32; 32] {
+    let scale = 2f32.powi(b.scale as i32 - 127);
+    let mut out = [0f32; 32];
+    for i in 0..32 {
+        out[i] = fp4_e2m1_to_f32(b.codes[i]) * scale;
+    }
+    out
+}
+
+/// Per-channel absmax INT8 quantization. Returns (codes, scales) where
+/// `x ≈ code * scale`, one scale per channel of length `chan_len`.
+pub fn int8_quantize(xs: &[f32], chan_len: usize) -> (Vec<i8>, Vec<f32>) {
+    assert!(chan_len > 0 && xs.len() % chan_len == 0);
+    let mut codes = Vec::with_capacity(xs.len());
+    let mut scales = Vec::with_capacity(xs.len() / chan_len);
+    for chunk in xs.chunks_exact(chan_len) {
+        let amax = chunk.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let scale = if amax == 0.0 { 1.0 } else { amax / 127.0 };
+        scales.push(scale);
+        for &x in chunk {
+            codes.push((x / scale).round().clamp(-127.0, 127.0) as i8);
+        }
+    }
+    (codes, scales)
+}
+
+/// Per-channel absmax INT4 quantization (codes in [-7, 7], stored i8).
+pub fn int4_quantize(xs: &[f32], chan_len: usize) -> (Vec<i8>, Vec<f32>) {
+    assert!(chan_len > 0 && xs.len() % chan_len == 0);
+    let mut codes = Vec::with_capacity(xs.len());
+    let mut scales = Vec::with_capacity(xs.len() / chan_len);
+    for chunk in xs.chunks_exact(chan_len) {
+        let amax = chunk.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let scale = if amax == 0.0 { 1.0 } else { amax / 7.0 };
+        scales.push(scale);
+        for &x in chunk {
+            codes.push((x / scale).round().clamp(-7.0, 7.0) as i8);
+        }
+    }
+    (codes, scales)
+}
+
+/// Dequantize per-channel integer codes.
+pub fn int_dequantize(codes: &[i8], scales: &[f32], chan_len: usize) -> Vec<f32> {
+    codes
+        .chunks_exact(chan_len)
+        .zip(scales)
+        .flat_map(|(c, &s)| c.iter().map(move |&q| q as f32 * s))
+        .collect()
+}
+
+/// Pack INT4 codes two-per-byte (low nibble first), sign-magnitude nibble.
+pub fn int4_pack(codes: &[i8]) -> Vec<u8> {
+    let nib = |c: i8| -> u8 {
+        let mag = c.unsigned_abs().min(7);
+        if c < 0 {
+            0x8 | mag
+        } else {
+            mag
+        }
+    };
+    let mut out = Vec::with_capacity(codes.len().div_ceil(2));
+    for pair in codes.chunks(2) {
+        let lo = nib(pair[0]);
+        let hi = if pair.len() > 1 { nib(pair[1]) } else { 0 };
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+/// Unpack INT4 nibbles back to i8 codes.
+pub fn int4_unpack(bytes: &[u8], n: usize) -> Vec<i8> {
+    let denib = |n: u8| -> i8 {
+        let mag = (n & 0x7) as i8;
+        if n & 0x8 != 0 {
+            -mag
+        } else {
+            mag
+        }
+    };
+    let mut out = Vec::with_capacity(n);
+    for &b in bytes {
+        out.push(denib(b & 0xf));
+        if out.len() < n {
+            out.push(denib(b >> 4));
+        }
+        if out.len() >= n {
+            break;
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+/// Truncate a BF16 value to `keep_exp` exponent bits + `keep_man` mantissa
+/// bits **as a lossy tier view** (what a plane-aligned reduced-precision
+/// fetch returns without guard-plane rounding): drop low mantissa planes.
+/// Exponent planes below the keep threshold are also dropped (zeroed), which
+/// matches the device behaviour of not fetching those planes.
+pub fn bf16_truncate_view(w: u16, keep_man: usize) -> u16 {
+    let keep_man = keep_man.min(7);
+    let mask: u16 = !(((1u16 << (7 - keep_man)) - 1) & 0x7f);
+    w & mask
+}
+
+/// BF16 with round-to-nearest applied at a mantissa cut, using `guard`
+/// extra mantissa bits (the paper's guard-plane rounding, §III-C).
+pub fn bf16_round_view(w: u16, keep_man: usize, guard: usize) -> u16 {
+    let keep_man = keep_man.min(7);
+    if keep_man == 7 {
+        return w;
+    }
+    let drop = 7 - keep_man;
+    let (s, e, m) = super::bf16_fields(w);
+    if guard == 0 {
+        return super::bf16_assemble(s, e, m & !((1 << drop) - 1));
+    }
+    // Round to nearest using up to `guard` bits below the cut.
+    let g = guard.min(drop);
+    let round_add = 1u32 << (drop - 1);
+    let visible_mask = !((1u32 << (drop - g)) - 1); // bits the device fetched
+    let mv = (m as u32) & visible_mask;
+    let mut rounded = (mv + round_add) >> drop;
+    let mut exp = e as u32;
+    if rounded >= (1 << keep_man.max(0)) && keep_man > 0 && rounded >= (1 << keep_man) {
+        rounded = 0;
+        exp += 1;
+    } else if keep_man == 0 && rounded >= 1 {
+        rounded = 0;
+        exp += 1;
+    }
+    if exp > 0xff {
+        exp = 0xff;
+        rounded = 0;
+    }
+    super::bf16_assemble(s, exp as u16, (rounded << drop) as u16)
+}
+
+/// Mean squared error between two f32 slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().zip(b).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum::<f64>() / a.len() as f64
+}
+
+/// Quantize f32s through BF16 (the baseline lossless storage format).
+pub fn to_bf16_f32(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| bf16_to_f32(bf16_from_f32(x))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::props;
+    use crate::util::Rng;
+
+    #[test]
+    fn fp8_exact_codes_roundtrip() {
+        // every FP8 code except NaN must roundtrip exactly through f32
+        for b in 0u8..=255 {
+            let x = fp8_e4m3_to_f32(b);
+            if x.is_nan() {
+                continue;
+            }
+            let b2 = fp8_e4m3_from_f32(x);
+            assert_eq!(fp8_e4m3_to_f32(b2), x, "code {b:#x}");
+        }
+    }
+
+    #[test]
+    fn fp8_clamps() {
+        assert_eq!(fp8_e4m3_to_f32(fp8_e4m3_from_f32(1e9)), 448.0);
+        assert_eq!(fp8_e4m3_to_f32(fp8_e4m3_from_f32(-1e9)), -448.0);
+    }
+
+    #[test]
+    fn fp8_relative_error() {
+        props(31, 2000, |r| {
+            let x = (r.normal() * 10f64.powi(r.range(-2, 2) as i32)) as f32;
+            let y = fp8_e4m3_to_f32(fp8_e4m3_from_f32(x));
+            if x.abs() > 2f32.powi(-6) && x.abs() < 400.0 {
+                let rel = ((y - x) / x).abs();
+                assert!(rel <= 1.0 / 16.0 + 1e-6, "x={x} y={y}");
+            }
+        });
+    }
+
+    #[test]
+    fn fp4_codes() {
+        assert_eq!(fp4_e2m1_to_f32(0), 0.0);
+        assert_eq!(fp4_e2m1_to_f32(0x7), 6.0);
+        assert_eq!(fp4_e2m1_to_f32(0xf), -6.0);
+        for c in 0u8..16 {
+            let v = fp4_e2m1_to_f32(c);
+            let c2 = fp4_e2m1_from_f32(v);
+            assert_eq!(fp4_e2m1_to_f32(c2), v);
+        }
+    }
+
+    #[test]
+    fn mxfp4_bounded_error() {
+        props(32, 300, |r| {
+            let mut xs = [0f32; 32];
+            let scale = 10f64.powi(r.range(-3, 3) as i32);
+            for x in xs.iter_mut() {
+                *x = (r.normal() * scale) as f32;
+            }
+            let blk = mxfp4_quantize(&xs);
+            let ys = mxfp4_dequantize(&blk);
+            let amax = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            for (x, y) in xs.iter().zip(ys.iter()) {
+                // FP4 relative step within a block is at most amax/4-ish
+                assert!((x - y).abs() <= amax * 0.26 + 1e-12, "x={x} y={y} amax={amax}");
+            }
+        });
+    }
+
+    #[test]
+    fn int8_int4_roundtrip_error() {
+        let mut r = Rng::new(33);
+        let xs: Vec<f32> = (0..256).map(|_| r.normal() as f32).collect();
+        let (c8, s8) = int8_quantize(&xs, 64);
+        let y8 = int_dequantize(&c8, &s8, 64);
+        assert!(mse(&xs, &y8) < 1e-4);
+        let (c4, s4) = int4_quantize(&xs, 64);
+        let y4 = int_dequantize(&c4, &s4, 64);
+        assert!(mse(&xs, &y4) < 0.05);
+        assert!(mse(&xs, &y4) > mse(&xs, &y8));
+    }
+
+    #[test]
+    fn int4_pack_roundtrip() {
+        props(34, 500, |r| {
+            let n = 1 + r.below(99);
+            let codes: Vec<i8> = (0..n).map(|_| r.range(-7, 7) as i8).collect();
+            let packed = int4_pack(&codes);
+            assert_eq!(packed.len(), n.div_ceil(2));
+            assert_eq!(int4_unpack(&packed, n), codes);
+        });
+    }
+
+    #[test]
+    fn truncate_view_monotone() {
+        let w = bf16_from_f32(1.2345);
+        let full = bf16_to_f32(w);
+        let mut prev_err = 0.0f32;
+        for keep in (0..=7).rev() {
+            let t = bf16_to_f32(bf16_truncate_view(w, keep));
+            let err = (t - full).abs();
+            assert!(err >= prev_err - 1e-9);
+            prev_err = err;
+        }
+        assert_eq!(bf16_truncate_view(w, 7), w);
+    }
+
+    #[test]
+    fn guard_rounding_improves_on_truncation() {
+        // statistically, round-to-nearest at the cut must beat truncation
+        let mut r = Rng::new(35);
+        let xs: Vec<f32> = (0..4096).map(|_| (r.normal() * 3.0) as f32).collect();
+        for keep in [2usize, 3, 4] {
+            let mut trunc_err = 0.0;
+            let mut round_err = 0.0;
+            for &x in &xs {
+                let w = bf16_from_f32(x);
+                let full = bf16_to_f32(w);
+                let t = bf16_to_f32(bf16_truncate_view(w, keep));
+                let g = bf16_to_f32(bf16_round_view(w, keep, 2));
+                trunc_err += ((t - full) as f64).powi(2);
+                round_err += ((g - full) as f64).powi(2);
+            }
+            assert!(
+                round_err < trunc_err,
+                "keep={keep} round_err={round_err} trunc_err={trunc_err}"
+            );
+        }
+    }
+
+    #[test]
+    fn round_view_full_precision_identity() {
+        props(36, 500, |r| {
+            let w = r.next_u32() as u16;
+            assert_eq!(bf16_round_view(w, 7, 2), w);
+        });
+    }
+}

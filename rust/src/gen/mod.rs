@@ -1,0 +1,21 @@
+//! Calibrated synthetic data generators.
+//!
+//! The paper evaluates on public checkpoints (LLaMA-3.1, Mixtral, OPT-30B,
+//! GPT-OSS-120B) and real corpora (WikiText, BookSum). Neither is available
+//! offline, so the benches use two sources, per DESIGN.md §Substitutions:
+//!
+//! 1. *Real small-model state* — KV and weights from the repo's own ~110M
+//!    transformer served end-to-end (`examples/serve_e2e.rs`).
+//! 2. *Calibrated generators* (this module) — tensors reproducing the
+//!    statistics the paper identifies as the source of compressibility:
+//!    KV that is smooth along channels but not tokens (Fig. 2), weights
+//!    with clustered exponents and outlier channels, and MoDE-style
+//!    long-tailed precision mixes (Fig. 17).
+
+pub mod tensors;
+pub mod precision;
+pub mod workload;
+
+pub use precision::{PrecisionMix, mode_mix};
+pub use tensors::{KvGen, WeightGen};
+pub use workload::{RequestGen, SynthCorpus};

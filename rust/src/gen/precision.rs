@@ -1,0 +1,139 @@
+//! MoDE-style runtime precision-mix generation (paper Figs 3, 17).
+//!
+//! Conditional-execution runtimes assign each unit (expert, attention head,
+//! MLP neuron) a precision tier by importance. Importance is long-tailed
+//! (paper §II-C): a few units matter a lot, most matter little. We model
+//! importance as Zipf-like and map the ranked units onto a tier ladder so
+//! the footprint-weighted average bits hits a requested budget — producing
+//! the precision *distributions* of Fig. 17 and the per-unit fetch streams
+//! of Figs 18–21.
+
+use crate::util::Rng;
+
+/// A precision tier ladder entry: (bits, fraction of units).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrecisionMix {
+    /// Tier bit-widths, descending (e.g. [16, 8, 4]).
+    pub bits: Vec<usize>,
+    /// Fraction of units in each tier (sums to 1).
+    pub frac: Vec<f64>,
+}
+
+impl PrecisionMix {
+    /// Footprint-weighted average bits/weight (units assumed equal-sized).
+    pub fn avg_bits(&self) -> f64 {
+        self.bits.iter().zip(&self.frac).map(|(&b, &f)| b as f64 * f).sum()
+    }
+
+    /// Assign per-unit bits for `n` units: ranked importance → tiers.
+    /// Units are returned in *storage* order (importance shuffled), i.e.
+    /// what the device actually sees at fetch time.
+    pub fn assign(&self, rng: &mut Rng, n: usize) -> Vec<usize> {
+        let mut per_rank = Vec::with_capacity(n);
+        for (tier, &f) in self.frac.iter().enumerate() {
+            let count = (f * n as f64).round() as usize;
+            for _ in 0..count {
+                per_rank.push(self.bits[tier]);
+            }
+        }
+        while per_rank.len() < n {
+            per_rank.push(*self.bits.last().unwrap());
+        }
+        per_rank.truncate(n);
+        // importance rank is uncorrelated with storage position
+        rng.shuffle(&mut per_rank);
+        per_rank
+    }
+}
+
+/// Build a MoDE mix for a base format and an average bits/weight budget,
+/// on the ladder base/2^k the paper uses (BF16 → {16,8,4}; FP8 → {8,4};
+/// INT4 → {4}): solve for tier fractions with a long-tailed shape
+/// (top tier smallest), matching Fig. 17's runtime distributions.
+pub fn mode_mix(base_bits: usize, avg_bits: f64) -> PrecisionMix {
+    let ladder: Vec<usize> = match base_bits {
+        16 => vec![16, 8, 4],
+        8 => vec![8, 4],
+        _ => vec![base_bits],
+    };
+    if ladder.len() == 1 {
+        return PrecisionMix { bits: ladder, frac: vec![1.0] };
+    }
+    let avg = avg_bits.clamp(*ladder.last().unwrap() as f64, ladder[0] as f64);
+    if ladder.len() == 2 {
+        let (hi, lo) = (ladder[0] as f64, ladder[1] as f64);
+        let f_hi = (avg - lo) / (hi - lo);
+        return PrecisionMix { bits: ladder, frac: vec![f_hi, 1.0 - f_hi] };
+    }
+    // three tiers: fix the middle tier at 35% (Fig. 17's typical shape),
+    // solve the outer two for the budget; fall back to a two-tier solve at
+    // the extremes where the 35% middle share is infeasible.
+    let (hi, mid, lo) = (ladder[0] as f64, ladder[1] as f64, ladder[2] as f64);
+    let f_mid = 0.35;
+    let rem = 1.0 - f_mid;
+    let target = avg - f_mid * mid;
+    let f_hi = (target - rem * lo) / (hi - lo);
+    if f_hi < 0.0 {
+        // budget below what 35% mid allows: blend mid and lo only
+        let f_m = ((avg - lo) / (mid - lo)).clamp(0.0, 1.0);
+        return PrecisionMix { bits: ladder, frac: vec![0.0, f_m, 1.0 - f_m] };
+    }
+    if f_hi > rem {
+        // budget above what 35% mid allows: blend hi and mid only
+        let f_h = ((avg - mid) / (hi - mid)).clamp(0.0, 1.0);
+        return PrecisionMix { bits: ladder, frac: vec![f_h, 1.0 - f_h, 0.0] };
+    }
+    PrecisionMix { bits: ladder, frac: vec![f_hi, f_mid, rem - f_hi] }
+}
+
+/// Zipf-distributed importance scores for `n` units (descending).
+pub fn zipf_importance(n: usize, s: f64) -> Vec<f64> {
+    (1..=n).map(|k| 1.0 / (k as f64).powf(s)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_hits_budget() {
+        for base in [16usize, 8] {
+            for avg in [4.8f64, 6.0, 8.0, 12.0] {
+                let m = mode_mix(base, avg);
+                let clamped = avg.clamp(*m.bits.last().unwrap() as f64, m.bits[0] as f64);
+                assert!(
+                    (m.avg_bits() - clamped).abs() < 0.3,
+                    "base={base} avg={avg} got={}",
+                    m.avg_bits()
+                );
+                let sum: f64 = m.frac.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-9);
+                assert!(m.frac.iter().all(|&f| f >= -1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn int4_base_is_degenerate() {
+        let m = mode_mix(4, 4.0);
+        assert_eq!(m.bits, vec![4]);
+        assert_eq!(m.avg_bits(), 4.0);
+    }
+
+    #[test]
+    fn assign_counts_match_fracs() {
+        let mut rng = Rng::new(401);
+        let m = mode_mix(16, 8.0);
+        let assign = m.assign(&mut rng, 1000);
+        assert_eq!(assign.len(), 1000);
+        let avg: f64 = assign.iter().map(|&b| b as f64).sum::<f64>() / 1000.0;
+        assert!((avg - 8.0).abs() < 0.5, "avg={avg}");
+    }
+
+    #[test]
+    fn zipf_descends() {
+        let z = zipf_importance(100, 1.0);
+        assert!(z.windows(2).all(|w| w[0] >= w[1]));
+        assert!(z[0] / z[99] > 50.0);
+    }
+}

@@ -1,0 +1,200 @@
+//! Tensor generators calibrated to the statistics that drive the paper's
+//! compression results.
+//!
+//! **KV** (paper Fig. 2): values evolve smoothly along the *channel/time*
+//! axis within one channel (AR(1) with high coefficient), with per-channel
+//! scales spread over several octaves (attention keys/values have
+//! heterogeneous channel magnitudes), plus a small fraction of outlier
+//! channels with large magnitude (the activation-outlier phenomenon).
+//!
+//! **Weights**: near-Gaussian within a row, per-row scale variation of
+//! ~1 octave, occasional outliers — giving BF16 exponent fields a small
+//! support (clustered exponents), which is exactly why bit-plane exponent
+//! streams compress ~1.34× while word streams do not (paper Table IV).
+
+use crate::formats::bf16_from_f32;
+use crate::util::Rng;
+
+/// KV cache generator for one layer.
+#[derive(Debug, Clone)]
+pub struct KvGen {
+    /// Channels per token (kv_heads × head_dim for one layer).
+    pub channels: usize,
+    /// AR(1) smoothness along tokens within a channel (0..1).
+    pub smooth: f64,
+    /// Log2 spread of per-channel scales.
+    pub scale_octaves: i64,
+    /// Fraction of outlier channels (~8× scale).
+    pub outlier_frac: f64,
+}
+
+impl KvGen {
+    /// Defaults calibrated so the TRACE pipeline lands in the paper's
+    /// per-layer ratio band (1.3×–2.7× under ZSTD, Fig. 15).
+    pub fn default_for(channels: usize) -> KvGen {
+        KvGen { channels, smooth: 0.97, scale_octaves: 3, outlier_frac: 0.03 }
+    }
+
+    /// Layer-dependent variant: deeper layers are smoother (the paper's
+    /// Fig. 15 shows higher ratios on a subset of layers, peaking ~2.7x
+    /// while the average sits near 1.8x).
+    pub fn for_layer(channels: usize, layer: usize, n_layers: usize) -> KvGen {
+        let depth = layer as f64 / n_layers.max(1) as f64;
+        KvGen {
+            channels,
+            smooth: 0.85 + 0.145 * depth,
+            scale_octaves: 3,
+            outlier_frac: 0.03,
+        }
+    }
+
+    /// Generate `tokens` of token-major BF16 KV (token t at `[t*C..)`).
+    pub fn generate(&self, rng: &mut Rng, tokens: usize) -> Vec<u16> {
+        let c = self.channels;
+        let mut scales = Vec::with_capacity(c);
+        let mut state = Vec::with_capacity(c);
+        for _ in 0..c {
+            let mut s = 2f64.powi(rng.range(-self.scale_octaves, self.scale_octaves) as i32);
+            if rng.chance(self.outlier_frac) {
+                s *= 8.0;
+            }
+            scales.push(s);
+            state.push(rng.normal() * s);
+        }
+        let a = self.smooth;
+        let b = (1.0 - a * a).max(0.0).sqrt();
+        let mut out = vec![0u16; tokens * c];
+        for t in 0..tokens {
+            for j in 0..c {
+                state[j] = a * state[j] + b * rng.normal() * scales[j];
+                out[t * c + j] = bf16_from_f32(state[j] as f32);
+            }
+        }
+        out
+    }
+}
+
+/// Weight tensor generator.
+#[derive(Debug, Clone)]
+pub struct WeightGen {
+    /// Row length (input dim) — scale is per row.
+    pub row: usize,
+    /// Std-dev spread across rows in octaves.
+    pub scale_octaves: i64,
+    /// Outlier element fraction (~10× row scale).
+    pub outlier_frac: f64,
+}
+
+impl WeightGen {
+    pub fn default_for(row: usize) -> WeightGen {
+        WeightGen { row, scale_octaves: 1, outlier_frac: 0.001 }
+    }
+
+    /// Generate `n` BF16 weights (n must be a multiple of `row`).
+    pub fn generate(&self, rng: &mut Rng, n: usize) -> Vec<u16> {
+        self.generate_f32(rng, n).iter().map(|&x| bf16_from_f32(x)).collect()
+    }
+
+    /// f32 variant, for quantization pipelines.
+    pub fn generate_f32(&self, rng: &mut Rng, n: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(n);
+        let rows = n.div_ceil(self.row);
+        for _ in 0..rows {
+            let scale = 0.02 * 2f64.powi(rng.range(-self.scale_octaves, self.scale_octaves) as i32);
+            for _ in 0..self.row.min(n - out.len()) {
+                let mut v = rng.normal() * scale;
+                if rng.chance(self.outlier_frac) {
+                    v *= 10.0;
+                }
+                out.push(v as f32);
+            }
+            if out.len() >= n {
+                break;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitplane::{DeviceBlock, KvWindow};
+    use crate::codec::CodecPolicy;
+    use crate::formats::bf16_to_f32;
+    use crate::util::stats::autocorr1;
+
+    #[test]
+    fn kv_is_channel_smooth_token_rough() {
+        // the Fig. 2 property: per-channel series smooth, per-token rows not
+        let mut rng = Rng::new(301);
+        let g = KvGen::default_for(64);
+        let kv = g.generate(&mut rng, 256);
+        // channel series autocorrelation
+        let chan: Vec<f64> =
+            (0..256).map(|t| bf16_to_f32(kv[t * 64 + 7]) as f64).collect();
+        // token row autocorrelation (across channels within token 10)
+        let row: Vec<f64> = (0..64).map(|j| bf16_to_f32(kv[10 * 64 + j]) as f64).collect();
+        assert!(autocorr1(&chan) > 0.8, "chan={}", autocorr1(&chan));
+        assert!(autocorr1(&row) < 0.4, "row={}", autocorr1(&row));
+    }
+
+    #[test]
+    fn kv_compresses_in_paper_band() {
+        let mut rng = Rng::new(302);
+        let g = KvGen::default_for(64);
+        let kv = g.generate(&mut rng, 64);
+        let blk = DeviceBlock::encode_kv(&kv, KvWindow::new(64, 64), CodecPolicy::ZstdOnly);
+        let r = blk.ratio();
+        assert!(r > 1.3 && r < 3.0, "ratio={r}");
+    }
+
+    #[test]
+    fn deeper_layers_compress_more() {
+        let mut rng = Rng::new(303);
+        let shallow = KvGen::for_layer(64, 0, 32);
+        let deep = KvGen::for_layer(64, 31, 32);
+        let mut ratios = Vec::new();
+        for g in [shallow, deep] {
+            let mut acc = 0.0;
+            for _ in 0..4 {
+                let kv = g.generate(&mut rng, 64);
+                acc += DeviceBlock::encode_kv(&kv, KvWindow::new(64, 64), CodecPolicy::ZstdOnly)
+                    .ratio();
+            }
+            ratios.push(acc / 4.0);
+        }
+        assert!(ratios[1] > ratios[0], "{ratios:?}");
+    }
+
+    #[test]
+    fn weights_compress_about_paper_ratio() {
+        // paper Table IV: BF16 weights ≈ 1.32–1.34× under ZSTD bit-planes
+        let mut rng = Rng::new(304);
+        let g = WeightGen::default_for(512);
+        let w = g.generate(&mut rng, 8192);
+        let blk = DeviceBlock::encode_weights(&w, crate::formats::Fmt::Bf16, CodecPolicy::ZstdOnly);
+        let r = blk.ratio();
+        assert!(r > 1.15 && r < 1.6, "ratio={r}");
+    }
+
+    #[test]
+    fn weight_direct_compression_is_weak() {
+        // paper Table I: word-major ZSTD on weights gives only ~17–23%
+        let mut rng = Rng::new(305);
+        let g = WeightGen::default_for(512);
+        let w = g.generate(&mut rng, 8192);
+        let raw = crate::util::bytes::u16s_to_bytes(&w);
+        let z = crate::codec::compress(crate::codec::CodecKind::Zstd, &raw);
+        let saving = 1.0 - z.len() as f64 / raw.len() as f64;
+        assert!(saving < 0.30, "saving={saving}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = KvGen::default_for(32);
+        let a = g.generate(&mut Rng::new(9), 16);
+        let b = g.generate(&mut Rng::new(9), 16);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,132 @@
+//! Serving workload and corpus generators.
+//!
+//! * [`RequestGen`] — Poisson request arrivals with log-normal-ish context
+//!   lengths and geometric decode lengths, for the coordinator benches.
+//! * [`SynthCorpus`] — a deterministic synthetic token stream with Zipfian
+//!   unigram frequencies and first-order Markov structure, used to drive
+//!   the end-to-end example (prefill + decode + perplexity-style scoring)
+//!   in place of WikiText/BookSum.
+
+use crate::util::Rng;
+
+/// One inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenRequest {
+    pub id: u64,
+    pub arrival_ms: f64,
+    pub prompt: Vec<u32>,
+    pub decode_tokens: usize,
+}
+
+/// Poisson arrivals, configurable prompt/decode length distributions.
+#[derive(Debug, Clone)]
+pub struct RequestGen {
+    pub rate_per_s: f64,
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    pub decode_mean: usize,
+    pub vocab: u32,
+}
+
+impl RequestGen {
+    pub fn new(rate_per_s: f64, prompt_min: usize, prompt_max: usize, decode_mean: usize, vocab: u32) -> Self {
+        RequestGen { rate_per_s, prompt_min, prompt_max, decode_mean, vocab }
+    }
+
+    /// Generate `n` requests with increasing arrival times.
+    pub fn generate(&self, rng: &mut Rng, n: usize) -> Vec<GenRequest> {
+        let mut t = 0.0;
+        let mut corpus = SynthCorpus::new(self.vocab, rng.next_u64());
+        (0..n as u64)
+            .map(|id| {
+                t += rng.exponential(self.rate_per_s) * 1000.0;
+                // log-uniform prompt length
+                let span = (self.prompt_max as f64 / self.prompt_min as f64).ln();
+                let len = (self.prompt_min as f64 * (rng.f64() * span).exp()) as usize;
+                let decode = 1 + (rng.exponential(1.0 / self.decode_mean as f64)) as usize;
+                GenRequest {
+                    id,
+                    arrival_ms: t,
+                    prompt: corpus.take(len.clamp(self.prompt_min, self.prompt_max)),
+                    decode_tokens: decode,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Zipf + Markov synthetic corpus. Deterministic for a given seed.
+#[derive(Debug, Clone)]
+pub struct SynthCorpus {
+    vocab: u32,
+    rng: Rng,
+    prev: u32,
+}
+
+impl SynthCorpus {
+    pub fn new(vocab: u32, seed: u64) -> SynthCorpus {
+        SynthCorpus { vocab: vocab.max(4), rng: Rng::new(seed), prev: 0 }
+    }
+
+    /// Sample the next token: with p=0.45 a "local" continuation near the
+    /// previous token (Markov structure a model can learn), else a Zipfian
+    /// draw (head-heavy unigram distribution).
+    pub fn next_token(&mut self) -> u32 {
+        let v = self.vocab;
+        let tok = if self.rng.chance(0.45) {
+            (self.prev + 1 + self.rng.below(7) as u32) % v
+        } else {
+            // approximate Zipf via inverse-power transform
+            let u = self.rng.f64().max(1e-9);
+            let r = (u.powf(-0.8) - 1.0) as u32;
+            r % v
+        };
+        self.prev = tok;
+        tok
+    }
+
+    pub fn take(&mut self, n: usize) -> Vec<u32> {
+        (0..n).map(|_| self.next_token()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_increase_and_lengths_bounded() {
+        let mut rng = Rng::new(501);
+        let g = RequestGen::new(10.0, 32, 1024, 64, 1000);
+        let reqs = g.generate(&mut rng, 200);
+        assert_eq!(reqs.len(), 200);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_ms >= w[0].arrival_ms);
+        }
+        for r in &reqs {
+            assert!(r.prompt.len() >= 32 && r.prompt.len() <= 1024);
+            assert!(r.decode_tokens >= 1);
+        }
+    }
+
+    #[test]
+    fn corpus_is_deterministic_and_skewed() {
+        let a: Vec<u32> = SynthCorpus::new(1000, 7).take(5000);
+        let b: Vec<u32> = SynthCorpus::new(1000, 7).take(5000);
+        assert_eq!(a, b);
+        // head-heavy: top-32 tokens should cover a large share
+        let mut counts = vec![0usize; 1000];
+        for &t in &a {
+            counts[t as usize] += 1;
+        }
+        counts.sort_unstable_by(|x, y| y.cmp(x));
+        let head: usize = counts[..32].iter().sum();
+        assert!(head as f64 > 0.3 * a.len() as f64, "head={head}");
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let toks = SynthCorpus::new(64, 9).take(10_000);
+        assert!(toks.iter().all(|&t| t < 64));
+    }
+}

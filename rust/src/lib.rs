@@ -1,0 +1,50 @@
+//! # trace-cxl
+//!
+//! Full-system reproduction of **TRACE: Unlocking Effective CXL Bandwidth via
+//! Lossless Compression and Precision Scaling** (CS.AR 2025).
+//!
+//! TRACE is a CXL Type-3 memory-device architecture that keeps the standard
+//! CXL.mem load/store interface but changes the *device-internal*
+//! representation of LLM tensors:
+//!
+//! * **Mechanism I — structure-aware lossless compression.** Tensors are
+//!   stored in a channel-major, bit-plane-disaggregated layout; KV streams
+//!   additionally go through a cross-token transpose + exponent-delta
+//!   transform. The result is low-entropy plane streams that commodity codecs
+//!   (LZ4/ZSTD) compress well, where the word-major layout compresses poorly.
+//! * **Mechanism II — elastic precision access.** Precision views are exposed
+//!   as address aliases; the controller fetches only the bit-planes a view
+//!   requires ("plane-aligned fetch"), so device DRAM activations and bytes
+//!   scale with requested precision.
+//!
+//! Crate layout (see `DESIGN.md` for the experiment index):
+//!
+//! * [`util`] — RNG, mini-JSON, CLI parsing, statistics, property-test harness.
+//! * [`formats`] — element formats (BF16/FP16/FP8/INT8/INT4/MXFP4) and field splits.
+//! * [`bitplane`] — bit-plane disaggregation, the KV transform, plane masks,
+//!   guard-plane rounding, and the reconstruction pipeline (paper Eq. 1–8).
+//! * [`codec`] — LZ4 (from scratch), ZSTD wrapper, RLE, per-plane best-of selection.
+//! * [`dram`] — DDR5 bank-timing simulator with DRAMPower-style energy counters
+//!   (substitute for DRAMSim3).
+//! * [`cxl`] — the CXL Type-3 device models: Plain / GComp / TRACE controllers,
+//!   plane-index metadata, alias decode, plane-aware scheduling, pipeline
+//!   latency model, and the PPA model.
+//! * [`tier`] — HBM/CXL memory-tier manager: paged KV with precision tiers,
+//!   weight store with per-expert/head/neuron chunks, spill accounting.
+//! * [`sysmodel`] — first-order trace-driven throughput model (paper Figs 12–14).
+//! * [`gen`] — calibrated synthetic tensors, precision-mix and request generators.
+//! * [`coordinator`] — serving engine: router, continuous batcher, decode loop.
+//! * [`runtime`] — PJRT wrapper that loads the AOT-compiled JAX model (HLO text)
+//!   and runs prefill/decode from Rust.
+
+pub mod util;
+pub mod formats;
+pub mod bitplane;
+pub mod codec;
+pub mod dram;
+pub mod cxl;
+pub mod tier;
+pub mod sysmodel;
+pub mod gen;
+pub mod coordinator;
+pub mod runtime;

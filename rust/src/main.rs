@@ -1,0 +1,225 @@
+//! `trace-cxl` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//!
+//! * `serve`      — run the serving engine on the AOT-compiled model,
+//!                  spilling KV to the simulated TRACE device.
+//! * `throughput` — trace-driven throughput model (paper Figs 12–14).
+//! * `compress`   — compression summary on calibrated tensors (Tables I/IV).
+//! * `latency`    — controller load-to-use breakdowns (Figs 22–23).
+//! * `ppa`        — Table V PPA report.
+//! * `info`       — print artifact manifest / build info.
+
+use trace_cxl::bitplane::{DeviceBlock, KvWindow};
+use trace_cxl::codec::CodecPolicy;
+use trace_cxl::coordinator::{Engine, EngineConfig};
+use trace_cxl::cxl::{latency, ppa_for, Design, LatencyCase};
+use trace_cxl::gen::{KvGen, RequestGen, WeightGen};
+use trace_cxl::runtime::{Manifest, ModelBackend, PjrtEngine};
+use trace_cxl::sysmodel::{ModelShape, SystemConfig, ThroughputModel};
+use trace_cxl::tier::KvPolicy;
+use trace_cxl::util::cli::Args;
+use trace_cxl::util::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("throughput") => cmd_throughput(&args),
+        Some("compress") => cmd_compress(&args),
+        Some("latency") => cmd_latency(),
+        Some("ppa") => cmd_ppa(),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "trace-cxl — TRACE CXL-memory reproduction\n\
+         USAGE: trace-cxl <serve|throughput|compress|latency|ppa|info> [--options]\n\
+         \n\
+         serve      --artifacts DIR --requests N --max-new N --hbm-kv BYTES --design plain|gcomp|trace\n\
+         throughput --model mxfp4|bf16 --ctx N [--alpha F] [--elastic F]\n\
+         compress   --kind kv|weights [--blocks N]\n\
+         latency    (controller pipeline breakdowns, Figs 22-23)\n\
+         ppa        (Table V)\n\
+         info       --artifacts DIR"
+    );
+}
+
+fn parse_design(s: &str) -> Design {
+    match s {
+        "plain" => Design::Plain,
+        "gcomp" => Design::GComp,
+        _ => Design::Trace,
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let n_requests = args.get_usize("requests", 4);
+    let max_new = args.get_usize("max-new", 48);
+    let hbm_kv = args.get_u64("hbm-kv", 256 * 1024);
+    let design = parse_design(args.get_or("design", "trace"));
+
+    println!("loading artifacts from {dir:?} ...");
+    let backend = PjrtEngine::load(&dir)?;
+    let dims = backend.dims().clone();
+    println!(
+        "model: {} layers, d_model {}, {} heads, vocab {} (~{:.0}M params)",
+        dims.layers,
+        dims.d_model,
+        dims.heads,
+        dims.vocab,
+        dims.param_count() as f64 / 1e6
+    );
+    let mut engine = Engine::new(
+        backend,
+        EngineConfig {
+            design,
+            codec: CodecPolicy::FastBest,
+            hbm_kv_bytes: hbm_kv,
+            policy: KvPolicy::FullKv,
+            greedy: true,
+        },
+    );
+    let mut rng = Rng::new(args.get_u64("seed", 7));
+    let reqgen = RequestGen::new(50.0, 8, dims.t_prompt, max_new, dims.vocab as u32);
+    for r in reqgen.generate(&mut rng, n_requests) {
+        engine.submit(r.prompt, max_new.min(dims.t_max - dims.t_prompt - 2));
+    }
+    engine.run_to_completion(100_000)?;
+    println!("{}", engine.metrics.report(&engine.device.stats));
+    println!(
+        "device KV compression ratio: {:.2}x ({} blocks)",
+        engine.device.overall_ratio(),
+        engine.device.len()
+    );
+    Ok(())
+}
+
+fn cmd_throughput(args: &Args) -> anyhow::Result<()> {
+    let mut shape = match args.get_or("model", "mxfp4") {
+        "bf16" => ModelShape::gpt_oss_120b_bf16(),
+        _ => ModelShape::gpt_oss_120b_mxfp4(),
+    };
+    shape.kv_heads = args.get_usize("kv-heads", 64);
+    let mut cfg = SystemConfig::paper_default();
+    cfg.alpha = args.get_f64("alpha", 0.8);
+    let elastic = args.get_f64("elastic", 1.0);
+    cfg = cfg.with_elastic_kv(elastic);
+    let m = ThroughputModel::new(cfg, shape);
+    let ctxs = [4096usize, 16384, 65536, 131072, 196608, 262144];
+    println!("{:<10} {:>12} {:>12} {:>12}", "ctx", "CXL-Plain", "CXL-GComp", "TRACE");
+    for &ctx in &ctxs {
+        let p = m.eval(ctx, Design::Plain);
+        let g = m.eval(ctx, Design::GComp);
+        let t = m.eval(ctx, Design::Trace);
+        println!(
+            "{:<10} {:>12.2} {:>12.2} {:>12.2}   (spill kv={:.0}% w={:.0}%)",
+            ctx,
+            p.tok_s,
+            g.tok_s,
+            t.tok_s,
+            p.kv_spill_frac * 100.0,
+            p.w_spill_frac * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> anyhow::Result<()> {
+    let mut rng = Rng::new(11);
+    let blocks = args.get_usize("blocks", 32);
+    match args.get_or("kind", "kv") {
+        "weights" => {
+            let g = WeightGen::default_for(512);
+            let mut tot_raw = 0usize;
+            let mut tot_c = 0usize;
+            for _ in 0..blocks {
+                let w = g.generate(&mut rng, 2048);
+                let b = DeviceBlock::encode_weights(
+                    &w,
+                    trace_cxl::formats::Fmt::Bf16,
+                    CodecPolicy::ZstdOnly,
+                );
+                tot_raw += b.raw_bytes();
+                tot_c += b.compressed_bytes();
+            }
+            println!(
+                "BF16 weights, {blocks} x 4KB blocks (ZSTD): ratio {:.2}x, {:.1}% saved",
+                tot_raw as f64 / tot_c as f64,
+                100.0 * (1.0 - tot_c as f64 / tot_raw as f64)
+            );
+        }
+        _ => {
+            let g = KvGen::default_for(64);
+            let mut tot_raw = 0usize;
+            let mut tot_c = 0usize;
+            for _ in 0..blocks {
+                let kv = g.generate(&mut rng, 64);
+                let b = DeviceBlock::encode_kv(&kv, KvWindow::new(64, 64), CodecPolicy::ZstdOnly);
+                tot_raw += b.raw_bytes();
+                tot_c += b.compressed_bytes();
+            }
+            println!(
+                "BF16 KV, {blocks} x 4KB windows (TRACE transform + ZSTD): ratio {:.2}x, {:.1}% saved",
+                tot_raw as f64 / tot_c as f64,
+                100.0 * (1.0 - tot_c as f64 / tot_raw as f64)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_latency() -> anyhow::Result<()> {
+    println!("load-to-use service time (cycles @2 GHz):");
+    let cases = [
+        ("CXL-Plain", latency(LatencyCase::Plain)),
+        ("CXL-GComp", latency(LatencyCase::GComp { metadata_hit: true })),
+        ("TRACE @1.5x", latency(LatencyCase::Trace { metadata_hit: true, ratio: 1.5, bypass: false })),
+        ("TRACE @3.0x", latency(LatencyCase::Trace { metadata_hit: true, ratio: 3.0, bypass: false })),
+        ("TRACE bypass", latency(LatencyCase::Trace { metadata_hit: true, ratio: 1.0, bypass: true })),
+        ("TRACE miss", latency(LatencyCase::Trace { metadata_hit: false, ratio: 1.5, bypass: false })),
+    ];
+    for (name, b) in cases {
+        println!(
+            "{:<14} F={} M={} S={} tRCD={} tCL={} B={} codec={} miss={}  total={} ({:.1} ns)",
+            name, b.frontend, b.metadata, b.scheduler, b.trcd, b.tcl, b.burst, b.codec,
+            b.meta_miss, b.total_cycles(), b.total_ns()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_ppa() -> anyhow::Result<()> {
+    println!("{:<18} {:>10} {:>9} {:>14}", "", "Area mm2", "Power W", "Load-to-use");
+    for d in [Design::Plain, Design::GComp, Design::Trace] {
+        let r = ppa_for(d);
+        println!(
+            "{:<18} {:>10.2} {:>9.1} {:>11} cyc",
+            d.name(),
+            r.area_mm2(),
+            r.power_w(),
+            r.load_to_use_cycles
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let m = Manifest::load(&dir)?;
+    println!("artifacts: {dir:?}");
+    println!("dims: {:?}", m.dims);
+    println!("params: {} tensors, ~{:.0}M values", m.params.len(), m.dims.param_count() as f64 / 1e6);
+    Ok(())
+}

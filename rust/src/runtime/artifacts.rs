@@ -1,0 +1,166 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `artifacts/manifest.json` records model dimensions, the HLO file names,
+//! the parameter tensor list (names, shapes, dtypes, byte offsets into
+//! `params.bin`), and the exact parameter order both executables expect.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Model dimensions fixed at AOT time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelDims {
+    pub layers: usize,
+    pub batch: usize,
+    /// Maximum KV length the decode executable was lowered for.
+    pub t_max: usize,
+    /// Prompt length the prefill executable was lowered for.
+    pub t_prompt: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+}
+
+impl ModelDims {
+    /// KV channels per token per layer (K and V halves).
+    pub fn kv_channels(&self) -> usize {
+        2 * self.heads * self.head_dim
+    }
+
+    /// f32 values in one token's KV entry across all layers.
+    pub fn kv_entry_len(&self) -> usize {
+        self.layers * self.kv_channels()
+    }
+
+    /// Approximate parameter count.
+    pub fn param_count(&self) -> usize {
+        let per_layer = 4 * self.d_model * self.d_model + 2 * self.d_model * self.ffn + 2 * self.d_model;
+        self.vocab * self.d_model + per_layer * self.layers + self.d_model
+    }
+}
+
+/// One parameter tensor's metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Byte offset into params.bin (f32 little-endian).
+    pub offset: usize,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub dims: ModelDims,
+    pub decode_hlo: PathBuf,
+    pub prefill_hlo: PathBuf,
+    pub params_bin: PathBuf,
+    pub params: Vec<ParamSpec>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("read manifest: {e} (run `make artifacts` first)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse manifest: {e}"))?;
+        let d = j.get("dims").ok_or_else(|| anyhow::anyhow!("manifest: missing dims"))?;
+        let dims = ModelDims {
+            layers: d.req_usize("layers")?,
+            batch: d.req_usize("batch")?,
+            t_max: d.req_usize("t_max")?,
+            t_prompt: d.req_usize("t_prompt")?,
+            d_model: d.req_usize("d_model")?,
+            heads: d.req_usize("heads")?,
+            head_dim: d.req_usize("head_dim")?,
+            ffn: d.req_usize("ffn")?,
+            vocab: d.req_usize("vocab")?,
+        };
+        let params = j
+            .get("params")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing params"))?
+            .iter()
+            .map(|p| -> anyhow::Result<ParamSpec> {
+                Ok(ParamSpec {
+                    name: p.req_str("name")?.to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .ok_or_else(|| anyhow::anyhow!("param shape"))?
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: p.req_usize("offset")?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dims,
+            decode_hlo: dir.join(j.req_str("decode_hlo")?),
+            prefill_hlo: dir.join(j.req_str("prefill_hlo")?),
+            params_bin: dir.join(j.req_str("params_bin")?),
+            params,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_helpers() {
+        let d = ModelDims {
+            layers: 12,
+            batch: 2,
+            t_max: 256,
+            t_prompt: 64,
+            d_model: 768,
+            heads: 12,
+            head_dim: 64,
+            ffn: 3072,
+            vocab: 16384,
+        };
+        assert_eq!(d.kv_channels(), 2 * 768);
+        assert_eq!(d.kv_entry_len(), 12 * 1536);
+        // ~100M params
+        let p = d.param_count();
+        assert!(p > 80_000_000 && p < 130_000_000, "{p}");
+    }
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("trace_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"dims":{"layers":2,"batch":1,"t_max":32,"t_prompt":8,"d_model":16,
+                "heads":2,"head_dim":8,"ffn":32,"vocab":64},
+                "decode_hlo":"decode.hlo.txt","prefill_hlo":"prefill.hlo.txt",
+                "params_bin":"params.bin",
+                "params":[{"name":"emb","shape":[64,16],"offset":0}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.dims.layers, 2);
+        assert_eq!(m.params[0].numel(), 1024);
+        assert!(m.decode_hlo.ends_with("decode.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

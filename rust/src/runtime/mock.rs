@@ -1,0 +1,131 @@
+//! Deterministic mock backend for coordinator tests (no artifacts needed).
+//!
+//! Produces pseudo-logits that depend on (token, pos) and KV entries that
+//! are smooth along the "token" axis per channel — so coordinator tests
+//! exercise the same compression-relevant statistics as the real model.
+
+use super::{DecodeOut, ModelBackend, ModelDims, PrefillOut};
+use crate::util::Rng;
+
+pub struct MockBackend {
+    dims: ModelDims,
+    /// Per-channel AR state per slot.
+    state: Vec<Vec<f32>>,
+    rng: Rng,
+}
+
+impl MockBackend {
+    pub fn new(dims: ModelDims, seed: u64) -> MockBackend {
+        let ch = dims.kv_entry_len();
+        MockBackend { state: vec![vec![0.0; ch]; dims.batch], dims, rng: Rng::new(seed) }
+    }
+
+    /// Small default dims for tests.
+    pub fn tiny() -> MockBackend {
+        MockBackend::new(
+            ModelDims {
+                layers: 2,
+                batch: 2,
+                t_max: 128,
+                t_prompt: 8,
+                d_model: 16,
+                heads: 2,
+                head_dim: 4,
+                ffn: 32,
+                vocab: 64,
+            },
+            42,
+        )
+    }
+
+    fn kv_entry(&mut self, slot: usize) -> Vec<f32> {
+        let n = self.dims.kv_entry_len();
+        let st = &mut self.state[slot];
+        for (j, v) in st.iter_mut().enumerate().take(n) {
+            let scale = 2f32.powi((j % 7) as i32 - 3);
+            *v = 0.95 * *v + 0.05 * (self.rng.normal() as f32) * scale;
+        }
+        st.clone()
+    }
+
+    fn logits_for(&self, token: u32, pos: usize) -> Vec<f32> {
+        let v = self.dims.vocab;
+        (0..v)
+            .map(|i| {
+                let x = (i as u64)
+                    .wrapping_mul(0x9E37)
+                    .wrapping_add(token as u64 * 131)
+                    .wrapping_add(pos as u64 * 17);
+                ((x % 1000) as f32) / 250.0 - 2.0
+            })
+            .collect()
+    }
+}
+
+impl ModelBackend for MockBackend {
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    fn prefill(&mut self, tokens: &[Vec<u32>]) -> anyhow::Result<PrefillOut> {
+        let d = self.dims.clone();
+        let mut logits = Vec::new();
+        let mut kv = Vec::new();
+        for slot in 0..d.batch {
+            let seq = tokens.get(slot).cloned().unwrap_or_default();
+            let mut slot_kv = Vec::with_capacity(d.t_prompt * d.kv_entry_len());
+            for _ in 0..d.t_prompt {
+                slot_kv.extend(self.kv_entry(slot));
+            }
+            kv.push(slot_kv);
+            logits.push(self.logits_for(seq.last().copied().unwrap_or(0), seq.len()));
+        }
+        Ok(PrefillOut { logits, kv })
+    }
+
+    fn decode(&mut self, tokens: &[u32], kv: &[Vec<f32>], pos: usize) -> anyhow::Result<DecodeOut> {
+        anyhow::ensure!(pos < self.dims.t_max, "cache full");
+        anyhow::ensure!(kv.len() <= self.dims.batch);
+        let d = self.dims.clone();
+        let mut logits = Vec::new();
+        let mut kv_new = Vec::new();
+        for slot in 0..d.batch {
+            logits.push(self.logits_for(tokens.get(slot).copied().unwrap_or(0), pos));
+            kv_new.push(self.kv_entry(slot));
+        }
+        Ok(DecodeOut { logits, kv_new })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_consistent() {
+        let mut m = MockBackend::tiny();
+        let out = m.prefill(&[vec![1, 2, 3], vec![4, 5]]).unwrap();
+        assert_eq!(out.logits.len(), 2);
+        assert_eq!(out.logits[0].len(), 64);
+        assert_eq!(out.kv[0].len(), 8 * m.dims().kv_entry_len());
+        let dec = m.decode(&[7, 8], &out.kv, 8).unwrap();
+        assert_eq!(dec.kv_new[0].len(), m.dims().kv_entry_len());
+    }
+
+    #[test]
+    fn kv_is_smooth_over_steps() {
+        let mut m = MockBackend::tiny();
+        let mut series = Vec::new();
+        for _ in 0..64 {
+            let d = m.decode(&[1, 1], &[vec![], vec![]], 1).unwrap();
+            series.push(d.kv_new[0][3] as f64);
+        }
+        assert!(crate::util::stats::autocorr1(&series) > 0.7);
+    }
+
+    #[test]
+    fn cache_full_errors() {
+        let mut m = MockBackend::tiny();
+        assert!(m.decode(&[0, 0], &[vec![], vec![]], 128).is_err());
+    }
+}

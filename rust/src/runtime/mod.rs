@@ -1,0 +1,54 @@
+//! Model runtime: loads the AOT-compiled JAX model (HLO text) and executes
+//! prefill / decode steps via the PJRT CPU client (`xla` crate).
+//!
+//! Python runs **once** at build time (`make artifacts`):
+//! `python/compile/aot.py` lowers the L2 JAX model (which calls the L1
+//! Pallas kernels) to HLO *text* — the interchange format this image's
+//! xla_extension 0.5.1 accepts — plus a JSON manifest of shapes and a raw
+//! little-endian dump of the initialized parameters. The request path is
+//! pure Rust: [`PjrtEngine`] compiles the HLO once and then serves
+//! prefill/decode with zero Python involvement.
+//!
+//! [`ModelBackend`] abstracts the engine so the coordinator and its tests
+//! can run against [`MockBackend`] without artifacts present.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod mock;
+
+pub use artifacts::{Manifest, ModelDims};
+pub use mock::MockBackend;
+pub use pjrt::PjrtEngine;
+
+/// Output of a prefill call.
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    /// `[batch][vocab]` logits at the last prompt position.
+    pub logits: Vec<Vec<f32>>,
+    /// `[batch][t_prompt * layers * kv_channels]` KV entries, token-major
+    /// (token t first, then layer, then channel), f32; storage rounds to
+    /// BF16 at the tier boundary.
+    pub kv: Vec<Vec<f32>>,
+}
+
+/// Output of one decode step.
+#[derive(Debug, Clone)]
+pub struct DecodeOut {
+    /// `[batch][vocab]` logits for the new token.
+    pub logits: Vec<Vec<f32>>,
+    /// `[batch][layers * kv_channels]` the KV entry appended at `pos`.
+    pub kv_new: Vec<Vec<f32>>,
+}
+
+/// Abstract model backend (real PJRT engine or mock).
+pub trait ModelBackend {
+    fn dims(&self) -> &ModelDims;
+
+    /// Run prefill over `tokens: [batch][t_prompt]` (padded with 0).
+    fn prefill(&mut self, tokens: &[Vec<u32>]) -> anyhow::Result<PrefillOut>;
+
+    /// One decode step: `tokens[b]` is each slot's current token, `kv` the
+    /// full per-sequence KV history `[batch][pos * layers * kv_channels]`
+    /// (token-major), `pos` the number of cached tokens.
+    fn decode(&mut self, tokens: &[u32], kv: &[Vec<f32>], pos: usize) -> anyhow::Result<DecodeOut>;
+}

@@ -1,0 +1,190 @@
+//! PJRT engine: compiles the AOT HLO once, keeps model parameters resident
+//! as device buffers, and serves prefill/decode with `execute_b`.
+//!
+//! Executable signatures (fixed by `python/compile/aot.py`):
+//!
+//! * `prefill(params…, tokens i32[B,Tp]) -> (logits f32[B,V],
+//!   k f32[L,B,Tp,H,hd], v f32[L,B,Tp,H,hd])`
+//! * `decode(params…, k f32[L,B,Tmax,H,hd], v f32[L,B,Tmax,H,hd],
+//!   tokens i32[B], pos i32[1]) -> (logits f32[B,V],
+//!   k_new f32[L,B,H,hd], v_new f32[L,B,H,hd])`
+//!
+//! The coordinator's KV layout is token-major
+//! `[pos][layer][kv_channels]` per sequence; this module scatters it into
+//! the executable's `[L,B,Tmax,H,hd]` caches and gathers the new entry
+//! back. KV history enters as plain f32 — by construction the coordinator
+//! feeds BF16-rounded values (the storage format), so the HLO consumes
+//! exactly what the device tier serves.
+
+use super::artifacts::Manifest;
+use super::{DecodeOut, ModelBackend, PrefillOut};
+use crate::runtime::ModelDims;
+use anyhow::{Context, Result};
+
+/// The real PJRT-backed engine.
+pub struct PjrtEngine {
+    dims: ModelDims,
+    client: xla::PjRtClient,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    decode_exe: xla::PjRtLoadedExecutable,
+    /// Parameters resident on the device, in manifest order.
+    params: Vec<xla::PjRtBuffer>,
+}
+
+impl PjrtEngine {
+    /// Load artifacts (manifest + HLO + params) and compile both
+    /// executables on the PJRT CPU client.
+    pub fn load(dir: &std::path::Path) -> Result<PjrtEngine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+
+        let compile = |path: &std::path::Path| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("hlo path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compile {path:?}"))
+        };
+        let prefill_exe = compile(&manifest.prefill_hlo)?;
+        let decode_exe = compile(&manifest.decode_hlo)?;
+
+        // Upload parameters once.
+        let raw = std::fs::read(&manifest.params_bin)
+            .with_context(|| format!("read {:?}", manifest.params_bin))?;
+        let mut params = Vec::with_capacity(manifest.params.len());
+        for spec in &manifest.params {
+            let n = spec.numel();
+            let bytes = raw
+                .get(spec.offset..spec.offset + 4 * n)
+                .with_context(|| format!("params.bin truncated at {}", spec.name))?;
+            let mut vals = vec![0f32; n];
+            for (i, c) in bytes.chunks_exact(4).enumerate() {
+                vals[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            let buf = client
+                .buffer_from_host_buffer(&vals, &spec.shape, None)
+                .with_context(|| format!("upload {}", spec.name))?;
+            params.push(buf);
+        }
+        Ok(PjrtEngine { dims: manifest.dims, client, prefill_exe, decode_exe, params })
+    }
+
+    fn buf_f32(&self, vals: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(vals, shape, None)?)
+    }
+
+    fn buf_i32(&self, vals: &[i32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(vals, shape, None)?)
+    }
+
+    /// Gather a tuple output into per-element literals.
+    fn untuple(result: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+        let mut lit = result[0][0].to_literal_sync()?;
+        Ok(lit.decompose_tuple()?)
+    }
+
+    /// Scatter the coordinator's token-major KV into `[L,B,Tmax,H,hd]`.
+    fn build_caches(&self, kv: &[Vec<f32>], pos: usize) -> (Vec<f32>, Vec<f32>) {
+        let d = &self.dims;
+        let (l, b, t, h, hd) = (d.layers, d.batch, d.t_max, d.heads, d.head_dim);
+        let per_tok_layer = d.kv_channels(); // 2*h*hd
+        let half = h * hd;
+        let mut k = vec![0f32; l * b * t * half];
+        let mut v = vec![0f32; l * b * t * half];
+        for (bi, seq) in kv.iter().enumerate().take(b) {
+            for ti in 0..pos.min(t) {
+                for li in 0..l {
+                    let src = ti * d.kv_entry_len() + li * per_tok_layer;
+                    if src + per_tok_layer > seq.len() {
+                        continue;
+                    }
+                    let dst = ((li * b + bi) * t + ti) * half;
+                    k[dst..dst + half].copy_from_slice(&seq[src..src + half]);
+                    v[dst..dst + half].copy_from_slice(&seq[src + half..src + 2 * half]);
+                }
+            }
+        }
+        (k, v)
+    }
+}
+
+impl ModelBackend for PjrtEngine {
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    fn prefill(&mut self, tokens: &[Vec<u32>]) -> Result<PrefillOut> {
+        let d = self.dims.clone();
+        let (b, tp) = (d.batch, d.t_prompt);
+        anyhow::ensure!(tokens.len() <= b, "too many sequences");
+        let mut toks = vec![0i32; b * tp];
+        for (bi, seq) in tokens.iter().enumerate() {
+            for (ti, &tok) in seq.iter().take(tp).enumerate() {
+                toks[bi * tp + ti] = tok as i32;
+            }
+        }
+        let tok_buf = self.buf_i32(&toks, &[b, tp])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&tok_buf);
+        let out = Self::untuple(self.prefill_exe.execute_b(&args)?)?;
+        anyhow::ensure!(out.len() == 3, "prefill must return 3 outputs, got {}", out.len());
+
+        let logits_flat = out[0].to_vec::<f32>()?;
+        let k_flat = out[1].to_vec::<f32>()?;
+        let v_flat = out[2].to_vec::<f32>()?;
+        let (l, h, hd) = (d.layers, d.heads, d.head_dim);
+        let half = h * hd;
+        let mut kv = vec![vec![0f32; tp * d.kv_entry_len()]; b];
+        for bi in 0..b {
+            for ti in 0..tp {
+                for li in 0..l {
+                    let dst = ti * d.kv_entry_len() + li * d.kv_channels();
+                    let src = ((li * b + bi) * tp + ti) * half;
+                    kv[bi][dst..dst + half].copy_from_slice(&k_flat[src..src + half]);
+                    kv[bi][dst + half..dst + 2 * half].copy_from_slice(&v_flat[src..src + half]);
+                }
+            }
+        }
+        let logits = logits_flat.chunks(d.vocab).map(|c| c.to_vec()).collect();
+        Ok(PrefillOut { logits, kv })
+    }
+
+    fn decode(&mut self, tokens: &[u32], kv: &[Vec<f32>], pos: usize) -> Result<DecodeOut> {
+        let d = self.dims.clone();
+        let (l, b, t, h, hd) = (d.layers, d.batch, d.t_max, d.heads, d.head_dim);
+        anyhow::ensure!(pos < t, "KV cache full ({pos} >= {t})");
+        let (k, v) = self.build_caches(kv, pos);
+        let shape = [l, b, t, h, hd];
+        let k_buf = self.buf_f32(&k, &shape)?;
+        let v_buf = self.buf_f32(&v, &shape)?;
+        let mut toks = vec![0i32; b];
+        for (bi, &tok) in tokens.iter().take(b).enumerate() {
+            toks[bi] = tok as i32;
+        }
+        let tok_buf = self.buf_i32(&toks, &[b])?;
+        let pos_buf = self.buf_i32(&[pos as i32], &[1])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&k_buf);
+        args.push(&v_buf);
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        let out = Self::untuple(self.decode_exe.execute_b(&args)?)?;
+        anyhow::ensure!(out.len() == 3, "decode must return 3 outputs, got {}", out.len());
+        let logits_flat = out[0].to_vec::<f32>()?;
+        let k_new = out[1].to_vec::<f32>()?; // [L,B,H,hd]
+        let v_new = out[2].to_vec::<f32>()?;
+        let half = h * hd;
+        let mut kv_new = vec![vec![0f32; d.kv_entry_len()]; b];
+        for bi in 0..b {
+            for li in 0..l {
+                let dst = li * d.kv_channels();
+                let src = (li * b + bi) * half;
+                kv_new[bi][dst..dst + half].copy_from_slice(&k_new[src..src + half]);
+                kv_new[bi][dst + half..dst + 2 * half].copy_from_slice(&v_new[src..src + half]);
+            }
+        }
+        let logits = logits_flat.chunks(d.vocab).map(|c| c.to_vec()).collect();
+        Ok(DecodeOut { logits, kv_new })
+    }
+}

@@ -1,0 +1,13 @@
+//! Trace-driven first-order throughput model (paper §IV-B, Figs 12–14).
+//!
+//! "We model decoding throughput with first-order bandwidth accounting …
+//! For each setting, we compute per-token traffic on the CXL link and on
+//! the device-side DDR channels, then convert each to a tok/s ceiling by
+//! dividing the corresponding bandwidth by bytes-per-token and taking the
+//! bottleneck."
+
+pub mod shapes;
+pub mod throughput;
+
+pub use shapes::ModelShape;
+pub use throughput::{SystemConfig, ThroughputModel, ThroughputPoint};

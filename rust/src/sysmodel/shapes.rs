@@ -1,0 +1,148 @@
+//! Public model shapes used by the paper's system modeling.
+//!
+//! Shapes carry exactly what the traffic model needs: per-token KV bytes
+//! (layers × 2 × kv_heads × head_dim × elem_bytes) and per-token weight
+//! read volume (total vs active — MoE models read only routed experts).
+
+/// An LLM's traffic-relevant shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelShape {
+    pub name: &'static str,
+    pub layers: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// Total weight footprint in bytes at the deployed precision.
+    pub weight_bytes: f64,
+    /// Weight bytes *read per token* (active experts only for MoE).
+    pub active_weight_bytes: f64,
+    /// KV element size in bytes (BF16 = 2).
+    pub kv_elem_bytes: f64,
+}
+
+impl ModelShape {
+    /// KV bytes appended per generated token, per sequence.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        (self.layers * 2 * self.kv_heads * self.head_dim) as f64 * self.kv_elem_bytes
+    }
+
+    /// GPT-OSS-120B in MXFP4 (paper Fig. 12): 36 layers, GQA 8 KV heads ×
+    /// 64 head-dim, ~117B params at ~4.25 bits ⇒ ~60 GB total; ~5.1B
+    /// active params per token (4 of 128 experts + attention/dense).
+    pub fn gpt_oss_120b_mxfp4() -> ModelShape {
+        ModelShape {
+            name: "GPT-OSS-120B-MXFP4",
+            layers: 36,
+            kv_heads: 8,
+            head_dim: 64,
+            weight_bytes: 60.0e9,
+            active_weight_bytes: 60.0e9 * (5.1 / 117.0),
+            kv_elem_bytes: 2.0,
+        }
+    }
+
+    /// GPT-OSS-120B in BF16 (paper Figs 13–14): ~240 GB weights.
+    pub fn gpt_oss_120b_bf16() -> ModelShape {
+        ModelShape {
+            name: "GPT-OSS-120B",
+            layers: 36,
+            kv_heads: 8,
+            head_dim: 64,
+            weight_bytes: 240.0e9,
+            active_weight_bytes: 240.0e9 * (5.1 / 117.0),
+            kv_elem_bytes: 2.0,
+        }
+    }
+
+    /// LLaMA-3.1-8B (dense; BF16), used by the compression experiments.
+    pub fn llama31_8b() -> ModelShape {
+        ModelShape {
+            name: "LLaMA 3.1 8B",
+            layers: 32,
+            kv_heads: 8,
+            head_dim: 128,
+            weight_bytes: 16.0e9,
+            active_weight_bytes: 16.0e9,
+            kv_elem_bytes: 2.0,
+        }
+    }
+
+    /// LLaMA-3.1-70B (dense; BF16).
+    pub fn llama31_70b() -> ModelShape {
+        ModelShape {
+            name: "LLaMA 3.1 70B",
+            layers: 80,
+            kv_heads: 8,
+            head_dim: 128,
+            weight_bytes: 140.0e9,
+            active_weight_bytes: 140.0e9,
+            kv_elem_bytes: 2.0,
+        }
+    }
+
+    /// Mixtral 8×7B (MoE: 2 of 8 experts active; BF16).
+    pub fn mixtral_8x7b() -> ModelShape {
+        ModelShape {
+            name: "Mixtral 8x7B",
+            layers: 32,
+            kv_heads: 8,
+            head_dim: 128,
+            weight_bytes: 93.0e9,
+            active_weight_bytes: 26.0e9,
+            kv_elem_bytes: 2.0,
+        }
+    }
+
+    /// OPT-30B (dense; BF16) — the per-head/per-neuron granularity model.
+    pub fn opt_30b() -> ModelShape {
+        ModelShape {
+            name: "OPT 30B",
+            layers: 48,
+            kv_heads: 56,
+            head_dim: 128,
+            weight_bytes: 60.0e9,
+            active_weight_bytes: 60.0e9,
+            kv_elem_bytes: 2.0,
+        }
+    }
+
+    /// The repo's own ~110M end-to-end model (python/compile/model.py).
+    pub fn tiny_110m(layers: usize, kv_heads: usize, head_dim: usize, weight_bytes: f64) -> ModelShape {
+        ModelShape {
+            name: "tiny-110M",
+            layers,
+            kv_heads,
+            head_dim,
+            weight_bytes,
+            active_weight_bytes: weight_bytes,
+            kv_elem_bytes: 2.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt_oss_kv_bytes() {
+        // 36 × 2 × 8 × 64 × 2 B = 73,728 B/token/seq (paper §IV-B shape)
+        let s = ModelShape::gpt_oss_120b_mxfp4();
+        assert_eq!(s.kv_bytes_per_token(), 73_728.0);
+    }
+
+    #[test]
+    fn moe_reads_less_than_total() {
+        for s in [ModelShape::gpt_oss_120b_mxfp4(), ModelShape::mixtral_8x7b()] {
+            assert!(s.active_weight_bytes < s.weight_bytes);
+        }
+        let d = ModelShape::llama31_8b();
+        assert_eq!(d.active_weight_bytes, d.weight_bytes);
+    }
+
+    #[test]
+    fn bf16_weights_4x_mxfp4() {
+        let a = ModelShape::gpt_oss_120b_mxfp4().weight_bytes;
+        let b = ModelShape::gpt_oss_120b_bf16().weight_bytes;
+        assert!((b / a - 4.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,96 @@
+//! HBM capacity partition (paper Eq. 9): `H_w = α·H_user`,
+//! `H_kv = (1−α)·H_user`, with weight-priority shortcut when the full
+//! weight footprint fits.
+
+/// Tracks the HBM split and current occupancy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HbmPartition {
+    pub usable_bytes: u64,
+    pub alpha: f64,
+    pub weight_bytes: u64,
+    kv_used: u64,
+}
+
+impl HbmPartition {
+    pub fn new(usable_bytes: u64, alpha: f64, weight_bytes: u64) -> HbmPartition {
+        assert!((0.0..=1.0).contains(&alpha));
+        HbmPartition { usable_bytes, alpha, weight_bytes, kv_used: 0 }
+    }
+
+    /// HBM reserved for weights: all of them if they fit, else α·H.
+    pub fn h_w(&self) -> u64 {
+        if self.weight_bytes <= self.usable_bytes {
+            self.weight_bytes
+        } else {
+            (self.alpha * self.usable_bytes as f64) as u64
+        }
+    }
+
+    /// HBM available to the hot KV set.
+    pub fn h_kv(&self) -> u64 {
+        self.usable_bytes.saturating_sub(self.h_w())
+    }
+
+    /// Fraction of weights resident in HBM.
+    pub fn weight_resident_frac(&self) -> f64 {
+        if self.weight_bytes == 0 {
+            return 1.0;
+        }
+        (self.h_w() as f64 / self.weight_bytes as f64).min(1.0)
+    }
+
+    /// Try to claim `bytes` of hot-KV space; false means the page must
+    /// spill to the CXL tier.
+    pub fn try_alloc_kv(&mut self, bytes: u64) -> bool {
+        if self.kv_used + bytes <= self.h_kv() {
+            self.kv_used += bytes;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn free_kv(&mut self, bytes: u64) {
+        self.kv_used = self.kv_used.saturating_sub(bytes);
+    }
+
+    pub fn kv_used(&self) -> u64 {
+        self.kv_used
+    }
+
+    pub fn kv_free(&self) -> u64 {
+        self.h_kv().saturating_sub(self.kv_used)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_priority_when_fits() {
+        let h = HbmPartition::new(76_000, 0.8, 60_000);
+        assert_eq!(h.h_w(), 60_000);
+        assert_eq!(h.h_kv(), 16_000);
+        assert_eq!(h.weight_resident_frac(), 1.0);
+    }
+
+    #[test]
+    fn alpha_split_when_spilling() {
+        let h = HbmPartition::new(76_000, 0.8, 240_000);
+        assert_eq!(h.h_w(), 60_800);
+        assert_eq!(h.h_kv(), 15_200);
+        assert!((h.weight_resident_frac() - 60_800.0 / 240_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_alloc_until_full_then_spill() {
+        let mut h = HbmPartition::new(100, 0.5, 200); // h_kv = 50
+        assert!(h.try_alloc_kv(30));
+        assert!(h.try_alloc_kv(20));
+        assert!(!h.try_alloc_kv(1), "must spill");
+        h.free_kv(25);
+        assert!(h.try_alloc_kv(10));
+        assert_eq!(h.kv_used(), 35);
+    }
+}

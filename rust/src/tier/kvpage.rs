@@ -1,0 +1,299 @@
+//! Paged KV manager with importance-driven precision tiers (paper §II-C,
+//! Table II).
+//!
+//! KV is managed as pages of [`PAGE_TOKENS`] tokens. Each page carries an
+//! importance score (recency + attention-mass style signal supplied by the
+//! runtime). A [`KvPolicy`] maps ranked pages to [`PageTier`]s:
+//!
+//! * `FullKv` — everything kept in BF16.
+//! * `SlidingWindow(w)` — only the last `w` tokens kept.
+//! * `TopK(k)` — top-k pages in BF16, the rest dropped (Quest-style).
+//! * `DynamicQuant { bf16, fp8, fp4 }` — tier ladder: top pages BF16,
+//!   next FP8-equivalent alias, next FP4-equivalent alias, rest dropped.
+//!
+//! Placement: hottest pages claim HBM (via [`super::HbmPartition`]); the
+//! overflow lives on the CXL tier and is fetched through the precision
+//! alias its tier prescribes — which is exactly the demand Mechanism II
+//! converts into proportional DRAM traffic.
+
+use crate::bitplane::PrecisionView;
+
+/// Tokens per KV page (Quest-style page granularity).
+pub const PAGE_TOKENS: usize = 16;
+
+/// Precision tier of a page.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageTier {
+    /// Full BF16 (lossless path).
+    Bf16,
+    /// FP8-equivalent alias view (sign + exp + 3 mantissa planes... 12 bits
+    /// returned; modeled as the paper's FP8 tier).
+    Fp8,
+    /// FP4-equivalent alias view (sign + exp, mantissa dropped).
+    Fp4,
+    /// Evicted.
+    Dropped,
+}
+
+impl PageTier {
+    /// The alias view the device serves for this tier (BF16 substrate).
+    pub fn view(self) -> Option<PrecisionView> {
+        match self {
+            PageTier::Bf16 => Some(PrecisionView::bf16_mantissa(7, 0)),
+            PageTier::Fp8 => Some(PrecisionView::bf16_mantissa(3, 1)),
+            PageTier::Fp4 => Some(PrecisionView::bf16_mantissa(0, 1)),
+            PageTier::Dropped => None,
+        }
+    }
+
+    /// Effective stored/fetched bits per element.
+    pub fn bits(self) -> usize {
+        match self {
+            PageTier::Bf16 => 16,
+            PageTier::Fp8 => 12, // sign + 8 exp + 3 man on the BF16 substrate
+            PageTier::Fp4 => 9,  // sign + 8 exp
+            PageTier::Dropped => 0,
+        }
+    }
+}
+
+/// Page-level KV policy (paper Table II rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvPolicy {
+    FullKv,
+    SlidingWindow(usize),
+    TopK(usize),
+    DynamicQuant { bf16: usize, fp8: usize, fp4: usize },
+}
+
+impl KvPolicy {
+    pub fn name(&self) -> String {
+        match self {
+            KvPolicy::FullKv => "Full KV Cache".into(),
+            KvPolicy::SlidingWindow(w) => format!("Sliding Window ({w} tokens)"),
+            KvPolicy::TopK(k) => format!("Quest (Top {k} pages in BF16)"),
+            KvPolicy::DynamicQuant { bf16, fp8, fp4 } => {
+                format!("Dynamic Quant. (Top {bf16} BF16, Next {fp8} FP8, Next {fp4} FP4)")
+            }
+        }
+    }
+
+    /// Assign tiers to pages given importance scores (higher = hotter).
+    /// `page_of_token(t) = t / PAGE_TOKENS`; the final (current) page is
+    /// always kept in BF16 (it is being appended).
+    pub fn assign(&self, importance: &[f64]) -> Vec<PageTier> {
+        let n = importance.len();
+        let mut tiers = vec![PageTier::Dropped; n];
+        if n == 0 {
+            return tiers;
+        }
+        // rank pages by importance, excluding the live page (always BF16)
+        let mut order: Vec<usize> = (0..n - 1).collect();
+        order.sort_by(|&a, &b| importance[b].partial_cmp(&importance[a]).unwrap());
+        match *self {
+            KvPolicy::FullKv => tiers = vec![PageTier::Bf16; n],
+            KvPolicy::SlidingWindow(w) => {
+                let keep_pages = w.div_ceil(PAGE_TOKENS);
+                for i in n.saturating_sub(keep_pages)..n {
+                    tiers[i] = PageTier::Bf16;
+                }
+            }
+            KvPolicy::TopK(k) => {
+                for &p in order.iter().take(k) {
+                    tiers[p] = PageTier::Bf16;
+                }
+            }
+            KvPolicy::DynamicQuant { bf16, fp8, fp4 } => {
+                for (rank, &p) in order.iter().enumerate() {
+                    tiers[p] = if rank < bf16 {
+                        PageTier::Bf16
+                    } else if rank < bf16 + fp8 {
+                        PageTier::Fp8
+                    } else if rank < bf16 + fp8 + fp4 {
+                        PageTier::Fp4
+                    } else {
+                        PageTier::Dropped
+                    };
+                }
+            }
+        }
+        tiers[n - 1] = PageTier::Bf16;
+        tiers
+    }
+
+    /// Bytes read per decode step under this policy, relative to FullKv
+    /// (importance-ranked pages, equal page sizes).
+    pub fn read_bytes_fraction(&self, n_pages: usize) -> f64 {
+        if n_pages == 0 {
+            return 1.0;
+        }
+        let imp: Vec<f64> = (0..n_pages).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let tiers = self.assign(&imp);
+        let total: usize = tiers.iter().map(|t| t.bits()).sum();
+        total as f64 / (16 * n_pages) as f64
+    }
+}
+
+/// Where a page currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageHome {
+    Hbm,
+    Cxl,
+}
+
+/// One page's bookkeeping.
+#[derive(Debug, Clone)]
+pub struct PageMeta {
+    pub seq: u64,
+    pub index: usize,
+    pub tier: PageTier,
+    pub home: PageHome,
+    pub importance: f64,
+    /// Device block address when spilled.
+    pub cxl_addr: Option<u64>,
+}
+
+/// The page manager for one serving engine.
+#[derive(Debug, Default)]
+pub struct KvPageManager {
+    pub pages: Vec<PageMeta>,
+    next_cxl_addr: u64,
+    pub spilled_pages: u64,
+    pub recalled_pages: u64,
+}
+
+impl KvPageManager {
+    pub fn new() -> KvPageManager {
+        KvPageManager { next_cxl_addr: 0x1000_0000, ..Default::default() }
+    }
+
+    /// Register a new page for `seq`, placed in HBM if `fits`, else CXL.
+    pub fn add_page(&mut self, seq: u64, index: usize, fits_hbm: bool) -> &PageMeta {
+        let home = if fits_hbm { PageHome::Hbm } else { PageHome::Cxl };
+        let cxl_addr = if fits_hbm {
+            None
+        } else {
+            self.spilled_pages += 1;
+            let a = self.next_cxl_addr;
+            self.next_cxl_addr += 0x1_0000;
+            Some(a)
+        };
+        self.pages.push(PageMeta {
+            seq,
+            index,
+            tier: PageTier::Bf16,
+            home,
+            importance: 1.0,
+            cxl_addr,
+        });
+        self.pages.last().unwrap()
+    }
+
+    /// Pages of one sequence, in order.
+    pub fn seq_pages(&self, seq: u64) -> Vec<&PageMeta> {
+        let mut v: Vec<&PageMeta> = self.pages.iter().filter(|p| p.seq == seq).collect();
+        v.sort_by_key(|p| p.index);
+        v
+    }
+
+    /// Re-tier a sequence's pages under a policy using current importance.
+    pub fn retier(&mut self, seq: u64, policy: KvPolicy) {
+        let mut idx: Vec<usize> = (0..self.pages.len()).filter(|&i| self.pages[i].seq == seq).collect();
+        idx.sort_by_key(|&i| self.pages[i].index);
+        let imp: Vec<f64> = idx.iter().map(|&i| self.pages[i].importance).collect();
+        let tiers = policy.assign(&imp);
+        for (k, &i) in idx.iter().enumerate() {
+            self.pages[i].tier = tiers[k];
+        }
+    }
+
+    /// Drop all pages of a finished sequence; returns how many were in HBM.
+    pub fn release_seq(&mut self, seq: u64) -> usize {
+        let in_hbm = self
+            .pages
+            .iter()
+            .filter(|p| p.seq == seq && p.home == PageHome::Hbm)
+            .count();
+        self.pages.retain(|p| p.seq != seq);
+        in_hbm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn imp(n: usize) -> Vec<f64> {
+        (0..n).map(|i| 1.0 / (1.0 + i as f64)).collect() // page 0 hottest
+    }
+
+    #[test]
+    fn full_keeps_everything() {
+        let tiers = KvPolicy::FullKv.assign(&imp(10));
+        assert!(tiers.iter().all(|&t| t == PageTier::Bf16));
+    }
+
+    #[test]
+    fn sliding_window_keeps_tail() {
+        let tiers = KvPolicy::SlidingWindow(32).assign(&imp(10));
+        assert_eq!(tiers[9], PageTier::Bf16);
+        assert_eq!(tiers[8], PageTier::Bf16);
+        assert!(tiers[..8].iter().all(|&t| t == PageTier::Dropped));
+    }
+
+    #[test]
+    fn topk_keeps_hottest_plus_live() {
+        let tiers = KvPolicy::TopK(3).assign(&imp(10));
+        let kept = tiers.iter().filter(|&&t| t == PageTier::Bf16).count();
+        assert_eq!(kept, 4); // top-3 + live page
+        assert_eq!(tiers[0], PageTier::Bf16); // hottest page kept
+    }
+
+    #[test]
+    fn dynamic_quant_ladder() {
+        let tiers = KvPolicy::DynamicQuant { bf16: 2, fp8: 2, fp4: 2 }.assign(&imp(10));
+        assert_eq!(tiers[0], PageTier::Bf16);
+        assert_eq!(tiers[1], PageTier::Bf16);
+        assert_eq!(tiers[2], PageTier::Fp8);
+        assert_eq!(tiers[3], PageTier::Fp8);
+        assert_eq!(tiers[4], PageTier::Fp4);
+        assert_eq!(tiers[5], PageTier::Fp4);
+        assert_eq!(tiers[6], PageTier::Dropped);
+        assert_eq!(tiers[9], PageTier::Bf16); // live
+    }
+
+    #[test]
+    fn read_fraction_ordering() {
+        // more aggressive policies read fewer bytes
+        let full = KvPolicy::FullKv.read_bytes_fraction(16);
+        let dq = KvPolicy::DynamicQuant { bf16: 5, fp8: 5, fp4: 0 }.read_bytes_fraction(16);
+        let topk = KvPolicy::TopK(5).read_bytes_fraction(16);
+        let sw = KvPolicy::SlidingWindow(64).read_bytes_fraction(16);
+        assert_eq!(full, 1.0);
+        assert!(dq < full && dq > topk, "dq={dq} topk={topk}");
+        assert!(sw < dq);
+    }
+
+    #[test]
+    fn tier_views_match_bits() {
+        assert!(PageTier::Bf16.view().unwrap().is_full());
+        assert_eq!(PageTier::Fp8.view().unwrap().returned_bits(), 12);
+        assert_eq!(PageTier::Fp4.view().unwrap().returned_bits(), 9);
+        assert!(PageTier::Dropped.view().is_none());
+        assert!(PageTier::Bf16.bits() > PageTier::Fp8.bits());
+    }
+
+    #[test]
+    fn manager_spill_accounting() {
+        let mut m = KvPageManager::new();
+        m.add_page(1, 0, true);
+        m.add_page(1, 1, true);
+        m.add_page(1, 2, false);
+        assert_eq!(m.spilled_pages, 1);
+        assert_eq!(m.seq_pages(1).len(), 3);
+        assert!(m.seq_pages(1)[2].cxl_addr.is_some());
+        m.retier(1, KvPolicy::DynamicQuant { bf16: 1, fp8: 1, fp4: 1 });
+        assert_eq!(m.release_seq(1), 2);
+        assert!(m.pages.is_empty());
+    }
+}

@@ -1,0 +1,23 @@
+//! Memory-tier management: HBM partition, paged KV with importance-driven
+//! precision tiers, weight chunk store, and spill accounting.
+//!
+//! This is the *runtime* side of the paper's §II-C: the structures a
+//! serving system uses to decide what stays in HBM, what spills to the CXL
+//! tier, and at which precision tier each spilled KV page or weight chunk
+//! is accessed (the demand TRACE's Mechanism II turns into physical
+//! savings).
+//!
+//! * [`hbm`] — capacity partition (paper Eq. 9) and hot-set accounting.
+//! * [`kvpage`] — paged KV manager: page table, importance scores, the
+//!   Table II policy ladder (full / sliding-window / top-k / dynamic
+//!   quantization tiers), placement across HBM and CXL.
+//! * [`weights`] — weight store addressed by chunk (expert / head /
+//!   neuron), driving the Figs 18–21 fetch granularities.
+
+pub mod hbm;
+pub mod kvpage;
+pub mod weights;
+
+pub use hbm::HbmPartition;
+pub use kvpage::{KvPageManager, KvPolicy, PageTier, PAGE_TOKENS};
+pub use weights::{ChunkGranularity, WeightStore};

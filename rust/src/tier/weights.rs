@@ -1,0 +1,126 @@
+//! Weight store addressed by chunk (expert / head / neuron).
+//!
+//! The paper's Figs 18–21 evaluate elastic precision at three
+//! granularities: per-expert (MoE routing), per-attention-head, and
+//! per-MLP-neuron (OPT-30B: a head is 3.7e6 weights, a neuron 7.2e3).
+//! The store maps chunk ids to device block ranges and produces the
+//! [`crate::dram::layout::ChunkFetch`] streams the DRAM benches replay.
+
+use crate::dram::layout::{ChunkFetch, Region};
+use crate::gen::precision::PrecisionMix;
+use crate::util::Rng;
+
+/// Fetch granularity (paper §IV-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkGranularity {
+    /// One MoE expert's weights.
+    Expert,
+    /// One attention head (paper: 3.7e6 weights on OPT-30B).
+    Head,
+    /// One MLP neuron (paper: 7.2e3 weights on OPT-30B).
+    Neuron,
+}
+
+impl ChunkGranularity {
+    /// Elements per chunk on the paper's OPT-30B / MoE setups.
+    pub fn elems(self) -> usize {
+        match self {
+            ChunkGranularity::Expert => 14_680_064, // ~14.7M weights/expert (7B-class expert / layer count)
+            ChunkGranularity::Head => 3_700_000,
+            ChunkGranularity::Neuron => 7_200,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ChunkGranularity::Expert => "per-expert",
+            ChunkGranularity::Head => "per-head",
+            ChunkGranularity::Neuron => "per-neuron",
+        }
+    }
+}
+
+/// A weight region of `n_chunks` equal chunks with runtime-assigned
+/// precision, producing fetch streams for both device layouts.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    pub region: Region,
+    pub n_chunks: usize,
+    /// Per-chunk assigned bits (from a [`PrecisionMix`]).
+    pub bits: Vec<usize>,
+}
+
+impl WeightStore {
+    /// Build a store with `n_chunks` chunks of `granularity`, assigning
+    /// precisions from `mix`.
+    pub fn new(
+        rng: &mut Rng,
+        base: u64,
+        granularity: ChunkGranularity,
+        n_chunks: usize,
+        mix: &PrecisionMix,
+        container_bits: usize,
+    ) -> WeightStore {
+        let region = Region { base, elems: granularity.elems(), container_bits };
+        WeightStore { region, n_chunks, bits: mix.assign(rng, n_chunks) }
+    }
+
+    /// The fetch list for reading chunks `ids` at their assigned precision.
+    pub fn fetches(&self, ids: &[usize]) -> Vec<ChunkFetch> {
+        ids.iter().map(|&c| ChunkFetch { chunk: c, bits: self.bits[c] }).collect()
+    }
+
+    /// A full-model load (paper Fig. 20: "one full model load").
+    pub fn full_load(&self) -> Vec<ChunkFetch> {
+        self.fetches(&(0..self.n_chunks).collect::<Vec<_>>())
+    }
+
+    /// Random routed subset (MoE decode step reads `k` experts).
+    pub fn routed(&self, rng: &mut Rng, k: usize) -> Vec<ChunkFetch> {
+        let mut ids: Vec<usize> = (0..self.n_chunks).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(k.min(self.n_chunks));
+        self.fetches(&ids)
+    }
+
+    /// Footprint-weighted average fetched bits.
+    pub fn avg_bits(&self) -> f64 {
+        self.bits.iter().map(|&b| b as f64).sum::<f64>() / self.n_chunks.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::precision::mode_mix;
+
+    #[test]
+    fn paper_chunk_sizes() {
+        assert_eq!(ChunkGranularity::Head.elems(), 3_700_000);
+        assert_eq!(ChunkGranularity::Neuron.elems(), 7_200);
+        assert!(ChunkGranularity::Expert.elems() > ChunkGranularity::Head.elems());
+    }
+
+    #[test]
+    fn fetch_stream_respects_assignment() {
+        let mut rng = Rng::new(601);
+        let mix = mode_mix(16, 8.0);
+        let s = WeightStore::new(&mut rng, 0, ChunkGranularity::Neuron, 64, &mix, 16);
+        let f = s.full_load();
+        assert_eq!(f.len(), 64);
+        for cf in &f {
+            assert_eq!(cf.bits, s.bits[cf.chunk]);
+        }
+        assert!((s.avg_bits() - 8.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn routed_subset_unique() {
+        let mut rng = Rng::new(602);
+        let mix = mode_mix(16, 12.0);
+        let s = WeightStore::new(&mut rng, 0, ChunkGranularity::Expert, 8, &mix, 16);
+        let r = s.routed(&mut rng, 2);
+        assert_eq!(r.len(), 2);
+        assert_ne!(r[0].chunk, r[1].chunk);
+    }
+}

@@ -1,0 +1,86 @@
+//! Byte-level helpers shared by the bit-plane and codec layers.
+
+/// Reinterpret a `&[u16]` as little-endian bytes.
+pub fn u16s_to_bytes(xs: &[u16]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 2);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Reinterpret little-endian bytes as `u16`s. Length must be even.
+pub fn bytes_to_u16s(b: &[u8]) -> Vec<u16> {
+    assert!(b.len() % 2 == 0, "odd byte length");
+    b.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect()
+}
+
+/// f32 slice -> BF16 (round-to-nearest-even) u16 words.
+pub fn f32s_to_bf16(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| crate::formats::bf16_from_f32(x)).collect()
+}
+
+/// BF16 u16 words -> f32 slice.
+pub fn bf16_to_f32s(xs: &[u16]) -> Vec<f32> {
+    xs.iter().map(|&x| crate::formats::bf16_to_f32(x)).collect()
+}
+
+/// Varint (LEB128) encode a u64.
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Varint decode; returns (value, bytes consumed) or None on truncation.
+pub fn get_varint(b: &[u8]) -> Option<(u64, usize)> {
+    let mut v: u64 = 0;
+    let mut shift = 0;
+    for (i, &byte) in b.iter().enumerate() {
+        if shift >= 64 {
+            return None;
+        }
+        v |= ((byte & 0x7f) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Some((v, i + 1));
+        }
+        shift += 7;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::props;
+
+    #[test]
+    fn u16_roundtrip() {
+        let xs = vec![0u16, 1, 0xffff, 0x1234];
+        assert_eq!(bytes_to_u16s(&u16s_to_bytes(&xs)), xs);
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        props(11, 500, |r| {
+            let v = r.next_u64() >> (r.below(64) as u32);
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let (v2, n) = get_varint(&buf).unwrap();
+            assert_eq!(v, v2);
+            assert_eq!(n, buf.len());
+        });
+    }
+
+    #[test]
+    fn varint_truncated() {
+        assert!(get_varint(&[0x80]).is_none());
+        assert!(get_varint(&[]).is_none());
+    }
+}

@@ -1,0 +1,112 @@
+//! Mini property-testing harness (offline substitute for `proptest`).
+//!
+//! `props(seed, cases, |rng| ...)` runs a closure over many seeded random
+//! cases; on failure it reports the case index and the derived seed so the
+//! exact case replays deterministically. Used throughout the crate for
+//! round-trip and invariant properties (codec round-trips, transpose
+//! involution, scheduler conservation laws, ...).
+
+use super::rng::Rng;
+
+/// Run `cases` random property checks. The closure receives a per-case RNG
+/// and should panic (e.g. via `assert!`) on property violation.
+pub fn props<F: FnMut(&mut Rng)>(seed: u64, cases: usize, mut f: F) {
+    let mut master = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = master.next_u64();
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at case {case} (seed {case_seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generate a random byte vector with one of several "shapes" that stress
+/// codecs differently: random, runs, periodic, text-like, sparse.
+pub fn arb_bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
+    let len = rng.below(max_len + 1);
+    let mut out = vec![0u8; len];
+    match rng.below(5) {
+        0 => rng.fill_bytes(&mut out), // incompressible
+        1 => {
+            // long runs
+            let mut i = 0;
+            while i < len {
+                let run = 1 + rng.below(64.min(len - i));
+                let b = rng.next_u32() as u8;
+                for x in &mut out[i..i + run] {
+                    *x = b;
+                }
+                i += run;
+            }
+        }
+        2 => {
+            // periodic pattern
+            let period = 1 + rng.below(16);
+            let pat: Vec<u8> = (0..period).map(|_| rng.next_u32() as u8).collect();
+            for (i, x) in out.iter_mut().enumerate() {
+                *x = pat[i % period];
+            }
+        }
+        3 => {
+            // text-like: small alphabet
+            for x in out.iter_mut() {
+                *x = b'a' + (rng.below(16) as u8);
+            }
+        }
+        _ => {
+            // sparse: mostly zeros
+            for x in out.iter_mut() {
+                *x = if rng.chance(0.05) { rng.next_u32() as u8 } else { 0 };
+            }
+        }
+    }
+    out
+}
+
+/// Random f32 tensor with controllable smoothness (AR(1) coefficient).
+pub fn arb_f32s(rng: &mut Rng, n: usize, smooth: f64) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n);
+    let mut prev = rng.normal();
+    for _ in 0..n {
+        prev = smooth * prev + (1.0 - smooth * smooth).max(0.0).sqrt() * rng.normal();
+        out.push(prev as f32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn props_runs_all_cases() {
+        let mut count = 0;
+        props(1, 50, |_| count += 1);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic]
+    fn props_propagates_failure() {
+        props(2, 10, |r| assert!(r.below(10) != 3));
+    }
+
+    #[test]
+    fn arb_bytes_len_bounded() {
+        props(3, 100, |r| {
+            let b = arb_bytes(r, 300);
+            assert!(b.len() <= 300);
+        });
+    }
+
+    #[test]
+    fn arb_f32s_smooth() {
+        let mut r = Rng::new(4);
+        let xs = arb_f32s(&mut r, 2048, 0.99);
+        let f: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+        assert!(crate::util::stats::autocorr1(&f) > 0.9);
+    }
+}

@@ -1,0 +1,107 @@
+//! Minimal command-line argument parsing (`--key value` / `--flag` style).
+//!
+//! The vendored crate set has no `clap`; this covers the launcher's needs:
+//! subcommands, string/number options with defaults, and boolean flags.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, `--key value` options, and `--flag`s.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = it.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = iter.next();
+            }
+        }
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare flag
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --port 8080 --verbose --rate=3.5 input.txt");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get_usize("port", 0), 8080);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_f64("rate", 0.0), 3.5);
+        assert_eq!(a.positional, vec!["input.txt"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("bench");
+        assert_eq!(a.get_or("mode", "fast"), "fast");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert!(!a.flag("x"));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Small self-contained utilities.
+//!
+//! The build is fully offline against a fixed vendor set, so instead of
+//! `rand`/`serde`/`clap`/`proptest` we carry minimal equivalents here:
+//! a splitmix/xoshiro RNG, a JSON parser+emitter, a CLI argument parser,
+//! descriptive statistics, and a tiny property-testing harness.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod stats;
+pub mod check;
+pub mod bytes;
+
+pub use rng::Rng;
+pub use stats::Summary;
