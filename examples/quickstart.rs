@@ -1,14 +1,15 @@
-//! Quickstart: the TRACE device in ten lines.
+//! Quickstart: the TRACE device through the transaction API.
 //!
-//! Write a KV window and a weight block into each device design, read them
-//! back bit-exactly, and compare stored footprints and reduced-precision
-//! fetch traffic.
+//! Queue a KV window and a weight block into each device design as
+//! `WriteKv`/`WriteWeights` transactions, read them back bit-exactly with
+//! `ReadFull`, and compare stored footprints and reduced-precision
+//! (`ReadView`) fetch traffic.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use trace_cxl::bitplane::{KvWindow, PrecisionView};
 use trace_cxl::codec::CodecPolicy;
-use trace_cxl::cxl::{CxlDevice, Design};
+use trace_cxl::cxl::{CxlDevice, Design, MemDevice, SubmissionQueue, Transaction};
 use trace_cxl::gen::{KvGen, WeightGen};
 use trace_cxl::util::stats::human_bytes;
 use trace_cxl::util::Rng;
@@ -21,17 +22,36 @@ fn main() -> anyhow::Result<()> {
     println!("== TRACE quickstart: one KV window + one weight block ==\n");
     for design in [Design::Plain, Design::GComp, Design::Trace] {
         let mut dev = CxlDevice::new(design, CodecPolicy::AllBest);
-        dev.write_kv(0x0000, &kv, KvWindow::new(64, 64));
-        dev.write_weights(0x4000, &weights, trace_cxl::formats::Fmt::Bf16);
+
+        // writes go through the submission queue as typed transactions
+        let mut sq = SubmissionQueue::new();
+        sq.submit(Transaction::WriteKv {
+            block_addr: 0x0000,
+            words: kv.clone(),
+            window: KvWindow::new(64, 64),
+        });
+        sq.submit(Transaction::WriteWeights {
+            block_addr: 0x4000,
+            words: weights.clone(),
+            fmt: trace_cxl::formats::Fmt::Bf16,
+        });
+        for completion in dev.drain(&mut sq) {
+            completion.result?;
+        }
 
         // lossless read-back is bit-exact on every design
-        assert_eq!(dev.read(0x0000)?, kv);
-        assert_eq!(dev.read(0x4000)?, weights);
+        let kv_back = dev.submit_one(Transaction::ReadFull { block_addr: 0x0000 })?.into_words()?;
+        let w_back = dev.submit_one(Transaction::ReadFull { block_addr: 0x4000 })?.into_words()?;
+        assert_eq!(kv_back, kv);
+        assert_eq!(w_back, weights);
 
         // a reduced-precision alias read (sign+exp+3 mantissa planes)
-        let before = dev.stats.dram_bytes_read;
-        dev.read_view(0x0000, &PrecisionView::bf16_mantissa(3, 1))?;
-        let view_bytes = dev.stats.dram_bytes_read - before;
+        let before = dev.stats().dram_bytes_read;
+        dev.submit_one(Transaction::ReadView {
+            block_addr: 0x0000,
+            view: PrecisionView::bf16_mantissa(3, 1),
+        })?;
+        let view_bytes = dev.stats().dram_bytes_read - before;
 
         println!(
             "{:<10}  stored {:>10}  (ratio {:>5.2}x)   FP12-alias fetch: {:>8}",

@@ -1,0 +1,96 @@
+//! §Sharding — aggregate read bandwidth vs shard count.
+//!
+//! Writes a fixed working set of KV blocks at stripe-interleaved addresses,
+//! then drains one batched read submission against 1/2/4/8-shard devices
+//! and reports the modeled aggregate read bandwidth (DRAM bytes served /
+//! fleet wall-clock, where shards run their queues in parallel and the
+//! slowest shard bounds the batch — see `cxl::sharded`).
+//!
+//! Gate (ISSUE 1 acceptance): 4 shards ≥ 2× the 1-shard aggregate read
+//! bandwidth on the same workload. With balanced stripes the model gives
+//! ~Nx, so the 2x gate has wide margin.
+//!
+//! Run: `cargo bench --bench fig_shard_scaling`
+
+use trace_cxl::bitplane::KvWindow;
+use trace_cxl::codec::CodecPolicy;
+use trace_cxl::cxl::{
+    Design, DispatchPolicy, MemDevice, ShardedDevice, SubmissionQueue, Transaction, STRIPE_BYTES,
+};
+use trace_cxl::util::check::smooth_kv;
+use trace_cxl::util::Rng;
+
+const BLOCKS: u64 = 64;
+const TOKENS: usize = 32;
+const CHANNELS: usize = 64;
+
+/// (aggregate GB/s, serialized GB/s, bytes read) for one configuration.
+fn read_bandwidth(shards: usize, policy: DispatchPolicy, kv: &[u16]) -> (f64, f64, u64) {
+    let mut dev = ShardedDevice::with_policy(shards, Design::Trace, CodecPolicy::FastBest, policy);
+    let mut sq = SubmissionQueue::new();
+    for b in 0..BLOCKS {
+        sq.submit(Transaction::WriteKv {
+            block_addr: b * STRIPE_BYTES,
+            words: kv.to_vec(),
+            window: KvWindow::new(TOKENS, CHANNELS),
+        });
+    }
+    for c in dev.drain(&mut sq) {
+        c.result.expect("write");
+    }
+    dev.reset_stats();
+    dev.reset_time();
+
+    // one batched submission, as the coordinator's decode loop issues it
+    let mut sq = SubmissionQueue::new();
+    for b in 0..BLOCKS {
+        sq.submit(Transaction::ReadFull { block_addr: b * STRIPE_BYTES });
+    }
+    let completions = dev.drain(&mut sq);
+    assert_eq!(completions.len(), BLOCKS as usize);
+    for c in &completions {
+        assert!(c.result.is_ok());
+    }
+    let bytes = dev.stats().dram_bytes_read;
+    // bytes/ns == GB/s
+    (bytes as f64 / dev.elapsed_ns(), bytes as f64 / dev.total_busy_ns(), bytes)
+}
+
+fn main() {
+    let mut rng = Rng::new(0x5AAD);
+    let kv = smooth_kv(&mut rng, TOKENS, CHANNELS);
+
+    println!("# fig_shard_scaling — aggregate device read bandwidth vs shards");
+    println!("# {BLOCKS} blocks of {TOKENS}x{CHANNELS} BF16 KV, one batched ReadFull sweep\n");
+    println!(
+        "{:<8} {:>16} {:>16} {:>12} {:>10}",
+        "shards", "aggregate GB/s", "serialized GB/s", "bytes", "speedup"
+    );
+
+    let mut base = 0.0f64;
+    let mut four_speedup = 0.0f64;
+    for shards in [1usize, 2, 4, 8] {
+        let (agg, ser, bytes) = read_bandwidth(shards, DispatchPolicy::RoundRobin, &kv);
+        if shards == 1 {
+            base = agg;
+        }
+        let speedup = agg / base;
+        if shards == 4 {
+            four_speedup = speedup;
+        }
+        println!("{shards:<8} {agg:>16.2} {ser:>16.2} {bytes:>12} {speedup:>9.2}x");
+    }
+
+    // dispatch-policy comparison at 4 shards (same work, same bandwidth on
+    // balanced placement; least-loaded only differs under skew)
+    let (rr, _, _) = read_bandwidth(4, DispatchPolicy::RoundRobin, &kv);
+    let (ll, _, _) = read_bandwidth(4, DispatchPolicy::LeastLoaded, &kv);
+    println!("\n4-shard dispatch: round-robin {rr:.2} GB/s, least-loaded {ll:.2} GB/s");
+
+    assert!(
+        four_speedup >= 2.0,
+        "4-shard aggregate read bandwidth must be >= 2x of 1 shard, got {four_speedup:.2}x"
+    );
+    assert!((rr - ll).abs() / rr < 0.05, "policies must agree on balanced placement");
+    println!("\nOK: 4 shards sustain {four_speedup:.2}x the single-device aggregate read bandwidth");
+}

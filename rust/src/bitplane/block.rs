@@ -177,6 +177,22 @@ impl DeviceBlock {
         Ok(self.apply_inverse_topology(words))
     }
 
+    /// Plane-granular streaming read: decompress exactly the planes in
+    /// `mask` and restore the host topology 𝒯⁻¹ (for KV blocks the
+    /// exponent-delta inverse). Unselected planes contribute zero bits in
+    /// the *stored* domain — note that for KV-transformed blocks 𝒯⁻¹
+    /// re-adds the per-channel base exponent, so callers that need
+    /// host-domain truncation semantics must fetch the whole sign+exponent
+    /// core when any of it is selected and mask the result (the device's
+    /// `ReadPlanes` path does exactly this). With a full mask this equals
+    /// [`DeviceBlock::decode_full`]; unlike [`DeviceBlock::decode_view`]
+    /// no guard rounding is applied, so the mask is free-form rather than
+    /// a precision-view ladder entry.
+    pub fn decode_planes(&self, mask: PlaneMask) -> anyhow::Result<Vec<u16>> {
+        let words = self.decode_words(mask)?;
+        Ok(self.apply_inverse_topology(words))
+    }
+
     /// Reduced-precision read: fetch `view.mask()` planes, restore the
     /// host topology 𝒯⁻¹ (which for KV also de-zigzags the exponent), then
     /// apply guard rounding (ℛ) in the host-value domain. BF16 only (the

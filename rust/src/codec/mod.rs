@@ -109,17 +109,20 @@ impl CodecPolicy {
 
 /// Compress `data` under `policy`, returning the winning codec and bytes;
 /// falls back to `Raw` (bypass) if no candidate actually shrinks the data.
+///
+/// The raw copy is only materialized on the bypass path: while candidates
+/// are competing, only their (already-allocated) outputs are kept, so a
+/// winning codec never pays an extra `data.len()` memcpy.
 pub fn compress_best(policy: CodecPolicy, data: &[u8]) -> (CodecKind, Vec<u8>) {
-    let mut best_kind = CodecKind::Raw;
-    let mut best: Vec<u8> = data.to_vec();
+    let mut best: Option<(CodecKind, Vec<u8>)> = None;
     for &k in policy.candidates() {
+        let bar = best.as_ref().map_or(data.len(), |(_, b)| b.len());
         let c = compress(k, data);
-        if c.len() < best.len() {
-            best = c;
-            best_kind = k;
+        if c.len() < bar {
+            best = Some((k, c));
         }
     }
-    (best_kind, best)
+    best.unwrap_or_else(|| (CodecKind::Raw, data.to_vec()))
 }
 
 #[cfg(test)]
@@ -155,6 +158,22 @@ mod tests {
         let (kind, enc) = compress_best(CodecPolicy::FastBest, &data);
         assert_eq!(kind, CodecKind::Raw);
         assert_eq!(enc.len(), data.len());
+    }
+
+    #[test]
+    fn winner_path_returns_codec_output_unchanged() {
+        // the no-copy fast path must return exactly what the winning codec
+        // produced (and the bypass path an exact raw copy)
+        let zeros = vec![0u8; 4096];
+        let (kind, enc) = compress_best(CodecPolicy::FastBest, &zeros);
+        assert_ne!(kind, CodecKind::Raw);
+        assert_eq!(enc, compress(kind, &zeros));
+        let mut r = crate::util::Rng::new(73);
+        let mut noise = vec![0u8; 512];
+        r.fill_bytes(&mut noise);
+        let (kind, enc) = compress_best(CodecPolicy::FastBest, &noise);
+        assert_eq!(kind, CodecKind::Raw);
+        assert_eq!(enc, noise);
     }
 
     #[test]

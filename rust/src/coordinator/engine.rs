@@ -1,15 +1,28 @@
 //! The serving engine: continuous batching over a fixed slot count, with
-//! KV pages placed across HBM and the simulated TRACE CXL device.
+//! KV pages placed across HBM and the simulated TRACE CXL tier.
+//!
+//! The device side is a `Box<dyn MemDevice>` — a single
+//! [`CxlDevice`](crate::cxl::CxlDevice) or an N-way
+//! [`ShardedDevice`](crate::cxl::ShardedDevice) selected by
+//! [`EngineConfig::shards`]. Each decode step batches **all** spilled-page
+//! fetches of the whole batch into one [`SubmissionQueue`], drains the
+//! completions (which a sharded device serves with per-shard queues in
+//! parallel model-time), and scatters the payloads back into each slot's
+//! attention KV — one submission per step instead of one blocking call per
+//! page.
 
 use super::metrics::Metrics;
 use super::request::{AdmissionQueue, Request, RequestState, Response};
 use crate::bitplane::KvWindow;
 use crate::codec::CodecPolicy;
-use crate::cxl::{CxlDevice, Design};
+use crate::cxl::{
+    CxlDevice, Design, MemDevice, ShardedDevice, SubmissionQueue, Transaction, TxnId,
+};
 use crate::formats::{bf16_from_f32, bf16_to_f32};
 use crate::runtime::ModelBackend;
-use crate::tier::{HbmPartition, KvPolicy, PageTier, PAGE_TOKENS};
+use crate::tier::{HbmPartition, KvPageManager, KvPolicy, PageTier, PAGE_TOKENS};
 use anyhow::Result;
+use std::collections::HashMap;
 use std::time::Instant;
 
 /// Engine configuration.
@@ -24,6 +37,8 @@ pub struct EngineConfig {
     pub policy: KvPolicy,
     /// Greedy (argmax) decoding.
     pub greedy: bool,
+    /// Number of CXL device shards (1 = a single device).
+    pub shards: usize,
 }
 
 impl Default for EngineConfig {
@@ -34,6 +49,7 @@ impl Default for EngineConfig {
             hbm_kv_bytes: 1 << 20,
             policy: KvPolicy::FullKv,
             greedy: true,
+            shards: 1,
         }
     }
 }
@@ -48,14 +64,12 @@ struct Slot {
     kv: Vec<f32>,
     /// Number of cached tokens.
     pos: usize,
-    /// Committed pages: (page index, spilled?, device addr).
-    pages: Vec<(usize, bool, u64)>,
     cur_token: u32,
 }
 
 impl Slot {
     fn empty() -> Slot {
-        Slot { req: None, kv: Vec::new(), pos: 0, pages: Vec::new(), cur_token: 0 }
+        Slot { req: None, kv: Vec::new(), pos: 0, cur_token: 0 }
     }
 }
 
@@ -63,13 +77,16 @@ impl Slot {
 pub struct Engine<B: ModelBackend> {
     pub cfg: EngineConfig,
     backend: B,
-    pub device: CxlDevice,
+    /// The CXL tier behind the transaction API (single or sharded).
+    pub device: Box<dyn MemDevice>,
     pub hbm: HbmPartition,
+    /// Placement book of record: hands out shard-aware (stripe-interleaved)
+    /// spill addresses and tracks per-sequence page residency.
+    pub pager: KvPageManager,
     queue: AdmissionQueue,
     slots: Vec<Slot>,
     pub metrics: Metrics,
     responses: Vec<Response>,
-    next_addr: u64,
     kv_entry_len: usize,
 }
 
@@ -77,19 +94,24 @@ impl<B: ModelBackend> Engine<B> {
     pub fn new(backend: B, cfg: EngineConfig) -> Engine<B> {
         let dims = backend.dims().clone();
         let slots = (0..dims.batch).map(|_| Slot::empty()).collect();
-        let device = CxlDevice::new(cfg.design, cfg.codec);
+        let device: Box<dyn MemDevice> = if cfg.shards > 1 {
+            Box::new(ShardedDevice::new(cfg.shards, cfg.design, cfg.codec))
+        } else {
+            Box::new(CxlDevice::new(cfg.design, cfg.codec))
+        };
         let hbm = HbmPartition::new(cfg.hbm_kv_bytes, 0.0, 0);
+        let pager = KvPageManager::with_shards(cfg.shards.max(1));
         Engine {
             kv_entry_len: dims.kv_entry_len(),
             cfg,
             backend,
             device,
             hbm,
+            pager,
             queue: AdmissionQueue::new(),
             slots,
             metrics: Metrics::new(),
             responses: Vec::new(),
-            next_addr: 0x1000,
         }
     }
 
@@ -152,7 +174,6 @@ impl<B: ModelBackend> Engine<B> {
             let s = &mut self.slots[slot];
             s.kv = kv;
             s.pos = plen;
-            s.pages.clear();
             s.cur_token = first;
             s.req = Some(req);
             // commit full prompt pages
@@ -175,12 +196,16 @@ impl<B: ModelBackend> Engine<B> {
         best as u32
     }
 
-    /// Commit page `p` of `slot`: HBM if it fits, else spill to the device.
+    /// Commit page `p` of `slot`: HBM if it fits, else spill to the device
+    /// through a `WriteKv` transaction. The pager allocates the device
+    /// address — stripe-aligned, so a sharded device interleaves
+    /// consecutive spilled pages across shards.
     fn commit_page(&mut self, slot: usize, page: usize) -> Result<()> {
         let pb = self.page_bytes();
+        let seq = self.slots[slot].req.as_ref().expect("page commit on an empty slot").id;
         if self.hbm.try_alloc_kv(pb) {
             self.metrics.pages_hbm += 1;
-            self.slots[slot].pages.push((page, false, 0));
+            self.pager.add_page(seq, page, true);
             return Ok(());
         }
         // spill: BF16-round the page and write through Mechanism I
@@ -190,40 +215,70 @@ impl<B: ModelBackend> Engine<B> {
         let end = start + PAGE_TOKENS * el;
         let words: Vec<u16> =
             self.slots[slot].kv[start..end].iter().map(|&x| bf16_from_f32(x)).collect();
-        let addr = self.next_addr;
-        self.next_addr += 0x10000;
-        self.device.write_kv(addr, &words, KvWindow::new(PAGE_TOKENS, el));
-        self.slots[slot].pages.push((page, true, addr));
+        let addr = self
+            .pager
+            .add_page(seq, page, false)
+            .cxl_addr
+            .expect("spilled page carries a device address");
+        self.device.submit_one(Transaction::WriteKv {
+            block_addr: addr,
+            words,
+            window: KvWindow::new(PAGE_TOKENS, el),
+        })?;
         Ok(())
     }
 
-    /// Rebuild the attention KV for a slot, fetching spilled pages through
-    /// the device (at the tier the policy assigns).
-    fn materialize_kv(&mut self, slot: usize) -> Result<Vec<f32>> {
+    /// Rebuild the attention KV for every active slot. All spilled-page
+    /// fetches of the step go into **one** submission queue (read-full or
+    /// reduced-precision view per the page-tier policy); completions are
+    /// routed back by transaction id, so the device is free to serve them
+    /// in any dispatch order.
+    fn gather_kvs(&mut self, active: &[usize]) -> Result<Vec<Vec<f32>>> {
         let el = self.kv_entry_len;
-        let mut kv = self.slots[slot].kv.clone();
-        let n_pages = self.slots[slot].pages.len();
-        let pages = self.slots[slot].pages.clone();
-        // importance: recency-weighted (newest hottest), page 0 coldest
-        let imp: Vec<f64> = (0..n_pages).map(|i| (i + 1) as f64).collect();
-        let tiers = self.cfg.policy.assign(&imp);
-        for (k, (page, spilled, addr)) in pages.iter().enumerate() {
-            if !spilled {
-                continue;
-            }
-            let tier = tiers.get(k).copied().unwrap_or(PageTier::Bf16);
-            let words = match tier.view() {
-                None => continue, // dropped page: leave zeros (masked out upstream)
-                Some(v) if v.is_full() => self.device.read(*addr)?,
-                Some(v) => self.device.read_view(*addr, &v)?,
-            };
-            self.metrics.kv_recall_bytes += (words.len() * 2) as u64;
-            let start = page * PAGE_TOKENS * el;
-            for (i, &w) in words.iter().enumerate() {
-                kv[start + i] = bf16_to_f32(w);
+        let mut kvs: Vec<Vec<f32>> = self
+            .slots
+            .iter()
+            .map(|s| if s.req.is_some() { s.kv.clone() } else { Vec::new() })
+            .collect();
+
+        let mut sq = SubmissionQueue::new();
+        let mut routes: HashMap<TxnId, (usize, usize)> = HashMap::new();
+        for &i in active {
+            let seq = self.slots[i].req.as_ref().expect("active slot has a request").id;
+            // the pager is the placement book of record: index order, HBM
+            // vs CXL residency, and the spill address all come from it
+            let pages: Vec<(usize, Option<u64>)> =
+                self.pager.seq_pages(seq).iter().map(|p| (p.index, p.cxl_addr)).collect();
+            // importance: recency-weighted (newest hottest), page 0 coldest
+            let imp: Vec<f64> = (0..pages.len()).map(|k| (k + 1) as f64).collect();
+            let tiers = self.cfg.policy.assign(&imp);
+            for (k, (page, cxl_addr)) in pages.iter().enumerate() {
+                let Some(addr) = cxl_addr else {
+                    continue; // HBM-resident: already in the slot's KV copy
+                };
+                let tier = tiers.get(k).copied().unwrap_or(PageTier::Bf16);
+                let txn = match tier.view() {
+                    None => continue, // dropped page: leave zeros (masked out upstream)
+                    Some(v) if v.is_full() => Transaction::ReadFull { block_addr: *addr },
+                    Some(v) => Transaction::ReadView { block_addr: *addr, view: v },
+                };
+                routes.insert(sq.submit(txn), (i, *page));
             }
         }
-        Ok(kv)
+        if sq.is_empty() {
+            return Ok(kvs);
+        }
+        for c in self.device.drain(&mut sq) {
+            let (slot, page) = routes[&c.id];
+            let words = c.words()?;
+            self.pager.recalled_pages += 1;
+            self.metrics.kv_recall_bytes += (words.len() * 2) as u64;
+            let start = page * PAGE_TOKENS * el;
+            for (j, &w) in words.iter().enumerate() {
+                kvs[slot][start + j] = bf16_to_f32(w);
+            }
+        }
+        Ok(kvs)
     }
 
     /// Run one engine step: admit + decode one token for all active slots.
@@ -243,15 +298,10 @@ impl<B: ModelBackend> Engine<B> {
         anyhow::ensure!(pos < dims.t_max, "KV capacity exceeded: {pos}");
 
         let mut tokens = vec![0u32; dims.batch];
-        let mut kvs: Vec<Vec<f32>> = Vec::with_capacity(dims.batch);
-        for i in 0..dims.batch {
-            tokens[i] = self.slots[i].cur_token;
-            if self.slots[i].req.is_some() {
-                kvs.push(self.materialize_kv(i)?);
-            } else {
-                kvs.push(Vec::new());
-            }
+        for (i, t) in tokens.iter_mut().enumerate() {
+            *t = self.slots[i].cur_token;
         }
+        let kvs = self.gather_kvs(&active)?;
         let out = self.backend.decode(&tokens, &kvs, pos)?;
         let mut generated = 0usize;
 
@@ -289,9 +339,9 @@ impl<B: ModelBackend> Engine<B> {
                     tokens: done.generated.clone(),
                     steps_in_flight: steps,
                 });
-                // release HBM pages
-                let hbm_pages =
-                    self.slots[i].pages.iter().filter(|(_, sp, _)| !sp).count() as u64;
+                // release HBM pages (the pager is the placement book of
+                // record for what lived where)
+                let hbm_pages = self.pager.release_seq(done.id) as u64;
                 self.hbm.free_kv(hbm_pages * self.page_bytes());
                 self.slots[i] = Slot::empty();
             }
@@ -384,8 +434,9 @@ mod tests {
         e.submit(vec![1; 8], 70);
         e.run_to_completion(200).unwrap();
         assert!(e.metrics.pages_spilled > 0);
-        assert!(e.device.stats.dram_bytes_written > 0);
-        assert!(e.device.stats.dram_bytes_read > 0);
+        let stats = e.device.stats();
+        assert!(stats.dram_bytes_written > 0);
+        assert!(stats.dram_bytes_read > 0);
         assert!(e.metrics.kv_recall_bytes > 0);
         // TRACE compresses the smooth mock KV
         assert!(e.device.overall_ratio() > 1.05, "ratio={}", e.device.overall_ratio());
@@ -400,10 +451,55 @@ mod tests {
             );
             e.submit(vec![1; 8], 90);
             e.run_to_completion(300).unwrap();
-            e.device.stats.dram_bytes_read
+            e.device.stats().dram_bytes_read
         };
         let full = traffic(KvPolicy::FullKv);
         let tiered = traffic(KvPolicy::DynamicQuant { bf16: 2, fp8: 2, fp4: 30 });
         assert!(tiered < full, "tiered={tiered} full={full}");
+    }
+
+    #[test]
+    fn sharded_engine_is_bit_identical_to_single_shard() {
+        // sharding is a device-internal concern: tokens and aggregate
+        // traffic must not change with the shard count
+        let run = |shards: usize| -> (Vec<Vec<u32>>, u64, usize) {
+            let mut e = Engine::new(
+                MockBackend::tiny(),
+                EngineConfig { hbm_kv_bytes: 0, shards, ..Default::default() },
+            );
+            e.submit(vec![1, 2, 3, 4], 60);
+            e.submit(vec![5, 6], 60);
+            e.run_to_completion(300).unwrap();
+            let mut rs = e.take_responses();
+            rs.sort_by_key(|r| r.id);
+            assert!(e.metrics.pages_spilled > 0);
+            (
+                rs.into_iter().map(|r| r.tokens).collect(),
+                e.device.stats().dram_bytes_read,
+                e.device.shards(),
+            )
+        };
+        let (one_tokens, one_bytes, s1) = run(1);
+        let (four_tokens, four_bytes, s4) = run(4);
+        assert_eq!((s1, s4), (1, 4));
+        assert_eq!(one_tokens, four_tokens);
+        assert_eq!(one_bytes, four_bytes);
+    }
+
+    #[test]
+    fn spilled_pages_stripe_across_shards() {
+        let mut e = Engine::new(
+            MockBackend::tiny(),
+            EngineConfig { hbm_kv_bytes: 0, shards: 4, ..Default::default() },
+        );
+        e.submit(vec![1; 8], 70);
+        e.run_to_completion(200).unwrap();
+        let per_shard = e.device.shard_stats();
+        assert_eq!(per_shard.len(), 4);
+        let busy: usize = per_shard.iter().filter(|s| s.writes > 0).count();
+        assert!(busy >= 2, "spill writes landed on {busy} shard(s)");
+        // the pager's placement book agrees with the device traffic
+        assert_eq!(e.pager.spilled_pages, e.metrics.pages_spilled);
+        assert!(e.pager.recalled_pages > 0);
     }
 }

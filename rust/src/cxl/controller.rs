@@ -138,9 +138,52 @@ pub fn latency(case: LatencyCase) -> LatencyBreakdown {
     }
 }
 
+/// Store-path service time for one block write. The write pipeline skips
+/// the decode tail (the codec engine is streaming on ingest and overlaps
+/// the DRAM burst almost entirely), but the compressed designs still pay a
+/// metadata-update stage and TRACE keeps the alias front-end + plane
+/// scheduler. The compressed burst shortens with the achieved ratio.
+pub fn write_latency(design: super::device::Design, ratio: f64) -> LatencyBreakdown {
+    use super::device::Design;
+    let ratio = ratio.max(1.0);
+    match design {
+        Design::Plain => LatencyBreakdown {
+            frontend: 3,
+            metadata: 0,
+            scheduler: 8,
+            trcd: TRCD,
+            tcl: TCL,
+            burst: 12,
+            codec: 0,
+            meta_miss: 0,
+        },
+        Design::GComp => LatencyBreakdown {
+            frontend: 3,
+            metadata: 4, // index entry update
+            scheduler: 8,
+            trcd: TRCD,
+            tcl: TCL,
+            burst: (12.0 / ratio).round().max(1.0) as u32,
+            codec: 4, // exposed ingest tail
+            meta_miss: 0,
+        },
+        Design::Trace => LatencyBreakdown {
+            frontend: 5,
+            metadata: 4, // plane-index entry update
+            scheduler: 10,
+            trcd: TRCD,
+            tcl: TCL,
+            burst: (12.0 / ratio).round().max(1.0) as u32,
+            codec: 4,
+            meta_miss: 0,
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::device::Design;
 
     #[test]
     fn paper_fig22_values() {
@@ -186,6 +229,19 @@ mod tests {
         let delta = miss.total_cycles() - hit.total_cycles();
         assert_eq!(delta, META_MISS_WINDOW);
         assert!(delta >= TRCD + TCL);
+    }
+
+    #[test]
+    fn write_path_ordering_and_ratio_scaling() {
+        let p = write_latency(Design::Plain, 1.0).total_cycles();
+        let g = write_latency(Design::GComp, 1.5).total_cycles();
+        let t = write_latency(Design::Trace, 1.5).total_cycles();
+        assert!(p < g && g < t, "p={p} g={g} t={t}");
+        // higher compression ⇒ shorter store burst
+        let t3 = write_latency(Design::Trace, 3.0).total_cycles();
+        assert!(t3 < t);
+        // writes never pay a metadata-miss window
+        assert_eq!(write_latency(Design::Trace, 2.0).meta_miss, 0);
     }
 
     #[test]

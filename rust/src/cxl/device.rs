@@ -1,7 +1,8 @@
-//! Functional CXL Type-3 device model: write/read paths for the three
-//! designs of Table III, with byte-traffic accounting and the paper's
-//! correctness invariant ("for any host-visible view, TRACE returns
-//! identical values to a baseline device serving the same view").
+//! Functional CXL Type-3 device model: the three designs of Table III
+//! served through the typed transaction API ([`super::txn::MemDevice`]),
+//! with byte-traffic accounting and the paper's correctness invariant
+//! ("for any host-visible view, TRACE returns identical values to a
+//! baseline device serving the same view").
 //!
 //! The device stores logical 4 KB blocks keyed by block address. Per
 //! design:
@@ -11,15 +12,23 @@
 //!   stream, with index + bypass (what commodity "compressed CXL"
 //!   controllers ship).
 //! * **TRACE** — bit-plane layout; KV blocks additionally get Mechanism I;
-//!   alias views are served by plane-aligned fetch (Mechanism II).
+//!   alias views are served by plane-aligned fetch (Mechanism II), and
+//!   `ReadPlanes` streams an arbitrary contiguous plane range.
+//!
+//! All host I/O goes through [`MemDevice::execute`] / [`MemDevice::drain`];
+//! there are no free-form read/write methods. Each completion carries the
+//! transaction's byte-traffic delta and its controller-pipeline latency.
 
 use crate::bitplane::{DeviceBlock, KvWindow, PlaneMask, PrecisionView};
 use crate::codec::{self, CodecKind, CodecPolicy};
 use crate::formats::Fmt;
 use crate::util::bytes::{bytes_to_u16s, u16s_to_bytes};
 use std::collections::HashMap;
+use std::ops::Range;
 
+use super::controller::{latency, write_latency, LatencyBreakdown, LatencyCase};
 use super::metadata::{IndexCache, PlaneIndex, ENTRY_BYTES};
+use super::txn::{Completion, MemDevice, Payload, Transaction, TxnId, TxnStats};
 
 /// Device design (paper Table III).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -67,7 +76,20 @@ pub struct DeviceStats {
     pub writes: u64,
 }
 
-/// The device model.
+impl DeviceStats {
+    /// Fold another counter set into this one (shard aggregation).
+    pub fn accumulate(&mut self, o: &DeviceStats) {
+        self.dram_bytes_written += o.dram_bytes_written;
+        self.dram_bytes_read += o.dram_bytes_read;
+        self.link_bytes_out += o.link_bytes_out;
+        self.link_bytes_in += o.link_bytes_in;
+        self.metadata_dram_reads += o.metadata_dram_reads;
+        self.reads += o.reads;
+        self.writes += o.writes;
+    }
+}
+
+/// The single-device model. All I/O goes through the [`MemDevice`] trait.
 pub struct CxlDevice {
     pub design: Design,
     /// Codec candidate set for compressed designs.
@@ -90,45 +112,6 @@ impl CxlDevice {
         }
     }
 
-    /// Write a generic/weight block of `words` at `block_addr`.
-    pub fn write_weights(&mut self, block_addr: u64, words: &[u16], fmt: Fmt) {
-        let raw = u16s_to_bytes(words);
-        self.stats.link_bytes_in += raw.len() as u64;
-        self.stats.writes += 1;
-        let stored = match self.design {
-            Design::Plain => Stored::Raw(raw),
-            Design::GComp => {
-                let (codec, data) = codec::compress_best(self.policy, &raw);
-                Stored::Compressed { codec, data, raw_len: raw.len() }
-            }
-            Design::Trace => {
-                let blk = DeviceBlock::encode_weights(words, fmt, self.policy);
-                self.index.insert(block_addr, blk.index_entry(block_addr));
-                Stored::Planes(blk)
-            }
-        };
-        self.stats.dram_bytes_written += Self::stored_bytes_of(&stored) as u64;
-        self.blocks.insert(block_addr, stored);
-    }
-
-    /// Write a KV window (token-major BF16) at `block_addr`.
-    /// TRACE applies Mechanism I; the baselines treat it as raw words.
-    pub fn write_kv(&mut self, block_addr: u64, kv_token_major: &[u16], window: KvWindow) {
-        match self.design {
-            Design::Trace => {
-                let raw_len = kv_token_major.len() * 2;
-                self.stats.link_bytes_in += raw_len as u64;
-                self.stats.writes += 1;
-                let blk = DeviceBlock::encode_kv(kv_token_major, window, self.policy);
-                self.index.insert(block_addr, blk.index_entry(block_addr));
-                let stored = Stored::Planes(blk);
-                self.stats.dram_bytes_written += Self::stored_bytes_of(&stored) as u64;
-                self.blocks.insert(block_addr, stored);
-            }
-            _ => self.write_weights(block_addr, kv_token_major, Fmt::Bf16),
-        }
-    }
-
     fn stored_bytes_of(s: &Stored) -> usize {
         match s {
             Stored::Raw(d) => d.len(),
@@ -137,25 +120,65 @@ impl CxlDevice {
         }
     }
 
-    /// Stored (device DRAM) footprint of one block, bytes.
-    pub fn block_footprint(&self, block_addr: u64) -> Option<usize> {
-        self.blocks.get(&block_addr).map(Self::stored_bytes_of)
+    /// Uncompressed bytes of the device's current contents.
+    pub fn stored_raw_bytes(&self) -> usize {
+        self.blocks
+            .values()
+            .map(|s| match s {
+                Stored::Raw(d) => d.len(),
+                Stored::Compressed { raw_len, .. } => *raw_len,
+                Stored::Planes(b) => b.raw_bytes(),
+            })
+            .sum()
     }
 
-    /// Total stored footprint (data + metadata region).
-    pub fn footprint_bytes(&self) -> usize {
-        let data: usize = self.blocks.values().map(Self::stored_bytes_of).sum();
-        let meta = match self.design {
-            Design::Trace => self.blocks.len() * ENTRY_BYTES,
-            Design::GComp => self.blocks.len() * 8, // block pointer + length
-            Design::Plain => 0,
+    /// Write path for a generic/weight block; returns the achieved ratio.
+    fn do_write_weights(&mut self, block_addr: u64, words: &[u16], fmt: Fmt) -> f64 {
+        let raw = u16s_to_bytes(words);
+        let raw_len = raw.len();
+        self.stats.link_bytes_in += raw_len as u64;
+        self.stats.writes += 1;
+        let stored = match self.design {
+            Design::Plain => Stored::Raw(raw),
+            Design::GComp => {
+                let (codec, data) = codec::compress_best(self.policy, &raw);
+                Stored::Compressed { codec, data, raw_len }
+            }
+            Design::Trace => {
+                let blk = DeviceBlock::encode_weights(words, fmt, self.policy);
+                self.index.insert(block_addr, blk.index_entry(block_addr));
+                Stored::Planes(blk)
+            }
         };
-        data + meta
+        let stored_len = Self::stored_bytes_of(&stored);
+        self.stats.dram_bytes_written += stored_len as u64;
+        self.blocks.insert(block_addr, stored);
+        raw_len as f64 / stored_len.max(1) as f64
+    }
+
+    /// Write path for a KV window (token-major BF16); TRACE applies
+    /// Mechanism I, the baselines store raw words. Returns the ratio.
+    fn do_write_kv(&mut self, block_addr: u64, kv_token_major: &[u16], window: KvWindow) -> f64 {
+        match self.design {
+            Design::Trace => {
+                let raw_len = kv_token_major.len() * 2;
+                self.stats.link_bytes_in += raw_len as u64;
+                self.stats.writes += 1;
+                let blk = DeviceBlock::encode_kv(kv_token_major, window, self.policy);
+                self.index.insert(block_addr, blk.index_entry(block_addr));
+                let stored = Stored::Planes(blk);
+                let stored_len = Self::stored_bytes_of(&stored);
+                self.stats.dram_bytes_written += stored_len as u64;
+                self.blocks.insert(block_addr, stored);
+                raw_len as f64 / stored_len.max(1) as f64
+            }
+            _ => self.do_write_weights(block_addr, kv_token_major, Fmt::Bf16),
+        }
     }
 
     /// Full-precision read: returns the exact words the host wrote.
-    pub fn read(&mut self, block_addr: u64) -> anyhow::Result<Vec<u16>> {
-        self.charge_metadata(block_addr);
+    /// Metadata charging happens in `execute`, once per transaction.
+    fn do_read_full(&mut self, block_addr: u64) -> anyhow::Result<Vec<u16>> {
         let stored = self
             .blocks
             .get(&block_addr)
@@ -171,8 +194,7 @@ impl CxlDevice {
                 bytes_to_u16s(&codec::decompress(*codec, data, *raw_len)?)
             }
             Stored::Planes(b) => {
-                self.stats.dram_bytes_read +=
-                    b.fetched_bytes(PlaneMask::full(b.fmt)) as u64;
+                self.stats.dram_bytes_read += b.fetched_bytes(PlaneMask::full(b.fmt)) as u64;
                 b.decode_full()?
             }
         };
@@ -184,10 +206,10 @@ impl CxlDevice {
     /// device cannot skip anything: it serves full containers and the
     /// *host* truncates — the paper's "Issue 2". On TRACE only the view's
     /// planes are fetched from DRAM.
-    pub fn read_view(&mut self, block_addr: u64, view: &PrecisionView) -> anyhow::Result<Vec<u16>> {
+    fn do_read_view(&mut self, block_addr: u64, view: &PrecisionView) -> anyhow::Result<Vec<u16>> {
         match self.design {
             Design::Plain | Design::GComp => {
-                let mut words = self.read(block_addr)?;
+                let mut words = self.do_read_full(block_addr)?;
                 // host-side emulation of the view (bytes already moved)
                 if view.fmt == Fmt::Bf16 {
                     let keep = (view.mask().0 & 0xffff) as u16;
@@ -199,7 +221,6 @@ impl CxlDevice {
                 Ok(words)
             }
             Design::Trace => {
-                self.charge_metadata(block_addr);
                 let stored = self
                     .blocks
                     .get(&block_addr)
@@ -217,60 +238,206 @@ impl CxlDevice {
         }
     }
 
-    fn charge_metadata(&mut self, block_addr: u64) {
+    /// Plane-granular streaming read of bit positions `[range.start,
+    /// range.end)`: every design returns the host words with bits outside
+    /// the range zeroed (so at full range this equals `ReadFull`). The
+    /// baselines move full containers and truncate host-side; TRACE
+    /// fetches only the selected plane streams — except that on
+    /// KV-transformed blocks the exponent field is delta-coded, so a
+    /// request touching any sign/exponent plane fetches the whole
+    /// sign+exponent core to invert it exactly (mantissa planes still
+    /// stream individually), and the output is masked back to the request.
+    fn do_read_planes(&mut self, block_addr: u64, range: Range<usize>) -> anyhow::Result<Vec<u16>> {
+        fn range_mask(range: &Range<usize>, bits: usize) -> PlaneMask {
+            let lo = range.start.min(bits);
+            let hi = range.end.min(bits);
+            let mut m: u32 = 0;
+            for i in lo..hi {
+                m |= 1 << i;
+            }
+            PlaneMask(m)
+        }
+        match self.design {
+            Design::Plain | Design::GComp => {
+                let mut words = self.do_read_full(block_addr)?;
+                let keep = (range_mask(&range, 16).0 & 0xffff) as u16;
+                for w in words.iter_mut() {
+                    *w &= keep;
+                }
+                Ok(words)
+            }
+            Design::Trace => {
+                let stored = self
+                    .blocks
+                    .get(&block_addr)
+                    .ok_or_else(|| anyhow::anyhow!("no block at {block_addr:#x}"))?;
+                self.stats.reads += 1;
+                let Stored::Planes(b) = stored else {
+                    anyhow::bail!("TRACE device holds non-plane block");
+                };
+                let bits = b.fmt.bits();
+                let req = range_mask(&range, bits);
+                let fetch = match &b.transform {
+                    crate::bitplane::block::Transform::None => req,
+                    crate::bitplane::block::Transform::Kv { .. } => {
+                        // sign+exponent core (delta-coded as a unit)
+                        let (_, _, m) = b.fmt.fields();
+                        let core = (((1u64 << bits) - 1) as u32) & !((1u32 << m) - 1);
+                        if req.0 & core != 0 {
+                            PlaneMask(req.0 | core)
+                        } else {
+                            req
+                        }
+                    }
+                };
+                self.stats.dram_bytes_read += b.fetched_bytes(fetch) as u64;
+                let mut words = b.decode_planes(fetch)?;
+                // Mask back to the request: for KV blocks the inverse
+                // topology re-adds base exponents, so unrequested bits
+                // must be cleared to keep host-visible equivalence with
+                // the baselines' truncation.
+                let keep = (req.0 & 0xffff) as u16;
+                for w in words.iter_mut() {
+                    *w &= keep;
+                }
+                self.stats.link_bytes_out += (words.len() * req.count()).div_ceil(8) as u64;
+                Ok(words)
+            }
+        }
+    }
+
+    /// Charge the metadata lookup for compressed designs; returns whether
+    /// the on-chip index cache hit.
+    fn charge_metadata(&mut self, block_addr: u64) -> bool {
         if matches!(self.design, Design::GComp | Design::Trace)
             && !self.index_cache.access(block_addr)
         {
             self.stats.metadata_dram_reads += 1;
             self.stats.dram_bytes_read += ENTRY_BYTES as u64;
+            return false;
+        }
+        true
+    }
+
+    /// `(compression ratio, bypass?)` of a stored block, feeding the
+    /// controller pipeline latency model.
+    fn block_profile(&self, block_addr: u64) -> (f64, bool) {
+        match self.blocks.get(&block_addr) {
+            None => (1.0, false),
+            Some(Stored::Raw(_)) => (1.0, true),
+            Some(Stored::Compressed { codec, data, raw_len }) => {
+                (*raw_len as f64 / data.len().max(1) as f64, *codec == CodecKind::Raw)
+            }
+            Some(Stored::Planes(b)) => {
+                let bypass = b.planes.iter().all(|p| p.codec == CodecKind::Raw);
+                (b.ratio(), bypass)
+            }
         }
     }
 
-    /// Number of stored blocks.
-    pub fn len(&self) -> usize {
+    fn read_latency(&self, metadata_hit: bool, profile: (f64, bool)) -> LatencyBreakdown {
+        let (ratio, bypass) = profile;
+        let case = match self.design {
+            Design::Plain => LatencyCase::Plain,
+            Design::GComp => LatencyCase::GComp { metadata_hit },
+            Design::Trace => LatencyCase::Trace { metadata_hit, ratio, bypass },
+        };
+        latency(case)
+    }
+}
+
+impl MemDevice for CxlDevice {
+    fn design(&self) -> Design {
+        self.design
+    }
+
+    fn execute(&mut self, id: TxnId, txn: Transaction) -> Completion {
+        let before = self.stats;
+        let block_addr = txn.block_addr();
+        let kind = txn.kind();
+        let (result, breakdown) = match txn {
+            Transaction::WriteWeights { block_addr, words, fmt } => {
+                let ratio = self.do_write_weights(block_addr, &words, fmt);
+                (Ok(Payload::Written), write_latency(self.design, ratio))
+            }
+            Transaction::WriteKv { block_addr, words, window } => {
+                let ratio = self.do_write_kv(block_addr, &words, window);
+                (Ok(Payload::Written), write_latency(self.design, ratio))
+            }
+            Transaction::ReadFull { block_addr } => {
+                let hit = self.charge_metadata(block_addr);
+                let profile = self.block_profile(block_addr);
+                (self.do_read_full(block_addr).map(Payload::Words), self.read_latency(hit, profile))
+            }
+            Transaction::ReadView { block_addr, view } => {
+                let hit = self.charge_metadata(block_addr);
+                let profile = self.block_profile(block_addr);
+                (
+                    self.do_read_view(block_addr, &view).map(Payload::Words),
+                    self.read_latency(hit, profile),
+                )
+            }
+            Transaction::ReadPlanes { block_addr, range } => {
+                let hit = self.charge_metadata(block_addr);
+                let profile = self.block_profile(block_addr);
+                (
+                    self.do_read_planes(block_addr, range).map(Payload::Words),
+                    self.read_latency(hit, profile),
+                )
+            }
+        };
+        Completion {
+            id,
+            block_addr,
+            kind,
+            shard: 0,
+            result,
+            stats: TxnStats::delta(&before, &self.stats),
+            latency: Some(breakdown),
+        }
+    }
+
+    fn stats(&self) -> DeviceStats {
+        self.stats
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats = DeviceStats::default();
+        self.index_cache.reset_counters();
+    }
+
+    fn len(&self) -> usize {
         self.blocks.len()
     }
 
-    pub fn is_empty(&self) -> bool {
-        self.blocks.is_empty()
+    fn footprint_bytes(&self) -> usize {
+        let data: usize = self.blocks.values().map(Self::stored_bytes_of).sum();
+        let meta = match self.design {
+            Design::Trace => self.blocks.len() * ENTRY_BYTES,
+            Design::GComp => self.blocks.len() * 8, // block pointer + length
+            Design::Plain => 0,
+        };
+        data + meta
     }
 
-    /// Compression ratio of the device's current contents vs raw.
-    pub fn overall_ratio(&self) -> f64 {
-        let raw: usize = self
-            .blocks
-            .values()
-            .map(|s| match s {
-                Stored::Raw(d) => d.len(),
-                Stored::Compressed { raw_len, .. } => *raw_len,
-                Stored::Planes(b) => b.raw_bytes(),
-            })
-            .sum();
+    fn overall_ratio(&self) -> f64 {
+        let raw = self.stored_raw_bytes();
         if raw == 0 {
             return 1.0;
         }
         raw as f64 / self.footprint_bytes() as f64
+    }
+
+    fn block_footprint(&self, block_addr: u64) -> Option<usize> {
+        self.blocks.get(&block_addr).map(Self::stored_bytes_of)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::check::smooth_kv;
     use crate::util::Rng;
-    use crate::formats::bf16_from_f32;
-
-    fn smooth_kv(r: &mut Rng, n: usize, c: usize) -> Vec<u16> {
-        let mut kv = vec![0u16; n * c];
-        for j in 0..c {
-            let scale = 2f64.powi(r.range(-3, 3) as i32);
-            let mut v = r.normal() * scale;
-            for t in 0..n {
-                v = 0.97 * v + 0.03 * r.normal() * scale;
-                kv[t * c + j] = bf16_from_f32(v as f32);
-            }
-        }
-        kv
-    }
 
     fn all_designs() -> [CxlDevice; 3] {
         [
@@ -280,6 +447,19 @@ mod tests {
         ]
     }
 
+    fn write_kv(d: &mut CxlDevice, addr: u64, kv: &[u16], window: KvWindow) {
+        d.submit_one(Transaction::WriteKv { block_addr: addr, words: kv.to_vec(), window })
+            .unwrap();
+    }
+
+    fn read_full(d: &mut CxlDevice, addr: u64) -> anyhow::Result<Vec<u16>> {
+        d.submit_one(Transaction::ReadFull { block_addr: addr })?.into_words()
+    }
+
+    fn read_view(d: &mut CxlDevice, addr: u64, view: &PrecisionView) -> anyhow::Result<Vec<u16>> {
+        d.submit_one(Transaction::ReadView { block_addr: addr, view: *view })?.into_words()
+    }
+
     #[test]
     fn host_visible_equivalence_full_reads() {
         // paper §III-D invariant: identical values across designs
@@ -287,8 +467,8 @@ mod tests {
         let kv = smooth_kv(&mut r, 32, 64);
         let mut outs = Vec::new();
         for mut d in all_designs() {
-            d.write_kv(0x0, &kv, KvWindow::new(32, 64));
-            outs.push(d.read(0x0).unwrap());
+            write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
+            outs.push(read_full(&mut d, 0x0).unwrap());
         }
         assert_eq!(outs[0], kv);
         assert_eq!(outs[0], outs[1]);
@@ -302,8 +482,8 @@ mod tests {
         let view = PrecisionView::bf16_mantissa(3, 1);
         let mut outs = Vec::new();
         for mut d in all_designs() {
-            d.write_kv(0x0, &kv, KvWindow::new(32, 64));
-            outs.push(d.read_view(0x0, &view).unwrap());
+            write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
+            outs.push(read_view(&mut d, 0x0, &view).unwrap());
         }
         assert_eq!(outs[0], outs[1]);
         assert_eq!(outs[0], outs[2]);
@@ -315,7 +495,7 @@ mod tests {
         let kv = smooth_kv(&mut r, 32, 64);
         let mut foot = Vec::new();
         for mut d in all_designs() {
-            d.write_kv(0x0, &kv, KvWindow::new(32, 64));
+            write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
             foot.push(d.footprint_bytes());
         }
         assert!(foot[2] < foot[1], "trace={} gcomp={}", foot[2], foot[1]);
@@ -329,16 +509,16 @@ mod tests {
         let view = PrecisionView::bf16_mantissa(0, 0); // sign+exp only
 
         let mut plain = CxlDevice::new(Design::Plain, CodecPolicy::AllBest);
-        plain.write_kv(0x0, &kv, KvWindow::new(32, 64));
-        plain.stats = DeviceStats::default();
-        plain.read_view(0x0, &view).unwrap();
-        let plain_bytes = plain.stats.dram_bytes_read;
+        write_kv(&mut plain, 0x0, &kv, KvWindow::new(32, 64));
+        plain.reset_stats();
+        read_view(&mut plain, 0x0, &view).unwrap();
+        let plain_bytes = plain.stats().dram_bytes_read;
 
         let mut trace = CxlDevice::new(Design::Trace, CodecPolicy::AllBest);
-        trace.write_kv(0x0, &kv, KvWindow::new(32, 64));
-        trace.stats = DeviceStats::default();
-        trace.read_view(0x0, &view).unwrap();
-        let trace_bytes = trace.stats.dram_bytes_read;
+        write_kv(&mut trace, 0x0, &kv, KvWindow::new(32, 64));
+        trace.reset_stats();
+        read_view(&mut trace, 0x0, &view).unwrap();
+        let trace_bytes = trace.stats().dram_bytes_read;
 
         // Plain always moves the full 4 KB; TRACE moves ~9/16 compressed
         assert_eq!(plain_bytes, 4096);
@@ -350,13 +530,13 @@ mod tests {
         let mut r = Rng::new(205);
         let kv = smooth_kv(&mut r, 32, 64);
         let mut d = CxlDevice::new(Design::Trace, CodecPolicy::AllBest);
-        d.write_kv(0x0, &kv, KvWindow::new(32, 64));
-        d.stats = DeviceStats::default();
-        d.read_view(0x0, &PrecisionView::full(Fmt::Bf16)).unwrap();
-        let full_link = d.stats.link_bytes_out;
-        d.stats = DeviceStats::default();
-        d.read_view(0x0, &PrecisionView::bf16_mantissa(0, 0)).unwrap();
-        let lo_link = d.stats.link_bytes_out;
+        write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
+        d.reset_stats();
+        read_view(&mut d, 0x0, &PrecisionView::full(Fmt::Bf16)).unwrap();
+        let full_link = d.stats().link_bytes_out;
+        d.reset_stats();
+        read_view(&mut d, 0x0, &PrecisionView::bf16_mantissa(0, 0)).unwrap();
+        let lo_link = d.stats().link_bytes_out;
         assert!(lo_link < full_link);
     }
 
@@ -364,17 +544,21 @@ mod tests {
     fn metadata_misses_cost_dram_reads() {
         let mut r = Rng::new(206);
         let mut d = CxlDevice::new(Design::Trace, CodecPolicy::FastBest);
-        // more blocks than index-cache sets touched once each won't fit...
         // use a small cache to force misses
         d.index_cache = IndexCache::new(4);
         for b in 0..16u64 {
             let words: Vec<u16> = (0..2048).map(|_| r.next_u32() as u16).collect();
-            d.write_weights(b * 4096, &words, Fmt::Bf16);
+            d.submit_one(Transaction::WriteWeights {
+                block_addr: b * 4096,
+                words,
+                fmt: Fmt::Bf16,
+            })
+            .unwrap();
         }
         for b in 0..16u64 {
-            d.read(b * 4096).unwrap();
+            read_full(&mut d, b * 4096).unwrap();
         }
-        assert!(d.stats.metadata_dram_reads > 0);
+        assert!(d.stats().metadata_dram_reads > 0);
     }
 
     #[test]
@@ -382,8 +566,13 @@ mod tests {
         let mut r = Rng::new(207);
         let words: Vec<u16> = (0..2048).map(|_| r.next_u32() as u16).collect();
         for mut d in all_designs() {
-            d.write_weights(0x0, &words, Fmt::Bf16);
-            assert_eq!(d.read(0x0).unwrap(), words, "{:?}", d.design);
+            d.submit_one(Transaction::WriteWeights {
+                block_addr: 0x0,
+                words: words.clone(),
+                fmt: Fmt::Bf16,
+            })
+            .unwrap();
+            assert_eq!(read_full(&mut d, 0x0).unwrap(), words, "{:?}", d.design);
             // ratio ≈ 1 for random data
             assert!(d.overall_ratio() <= 1.02);
         }
@@ -392,6 +581,64 @@ mod tests {
     #[test]
     fn missing_block_errors() {
         let mut d = CxlDevice::new(Design::Trace, CodecPolicy::FastBest);
-        assert!(d.read(0xdead000).is_err());
+        assert!(read_full(&mut d, 0xdead000).is_err());
+    }
+
+    #[test]
+    fn read_planes_full_range_matches_read_full() {
+        let mut r = Rng::new(208);
+        let kv = smooth_kv(&mut r, 32, 64);
+        for mut d in all_designs() {
+            write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
+            let full = read_full(&mut d, 0x0).unwrap();
+            let planes = d
+                .submit_one(Transaction::ReadPlanes { block_addr: 0x0, range: 0..16 })
+                .unwrap()
+                .into_words()
+                .unwrap();
+            assert_eq!(planes, full, "{:?}", d.design);
+        }
+    }
+
+    #[test]
+    fn read_planes_moves_fewer_bytes_on_trace() {
+        let mut r = Rng::new(209);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let mut d = CxlDevice::new(Design::Trace, CodecPolicy::AllBest);
+        write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
+        d.reset_stats();
+        d.submit_one(Transaction::ReadPlanes { block_addr: 0x0, range: 9..16 }).unwrap();
+        let top = d.stats().dram_bytes_read;
+        d.reset_stats();
+        d.submit_one(Transaction::ReadPlanes { block_addr: 0x0, range: 0..16 }).unwrap();
+        let full = d.stats().dram_bytes_read;
+        assert!(top < full, "top={top} full={full}");
+    }
+
+    #[test]
+    fn completions_carry_stats_and_latency() {
+        let mut r = Rng::new(210);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let mut d = CxlDevice::new(Design::Trace, CodecPolicy::FastBest);
+        let mut sq = super::super::txn::SubmissionQueue::new();
+        sq.submit(Transaction::WriteKv {
+            block_addr: 0x0,
+            words: kv.clone(),
+            window: KvWindow::new(32, 64),
+        });
+        sq.submit(Transaction::ReadFull { block_addr: 0x0 });
+        sq.submit(Transaction::ReadFull { block_addr: 0xbad000 });
+        let cs = d.drain(&mut sq);
+        assert_eq!(cs.len(), 3);
+        assert_eq!(cs[0].kind, "write_kv");
+        assert!(cs[0].stats.dram_bytes_written > 0);
+        assert!(cs[0].latency_ns() > 0.0);
+        assert_eq!(cs[1].stats.link_bytes_out, (kv.len() * 2) as u64);
+        assert!(cs[1].latency_ns() > 0.0);
+        // the failed read completes as an error without killing the batch
+        assert!(cs[2].result.is_err());
+        // per-txn deltas sum to the cumulative counters
+        let sum: u64 = cs.iter().map(|c| c.stats.dram_bytes_read).sum();
+        assert_eq!(sum, d.stats().dram_bytes_read);
     }
 }

@@ -83,6 +83,13 @@ impl IndexCache {
         }
     }
 
+    /// Zero the hit/miss counters without disturbing cached entries
+    /// (used by `MemDevice::reset_stats`).
+    pub fn reset_counters(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {

@@ -10,18 +10,32 @@
 //! | KV cross-token transform | – | – | ✓ |
 //! | Plane-aligned fetch (alias views) | – | – | ✓ |
 //!
-//! * [`device`] — the functional model: write/read paths, per-design
-//!   storage, correctness invariants (identical host-visible values), and
-//!   byte-traffic accounting used by the throughput model.
+//! All host I/O flows through the typed transaction layer:
+//!
+//! * [`txn`] — [`Transaction`] / [`SubmissionQueue`] / [`Completion`] and
+//!   the [`MemDevice`] trait every device generation implements. Each
+//!   completion carries its payload, per-transaction byte traffic, and the
+//!   controller pipeline latency.
+//! * [`device`] — the functional single-device model: per-design storage,
+//!   correctness invariants (identical host-visible values), byte-traffic
+//!   accounting, plane-granular streaming reads.
+//! * [`sharded`] — [`ShardedDevice`]: N address-interleaved devices with
+//!   per-shard queues, round-robin / least-loaded dispatch, and a
+//!   parallel-time model for aggregate-bandwidth scaling.
 //! * [`metadata`] — plane-index store + on-chip index cache (64 B/4 KB
 //!   entry, hit/miss statistics; §III-D "metadata management").
 //! * [`alias`] — precision-partitioned address aliasing (paper Fig. 9).
 //! * [`controller`] — the 4-stage pipeline latency model reproducing the
-//!   load-to-use breakdowns of Figs 22–23 and Table V's latency row.
+//!   load-to-use breakdowns of Figs 22–23 and Table V's latency row, plus
+//!   the store-path model completions attach to writes.
+//! * [`scheduler`] — plane-aware DRAM ordering and the round-robin shard
+//!   arbitration.
 //! * [`ppa`] — component-level area/power model (Table V).
 //! * [`link`] — CXL link transfer model (bandwidth ceilings).
 
 pub mod device;
+pub mod txn;
+pub mod sharded;
 pub mod metadata;
 pub mod alias;
 pub mod controller;
@@ -32,5 +46,7 @@ pub mod link;
 pub use device::{CxlDevice, Design, DeviceStats};
 pub use metadata::{IndexCache, PlaneIndex};
 pub use alias::AliasSpace;
-pub use controller::{latency, LatencyBreakdown, LatencyCase};
+pub use controller::{latency, write_latency, LatencyBreakdown, LatencyCase};
 pub use ppa::{ppa_for, PpaReport};
+pub use sharded::{shard_of, DispatchPolicy, ShardedDevice, STRIPE_BYTES};
+pub use txn::{Completion, MemDevice, Payload, SubmissionQueue, Transaction, TxnId, TxnStats};

@@ -57,6 +57,24 @@ pub fn run_plane_aware(sim: &mut DramSim, reqs: Vec<Request>, window: usize) -> 
     sim.run_frfcfs(plane_aware_order(&reqs), window)
 }
 
+/// Drain per-queue FIFOs round-robin: one entry from each non-empty queue
+/// per cycle, preserving FIFO order within a queue. This is the dispatch
+/// order [`super::ShardedDevice`] uses under its round-robin policy, and
+/// mirrors how the per-shard submission FIFOs would arbitrate onto a
+/// shared completion path in hardware.
+pub fn round_robin_drain<T>(mut queues: Vec<std::collections::VecDeque<T>>) -> Vec<T> {
+    let total: usize = queues.iter().map(|q| q.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    while out.len() < total {
+        for q in queues.iter_mut() {
+            if let Some(x) = q.pop_front() {
+                out.push(x);
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +137,20 @@ mod tests {
         a.sort_unstable();
         b.sort_unstable();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn round_robin_drain_interleaves_fairly() {
+        use std::collections::VecDeque;
+        let queues: Vec<VecDeque<u32>> = vec![
+            VecDeque::from(vec![0, 3, 6]),
+            VecDeque::from(vec![1, 4]),
+            VecDeque::from(vec![2, 5, 7, 8]),
+        ];
+        let order = round_robin_drain(queues);
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5, 6, 7, 8]);
+        let empty: Vec<VecDeque<u32>> = vec![VecDeque::new(), VecDeque::new()];
+        assert!(round_robin_drain(empty).is_empty());
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! Multi-device sharding: N independent CXL devices behind one
+//! [`MemDevice`] endpoint.
+//!
+//! Block addresses interleave across shards at [`STRIPE_BYTES`] granularity
+//! (one 64 KB stripe = one spilled KV page / weight-chunk allocation unit,
+//! see `tier`), so a batch of page fetches issued by the coordinator lands
+//! on all shards at once. Each shard keeps its own submission FIFO;
+//! [`DispatchPolicy`] picks the service order:
+//!
+//! * `RoundRobin` — one transaction per shard per cycle (the
+//!   [`super::scheduler::round_robin_drain`] arbitration).
+//! * `LeastLoaded` — always serve the shard whose modeled timeline is
+//!   least advanced, absorbing placement imbalance.
+//!
+//! Shards operate in parallel in real hardware, so the device keeps a
+//! per-shard busy-time model: every transaction adds its controller
+//! pipeline latency plus `dram_bytes / shard_ddr_gbps` to its shard's
+//! timeline. Aggregate elapsed time is the **max** over shards — with N
+//! balanced shards a batch drains in ~1/N the single-device time, which is
+//! exactly the aggregate-bandwidth scaling the `fig_shard_scaling` bench
+//! measures and `sysmodel::SystemConfig::with_shards` consumes analytically.
+
+use std::collections::VecDeque;
+
+use crate::codec::CodecPolicy;
+
+use super::device::{CxlDevice, Design, DeviceStats};
+use super::scheduler::round_robin_drain;
+use super::txn::{Completion, MemDevice, SubmissionQueue, Transaction, TxnId};
+
+/// Address-interleave granularity across shards. Matches the 64 KB stripe
+/// the tier allocators hand out per spilled page, so consecutive pages hit
+/// consecutive shards.
+pub const STRIPE_BYTES: u64 = 1 << 16;
+
+/// Which shard owns `block_addr` under `shards`-way interleaving.
+pub fn shard_of(block_addr: u64, shards: usize) -> usize {
+    ((block_addr / STRIPE_BYTES) % shards.max(1) as u64) as usize
+}
+
+/// Service-order policy for draining the per-shard queues.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchPolicy {
+    #[default]
+    RoundRobin,
+    LeastLoaded,
+}
+
+/// N address-interleaved [`CxlDevice`]s behind one [`MemDevice`] endpoint.
+pub struct ShardedDevice {
+    shards: Vec<CxlDevice>,
+    policy: DispatchPolicy,
+    /// Modeled busy time per shard, ns.
+    busy_ns: Vec<f64>,
+    /// Per-shard device-DDR bandwidth for the time model, bytes/ns (GB/s).
+    pub shard_ddr_gbps: f64,
+}
+
+impl ShardedDevice {
+    /// `shards` devices of the same `design`/`codec`, round-robin dispatch.
+    pub fn new(shards: usize, design: Design, codec: CodecPolicy) -> ShardedDevice {
+        Self::with_policy(shards, design, codec, DispatchPolicy::RoundRobin)
+    }
+
+    pub fn with_policy(
+        shards: usize,
+        design: Design,
+        codec: CodecPolicy,
+        policy: DispatchPolicy,
+    ) -> ShardedDevice {
+        assert!(shards >= 1, "a sharded device needs at least one shard");
+        ShardedDevice {
+            shards: (0..shards).map(|_| CxlDevice::new(design, codec)).collect(),
+            policy,
+            busy_ns: vec![0.0; shards],
+            // per-device DDR of the paper's system model (§IV-B, matching
+            // SystemConfig::paper_default().ddr_bw = 256 GB/s per shard)
+            shard_ddr_gbps: 256.0,
+        }
+    }
+
+    pub fn dispatch_policy(&self) -> DispatchPolicy {
+        self.policy
+    }
+
+    /// Which shard owns `block_addr`.
+    pub fn shard_of(&self, block_addr: u64) -> usize {
+        shard_of(block_addr, self.shards.len())
+    }
+
+    /// The underlying per-shard devices (read-only).
+    pub fn shard_devices(&self) -> &[CxlDevice] {
+        &self.shards
+    }
+
+    /// Modeled busy time of each shard since the last [`Self::reset_time`].
+    pub fn busy_ns(&self) -> &[f64] {
+        &self.busy_ns
+    }
+
+    /// Wall-clock of the fleet: shards run in parallel, so the slowest
+    /// shard's timeline bounds the batch.
+    pub fn elapsed_ns(&self) -> f64 {
+        self.busy_ns.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Serialized service time (what a single device would have spent).
+    pub fn total_busy_ns(&self) -> f64 {
+        self.busy_ns.iter().sum()
+    }
+
+    pub fn reset_time(&mut self) {
+        self.busy_ns.fill(0.0);
+    }
+
+    fn service(&mut self, idx: usize, id: TxnId, txn: Transaction) -> Completion {
+        let mut c = self.shards[idx].execute(id, txn);
+        c.shard = idx;
+        self.busy_ns[idx] += c.latency_ns() + c.stats.dram_bytes() as f64 / self.shard_ddr_gbps;
+        c
+    }
+}
+
+impl MemDevice for ShardedDevice {
+    fn design(&self) -> Design {
+        self.shards[0].design
+    }
+
+    fn execute(&mut self, id: TxnId, txn: Transaction) -> Completion {
+        let idx = self.shard_of(txn.block_addr());
+        self.service(idx, id, txn)
+    }
+
+    fn drain(&mut self, sq: &mut SubmissionQueue) -> Vec<Completion> {
+        let n = self.shards.len();
+        let mut queues: Vec<VecDeque<(TxnId, Transaction)>> = vec![VecDeque::new(); n];
+        while let Some((id, txn)) = sq.pop() {
+            queues[shard_of(txn.block_addr(), n)].push_back((id, txn));
+        }
+        match self.policy {
+            DispatchPolicy::RoundRobin => round_robin_drain(queues)
+                .into_iter()
+                .map(|(id, txn)| {
+                    let idx = shard_of(txn.block_addr(), n);
+                    self.service(idx, id, txn)
+                })
+                .collect(),
+            DispatchPolicy::LeastLoaded => {
+                let mut out = Vec::new();
+                loop {
+                    let next = (0..n)
+                        .filter(|&i| !queues[i].is_empty())
+                        .min_by(|&a, &b| self.busy_ns[a].total_cmp(&self.busy_ns[b]));
+                    let Some(i) = next else { break };
+                    let (id, txn) = queues[i].pop_front().unwrap();
+                    out.push(self.service(i, id, txn));
+                }
+                out
+            }
+        }
+    }
+
+    fn stats(&self) -> DeviceStats {
+        let mut agg = DeviceStats::default();
+        for s in &self.shards {
+            agg.accumulate(&s.stats);
+        }
+        agg
+    }
+
+    fn reset_stats(&mut self) {
+        for s in self.shards.iter_mut() {
+            s.reset_stats();
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| MemDevice::len(s)).sum()
+    }
+
+    fn footprint_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.footprint_bytes()).sum()
+    }
+
+    fn overall_ratio(&self) -> f64 {
+        let raw: usize = self.shards.iter().map(|s| s.stored_raw_bytes()).sum();
+        if raw == 0 {
+            return 1.0;
+        }
+        raw as f64 / self.footprint_bytes() as f64
+    }
+
+    fn block_footprint(&self, block_addr: u64) -> Option<usize> {
+        self.shards[self.shard_of(block_addr)].block_footprint(block_addr)
+    }
+
+    fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_stats(&self) -> Vec<DeviceStats> {
+        self.shards.iter().map(|s| s.stats).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitplane::KvWindow;
+    use crate::util::check::smooth_kv;
+    use crate::util::Rng;
+
+    fn loaded(shards: usize, blocks: u64, kv: &[u16]) -> ShardedDevice {
+        let mut dev = ShardedDevice::new(shards, Design::Trace, CodecPolicy::FastBest);
+        let mut sq = SubmissionQueue::new();
+        for b in 0..blocks {
+            sq.submit(Transaction::WriteKv {
+                block_addr: b * STRIPE_BYTES,
+                words: kv.to_vec(),
+                window: KvWindow::new(32, 64),
+            });
+        }
+        for c in dev.drain(&mut sq) {
+            c.result.unwrap();
+        }
+        dev
+    }
+
+    #[test]
+    fn interleaving_balances_consecutive_stripes() {
+        let mut r = Rng::new(301);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let dev = loaded(4, 16, &kv);
+        for s in dev.shard_devices() {
+            assert_eq!(MemDevice::len(s), 4);
+        }
+        assert_eq!(MemDevice::len(&dev), 16);
+        assert_eq!(dev.shard_of(0), 0);
+        assert_eq!(dev.shard_of(STRIPE_BYTES), 1);
+        assert_eq!(dev.shard_of(5 * STRIPE_BYTES), 1);
+    }
+
+    #[test]
+    fn sharded_reads_match_single_device() {
+        let mut r = Rng::new(302);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let mut one = loaded(1, 8, &kv);
+        let mut four = loaded(4, 8, &kv);
+        for b in 0..8u64 {
+            let a = one
+                .submit_one(Transaction::ReadFull { block_addr: b * STRIPE_BYTES })
+                .unwrap()
+                .into_words()
+                .unwrap();
+            let d = four
+                .submit_one(Transaction::ReadFull { block_addr: b * STRIPE_BYTES })
+                .unwrap()
+                .into_words()
+                .unwrap();
+            assert_eq!(a, d);
+            assert_eq!(a, kv);
+        }
+        // aggregate counters line up with the single device
+        assert_eq!(one.stats().dram_bytes_read, four.stats().dram_bytes_read);
+        assert_eq!(four.stats().reads, 8);
+    }
+
+    #[test]
+    fn four_shards_drain_in_parallel_time() {
+        let mut r = Rng::new(303);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let run = |shards: usize| -> (f64, f64) {
+            let mut dev = loaded(shards, 32, &kv);
+            dev.reset_time();
+            dev.reset_stats();
+            let mut sq = SubmissionQueue::new();
+            for b in 0..32u64 {
+                sq.submit(Transaction::ReadFull { block_addr: b * STRIPE_BYTES });
+            }
+            for c in dev.drain(&mut sq) {
+                c.result.unwrap();
+            }
+            (dev.elapsed_ns(), dev.total_busy_ns())
+        };
+        let (one_elapsed, one_total) = run(1);
+        let (four_elapsed, four_total) = run(4);
+        // same physical work either way
+        assert!((one_total - four_total).abs() < 1e-6 * one_total);
+        // balanced placement ⇒ ~4x faster wall-clock
+        assert!(
+            four_elapsed * 3.5 < one_elapsed,
+            "four={four_elapsed} one={one_elapsed}"
+        );
+    }
+
+    #[test]
+    fn round_robin_interleaves_completions_across_shards() {
+        let mut r = Rng::new(304);
+        let kv = smooth_kv(&mut r, 16, 32);
+        let mut dev = loaded(4, 8, &kv);
+        let mut sq = SubmissionQueue::new();
+        for b in 0..8u64 {
+            sq.submit(Transaction::ReadFull { block_addr: b * STRIPE_BYTES });
+        }
+        let shards: Vec<usize> = dev.drain(&mut sq).iter().map(|c| c.shard).collect();
+        assert_eq!(shards, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn least_loaded_absorbs_skewed_placement() {
+        let mut r = Rng::new(305);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let mut dev =
+            ShardedDevice::with_policy(2, Design::Trace, CodecPolicy::FastBest, DispatchPolicy::LeastLoaded);
+        // all blocks on shard 0 (every address in stripe 0 mod 2)
+        let mut sq = SubmissionQueue::new();
+        for b in 0..6u64 {
+            sq.submit(Transaction::WriteKv {
+                block_addr: b * 2 * STRIPE_BYTES,
+                words: kv.clone(),
+                window: KvWindow::new(32, 64),
+            });
+        }
+        for c in dev.drain(&mut sq) {
+            c.result.unwrap();
+        }
+        assert_eq!(MemDevice::len(&dev.shards[0]), 6);
+        assert_eq!(MemDevice::len(&dev.shards[1]), 0);
+        // the idle shard never accrues time; the loaded one does all work
+        assert!(dev.busy_ns()[0] > 0.0);
+        assert_eq!(dev.busy_ns()[1], 0.0);
+        assert!((dev.elapsed_ns() - dev.total_busy_ns()).abs() < 1e-9);
+    }
+}

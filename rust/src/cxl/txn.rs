@@ -1,0 +1,314 @@
+//! Typed device transactions and the [`MemDevice`] trait.
+//!
+//! The coordinator no longer calls concrete methods on one device struct.
+//! Instead it builds [`Transaction`]s, pushes them through a
+//! [`SubmissionQueue`], and drains [`Completion`] records — the NVMe-style
+//! submission/completion shape that CXL-side KV managers use to keep many
+//! concurrent plane-granular fetches in flight. Any device generation that
+//! implements [`MemDevice`] (the single Plain/GComp/TRACE
+//! [`super::CxlDevice`], or the multi-device [`super::ShardedDevice`]) can
+//! serve the same queue, so sharding, batching, and dispatch policy are
+//! invisible to the callers.
+//!
+//! A completion carries the payload, the per-transaction byte-traffic
+//! delta ([`TxnStats`]), and the controller pipeline latency breakdown
+//! ([`LatencyBreakdown`]) so schedulers and the bandwidth model can consume
+//! per-request costs instead of only device-lifetime aggregates.
+
+use std::collections::VecDeque;
+use std::ops::Range;
+
+use crate::bitplane::{KvWindow, PrecisionView};
+use crate::formats::Fmt;
+
+use super::controller::LatencyBreakdown;
+use super::device::{Design, DeviceStats};
+
+/// Monotonic transaction identifier assigned at submission.
+pub type TxnId = u64;
+
+/// One typed device transaction.
+#[derive(Debug, Clone)]
+pub enum Transaction {
+    /// Store a weight/generic block of BF16-container words.
+    WriteWeights { block_addr: u64, words: Vec<u16>, fmt: Fmt },
+    /// Store a token-major KV window (Mechanism I on TRACE).
+    WriteKv { block_addr: u64, words: Vec<u16>, window: KvWindow },
+    /// Lossless full-precision read.
+    ReadFull { block_addr: u64 },
+    /// Reduced-precision alias read (Mechanism II); on the word-major
+    /// baselines the device moves full containers and the host truncates.
+    ReadView { block_addr: u64, view: PrecisionView },
+    /// Plane-granular streaming read: fetch only the planes whose bit
+    /// positions fall in `range` (`[start, end)`, 0 = LSB plane). At full
+    /// range this is identical to `ReadFull` on every design.
+    ReadPlanes { block_addr: u64, range: Range<usize> },
+}
+
+impl Transaction {
+    /// Target block address of this transaction.
+    pub fn block_addr(&self) -> u64 {
+        match self {
+            Transaction::WriteWeights { block_addr, .. }
+            | Transaction::WriteKv { block_addr, .. }
+            | Transaction::ReadFull { block_addr }
+            | Transaction::ReadView { block_addr, .. }
+            | Transaction::ReadPlanes { block_addr, .. } => *block_addr,
+        }
+    }
+
+    /// Whether this transaction moves data device → host.
+    pub fn is_read(&self) -> bool {
+        matches!(
+            self,
+            Transaction::ReadFull { .. }
+                | Transaction::ReadView { .. }
+                | Transaction::ReadPlanes { .. }
+        )
+    }
+
+    /// Short kind label for reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Transaction::WriteWeights { .. } => "write_weights",
+            Transaction::WriteKv { .. } => "write_kv",
+            Transaction::ReadFull { .. } => "read_full",
+            Transaction::ReadView { .. } => "read_view",
+            Transaction::ReadPlanes { .. } => "read_planes",
+        }
+    }
+}
+
+/// What a completed transaction hands back to the host.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Write acknowledged; no data returned.
+    Written,
+    /// Read data as BF16-container words.
+    Words(Vec<u16>),
+}
+
+impl Payload {
+    /// Unwrap a read payload, erroring on write acknowledgements.
+    pub fn into_words(self) -> anyhow::Result<Vec<u16>> {
+        match self {
+            Payload::Words(w) => Ok(w),
+            Payload::Written => anyhow::bail!("transaction returned no read payload"),
+        }
+    }
+}
+
+/// Per-transaction byte-traffic delta (same meanings as the cumulative
+/// [`DeviceStats`] fields).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TxnStats {
+    pub dram_bytes_read: u64,
+    pub dram_bytes_written: u64,
+    pub link_bytes_in: u64,
+    pub link_bytes_out: u64,
+    pub metadata_dram_reads: u64,
+}
+
+impl TxnStats {
+    /// Difference of two cumulative counters (`now` − `before`).
+    pub fn delta(before: &DeviceStats, now: &DeviceStats) -> TxnStats {
+        TxnStats {
+            dram_bytes_read: now.dram_bytes_read - before.dram_bytes_read,
+            dram_bytes_written: now.dram_bytes_written - before.dram_bytes_written,
+            link_bytes_in: now.link_bytes_in - before.link_bytes_in,
+            link_bytes_out: now.link_bytes_out - before.link_bytes_out,
+            metadata_dram_reads: now.metadata_dram_reads - before.metadata_dram_reads,
+        }
+    }
+
+    /// Total device-DRAM bytes this transaction moved (either direction).
+    pub fn dram_bytes(&self) -> u64 {
+        self.dram_bytes_read + self.dram_bytes_written
+    }
+}
+
+/// Completion record for one transaction.
+#[derive(Debug)]
+pub struct Completion {
+    pub id: TxnId,
+    pub block_addr: u64,
+    /// [`Transaction::kind`] of the originating transaction.
+    pub kind: &'static str,
+    /// Which shard served it (0 on a single device).
+    pub shard: usize,
+    /// Payload, or the device error (missing block, corrupt planes, …).
+    pub result: anyhow::Result<Payload>,
+    pub stats: TxnStats,
+    /// Controller pipeline breakdown; populated for both loads and stores.
+    pub latency: Option<LatencyBreakdown>,
+}
+
+impl Completion {
+    /// Consume the completion, returning the read payload words.
+    pub fn words(self) -> anyhow::Result<Vec<u16>> {
+        self.result?.into_words()
+    }
+
+    /// Modeled service time of this transaction in ns (pipeline only).
+    pub fn latency_ns(&self) -> f64 {
+        self.latency.map_or(0.0, |l| l.total_ns())
+    }
+}
+
+/// FIFO of submitted-but-not-yet-executed transactions.
+///
+/// Submission assigns the [`TxnId`]; devices are free to *complete* out of
+/// submission order (the sharded device interleaves per-shard queues), so
+/// callers that batch must route completions by id, not by position.
+#[derive(Debug, Default)]
+pub struct SubmissionQueue {
+    next_id: TxnId,
+    queue: VecDeque<(TxnId, Transaction)>,
+}
+
+impl SubmissionQueue {
+    pub fn new() -> SubmissionQueue {
+        SubmissionQueue::default()
+    }
+
+    /// Enqueue a transaction, returning its id.
+    pub fn submit(&mut self, txn: Transaction) -> TxnId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((id, txn));
+        id
+    }
+
+    /// Dequeue the oldest pending transaction.
+    pub fn pop(&mut self) -> Option<(TxnId, Transaction)> {
+        self.queue.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+/// The device-facing API: every read and write is a [`Transaction`].
+///
+/// Object-safe so the coordinator can hold `Box<dyn MemDevice>` and swap a
+/// single device for a sharded fleet by configuration.
+pub trait MemDevice {
+    /// Device design (a sharded device reports its shards' common design).
+    fn design(&self) -> Design;
+
+    /// Execute one transaction immediately and produce its completion.
+    fn execute(&mut self, id: TxnId, txn: Transaction) -> Completion;
+
+    /// Drain a submission queue, executing every pending transaction.
+    /// Single devices serve FIFO; sharded devices reorder per dispatch
+    /// policy. Completions are returned in service order.
+    fn drain(&mut self, sq: &mut SubmissionQueue) -> Vec<Completion> {
+        let mut out = Vec::with_capacity(sq.len());
+        while let Some((id, txn)) = sq.pop() {
+            out.push(self.execute(id, txn));
+        }
+        out
+    }
+
+    /// One-shot convenience: submit a single transaction through a private
+    /// queue and return its payload.
+    fn submit_one(&mut self, txn: Transaction) -> anyhow::Result<Payload> {
+        let mut sq = SubmissionQueue::new();
+        sq.submit(txn);
+        let mut completions = self.drain(&mut sq);
+        anyhow::ensure!(
+            completions.len() == 1,
+            "device completed {} of 1 transaction",
+            completions.len()
+        );
+        completions.pop().unwrap().result
+    }
+
+    /// Cumulative counters, aggregated across shards.
+    fn stats(&self) -> DeviceStats;
+
+    /// Zero the cumulative counters (including index-cache hit/miss).
+    fn reset_stats(&mut self);
+
+    /// Number of stored blocks.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stored footprint (data + metadata region), bytes.
+    fn footprint_bytes(&self) -> usize;
+
+    /// Compression ratio of current contents vs raw.
+    fn overall_ratio(&self) -> f64;
+
+    /// Stored footprint of one block, if present.
+    fn block_footprint(&self, block_addr: u64) -> Option<usize>;
+
+    /// Number of shards (1 for a single device).
+    fn shards(&self) -> usize {
+        1
+    }
+
+    /// Per-shard cumulative counters (one entry for a single device).
+    fn shard_stats(&self) -> Vec<DeviceStats> {
+        vec![self.stats()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submission_queue_is_fifo_with_monotonic_ids() {
+        let mut sq = SubmissionQueue::new();
+        assert!(sq.is_empty());
+        let a = sq.submit(Transaction::ReadFull { block_addr: 0x1000 });
+        let b = sq.submit(Transaction::ReadFull { block_addr: 0x2000 });
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(sq.len(), 2);
+        let (id, txn) = sq.pop().unwrap();
+        assert_eq!(id, 0);
+        assert_eq!(txn.block_addr(), 0x1000);
+        assert_eq!(sq.pop().unwrap().0, 1);
+        assert!(sq.pop().is_none());
+    }
+
+    #[test]
+    fn transaction_introspection() {
+        let w = Transaction::WriteKv {
+            block_addr: 0x40,
+            words: vec![1, 2],
+            window: KvWindow::new(1, 2),
+        };
+        assert!(!w.is_read());
+        assert_eq!(w.kind(), "write_kv");
+        assert_eq!(w.block_addr(), 0x40);
+        let r = Transaction::ReadPlanes { block_addr: 0x80, range: 9..16 };
+        assert!(r.is_read());
+        assert_eq!(r.kind(), "read_planes");
+    }
+
+    #[test]
+    fn payload_unwrap() {
+        assert_eq!(Payload::Words(vec![3]).into_words().unwrap(), vec![3]);
+        assert!(Payload::Written.into_words().is_err());
+    }
+
+    #[test]
+    fn txn_stats_delta() {
+        let before = DeviceStats { dram_bytes_read: 10, link_bytes_out: 5, ..Default::default() };
+        let now = DeviceStats { dram_bytes_read: 25, link_bytes_out: 9, ..Default::default() };
+        let d = TxnStats::delta(&before, &now);
+        assert_eq!(d.dram_bytes_read, 15);
+        assert_eq!(d.link_bytes_out, 4);
+        assert_eq!(d.dram_bytes(), 15);
+    }
+}

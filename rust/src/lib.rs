@@ -17,25 +17,61 @@
 //!   requires ("plane-aligned fetch"), so device DRAM activations and bytes
 //!   scale with requested precision.
 //!
-//! Crate layout (see `DESIGN.md` for the experiment index):
+//! ## Architecture: everything is a transaction
 //!
-//! * [`util`] — RNG, mini-JSON, CLI parsing, statistics, property-test harness.
-//! * [`formats`] — element formats (BF16/FP16/FP8/INT8/INT4/MXFP4) and field splits.
-//! * [`bitplane`] — bit-plane disaggregation, the KV transform, plane masks,
-//!   guard-plane rounding, and the reconstruction pipeline (paper Eq. 1–8).
-//! * [`codec`] — LZ4 (from scratch), ZSTD wrapper, RLE, per-plane best-of selection.
-//! * [`dram`] — DDR5 bank-timing simulator with DRAMPower-style energy counters
-//!   (substitute for DRAMSim3).
-//! * [`cxl`] — the CXL Type-3 device models: Plain / GComp / TRACE controllers,
-//!   plane-index metadata, alias decode, plane-aware scheduling, pipeline
-//!   latency model, and the PPA model.
-//! * [`tier`] — HBM/CXL memory-tier manager: paged KV with precision tiers,
-//!   weight store with per-expert/head/neuron chunks, spill accounting.
-//! * [`sysmodel`] — first-order trace-driven throughput model (paper Figs 12–14).
-//! * [`gen`] — calibrated synthetic tensors, precision-mix and request generators.
-//! * [`coordinator`] — serving engine: router, continuous batcher, decode loop.
-//! * [`runtime`] — PJRT wrapper that loads the AOT-compiled JAX model (HLO text)
-//!   and runs prefill/decode from Rust.
+//! The host side never calls concrete device methods. All reads and writes
+//! are typed [`cxl::Transaction`]s (`WriteWeights`, `WriteKv`, `ReadFull`,
+//! `ReadView`, `ReadPlanes`) pushed through a [`cxl::SubmissionQueue`] and
+//! drained as [`cxl::Completion`] records that carry the payload, the
+//! per-transaction byte traffic, and the controller-pipeline latency. The
+//! [`cxl::MemDevice`] trait abstracts *what* serves the queue:
+//!
+//! * [`cxl::CxlDevice`] — one functional device in any of the three Table
+//!   III designs (Plain / GComp / TRACE).
+//! * [`cxl::ShardedDevice`] — N address-interleaved devices (64 KB
+//!   stripes) with per-shard queues, round-robin or least-loaded dispatch,
+//!   and a parallel busy-time model, so aggregate read bandwidth scales
+//!   with the shard count (`benches/fig_shard_scaling.rs`).
+//!
+//! The coordinator's decode loop batches every spilled-page fetch of a step
+//! into one submission and routes completions back by transaction id —
+//! see `docs/DEVICE_API.md` for the transaction lifecycle and the migration
+//! notes from the pre-transaction method API.
+//!
+//! ## Crate layout
+//!
+//! Host/runtime side:
+//!
+//! * [`coordinator`] — serving engine: admission queue, continuous batcher,
+//!   decode loop with batched spill fetch through `dyn MemDevice`.
+//! * [`runtime`] — model backends: the mock backend (always available) and
+//!   the PJRT/XLA engine for AOT artifacts (behind the `pjrt` feature; the
+//!   XLA bindings are not in the offline vendor set).
+//! * [`tier`] — HBM/CXL memory-tier manager: paged KV with precision
+//!   tiers and shard-aware spill addresses, chunked weight store.
+//! * [`sysmodel`] — first-order trace-driven throughput model (paper Figs
+//!   12–14), including multi-shard aggregate DDR bandwidth.
+//!
+//! Device side:
+//!
+//! * [`cxl`] — transaction layer ([`cxl::txn`]), the device models
+//!   ([`cxl::device`], [`cxl::sharded`]), plane-index metadata, alias
+//!   decode, plane-aware + shard scheduling, pipeline latency, PPA.
+//! * [`bitplane`] — bit-plane disaggregation, the KV transform, plane
+//!   masks, guard-plane rounding, reconstruction (paper Eq. 1–8).
+//! * [`codec`] — LZ4 (from scratch), ZSTD wrapper, RLE, per-plane
+//!   best-of selection with a copy-free winner path.
+//! * [`dram`] — DDR5 bank-timing simulator with DRAMPower-style energy
+//!   counters (substitute for DRAMSim3).
+//!
+//! Shared substrate:
+//!
+//! * [`formats`] — element formats (BF16/FP16/FP8/INT8/INT4/MXFP4) and
+//!   field splits.
+//! * [`gen`] — calibrated synthetic tensors, precision-mix and request
+//!   generators.
+//! * [`util`] — RNG, mini-JSON, CLI parsing, statistics, property-test
+//!   harness (the build is offline; no `rand`/`serde`/`clap`/`proptest`).
 
 pub mod util;
 pub mod formats;

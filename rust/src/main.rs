@@ -13,7 +13,7 @@
 use trace_cxl::bitplane::{DeviceBlock, KvWindow};
 use trace_cxl::codec::CodecPolicy;
 use trace_cxl::coordinator::{Engine, EngineConfig};
-use trace_cxl::cxl::{latency, ppa_for, Design, LatencyCase};
+use trace_cxl::cxl::{latency, ppa_for, Design, LatencyCase, MemDevice};
 use trace_cxl::gen::{KvGen, RequestGen, WeightGen};
 use trace_cxl::runtime::{Manifest, ModelBackend, PjrtEngine};
 use trace_cxl::sysmodel::{ModelShape, SystemConfig, ThroughputModel};
@@ -46,8 +46,8 @@ fn print_help() {
         "trace-cxl — TRACE CXL-memory reproduction\n\
          USAGE: trace-cxl <serve|throughput|compress|latency|ppa|info> [--options]\n\
          \n\
-         serve      --artifacts DIR --requests N --max-new N --hbm-kv BYTES --design plain|gcomp|trace\n\
-         throughput --model mxfp4|bf16 --ctx N [--alpha F] [--elastic F]\n\
+         serve      --artifacts DIR --requests N --max-new N --hbm-kv BYTES --design plain|gcomp|trace --shards N\n\
+         throughput --model mxfp4|bf16 --ctx N [--alpha F] [--elastic F] [--shards N]\n\
          compress   --kind kv|weights [--blocks N]\n\
          latency    (controller pipeline breakdowns, Figs 22-23)\n\
          ppa        (Table V)\n\
@@ -89,6 +89,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             hbm_kv_bytes: hbm_kv,
             policy: KvPolicy::FullKv,
             greedy: true,
+            shards: args.get_usize("shards", 1),
         },
     );
     let mut rng = Rng::new(args.get_u64("seed", 7));
@@ -97,11 +98,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         engine.submit(r.prompt, max_new.min(dims.t_max - dims.t_prompt - 2));
     }
     engine.run_to_completion(100_000)?;
-    println!("{}", engine.metrics.report(&engine.device.stats));
+    println!("{}", engine.metrics.report(&engine.device.stats()));
     println!(
-        "device KV compression ratio: {:.2}x ({} blocks)",
+        "device KV compression ratio: {:.2}x ({} blocks across {} shard(s))",
         engine.device.overall_ratio(),
-        engine.device.len()
+        engine.device.len(),
+        engine.device.shards()
     );
     Ok(())
 }
@@ -115,7 +117,7 @@ fn cmd_throughput(args: &Args) -> anyhow::Result<()> {
     let mut cfg = SystemConfig::paper_default();
     cfg.alpha = args.get_f64("alpha", 0.8);
     let elastic = args.get_f64("elastic", 1.0);
-    cfg = cfg.with_elastic_kv(elastic);
+    cfg = cfg.with_elastic_kv(elastic).with_shards(args.get_usize("shards", 1));
     let m = ThroughputModel::new(cfg, shape);
     let ctxs = [4096usize, 16384, 65536, 131072, 196608, 262144];
     println!("{:<10} {:>12} {:>12} {:>12}", "ctx", "CXL-Plain", "CXL-GComp", "TRACE");

@@ -9,12 +9,60 @@
 //! pure Rust: [`PjrtEngine`] compiles the HLO once and then serves
 //! prefill/decode with zero Python involvement.
 //!
-//! [`ModelBackend`] abstracts the engine so the coordinator and its tests
-//! can run against [`MockBackend`] without artifacts present.
+//! The `xla` bindings are not part of the offline vendor set, so the real
+//! engine is gated behind the `pjrt` cargo feature. Without it,
+//! [`PjrtEngine`] is an uninhabited stub whose `load` reports how to
+//! enable the feature — callers fall back to [`MockBackend`], which the
+//! coordinator and its tests use regardless.
+//!
+//! [`ModelBackend`] abstracts the engine so the coordinator can run
+//! against either implementation.
 
 pub mod artifacts;
-pub mod pjrt;
 pub mod mock;
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+/// Stub compiled when the `pjrt` feature is off: same public surface,
+/// uninhabited type, `load` always errors.
+#[cfg(not(feature = "pjrt"))]
+pub mod pjrt {
+    use super::{DecodeOut, ModelBackend, ModelDims, PrefillOut};
+
+    /// Placeholder for the XLA-backed engine (uninhabited without the
+    /// `pjrt` feature, so the backend methods are statically unreachable).
+    pub enum PjrtEngine {}
+
+    impl PjrtEngine {
+        /// Always errors: the binary was built without XLA support.
+        pub fn load(_dir: &std::path::Path) -> anyhow::Result<PjrtEngine> {
+            anyhow::bail!(
+                "built without the `pjrt` feature: the XLA/PJRT toolchain is not in the \
+                 offline vendor set; rebuild with `--features pjrt` to load AOT artifacts"
+            )
+        }
+    }
+
+    impl ModelBackend for PjrtEngine {
+        fn dims(&self) -> &ModelDims {
+            match *self {}
+        }
+
+        fn prefill(&mut self, _tokens: &[Vec<u32>]) -> anyhow::Result<PrefillOut> {
+            match *self {}
+        }
+
+        fn decode(
+            &mut self,
+            _tokens: &[u32],
+            _kv: &[Vec<f32>],
+            _pos: usize,
+        ) -> anyhow::Result<DecodeOut> {
+            match *self {}
+        }
+    }
+}
 
 pub use artifacts::{Manifest, ModelDims};
 pub use mock::MockBackend;

@@ -31,8 +31,12 @@ pub struct SystemConfig {
     pub hbm_bw: f64,
     /// CXL link bytes/s per direction (paper: 512 GB/s).
     pub link_bw: f64,
-    /// Device DDR bytes/s (paper: 256 GB/s).
+    /// Device DDR bytes/s **per shard** (paper: 256 GB/s on one device).
     pub ddr_bw: f64,
+    /// Number of address-interleaved device shards. Shards serve their
+    /// stripes in parallel, so the effective device-DDR ceiling is
+    /// `shards · ddr_bw` (the CXL link stays a single shared pipe).
+    pub shards: usize,
     /// HBM fraction reserved for weights (Eq. 9). For the weights-fit
     /// regime (Fig. 12) the model gives weights priority automatically.
     pub alpha: f64,
@@ -79,6 +83,7 @@ impl SystemConfig {
             hbm_bw: 715.0e9,
             link_bw: 512.0e9,
             ddr_bw: 256.0e9,
+            shards: 1,
             alpha: 0.8,
             batch: 1,
             f_rd: 0.2,
@@ -93,6 +98,13 @@ impl SystemConfig {
     /// served at an FP8-equivalent alias ⇒ ~2× fewer bytes for spill).
     pub fn with_elastic_kv(mut self, factor: f64) -> SystemConfig {
         self.kv_elastic_factor = factor;
+        self
+    }
+
+    /// Variant with an `n`-shard device tier: aggregate DDR bandwidth is
+    /// `n · ddr_bw` while the host link is unchanged.
+    pub fn with_shards(mut self, n: usize) -> SystemConfig {
+        self.shards = n.max(1);
         self
     }
 }
@@ -180,10 +192,10 @@ impl ThroughputModel {
         let ddr_bytes = w_cxl_raw / (c.w_ratio)(design) + kv_cxl_eff / (c.kv_ratio)(design);
         let hbm_bytes = w_hbm + kv_hbm + kv_write;
 
-        // --- ceilings
+        // --- ceilings (device DDR aggregates across parallel shards)
         let step_hbm = hbm_bytes / c.hbm_bw;
         let step_link = link_bytes / c.link_bw;
-        let step_ddr = ddr_bytes / c.ddr_bw;
+        let step_ddr = ddr_bytes / (c.ddr_bw * c.shards.max(1) as f64);
         let (step, bottleneck) = if step_hbm >= step_link && step_hbm >= step_ddr {
             (step_hbm, Bottleneck::Hbm)
         } else if step_ddr >= step_link {
@@ -291,6 +303,25 @@ mod tests {
             assert!(t <= last + 1e-9, "ctx={ctx}");
             last = t;
         }
+    }
+
+    #[test]
+    fn shard_scaling_lifts_ddr_bound_throughput() {
+        // Fig. 12 post-spill regime is DDR-bottlenecked on one device;
+        // 4 shards quadruple the device-side ceiling until the shared link
+        // takes over, so throughput must rise ≥2x and the bottleneck must
+        // leave the DDR.
+        let m1 = fig12_model();
+        let ctx = 131072;
+        let p1 = m1.eval(ctx, Design::Plain);
+        assert_eq!(p1.bottleneck, Bottleneck::Ddr);
+        let mut m4 = fig12_model();
+        m4.cfg = m4.cfg.with_shards(4);
+        let p4 = m4.eval(ctx, Design::Plain);
+        assert!(p4.tok_s > 1.6 * p1.tok_s, "p4={} p1={}", p4.tok_s, p1.tok_s);
+        assert_ne!(p4.bottleneck, Bottleneck::Ddr);
+        // pre-spill (HBM-bound) points are untouched by sharding
+        assert_eq!(m1.eval(16384, Design::Trace).tok_s, m4.eval(16384, Design::Trace).tok_s);
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! converts into proportional DRAM traffic.
 
 use crate::bitplane::PrecisionView;
+use crate::cxl::{shard_of, STRIPE_BYTES};
 
 /// Tokens per KV page (Quest-style page granularity).
 pub const PAGE_TOKENS: usize = 16;
@@ -151,32 +152,62 @@ pub struct PageMeta {
     pub importance: f64,
     /// Device block address when spilled.
     pub cxl_addr: Option<u64>,
+    /// Which device shard serves the spilled page (0 when in HBM or when
+    /// the tier runs a single device).
+    pub shard: usize,
 }
 
-/// The page manager for one serving engine.
-#[derive(Debug, Default)]
+/// The page manager for one serving engine. Spill addresses are handed out
+/// at [`STRIPE_BYTES`] stride, so with an N-shard device consecutive
+/// spilled pages interleave round-robin across shards (see
+/// [`crate::cxl::ShardedDevice`]).
+#[derive(Debug)]
 pub struct KvPageManager {
     pub pages: Vec<PageMeta>,
     next_cxl_addr: u64,
+    /// Shard count of the device tier this manager places onto.
+    shards: usize,
     pub spilled_pages: u64,
     pub recalled_pages: u64,
 }
 
+impl Default for KvPageManager {
+    fn default() -> KvPageManager {
+        KvPageManager::new()
+    }
+}
+
 impl KvPageManager {
     pub fn new() -> KvPageManager {
-        KvPageManager { next_cxl_addr: 0x1000_0000, ..Default::default() }
+        KvPageManager::with_shards(1)
     }
 
-    /// Register a new page for `seq`, placed in HBM if `fits`, else CXL.
+    /// A manager placing spilled pages onto an `shards`-way device tier.
+    pub fn with_shards(shards: usize) -> KvPageManager {
+        KvPageManager {
+            pages: Vec::new(),
+            next_cxl_addr: 0x1000_0000,
+            shards: shards.max(1),
+            spilled_pages: 0,
+            recalled_pages: 0,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Register a new page for `seq`, placed in HBM if `fits`, else CXL at
+    /// a shard-aware (stripe-interleaved) device address.
     pub fn add_page(&mut self, seq: u64, index: usize, fits_hbm: bool) -> &PageMeta {
         let home = if fits_hbm { PageHome::Hbm } else { PageHome::Cxl };
-        let cxl_addr = if fits_hbm {
-            None
+        let (cxl_addr, shard) = if fits_hbm {
+            (None, 0)
         } else {
             self.spilled_pages += 1;
             let a = self.next_cxl_addr;
-            self.next_cxl_addr += 0x1_0000;
-            Some(a)
+            self.next_cxl_addr += STRIPE_BYTES;
+            (Some(a), shard_of(a, self.shards))
         };
         self.pages.push(PageMeta {
             seq,
@@ -185,8 +216,20 @@ impl KvPageManager {
             home,
             importance: 1.0,
             cxl_addr,
+            shard,
         });
         self.pages.last().unwrap()
+    }
+
+    /// Spilled-page count per shard (placement balance diagnostic).
+    pub fn shard_loads(&self) -> Vec<usize> {
+        let mut loads = vec![0usize; self.shards];
+        for p in &self.pages {
+            if p.cxl_addr.is_some() {
+                loads[p.shard] += 1;
+            }
+        }
+        loads
     }
 
     /// Pages of one sequence, in order.
@@ -295,5 +338,27 @@ mod tests {
         m.retier(1, KvPolicy::DynamicQuant { bf16: 1, fp8: 1, fp4: 1 });
         assert_eq!(m.release_seq(1), 2);
         assert!(m.pages.is_empty());
+    }
+
+    #[test]
+    fn sharded_placement_round_robins_spilled_pages() {
+        let mut m = KvPageManager::with_shards(4);
+        assert_eq!(m.shards(), 4);
+        for i in 0..8 {
+            m.add_page(1, i, false);
+        }
+        // stripe-strided addresses interleave cleanly: 2 pages per shard
+        assert_eq!(m.shard_loads(), vec![2, 2, 2, 2]);
+        // HBM pages don't count toward shard load
+        m.add_page(2, 0, true);
+        assert_eq!(m.shard_loads().iter().sum::<usize>(), 8);
+        // consecutive spilled pages land on distinct shards
+        let spilled: Vec<usize> = m
+            .pages
+            .iter()
+            .filter(|p| p.cxl_addr.is_some())
+            .map(|p| p.shard)
+            .collect();
+        assert_eq!(&spilled[..4], &[0, 1, 2, 3]);
     }
 }

@@ -10,9 +10,11 @@
 //! * [`hbm`] — capacity partition (paper Eq. 9) and hot-set accounting.
 //! * [`kvpage`] — paged KV manager: page table, importance scores, the
 //!   Table II policy ladder (full / sliding-window / top-k / dynamic
-//!   quantization tiers), placement across HBM and CXL.
+//!   quantization tiers), placement across HBM and CXL with shard-aware
+//!   (stripe-interleaved) spill addresses.
 //! * [`weights`] — weight store addressed by chunk (expert / head /
-//!   neuron), driving the Figs 18–21 fetch granularities.
+//!   neuron) at stripe-aligned, shard-aware device addresses, driving the
+//!   Figs 18–21 fetch granularities.
 
 pub mod hbm;
 pub mod kvpage;

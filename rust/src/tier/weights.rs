@@ -6,6 +6,7 @@
 //! The store maps chunk ids to device block ranges and produces the
 //! [`crate::dram::layout::ChunkFetch`] streams the DRAM benches replay.
 
+use crate::cxl::{shard_of, STRIPE_BYTES};
 use crate::dram::layout::{ChunkFetch, Region};
 use crate::gen::precision::PrecisionMix;
 use crate::util::Rng;
@@ -87,6 +88,26 @@ impl WeightStore {
     pub fn avg_bits(&self) -> f64 {
         self.bits.iter().map(|&b| b as f64).sum::<f64>() / self.n_chunks.max(1) as f64
     }
+
+    /// Stored bytes of one chunk at the region's container precision.
+    pub fn chunk_bytes(&self) -> u64 {
+        self.region.chunk_bytes() as u64
+    }
+
+    /// Stripe-aligned device block address of chunk `c` — the placement the
+    /// transaction layer addresses. Chunks are padded up to whole stripes
+    /// so every chunk starts on a shard-interleave boundary.
+    pub fn chunk_addr(&self, c: usize) -> u64 {
+        let stripes_per_chunk = self.chunk_bytes().div_ceil(STRIPE_BYTES).max(1);
+        self.region.base + c as u64 * stripes_per_chunk * STRIPE_BYTES
+    }
+
+    /// Which device shard owns chunk `c`'s first stripe under `shards`-way
+    /// interleaving (large chunks span all shards; this is the stripe the
+    /// fetch starts on).
+    pub fn chunk_shard(&self, c: usize, shards: usize) -> usize {
+        shard_of(self.chunk_addr(c), shards)
+    }
 }
 
 #[cfg(test)]
@@ -112,6 +133,25 @@ mod tests {
             assert_eq!(cf.bits, s.bits[cf.chunk]);
         }
         assert!((s.avg_bits() - 8.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn chunk_addresses_are_stripe_aligned_and_shard_aware() {
+        let mut rng = Rng::new(603);
+        let mix = mode_mix(16, 8.0);
+        let s = WeightStore::new(&mut rng, 0, ChunkGranularity::Neuron, 16, &mix, 16);
+        // neuron chunks (14.4 KB) round up to one 64 KB stripe each
+        assert_eq!(s.chunk_bytes(), 14_400);
+        for c in 0..16 {
+            assert_eq!(s.chunk_addr(c) % STRIPE_BYTES, 0);
+        }
+        // consecutive chunks therefore round-robin a 4-shard device
+        let shards: Vec<usize> = (0..8).map(|c| s.chunk_shard(c, 4)).collect();
+        assert_eq!(shards, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+        // big chunks span many stripes but still start aligned
+        let b = WeightStore::new(&mut rng, 0, ChunkGranularity::Head, 4, &mix, 16);
+        assert!(b.chunk_addr(1) >= b.chunk_bytes());
+        assert_eq!(b.chunk_addr(1) % STRIPE_BYTES, 0);
     }
 
     #[test]

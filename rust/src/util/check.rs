@@ -66,6 +66,23 @@ pub fn arb_bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
     out
 }
 
+/// Calibrated BF16 KV window: `n` tokens × `c` channels, token-major,
+/// per-channel scale with AR(1) smoothness across tokens — the regime of
+/// paper Fig. 2 that Mechanism I exploits. Shared by the device, sharding,
+/// and transaction-API tests/benches so the fixture can't diverge.
+pub fn smooth_kv(r: &mut Rng, n: usize, c: usize) -> Vec<u16> {
+    let mut kv = vec![0u16; n * c];
+    for j in 0..c {
+        let scale = 2f64.powi(r.range(-3, 3) as i32);
+        let mut v = r.normal() * scale;
+        for t in 0..n {
+            v = 0.97 * v + 0.03 * r.normal() * scale;
+            kv[t * c + j] = crate::formats::bf16_from_f32(v as f32);
+        }
+    }
+    kv
+}
+
 /// Random f32 tensor with controllable smoothness (AR(1) coefficient).
 pub fn arb_f32s(rng: &mut Rng, n: usize, smooth: f64) -> Vec<f32> {
     let mut out = Vec::with_capacity(n);

@@ -92,13 +92,63 @@ fn masked_reads_never_fabricate_unfetched_planes() {
 #[test]
 fn device_read_after_partial_overwrite_is_consistent() {
     // overwriting a block address replaces it atomically
-    use trace_cxl::cxl::{CxlDevice, Design};
+    use trace_cxl::cxl::{CxlDevice, Design, MemDevice, Transaction};
     let mut rng = Rng::new(905);
     let mut dev = CxlDevice::new(Design::Trace, CodecPolicy::FastBest);
     let a = KvGen::default_for(32).generate(&mut rng, 32);
     let b = KvGen::default_for(32).generate(&mut rng, 32);
-    dev.write_kv(0x1000, &a, KvWindow::new(32, 32));
-    assert_eq!(dev.read(0x1000).unwrap(), a);
-    dev.write_kv(0x1000, &b, KvWindow::new(32, 32));
-    assert_eq!(dev.read(0x1000).unwrap(), b);
+    let read = |dev: &mut CxlDevice| {
+        dev.submit_one(Transaction::ReadFull { block_addr: 0x1000 })
+            .unwrap()
+            .into_words()
+            .unwrap()
+    };
+    dev.submit_one(Transaction::WriteKv {
+        block_addr: 0x1000,
+        words: a.clone(),
+        window: KvWindow::new(32, 32),
+    })
+    .unwrap();
+    assert_eq!(read(&mut dev), a);
+    dev.submit_one(Transaction::WriteKv {
+        block_addr: 0x1000,
+        words: b.clone(),
+        window: KvWindow::new(32, 32),
+    })
+    .unwrap();
+    assert_eq!(read(&mut dev), b);
+}
+
+#[test]
+fn failed_transactions_complete_as_errors_without_poisoning_the_batch() {
+    // a missing block mid-batch must yield an error completion while the
+    // rest of the submission drains normally — never a panic, never
+    // silently wrong data
+    use trace_cxl::cxl::{CxlDevice, Design, MemDevice, SubmissionQueue, Transaction};
+    let mut rng = Rng::new(906);
+    let kv = KvGen::default_for(32).generate(&mut rng, 32);
+    let mut dev = CxlDevice::new(Design::Trace, CodecPolicy::FastBest);
+    dev.submit_one(Transaction::WriteKv {
+        block_addr: 0x0,
+        words: kv.clone(),
+        window: KvWindow::new(32, 32),
+    })
+    .unwrap();
+    let mut sq = SubmissionQueue::new();
+    let good_a = sq.submit(Transaction::ReadFull { block_addr: 0x0 });
+    let missing = sq.submit(Transaction::ReadFull { block_addr: 0xdead0000 });
+    let good_b = sq.submit(Transaction::ReadView {
+        block_addr: 0x0,
+        view: trace_cxl::bitplane::PrecisionView::bf16_mantissa(3, 1),
+    });
+    let completions = dev.drain(&mut sq);
+    assert_eq!(completions.len(), 3);
+    for c in completions {
+        if c.id == missing {
+            assert!(c.result.is_err());
+        } else {
+            assert!(c.result.is_ok(), "txn {} failed", c.id);
+            assert!(c.id == good_a || c.id == good_b);
+        }
+    }
 }

@@ -1,123 +1,133 @@
 //! Integration tests across runtime + coordinator + device.
 //!
-//! The PJRT-backed tests need compiled artifacts. They look for
+//! The PJRT-backed tests need the `pjrt` feature (XLA bindings are not in
+//! the offline vendor set) *and* compiled artifacts: they look for
 //! `TRACE_TEST_ARTIFACTS` (a directory produced by
 //! `python -m compile.aot --test-dims`) or fall back to generating it via
-//! the Python toolchain when available; otherwise those tests are skipped
-//! (mock-backend coverage still runs in the unit suite).
+//! the Python toolchain when available; otherwise those tests are skipped.
+//! Mock-backend coverage always runs.
 
-use std::path::PathBuf;
-use std::process::Command;
-use std::sync::OnceLock;
-
-use trace_cxl::codec::CodecPolicy;
 use trace_cxl::coordinator::{Engine, EngineConfig};
-use trace_cxl::cxl::Design;
-use trace_cxl::runtime::{MockBackend, ModelBackend, PjrtEngine};
-use trace_cxl::tier::KvPolicy;
+use trace_cxl::cxl::{Design, MemDevice};
+use trace_cxl::runtime::MockBackend;
 
-fn test_artifacts() -> Option<PathBuf> {
-    static DIR: OnceLock<Option<PathBuf>> = OnceLock::new();
-    DIR.get_or_init(|| {
-        if let Ok(d) = std::env::var("TRACE_TEST_ARTIFACTS") {
-            let p = PathBuf::from(d);
-            if p.join("manifest.json").exists() {
-                return Some(p);
+#[cfg(feature = "pjrt")]
+mod pjrt_backed {
+    use std::path::PathBuf;
+    use std::process::Command;
+    use std::sync::OnceLock;
+
+    use trace_cxl::codec::CodecPolicy;
+    use trace_cxl::coordinator::{Engine, EngineConfig};
+    use trace_cxl::cxl::{Design, MemDevice};
+    use trace_cxl::runtime::{ModelBackend, PjrtEngine};
+    use trace_cxl::tier::KvPolicy;
+
+    fn test_artifacts() -> Option<PathBuf> {
+        static DIR: OnceLock<Option<PathBuf>> = OnceLock::new();
+        DIR.get_or_init(|| {
+            if let Ok(d) = std::env::var("TRACE_TEST_ARTIFACTS") {
+                let p = PathBuf::from(d);
+                if p.join("manifest.json").exists() {
+                    return Some(p);
+                }
             }
-        }
-        // try to build tiny artifacts with the python toolchain
-        let out = std::env::temp_dir().join("trace_cxl_test_artifacts");
-        if out.join("manifest.json").exists() {
-            return Some(out);
-        }
-        let py_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).parent()?.join("python");
-        let status = Command::new("python")
-            .args(["-m", "compile.aot", "--out-dir"])
-            .arg(&out)
-            .arg("--test-dims")
-            .env("TRACE_TRAIN_STEPS", "0")
-            .current_dir(&py_dir)
-            .status()
-            .ok()?;
-        if status.success() {
-            Some(out)
-        } else {
-            None
-        }
-    })
-    .clone()
-}
-
-#[test]
-fn pjrt_engine_prefill_decode_roundtrip() {
-    let Some(dir) = test_artifacts() else {
-        eprintln!("skipping: no python toolchain for test artifacts");
-        return;
-    };
-    let mut eng = PjrtEngine::load(&dir).expect("load artifacts");
-    let dims = eng.dims().clone();
-    assert_eq!(dims.layers, 2);
-
-    let prompts = vec![vec![1u32, 2, 3, 4, 5, 6, 7, 8], vec![9, 10, 11, 12, 13, 14, 15, 16]];
-    let pre = eng.prefill(&prompts).unwrap();
-    assert_eq!(pre.logits.len(), dims.batch);
-    assert_eq!(pre.logits[0].len(), dims.vocab);
-    assert_eq!(pre.kv[0].len(), dims.t_prompt * dims.kv_entry_len());
-    assert!(pre.logits[0].iter().all(|x| x.is_finite()));
-
-    let toks = vec![5u32, 6];
-    let dec = eng.decode(&toks, &pre.kv, dims.t_prompt).unwrap();
-    assert_eq!(dec.logits.len(), dims.batch);
-    assert_eq!(dec.kv_new[0].len(), dims.kv_entry_len());
-    assert!(dec.kv_new[0].iter().any(|&x| x != 0.0));
-
-    // decode is deterministic
-    let dec2 = eng.decode(&toks, &pre.kv, dims.t_prompt).unwrap();
-    assert_eq!(dec.logits, dec2.logits);
-}
-
-#[test]
-fn pjrt_decode_depends_on_kv_history() {
-    let Some(dir) = test_artifacts() else {
-        return;
-    };
-    let mut eng = PjrtEngine::load(&dir).expect("load artifacts");
-    let dims = eng.dims().clone();
-    let prompts = vec![vec![1u32; dims.t_prompt], vec![2u32; dims.t_prompt]];
-    let pre = eng.prefill(&prompts).unwrap();
-    let dec_a = eng.decode(&[3, 3], &pre.kv, dims.t_prompt).unwrap();
-    // perturb the KV history: logits must change
-    let mut kv_b = pre.kv.clone();
-    for x in kv_b[0].iter_mut().take(64) {
-        *x += 1.0;
+            // try to build tiny artifacts with the python toolchain
+            let out = std::env::temp_dir().join("trace_cxl_test_artifacts");
+            if out.join("manifest.json").exists() {
+                return Some(out);
+            }
+            let py_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).parent()?.join("python");
+            let status = Command::new("python")
+                .args(["-m", "compile.aot", "--out-dir"])
+                .arg(&out)
+                .arg("--test-dims")
+                .env("TRACE_TRAIN_STEPS", "0")
+                .current_dir(&py_dir)
+                .status()
+                .ok()?;
+            if status.success() {
+                Some(out)
+            } else {
+                None
+            }
+        })
+        .clone()
     }
-    let dec_b = eng.decode(&[3, 3], &kv_b, dims.t_prompt).unwrap();
-    assert_ne!(dec_a.logits[0], dec_b.logits[0], "attention must read the cache");
-}
 
-#[test]
-fn engine_e2e_on_pjrt_backend_with_spill() {
-    let Some(dir) = test_artifacts() else {
-        return;
-    };
-    let backend = PjrtEngine::load(&dir).expect("load artifacts");
-    let mut engine = Engine::new(
-        backend,
-        EngineConfig {
-            design: Design::Trace,
-            codec: CodecPolicy::FastBest,
-            hbm_kv_bytes: 0, // force every page to spill through the device
-            policy: KvPolicy::FullKv,
-            greedy: true,
-        },
-    );
-    engine.submit(vec![1, 2, 3, 4], 18);
-    engine.submit(vec![5, 6, 7], 16);
-    engine.run_to_completion(200).unwrap();
-    let rs = engine.take_responses();
-    assert_eq!(rs.len(), 2);
-    assert!(engine.metrics.pages_spilled > 0, "must exercise the CXL path");
-    assert!(engine.device.stats.dram_bytes_written > 0);
+    #[test]
+    fn pjrt_engine_prefill_decode_roundtrip() {
+        let Some(dir) = test_artifacts() else {
+            eprintln!("skipping: no python toolchain for test artifacts");
+            return;
+        };
+        let mut eng = PjrtEngine::load(&dir).expect("load artifacts");
+        let dims = eng.dims().clone();
+        assert_eq!(dims.layers, 2);
+
+        let prompts =
+            vec![vec![1u32, 2, 3, 4, 5, 6, 7, 8], vec![9, 10, 11, 12, 13, 14, 15, 16]];
+        let pre = eng.prefill(&prompts).unwrap();
+        assert_eq!(pre.logits.len(), dims.batch);
+        assert_eq!(pre.logits[0].len(), dims.vocab);
+        assert_eq!(pre.kv[0].len(), dims.t_prompt * dims.kv_entry_len());
+        assert!(pre.logits[0].iter().all(|x| x.is_finite()));
+
+        let toks = vec![5u32, 6];
+        let dec = eng.decode(&toks, &pre.kv, dims.t_prompt).unwrap();
+        assert_eq!(dec.logits.len(), dims.batch);
+        assert_eq!(dec.kv_new[0].len(), dims.kv_entry_len());
+        assert!(dec.kv_new[0].iter().any(|&x| x != 0.0));
+
+        // decode is deterministic
+        let dec2 = eng.decode(&toks, &pre.kv, dims.t_prompt).unwrap();
+        assert_eq!(dec.logits, dec2.logits);
+    }
+
+    #[test]
+    fn pjrt_decode_depends_on_kv_history() {
+        let Some(dir) = test_artifacts() else {
+            return;
+        };
+        let mut eng = PjrtEngine::load(&dir).expect("load artifacts");
+        let dims = eng.dims().clone();
+        let prompts = vec![vec![1u32; dims.t_prompt], vec![2u32; dims.t_prompt]];
+        let pre = eng.prefill(&prompts).unwrap();
+        let dec_a = eng.decode(&[3, 3], &pre.kv, dims.t_prompt).unwrap();
+        // perturb the KV history: logits must change
+        let mut kv_b = pre.kv.clone();
+        for x in kv_b[0].iter_mut().take(64) {
+            *x += 1.0;
+        }
+        let dec_b = eng.decode(&[3, 3], &kv_b, dims.t_prompt).unwrap();
+        assert_ne!(dec_a.logits[0], dec_b.logits[0], "attention must read the cache");
+    }
+
+    #[test]
+    fn engine_e2e_on_pjrt_backend_with_spill() {
+        let Some(dir) = test_artifacts() else {
+            return;
+        };
+        let backend = PjrtEngine::load(&dir).expect("load artifacts");
+        let mut engine = Engine::new(
+            backend,
+            EngineConfig {
+                design: Design::Trace,
+                codec: CodecPolicy::FastBest,
+                hbm_kv_bytes: 0, // force every page to spill through the device
+                policy: KvPolicy::FullKv,
+                greedy: true,
+                shards: 1,
+            },
+        );
+        engine.submit(vec![1, 2, 3, 4], 18);
+        engine.submit(vec![5, 6, 7], 16);
+        engine.run_to_completion(200).unwrap();
+        let rs = engine.take_responses();
+        assert_eq!(rs.len(), 2);
+        assert!(engine.metrics.pages_spilled > 0, "must exercise the CXL path");
+        assert!(engine.device.stats().dram_bytes_written > 0);
+    }
 }
 
 #[test]
@@ -127,11 +137,7 @@ fn engine_lossless_spill_equivalence_mock() {
     let run = |hbm: u64, design: Design| {
         let mut e = Engine::new(
             MockBackend::tiny(),
-            EngineConfig {
-                design,
-                hbm_kv_bytes: hbm,
-                ..Default::default()
-            },
+            EngineConfig { design, hbm_kv_bytes: hbm, ..Default::default() },
         );
         e.submit(vec![1, 2, 3], 40);
         e.run_to_completion(200).unwrap();
@@ -141,4 +147,21 @@ fn engine_lossless_spill_equivalence_mock() {
     for design in [Design::Plain, Design::GComp, Design::Trace] {
         assert_eq!(run(0, design), reference, "{design:?} spill changed tokens");
     }
+}
+
+#[test]
+fn engine_lossless_spill_equivalence_sharded_mock() {
+    // the same invariant with a 4-shard device fleet behind the engine
+    let run = |shards: usize| {
+        let mut e = Engine::new(
+            MockBackend::tiny(),
+            EngineConfig { hbm_kv_bytes: 0, shards, ..Default::default() },
+        );
+        e.submit(vec![1, 2, 3], 40);
+        e.run_to_completion(200).unwrap();
+        assert!(e.metrics.pages_spilled > 0);
+        assert_eq!(e.device.shards(), shards);
+        e.take_responses().pop().unwrap().tokens
+    };
+    assert_eq!(run(1), run(4));
 }

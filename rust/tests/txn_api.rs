@@ -1,0 +1,196 @@
+//! Transaction-API coverage: precision-view roundtrips across all three
+//! `Design`s (Plain / GComp / TRACE), the metadata-cache-miss path, and
+//! single-vs-sharded equivalence — everything through `MemDevice` +
+//! `SubmissionQueue`, never a concrete method.
+
+use trace_cxl::bitplane::{KvWindow, PrecisionView};
+use trace_cxl::codec::CodecPolicy;
+use trace_cxl::cxl::{
+    CxlDevice, Design, IndexCache, MemDevice, ShardedDevice, SubmissionQueue, Transaction,
+    STRIPE_BYTES,
+};
+use trace_cxl::formats::Fmt;
+use trace_cxl::tier::PageTier;
+use trace_cxl::util::check::smooth_kv;
+use trace_cxl::util::Rng;
+
+fn all_designs(policy: CodecPolicy) -> [CxlDevice; 3] {
+    [
+        CxlDevice::new(Design::Plain, policy),
+        CxlDevice::new(Design::GComp, policy),
+        CxlDevice::new(Design::Trace, policy),
+    ]
+}
+
+fn write_kv(d: &mut dyn MemDevice, addr: u64, kv: &[u16], window: KvWindow) {
+    d.submit_one(Transaction::WriteKv { block_addr: addr, words: kv.to_vec(), window }).unwrap();
+}
+
+fn read_view(d: &mut dyn MemDevice, addr: u64, view: PrecisionView) -> Vec<u16> {
+    d.submit_one(Transaction::ReadView { block_addr: addr, view })
+        .unwrap()
+        .into_words()
+        .unwrap()
+}
+
+#[test]
+fn precision_view_roundtrips_identical_across_designs() {
+    // every tier-ladder view must return bit-identical host-visible words
+    // on all three designs (paper §III-D invariant), via the txn queue
+    let mut r = Rng::new(811);
+    let kv = smooth_kv(&mut r, 32, 64);
+    let views = [
+        PrecisionView::full(Fmt::Bf16),
+        PrecisionView::bf16_mantissa(5, 1),
+        PrecisionView::bf16_mantissa(3, 1),
+        PrecisionView::bf16_mantissa(3, 0),
+        PrecisionView::bf16_mantissa(0, 1),
+        PrecisionView::bf16_mantissa(0, 0),
+    ];
+    for policy in [CodecPolicy::FastBest, CodecPolicy::AllBest] {
+        let mut devs = all_designs(policy);
+        for d in devs.iter_mut() {
+            write_kv(d, 0x0, &kv, KvWindow::new(32, 64));
+        }
+        for view in views {
+            let outs: Vec<Vec<u16>> =
+                devs.iter_mut().map(|d| read_view(d, 0x0, view)).collect();
+            assert_eq!(outs[0], outs[1], "plain vs gcomp, view {view:?}");
+            assert_eq!(outs[0], outs[2], "plain vs trace, view {view:?}");
+            if view.is_full() {
+                assert_eq!(outs[0], kv, "full view must be lossless");
+            }
+        }
+    }
+}
+
+#[test]
+fn tier_ladder_views_roundtrip_through_the_queue() {
+    // the exact views the page-tier policy issues, batched in one
+    // submission and routed back by id
+    let mut r = Rng::new(812);
+    let kv = smooth_kv(&mut r, 16, 128);
+    for mut d in all_designs(CodecPolicy::AllBest) {
+        write_kv(&mut d, 0x0, &kv, KvWindow::new(16, 128));
+        let mut sq = SubmissionQueue::new();
+        let mut ids = Vec::new();
+        for tier in [PageTier::Bf16, PageTier::Fp8, PageTier::Fp4] {
+            let view = tier.view().unwrap();
+            ids.push(sq.submit(Transaction::ReadView { block_addr: 0x0, view }));
+        }
+        let completions = d.drain(&mut sq);
+        assert_eq!(completions.len(), 3);
+        for c in completions {
+            assert!(ids.contains(&c.id));
+            let words = c.words().unwrap();
+            assert_eq!(words.len(), kv.len());
+        }
+    }
+}
+
+#[test]
+fn metadata_cache_miss_path_charges_and_reports() {
+    // a cold/thrashing index cache must surface in stats and in the
+    // per-completion latency (one extra DRAM window), on GComp and TRACE
+    let mut r = Rng::new(813);
+    let kv = smooth_kv(&mut r, 32, 64);
+    for design in [Design::GComp, Design::Trace] {
+        let mut d = CxlDevice::new(design, CodecPolicy::FastBest);
+        d.index_cache = IndexCache::new(2); // tiny: guaranteed conflict misses
+        for b in 0..8u64 {
+            write_kv(&mut d, b * STRIPE_BYTES, &kv, KvWindow::new(32, 64));
+        }
+        d.reset_stats();
+        let mut sq = SubmissionQueue::new();
+        for b in 0..8u64 {
+            sq.submit(Transaction::ReadView {
+                block_addr: b * STRIPE_BYTES,
+                view: PrecisionView::bf16_mantissa(3, 1),
+            });
+        }
+        let completions = d.drain(&mut sq);
+        let misses = d.stats().metadata_dram_reads;
+        assert!(misses > 0, "{design:?}: tiny cache must miss");
+        let with_penalty = completions
+            .iter()
+            .filter(|c| c.latency.map_or(0, |l| l.meta_miss) > 0)
+            .count() as u64;
+        assert_eq!(with_penalty, misses, "{design:?}: completions must carry the miss window");
+        // and the values still roundtrip identically to a warm device
+        let mut warm = CxlDevice::new(design, CodecPolicy::FastBest);
+        write_kv(&mut warm, 0x0, &kv, KvWindow::new(32, 64));
+        let expect = read_view(&mut warm, 0x0, PrecisionView::bf16_mantissa(3, 1));
+        let got = read_view(&mut d, 0x0, PrecisionView::bf16_mantissa(3, 1));
+        assert_eq!(got, expect, "{design:?}: miss path must not corrupt data");
+    }
+}
+
+#[test]
+fn partial_plane_ranges_keep_host_visible_equivalence() {
+    // §III-D invariant extended to ReadPlanes: for ANY range, every design
+    // returns the host words with bits outside the range zeroed — even on
+    // KV blocks where TRACE must fetch the delta-coded exponent core to
+    // invert exactly
+    let mut r = Rng::new(816);
+    let kv = smooth_kv(&mut r, 32, 64);
+    let ranges: [std::ops::Range<usize>; 5] = [0..7, 7..16, 10..14, 15..16, 0..16];
+    for range in ranges {
+        let mut outs = Vec::new();
+        for mut d in all_designs(CodecPolicy::AllBest) {
+            write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
+            let words = d
+                .submit_one(Transaction::ReadPlanes { block_addr: 0x0, range: range.clone() })
+                .unwrap()
+                .into_words()
+                .unwrap();
+            outs.push(words);
+        }
+        assert_eq!(outs[0], outs[1], "plain vs gcomp, range {range:?}");
+        assert_eq!(outs[0], outs[2], "plain vs trace, range {range:?}");
+        // and the baseline semantics are plain truncation of the original
+        let mut keep: u16 = 0;
+        for b in range.clone() {
+            keep |= 1 << b;
+        }
+        let expect: Vec<u16> = kv.iter().map(|&w| w & keep).collect();
+        assert_eq!(outs[0], expect, "range {range:?}");
+    }
+}
+
+#[test]
+fn plane_range_reads_scale_bytes_on_trace_only() {
+    let mut r = Rng::new(814);
+    let kv = smooth_kv(&mut r, 32, 64);
+    let mut plain = CxlDevice::new(Design::Plain, CodecPolicy::AllBest);
+    let mut trace = CxlDevice::new(Design::Trace, CodecPolicy::AllBest);
+    write_kv(&mut plain, 0x0, &kv, KvWindow::new(32, 64));
+    write_kv(&mut trace, 0x0, &kv, KvWindow::new(32, 64));
+    plain.reset_stats();
+    trace.reset_stats();
+    // sign + exponent planes only (bit positions 8..16)
+    plain.submit_one(Transaction::ReadPlanes { block_addr: 0x0, range: 8..16 }).unwrap();
+    trace.submit_one(Transaction::ReadPlanes { block_addr: 0x0, range: 8..16 }).unwrap();
+    // Plain serves the full container; TRACE fetches only those planes
+    assert_eq!(plain.stats().dram_bytes_read, 4096);
+    assert!(trace.stats().dram_bytes_read * 2 < 4096);
+}
+
+#[test]
+fn sharded_views_match_single_device_views() {
+    let mut r = Rng::new(815);
+    let kv = smooth_kv(&mut r, 32, 64);
+    let mut one = CxlDevice::new(Design::Trace, CodecPolicy::FastBest);
+    let mut four = ShardedDevice::new(4, Design::Trace, CodecPolicy::FastBest);
+    for b in 0..8u64 {
+        write_kv(&mut one, b * STRIPE_BYTES, &kv, KvWindow::new(32, 64));
+        write_kv(&mut four, b * STRIPE_BYTES, &kv, KvWindow::new(32, 64));
+    }
+    for b in 0..8u64 {
+        for view in [PrecisionView::full(Fmt::Bf16), PrecisionView::bf16_mantissa(3, 1)] {
+            let a = read_view(&mut one, b * STRIPE_BYTES, view);
+            let d = read_view(&mut four, b * STRIPE_BYTES, view);
+            assert_eq!(a, d, "block {b} view {view:?}");
+        }
+    }
+    assert_eq!(one.stats().dram_bytes_read, four.stats().dram_bytes_read);
+}

@@ -1,0 +1,165 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build runs against a fixed vendor set with no registry access, so
+//! this crate supplies the subset of `anyhow` the workspace actually uses:
+//! [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`] macros,
+//! and the [`Context`] extension trait for `Result` and `Option`.
+//!
+//! Error values carry a flattened message chain (context is prepended as
+//! `"context: cause"`); there is no backtrace capture. That is sufficient
+//! for every call site in `trace_cxl`, which formats errors with `{}` /
+//! `{:#}` and never downcasts.
+
+use std::fmt;
+
+/// A string-backed error value, API-compatible with `anyhow::Error` for
+/// the operations this workspace performs (construct, contextualize,
+/// display).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend context, mirroring `anyhow`'s `"{context}: {cause}"` chain.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`; exactly like
+// the real `anyhow`, that is what makes this blanket `From` coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension for fallible values.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{ctx}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: `{}`", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn may_fail(x: i32) -> Result<i32> {
+        ensure!(x >= 0, "negative input {x}");
+        if x == 1 {
+            bail!("one is not allowed");
+        }
+        Ok(x * 2)
+    }
+
+    #[test]
+    fn macros_and_display() {
+        assert_eq!(may_fail(2).unwrap(), 4);
+        assert_eq!(may_fail(-3).unwrap_err().to_string(), "negative input -3");
+        assert_eq!(may_fail(1).unwrap_err().to_string(), "one is not allowed");
+        let e = anyhow!("v={}", 7);
+        assert_eq!(format!("{e}"), "v=7");
+        assert_eq!(format!("{e:#}"), "v=7");
+        assert_eq!(format!("{e:?}"), "v=7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("41").unwrap(), 41);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("outer").unwrap_err();
+        assert!(e.to_string().starts_with("outer: "));
+        let n: Option<i32> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+        let w: Option<i32> = None;
+        assert_eq!(w.with_context(|| format!("k={}", 3)).unwrap_err().to_string(), "k=3");
+    }
+}

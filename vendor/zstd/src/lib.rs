@@ -1,0 +1,347 @@
+//! Minimal offline stand-in for the `zstd` crate's `bulk` API.
+//!
+//! The workspace builds against a fixed vendor set with no registry access,
+//! so this crate supplies `zstd::bulk::{compress, decompress}` with the
+//! same signatures the real crate exposes. It is **not** the zstd wire
+//! format: payloads are coded with a canonical-Huffman entropy coder plus a
+//! raw bypass. That preserves the property the TRACE model actually relies
+//! on — an "amortizable, stronger-than-LZ4 on low-entropy streams" codec —
+//! while staying a few hundred lines of dependency-free Rust.
+//!
+//! Framing: `[mode u8]` then either the raw payload (mode 0) or, for mode 1,
+//! `varint n` (decoded length), `K-1 u8` (distinct symbols), `K` pairs of
+//! `[symbol u8][code_len u8]` sorted by `(len, symbol)`, and the MSB-first
+//! bitstream. Corrupt or truncated input yields `io::Error`, never a panic.
+
+pub mod bulk {
+    use std::io;
+
+    const MODE_RAW: u8 = 0;
+    const MODE_HUFF: u8 = 1;
+    /// Depth cap keeps canonical codes inside a u64; unreachable for real
+    /// inputs below multi-terabyte sizes (Huffman depth grows ~log_phi(n)).
+    const MAX_CODE_LEN: u32 = 48;
+
+    fn bad(msg: &str) -> io::Error {
+        io::Error::new(io::ErrorKind::InvalidData, msg)
+    }
+
+    fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+        loop {
+            let b = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                out.push(b);
+                break;
+            }
+            out.push(b | 0x80);
+        }
+    }
+
+    fn get_varint(b: &[u8]) -> Option<(u64, usize)> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        for (i, &byte) in b.iter().enumerate() {
+            if shift >= 64 {
+                return None;
+            }
+            v |= ((byte & 0x7f) as u64) << shift;
+            if byte & 0x80 == 0 {
+                return Some((v, i + 1));
+            }
+            shift += 7;
+        }
+        None
+    }
+
+    /// Compress `src`. `level` is accepted for API compatibility and
+    /// ignored (there is a single operating point).
+    pub fn compress(src: &[u8], _level: i32) -> io::Result<Vec<u8>> {
+        if let Some(h) = huff_compress(src) {
+            if h.len() < src.len() + 1 {
+                return Ok(h);
+            }
+        }
+        let mut out = Vec::with_capacity(src.len() + 1);
+        out.push(MODE_RAW);
+        out.extend_from_slice(src);
+        Ok(out)
+    }
+
+    /// Decompress into at most `capacity` bytes.
+    pub fn decompress(src: &[u8], capacity: usize) -> io::Result<Vec<u8>> {
+        let (&mode, rest) = src.split_first().ok_or_else(|| bad("empty stream"))?;
+        match mode {
+            MODE_RAW => {
+                if rest.len() > capacity {
+                    return Err(bad("raw payload exceeds capacity"));
+                }
+                Ok(rest.to_vec())
+            }
+            MODE_HUFF => huff_decompress(rest, capacity),
+            _ => Err(bad("bad mode byte")),
+        }
+    }
+
+    /// Huffman code lengths per symbol, or None when the input is empty or
+    /// pathologically deep (caller falls back to the raw mode).
+    fn code_lengths(freq: &[u64; 256]) -> Option<Vec<u32>> {
+        let used: Vec<usize> = (0..256).filter(|&s| freq[s] > 0).collect();
+        if used.is_empty() {
+            return None;
+        }
+        let mut lens = vec![0u32; 256];
+        if used.len() == 1 {
+            lens[used[0]] = 1;
+            return Some(lens);
+        }
+        // Plain two-queue-free heap construction with parent links.
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        let n = used.len();
+        let mut weight: Vec<u64> = used.iter().map(|&s| freq[s]).collect();
+        let mut parent: Vec<usize> = vec![usize::MAX; n];
+        let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+            (0..n).map(|i| Reverse((weight[i], i))).collect();
+        while heap.len() > 1 {
+            let Reverse((wa, a)) = heap.pop().unwrap();
+            let Reverse((wb, b)) = heap.pop().unwrap();
+            let p = weight.len();
+            weight.push(wa + wb);
+            parent.push(usize::MAX);
+            parent[a] = p;
+            parent[b] = p;
+            heap.push(Reverse((wa + wb, p)));
+        }
+        for (i, &s) in used.iter().enumerate() {
+            let mut depth = 0u32;
+            let mut node = i;
+            while parent[node] != usize::MAX {
+                depth += 1;
+                node = parent[node];
+            }
+            if depth > MAX_CODE_LEN {
+                return None;
+            }
+            lens[s] = depth;
+        }
+        Some(lens)
+    }
+
+    /// Canonical code values for symbols with nonzero length, assigned in
+    /// `(len, symbol)` order.
+    fn canonical_codes(lens: &[u32]) -> Vec<u64> {
+        let mut syms: Vec<usize> = (0..256).filter(|&s| lens[s] > 0).collect();
+        syms.sort_by_key(|&s| (lens[s], s));
+        let mut codes = vec![0u64; 256];
+        let mut code = 0u64;
+        let mut prev_len = 0u32;
+        for &s in &syms {
+            code <<= lens[s] - prev_len;
+            codes[s] = code;
+            code += 1;
+            prev_len = lens[s];
+        }
+        codes
+    }
+
+    fn huff_compress(src: &[u8]) -> Option<Vec<u8>> {
+        if src.is_empty() {
+            return None;
+        }
+        let mut freq = [0u64; 256];
+        for &b in src {
+            freq[b as usize] += 1;
+        }
+        let lens = code_lengths(&freq)?;
+        let codes = canonical_codes(&lens);
+        let mut out = Vec::with_capacity(src.len() / 2 + 16);
+        out.push(MODE_HUFF);
+        put_varint(&mut out, src.len() as u64);
+        let mut used: Vec<usize> = (0..256).filter(|&s| lens[s] > 0).collect();
+        used.sort_by_key(|&s| (lens[s], s));
+        out.push((used.len() - 1) as u8);
+        for &s in &used {
+            out.push(s as u8);
+            out.push(lens[s] as u8);
+        }
+        let mut acc: u64 = 0;
+        let mut nbits: u32 = 0;
+        for &b in src {
+            acc = (acc << lens[b as usize]) | codes[b as usize];
+            nbits += lens[b as usize];
+            while nbits >= 8 {
+                nbits -= 8;
+                out.push(((acc >> nbits) & 0xff) as u8);
+            }
+        }
+        if nbits > 0 {
+            out.push(((acc << (8 - nbits)) & 0xff) as u8);
+        }
+        Some(out)
+    }
+
+    fn huff_decompress(src: &[u8], capacity: usize) -> io::Result<Vec<u8>> {
+        let (n, varint_len) = get_varint(src).ok_or_else(|| bad("truncated length"))?;
+        let n = usize::try_from(n).map_err(|_| bad("length overflow"))?;
+        if n > capacity {
+            return Err(bad("decoded length exceeds capacity"));
+        }
+        let rest = &src[varint_len..];
+        let (&kb, rest) = rest.split_first().ok_or_else(|| bad("truncated table"))?;
+        let k = kb as usize + 1;
+        if rest.len() < 2 * k {
+            return Err(bad("truncated symbol table"));
+        }
+        let mut pairs: Vec<(u8, u32)> = Vec::with_capacity(k);
+        for i in 0..k {
+            let sym = rest[2 * i];
+            let len = rest[2 * i + 1] as u32;
+            if len == 0 || len > MAX_CODE_LEN {
+                return Err(bad("bad code length"));
+            }
+            pairs.push((sym, len));
+        }
+        let bits = &rest[2 * k..];
+        pairs.sort_by_key(|&(s, l)| (l, s));
+        let max_len = pairs.last().map(|&(_, l)| l).unwrap_or(0) as usize;
+        // Rebuild canonical layout: per length, first code + symbol list.
+        let mut first = vec![0u64; max_len + 1];
+        let mut syms_at: Vec<Vec<u8>> = vec![Vec::new(); max_len + 1];
+        let mut code = 0u64;
+        let mut prev_len = 0u32;
+        for &(s, l) in &pairs {
+            code <<= l - prev_len;
+            if syms_at[l as usize].is_empty() {
+                first[l as usize] = code;
+            }
+            syms_at[l as usize].push(s);
+            code += 1;
+            prev_len = l;
+            if code > (1u64 << l) {
+                return Err(bad("over-subscribed code table"));
+            }
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut code = 0u64;
+        let mut len = 0usize;
+        'outer: for byte_idx in 0..=bits.len() {
+            if out.len() == n {
+                break;
+            }
+            if byte_idx == bits.len() {
+                return Err(bad("truncated bitstream"));
+            }
+            let byte = bits[byte_idx];
+            for bit_pos in (0..8).rev() {
+                code = (code << 1) | ((byte >> bit_pos) & 1) as u64;
+                len += 1;
+                if len > max_len {
+                    return Err(bad("invalid code"));
+                }
+                if !syms_at[len].is_empty() && code >= first[len] {
+                    let idx = (code - first[len]) as usize;
+                    if idx < syms_at[len].len() {
+                        out.push(syms_at[len][idx]);
+                        code = 0;
+                        len = 0;
+                        if out.len() == n {
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+        }
+        if out.len() != n {
+            return Err(bad("truncated bitstream"));
+        }
+        Ok(out)
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        // Tiny xorshift so the tests need no external RNG.
+        struct X(u64);
+        impl X {
+            fn next(&mut self) -> u64 {
+                self.0 ^= self.0 << 13;
+                self.0 ^= self.0 >> 7;
+                self.0 ^= self.0 << 17;
+                self.0
+            }
+        }
+
+        fn roundtrip(data: &[u8]) {
+            let enc = compress(data, 3).unwrap();
+            let dec = decompress(&enc, data.len()).unwrap();
+            assert_eq!(dec, data);
+        }
+
+        #[test]
+        fn roundtrips_all_shapes() {
+            let mut x = X(0xDEADBEEF);
+            for case in 0..200 {
+                let len = (x.next() % 5000) as usize;
+                let mut data = vec![0u8; len];
+                match case % 5 {
+                    0 => {
+                        for b in data.iter_mut() {
+                            *b = x.next() as u8;
+                        }
+                    }
+                    1 => { /* all zeros */ }
+                    2 => {
+                        for b in data.iter_mut() {
+                            *b = b'a' + (x.next() % 20) as u8;
+                        }
+                    }
+                    3 => {
+                        for (i, b) in data.iter_mut().enumerate() {
+                            *b = (i % 7) as u8;
+                        }
+                    }
+                    _ => {
+                        for b in data.iter_mut() {
+                            *b = if x.next() % 20 == 0 { x.next() as u8 } else { 0 };
+                        }
+                    }
+                }
+                roundtrip(&data);
+            }
+        }
+
+        #[test]
+        fn single_symbol_and_empty() {
+            roundtrip(&[]);
+            roundtrip(&[42]);
+            roundtrip(&[7; 4096]);
+        }
+
+        #[test]
+        fn low_entropy_shrinks() {
+            let mut x = X(99);
+            let data: Vec<u8> = (0..16384).map(|_| b'a' + (x.next() % 20) as u8).collect();
+            let enc = compress(&data, 3).unwrap();
+            // log2(20) ~ 4.32 bits/byte; allow slack for the header
+            assert!(enc.len() < data.len() * 6 / 10, "enc={}", enc.len());
+        }
+
+        #[test]
+        fn garbage_errors() {
+            assert!(decompress(&[], 10).is_err());
+            assert!(decompress(&[9, 9, 9], 10).is_err());
+            assert!(decompress(&[1, 2, 3, 4], 100).is_err());
+            // valid header, truncated bitstream
+            let enc = compress(&[5u8; 100], 3).unwrap();
+            assert!(decompress(&enc[..enc.len() - 1], 100).is_err());
+        }
+
+        #[test]
+        fn capacity_is_enforced() {
+            let enc = compress(&[1, 2, 3, 4, 5], 3).unwrap();
+            assert!(decompress(&enc, 2).is_err());
+        }
+    }
+}
