@@ -9,9 +9,11 @@
 use std::time::Instant;
 use trace_cxl::bitplane::{transpose_from_planes, transpose_to_planes, DeviceBlock, KvTransform, KvWindow};
 use trace_cxl::codec::{self, compress_best, CodecKind, CodecPolicy};
+use trace_cxl::coordinator::{Engine, EngineConfig};
 use trace_cxl::cxl::{CxlDevice, Design, MemDevice, Transaction};
 use trace_cxl::dram::{AddrMap, DramConfig, DramSim, EnergyParams, Request};
 use trace_cxl::gen::KvGen;
+use trace_cxl::runtime::{MockBackend, ModelDims};
 use trace_cxl::util::Rng;
 
 fn bench<F: FnMut() -> usize>(name: &str, bytes_label: &str, mut f: F) -> f64 {
@@ -130,6 +132,52 @@ fn main() {
         n
     });
     assert!(r > 5e6, "DRAM sim target 5M cmd/s, got {:.1}M", r / 1e6);
+
+    // Engine decode-step cost vs context length, all-HBM. The gather path
+    // must NOT copy HBM-resident KV per step (the old `s.kv.clone()` made
+    // every step O(context)); with the persistent work-buffer scatter the
+    // per-step cost is O(pages-metadata + entry), so a ~30x longer context
+    // must not cost anywhere near ~30x per step.
+    {
+        let dims = ModelDims {
+            layers: 2,
+            batch: 1,
+            t_max: 4096,
+            t_prompt: 8,
+            d_model: 64,
+            heads: 4,
+            head_dim: 16,
+            ffn: 128,
+            vocab: 256,
+        };
+        let mut e = Engine::new(
+            MockBackend::new(dims, 7),
+            EngineConfig { hbm_kv_bytes: 1 << 30, ..Default::default() },
+        );
+        e.submit(vec![1, 2, 3, 4], 4000);
+        let steps = |e: &mut Engine<MockBackend>, n: usize| -> f64 {
+            let t0 = Instant::now();
+            for _ in 0..n {
+                e.step().unwrap();
+            }
+            t0.elapsed().as_secs_f64()
+        };
+        steps(&mut e, 16); // warm-up, ctx ~24
+        let early = steps(&mut e, 100); // ctx ~25..125
+        steps(&mut e, 3500); // advance to ctx ~3600
+        let late = steps(&mut e, 100); // ctx ~3625..3725
+        println!(
+            "engine step, all-HBM KV       early(ctx~100) {:>8.1} us   late(ctx~3700) {:>8.1} us   ratio {:.2}x",
+            early * 1e4, // 100 steps -> us/step
+            late * 1e4,
+            late / early
+        );
+        assert!(
+            late < 8.0 * early,
+            "gather must not copy HBM-resident KV per step: early {early:.6}s late {late:.6}s"
+        );
+        assert_eq!(e.metrics.pages_spilled, 0, "all-HBM run must not spill");
+    }
 
     // Full device round trip through the transaction API. NOTE: unlike the
     // pre-transaction bench, the measured loop now includes building the

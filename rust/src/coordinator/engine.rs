@@ -1,28 +1,56 @@
 //! The serving engine: continuous batching over a fixed slot count, with
-//! KV pages placed across HBM and the simulated TRACE CXL tier.
+//! KV pages placed across HBM and the simulated TRACE CXL tier, driven by
+//! a discrete-event model-time clock.
 //!
 //! The device side is a `Box<dyn MemDevice>` — a single
 //! [`CxlDevice`](crate::cxl::CxlDevice) or an N-way
 //! [`ShardedDevice`](crate::cxl::ShardedDevice) selected by
 //! [`EngineConfig::shards`]. Each decode step batches **all** spilled-page
 //! fetches of the whole batch into one [`SubmissionQueue`], drains the
-//! completions (which a sharded device serves with per-shard queues in
-//! parallel model-time), and scatters the payloads back into each slot's
-//! attention KV — one submission per step instead of one blocking call per
-//! page.
+//! completions (each carrying an absolute ready-at model time from the
+//! device's resource timelines), and scatters the payloads back into each
+//! slot's attention KV.
+//!
+//! ## Two-stage pipeline (`EngineConfig::overlap`)
+//!
+//! Serial mode: step N's compute starts only after step N's fetches are
+//! ready, so model-time per step is `fetch + compute`.
+//!
+//! Overlapped mode: while step N's compute occupies the backend timeline,
+//! the engine *predicts* step N+1's spilled-page fetch set from the pager
+//! (page residency changes only at deterministic page-commit boundaries,
+//! so the prediction is exact in steady state) and issues those reads as
+//! prefetch transactions at compute start — they execute on the device
+//! timelines concurrently with compute and wait in an [`EventQueue`] until
+//! step N+1 consumes them. A correctness fence re-derives the demand plan
+//! at consumption time and discards any prefetch whose (sequence, page,
+//! device address, precision tier) no longer matches — e.g. a page
+//! promoted back to HBM in between. Tokens are therefore bit-identical to
+//! the serial engine unconditionally, and aggregate device byte traffic
+//! is identical whenever no prefetch was invalidated (the steady state:
+//! the prediction is exact, so `Metrics::prefetch_stale` stays 0) *and*
+//! the spilled working set fits the device's on-chip index cache —
+//! prefetching reorders reads, and metadata-cache **conflict** misses
+//! are order-sensitive, so byte-exact equality additionally assumes no
+//! cache aliasing (8192 entries = 32 MB of 4 KB blocks by default;
+//! compulsory misses are order-independent). A discarded stale prefetch
+//! costs exactly its own already-executed reads and nothing else
+//! (`tests/overlap_equiv.rs`). The page a step commits mid-flight cannot
+//! be prefetched (it is not written until after compute) and is
+//! demand-fetched next step.
 
 use super::metrics::Metrics;
 use super::request::{AdmissionQueue, Request, RequestState, Response};
-use crate::bitplane::KvWindow;
 use crate::codec::CodecPolicy;
 use crate::cxl::{
     CxlDevice, Design, MemDevice, ShardedDevice, SubmissionQueue, Transaction, TxnId,
 };
 use crate::formats::{bf16_from_f32, bf16_to_f32};
 use crate::runtime::ModelBackend;
+use crate::sim::{EventQueue, ResourceTimeline, SimClock};
 use crate::tier::{HbmPartition, KvPageManager, KvPolicy, PageTier, PAGE_TOKENS};
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::time::Instant;
 
 /// Engine configuration.
@@ -39,6 +67,13 @@ pub struct EngineConfig {
     pub greedy: bool,
     /// Number of CXL device shards (1 = a single device).
     pub shards: usize,
+    /// Two-stage pipeline: prefetch step N+1's spilled pages during step
+    /// N's compute (model time). Bit-identical tokens and device traffic.
+    pub overlap: bool,
+    /// Model-time cost of one backend decode step, ns. The default is a
+    /// placeholder magnitude (≈0.5k tok/s per slot); figure benches and
+    /// `serve_e2e --compute-ns` calibrate it per deployment.
+    pub compute_ns: f64,
 }
 
 impl Default for EngineConfig {
@@ -50,18 +85,51 @@ impl Default for EngineConfig {
             policy: KvPolicy::FullKv,
             greedy: true,
             shards: 1,
+            overlap: false,
+            compute_ns: 2000.0,
         }
     }
+}
+
+/// One sequence's `(page index, device address)` pairs in index order —
+/// `None` marks HBM residency.
+type PageList = Vec<(usize, Option<u64>)>;
+
+/// One spilled-page fetch the current step must perform: which page,
+/// where it lives on the device, and through which precision tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct FetchOp {
+    page: usize,
+    addr: u64,
+    tier: PageTier,
+}
+
+/// A prefetched page waiting (in the engine's event queue) for the step
+/// that will consume it.
+struct Prefetched {
+    slot: usize,
+    seq: u64,
+    op: FetchOp,
+    words: Vec<u16>,
+    ready_ns: f64,
 }
 
 /// One batch slot's sequence state.
 struct Slot {
     req: Option<Request>,
-    /// Token-major BF16-rounded KV history (f32 working copy)
-    /// `[pos][layer][kv_channels]`, *HBM-resident portion only* for pages
-    /// committed to HBM; spilled pages hold placeholders re-fetched from
-    /// the device each step.
+    /// Authoritative token-major BF16-rounded KV history (f32 working
+    /// copy) `[pos][layer][kv_channels]` — full precision for every page,
+    /// including spilled ones (the spill write is lossless BF16).
     kv: Vec<f32>,
+    /// Attention scratch mirror of `kv` handed to the backend each step.
+    /// Spilled pages fetched through a reduced-precision alias hold last
+    /// fetch's truncated values; `viewed` tracks which, so a page whose
+    /// tier stops being fetched is restored from `kv` instead of leaking
+    /// stale truncation. HBM-resident data is never copied per step.
+    work: Vec<f32>,
+    /// Pages of `work` that currently differ from `kv` (reduced-precision
+    /// scatter from a previous step).
+    viewed: HashSet<usize>,
     /// Number of cached tokens.
     pos: usize,
     cur_token: u32,
@@ -69,7 +137,14 @@ struct Slot {
 
 impl Slot {
     fn empty() -> Slot {
-        Slot { req: None, kv: Vec::new(), pos: 0, cur_token: 0 }
+        Slot {
+            req: None,
+            kv: Vec::new(),
+            work: Vec::new(),
+            viewed: HashSet::new(),
+            pos: 0,
+            cur_token: 0,
+        }
     }
 }
 
@@ -83,6 +158,12 @@ pub struct Engine<B: ModelBackend> {
     /// Placement book of record: hands out shard-aware (stripe-interleaved)
     /// spill addresses and tracks per-sequence page residency.
     pub pager: KvPageManager,
+    /// The engine's model-time clock; advances to each step's compute-done.
+    pub clock: SimClock,
+    /// Backend compute resource (one decode step at a time).
+    compute_tl: ResourceTimeline,
+    /// In-flight prefetch completions, keyed by ready-at model time.
+    inflight: EventQueue<Prefetched>,
     queue: AdmissionQueue,
     slots: Vec<Slot>,
     pub metrics: Metrics,
@@ -108,6 +189,9 @@ impl<B: ModelBackend> Engine<B> {
             device,
             hbm,
             pager,
+            clock: SimClock::new(),
+            compute_tl: ResourceTimeline::new("backend-compute"),
+            inflight: EventQueue::new(),
             queue: AdmissionQueue::new(),
             slots,
             metrics: Metrics::new(),
@@ -130,7 +214,7 @@ impl<B: ModelBackend> Engine<B> {
     }
 
     /// Page-size in bytes (BF16 storage).
-    fn page_bytes(&self) -> u64 {
+    pub fn page_bytes(&self) -> u64 {
         (PAGE_TOKENS * self.kv_entry_len * 2) as u64
     }
 
@@ -148,6 +232,7 @@ impl<B: ModelBackend> Engine<B> {
             if let Some(mut req) = self.queue.pop() {
                 req.state = RequestState::Prefilling;
                 req.admitted_step = Some(self.metrics.engine_steps);
+                req.admitted_ns = Some(self.clock.now());
                 admitted.push((slot, req));
             }
         }
@@ -161,6 +246,7 @@ impl<B: ModelBackend> Engine<B> {
         }
         let out = self.backend.prefill(&batch_prompts)?;
         self.metrics.prefills += 1;
+        let now = self.clock.now();
         for (slot, mut req) in admitted {
             let plen = req.prompt.len().min(dims.t_prompt);
             // round prefill KV through BF16 (the storage format)
@@ -172,14 +258,16 @@ impl<B: ModelBackend> Engine<B> {
             let first = Self::sample(&out.logits[slot]);
             req.state = RequestState::Decoding;
             let s = &mut self.slots[slot];
+            s.work = kv.clone();
             s.kv = kv;
+            s.viewed.clear();
             s.pos = plen;
             s.cur_token = first;
             s.req = Some(req);
             // commit full prompt pages
             let full_pages = plen / PAGE_TOKENS;
             for p in 0..full_pages {
-                self.commit_page(slot, p)?;
+                self.commit_page(slot, p, now)?;
             }
         }
         Ok(())
@@ -196,11 +284,11 @@ impl<B: ModelBackend> Engine<B> {
         best as u32
     }
 
-    /// Commit page `p` of `slot`: HBM if it fits, else spill to the device
-    /// through a `WriteKv` transaction. The pager allocates the device
-    /// address — stripe-aligned, so a sharded device interleaves
-    /// consecutive spilled pages across shards.
-    fn commit_page(&mut self, slot: usize, page: usize) -> Result<()> {
+    /// Commit page `p` of `slot` at model time `now_ns`: HBM if it fits,
+    /// else spill to the device through a `WriteKv` transaction. The pager
+    /// allocates the device address — stripe-aligned, so a sharded device
+    /// interleaves consecutive spilled pages across shards.
+    fn commit_page(&mut self, slot: usize, page: usize, now_ns: f64) -> Result<()> {
         let pb = self.page_bytes();
         let seq = self.slots[slot].req.as_ref().expect("page commit on an empty slot").id;
         if self.hbm.try_alloc_kv(pb) {
@@ -220,65 +308,253 @@ impl<B: ModelBackend> Engine<B> {
             .add_page(seq, page, false)
             .cxl_addr
             .expect("spilled page carries a device address");
-        self.device.submit_one(Transaction::WriteKv {
-            block_addr: addr,
-            words,
-            window: KvWindow::new(PAGE_TOKENS, el),
-        })?;
+        self.device.submit_one_at(
+            Transaction::WriteKv {
+                block_addr: addr,
+                words,
+                window: crate::bitplane::KvWindow::new(PAGE_TOKENS, el),
+            },
+            now_ns,
+        )?;
         Ok(())
     }
 
-    /// Rebuild the attention KV for every active slot. All spilled-page
-    /// fetches of the step go into **one** submission queue (read-full or
-    /// reduced-precision view per the page-tier policy); completions are
-    /// routed back by transaction id, so the device is free to serve them
-    /// in any dispatch order.
-    fn gather_kvs(&mut self, active: &[usize]) -> Result<Vec<Vec<f32>>> {
+    /// Migrate a spilled page of `seq` back into HBM. Fails (false) if
+    /// the page is not CXL-resident or the KV partition has no headroom —
+    /// callers modeling a capacity resize grow it explicitly first
+    /// (`engine.hbm.grow_usable(engine.page_bytes())`). On success the
+    /// device copy is reclaimed with a `Free` transaction so footprint
+    /// and compression ratio track live residency. Any in-flight prefetch
+    /// of the page is invalidated by the fence at the next step — the
+    /// regression test for exactly this race lives in
+    /// `tests/overlap_equiv.rs`.
+    pub fn promote_page_to_hbm(&mut self, seq: u64, page: usize) -> bool {
+        let addr = self
+            .pager
+            .seq_pages(seq)
+            .iter()
+            .find(|p| p.index == page)
+            .and_then(|p| p.cxl_addr);
+        let Some(addr) = addr else { return false };
+        if !self.hbm.try_alloc_kv(self.page_bytes()) {
+            return false; // no headroom — nothing was changed
+        }
+        let now = self.clock.now();
+        if self.device.submit_one_at(Transaction::Free { block_addr: addr }, now).is_err() {
+            // pager/device desync (the pager holds an address the device
+            // does not): refuse consistently instead of diverging
+            self.hbm.free_kv(self.page_bytes());
+            return false;
+        }
+        let promoted = self.pager.promote(seq, page);
+        debug_assert!(promoted, "a page with a device address must be CXL-resident");
+        self.metrics.pages_promoted += 1;
+        true
+    }
+
+    /// One sequence's pages `(index, device address)` in index order —
+    /// the pager is the placement book of record.
+    fn seq_page_list(&self, seq: u64) -> PageList {
+        self.pager.seq_pages(seq).iter().map(|p| (p.index, p.cxl_addr)).collect()
+    }
+
+    /// The spilled-page fetch plan over a sequence's page list: which
+    /// pages must be read from the device and through which tier.
+    /// `total_pages` sets the importance-ranking length — the prefetcher
+    /// passes the *predicted next-step* page count so tier assignments
+    /// match what the next step's demand path will derive.
+    fn fetch_plan(&self, pages: &[(usize, Option<u64>)], total_pages: usize) -> Vec<FetchOp> {
+        // importance: recency-weighted (newest hottest), page 0 coldest
+        let imp: Vec<f64> = (0..total_pages).map(|k| (k + 1) as f64).collect();
+        let tiers = self.cfg.policy.assign(&imp);
+        let mut plan = Vec::new();
+        for (k, (page, cxl_addr)) in pages.iter().enumerate() {
+            let Some(addr) = cxl_addr else {
+                continue; // HBM-resident: already in the slot's work buffer
+            };
+            let tier = tiers.get(k).copied().unwrap_or(PageTier::Bf16);
+            if tier.view().is_none() {
+                continue; // dropped page: served from the work buffer
+            }
+            plan.push(FetchOp { page: *page, addr: *addr, tier });
+        }
+        plan
+    }
+
+    /// The device transaction implementing one fetch op.
+    fn txn_of(op: &FetchOp) -> Transaction {
+        let view = op.tier.view().expect("planned fetch has a view");
+        if view.is_full() {
+            Transaction::ReadFull { block_addr: op.addr }
+        } else {
+            Transaction::ReadView { block_addr: op.addr, view }
+        }
+    }
+
+    /// Scatter one fetched page into a slot's attention buffer and keep
+    /// the recall accounting + viewed-page bookkeeping.
+    fn scatter(&mut self, buf: &mut [f32], slot: usize, op: &FetchOp, words: &[u16]) {
+        self.pager.recalled_pages += 1;
+        self.metrics.kv_recall_bytes += (words.len() * 2) as u64;
+        let start = op.page * PAGE_TOKENS * self.kv_entry_len;
+        for (j, &w) in words.iter().enumerate() {
+            buf[start + j] = bf16_to_f32(w);
+        }
+        let full = op.tier.view().map(|v| v.is_full()).unwrap_or(false);
+        if full {
+            self.slots[slot].viewed.remove(&op.page);
+        } else {
+            self.slots[slot].viewed.insert(op.page);
+        }
+    }
+
+    /// Rebuild the attention KV for every active slot. Consumes matching
+    /// prefetches from the event queue (fence: the demand plan is
+    /// re-derived and must match exactly), demand-fetches the rest in
+    /// **one** submission drained at the current model time, and returns
+    /// the per-slot buffers, the model time all fetches are ready, and
+    /// each active slot's page list (reused by the prefetcher this step —
+    /// nothing commits in between).
+    #[allow(clippy::type_complexity)]
+    fn gather_kvs(
+        &mut self,
+        active: &[usize],
+    ) -> Result<(Vec<Vec<f32>>, f64, HashMap<usize, PageList>)> {
         let el = self.kv_entry_len;
+        let now = self.clock.now();
+        let mut fetch_ready = now;
+
+        // hand out the persistent per-slot work buffers — HBM-resident
+        // data is not copied per step
         let mut kvs: Vec<Vec<f32>> = self
             .slots
-            .iter()
-            .map(|s| if s.req.is_some() { s.kv.clone() } else { Vec::new() })
+            .iter_mut()
+            .map(|s| if s.req.is_some() { std::mem::take(&mut s.work) } else { Vec::new() })
             .collect();
 
+        // prefetches issued during the previous step's compute
+        let mut prefetched: HashMap<(usize, usize), Prefetched> = HashMap::new();
+        while let Some((_, p)) = self.inflight.pop() {
+            prefetched.insert((p.slot, p.op.page), p);
+        }
+
         let mut sq = SubmissionQueue::new();
-        let mut routes: HashMap<TxnId, (usize, usize)> = HashMap::new();
+        let mut routes: HashMap<TxnId, (usize, FetchOp)> = HashMap::new();
+        let mut page_lists: HashMap<usize, PageList> = HashMap::new();
         for &i in active {
             let seq = self.slots[i].req.as_ref().expect("active slot has a request").id;
-            // the pager is the placement book of record: index order, HBM
-            // vs CXL residency, and the spill address all come from it
-            let pages: Vec<(usize, Option<u64>)> =
-                self.pager.seq_pages(seq).iter().map(|p| (p.index, p.cxl_addr)).collect();
-            // importance: recency-weighted (newest hottest), page 0 coldest
-            let imp: Vec<f64> = (0..pages.len()).map(|k| (k + 1) as f64).collect();
-            let tiers = self.cfg.policy.assign(&imp);
-            for (k, (page, cxl_addr)) in pages.iter().enumerate() {
-                let Some(addr) = cxl_addr else {
-                    continue; // HBM-resident: already in the slot's KV copy
-                };
-                let tier = tiers.get(k).copied().unwrap_or(PageTier::Bf16);
-                let txn = match tier.view() {
-                    None => continue, // dropped page: leave zeros (masked out upstream)
-                    Some(v) if v.is_full() => Transaction::ReadFull { block_addr: *addr },
-                    Some(v) => Transaction::ReadView { block_addr: *addr, view: v },
-                };
-                routes.insert(sq.submit(txn), (i, *page));
+            let pages = self.seq_page_list(seq);
+            let plan = self.fetch_plan(&pages, pages.len());
+            page_lists.insert(i, pages);
+            // restore pages whose stale reduced-precision scatter would
+            // otherwise leak into a step that no longer fetches them
+            // (tier fell off the ladder, or the page moved back to HBM)
+            let planned: HashSet<usize> = plan.iter().map(|op| op.page).collect();
+            let stale: Vec<usize> =
+                self.slots[i].viewed.iter().copied().filter(|p| !planned.contains(p)).collect();
+            for page in stale {
+                let start = page * PAGE_TOKENS * el;
+                let end = (start + PAGE_TOKENS * el).min(self.slots[i].kv.len());
+                kvs[i][start..end].copy_from_slice(&self.slots[i].kv[start..end]);
+                self.slots[i].viewed.remove(&page);
+            }
+            for op in plan {
+                // fence: consume a prefetch only if it matches the demand
+                // plan exactly — same sequence, page, device address, tier
+                if let Some(p) = prefetched.remove(&(i, op.page)) {
+                    if p.seq == seq && p.op == op {
+                        fetch_ready = fetch_ready.max(p.ready_ns);
+                        self.scatter(&mut kvs[i], i, &op, &p.words);
+                        self.metrics.prefetch_hits += 1;
+                        continue;
+                    }
+                    self.metrics.prefetch_stale += 1;
+                }
+                routes.insert(sq.submit(Self::txn_of(&op)), (i, op));
+            }
+        }
+        // anything left in the buffer was invalidated before use
+        self.metrics.prefetch_stale += prefetched.len() as u64;
+
+        if !sq.is_empty() {
+            for c in self.device.drain_at(&mut sq, now) {
+                let (slot, op) = routes[&c.id];
+                fetch_ready = fetch_ready.max(c.ready_at_ns);
+                match c.words() {
+                    Ok(words) => self.scatter(&mut kvs[slot], slot, &op, &words),
+                    Err(e) => {
+                        // hand the taken buffers back before surfacing the
+                        // device error, or the next step would see empty
+                        // attention buffers and panic
+                        self.restore_work(kvs);
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        Ok((kvs, fetch_ready, page_lists))
+    }
+
+    /// Return the per-slot attention buffers taken by [`Self::gather_kvs`]
+    /// to their slots. Runs on the success path after decode and on every
+    /// error path in between — a failed step must leave slot state
+    /// coherent (`work` mirrors `kv` except tracked `viewed` pages).
+    fn restore_work(&mut self, kvs: Vec<Vec<f32>>) {
+        for (i, buf) in kvs.into_iter().enumerate() {
+            if self.slots[i].req.is_some() {
+                self.slots[i].work = buf;
+            }
+        }
+    }
+
+    /// Predict step N+1's spilled-page fetch set and issue it at
+    /// `issue_ns` (the start of step N's compute) so the reads execute on
+    /// the device timelines concurrently with compute. Page residency
+    /// changes only at deterministic boundaries the engine controls —
+    /// whether this step finishes the slot or completes a page is known
+    /// before compute — so the predicted plan (including the tier shifts
+    /// a new page causes in the ranking) matches next step's demand plan
+    /// exactly, unless residency is changed externally (the fence's job).
+    /// The page this step commits cannot be prefetched: it is not written
+    /// until after compute.
+    fn issue_prefetch(
+        &mut self,
+        active: &[usize],
+        page_lists: &HashMap<usize, PageList>,
+        issue_ns: f64,
+    ) -> Result<()> {
+        let t_max = self.backend.dims().t_max;
+        let mut sq = SubmissionQueue::new();
+        let mut routes: HashMap<TxnId, (usize, u64, FetchOp)> = HashMap::new();
+        for &i in active {
+            let req = self.slots[i].req.as_ref().expect("active slot has a request");
+            let seq = req.id;
+            let generated_after = req.generated.len() + 1;
+            let pos_after = self.slots[i].pos + 1;
+            // the slot retires this step: nothing to fetch next step
+            if generated_after >= req.max_new_tokens || pos_after + 1 >= t_max {
+                continue;
+            }
+            let commits_page = pos_after % PAGE_TOKENS == 0;
+            // this step's gather built the list; nothing commits between
+            // gather and prefetch issue, so it is still current
+            let pages = &page_lists[&i];
+            let n_pages = pages.len() + usize::from(commits_page);
+            for op in self.fetch_plan(pages, n_pages) {
+                routes.insert(sq.submit(Self::txn_of(&op)), (i, seq, op));
             }
         }
         if sq.is_empty() {
-            return Ok(kvs);
+            return Ok(());
         }
-        for c in self.device.drain(&mut sq) {
-            let (slot, page) = routes[&c.id];
+        for c in self.device.drain_at(&mut sq, issue_ns) {
+            let (slot, seq, op) = routes[&c.id];
+            let ready_ns = c.ready_at_ns;
             let words = c.words()?;
-            self.pager.recalled_pages += 1;
-            self.metrics.kv_recall_bytes += (words.len() * 2) as u64;
-            let start = page * PAGE_TOKENS * el;
-            for (j, &w) in words.iter().enumerate() {
-                kvs[slot][start + j] = bf16_to_f32(w);
-            }
+            self.metrics.prefetch_issued += 1;
+            self.inflight.push(ready_ns, Prefetched { slot, seq, op, words, ready_ns });
         }
-        Ok(kvs)
+        Ok(())
     }
 
     /// Run one engine step: admit + decode one token for all active slots.
@@ -290,7 +566,8 @@ impl<B: ModelBackend> Engine<B> {
         if active.is_empty() {
             return Ok(0);
         }
-        let t0 = Instant::now();
+        let t_wall = Instant::now();
+        let t0 = self.clock.now();
         let dims = self.backend.dims().clone();
         // all slots share one position counter (the max); shorter slots are
         // right-aligned by zero-padding their KV history
@@ -301,8 +578,25 @@ impl<B: ModelBackend> Engine<B> {
         for (i, t) in tokens.iter_mut().enumerate() {
             *t = self.slots[i].cur_token;
         }
-        let kvs = self.gather_kvs(&active)?;
-        let out = self.backend.decode(&tokens, &kvs, pos)?;
+        let (kvs, fetch_ready, page_lists) = self.gather_kvs(&active)?;
+        let compute_start = fetch_ready.max(t0);
+        let compute_done = self.compute_tl.reserve(compute_start, self.cfg.compute_ns).end_ns;
+        // overlapped pipeline: next step's reads run under this compute
+        if self.cfg.overlap {
+            if let Err(e) = self.issue_prefetch(&active, &page_lists, compute_start) {
+                self.restore_work(kvs);
+                return Err(e);
+            }
+        }
+        let out = match self.backend.decode(&tokens, &kvs, pos) {
+            Ok(out) => out,
+            Err(e) => {
+                self.restore_work(kvs);
+                return Err(e);
+            }
+        };
+        // hand the scratch buffers back to their slots
+        self.restore_work(kvs);
         let mut generated = 0usize;
 
         for &i in &active {
@@ -312,15 +606,19 @@ impl<B: ModelBackend> Engine<B> {
                 out.kv_new[i].iter().map(|&x| bf16_to_f32(bf16_from_f32(x))).collect();
             let s = &mut self.slots[i];
             s.kv.extend_from_slice(&entry);
+            s.work.extend_from_slice(&entry);
             s.pos += 1;
             s.cur_token = tok;
             let req = s.req.as_mut().unwrap();
             req.generated.push(tok);
+            if req.first_token_ns.is_none() {
+                req.first_token_ns = Some(compute_done);
+            }
             generated += 1;
             let finished_page = s.pos % PAGE_TOKENS == 0;
             let page_idx = s.pos / PAGE_TOKENS - if finished_page { 1 } else { 0 };
             if finished_page {
-                self.commit_page(i, page_idx)?;
+                self.commit_page(i, page_idx, compute_done)?;
             }
             // completion
             let s = &mut self.slots[i];
@@ -329,26 +627,45 @@ impl<B: ModelBackend> Engine<B> {
                 let mut done = s.req.take().unwrap();
                 done.state = RequestState::Finished;
                 done.finished_step = Some(self.metrics.engine_steps);
+                done.finished_ns = Some(compute_done);
                 let steps =
                     done.finished_step.unwrap() - done.admitted_step.unwrap_or(0) + 1;
                 self.metrics.request_steps.push(steps as f64);
                 self.metrics.requests_finished += 1;
+                if let (Some(admitted), Some(first), Some(finish)) =
+                    (done.admitted_ns, done.first_token_ns, done.finished_ns)
+                {
+                    self.metrics.ttft_model_ns.push(first - admitted);
+                    if done.generated.len() > 1 {
+                        self.metrics
+                            .tpot_model_ns
+                            .push((finish - first) / (done.generated.len() - 1) as f64);
+                    }
+                }
                 self.responses.push(Response {
                     id: done.id,
                     prompt_len: done.prompt.len(),
                     tokens: done.generated.clone(),
                     steps_in_flight: steps,
                 });
-                // release HBM pages (the pager is the placement book of
-                // record for what lived where)
-                let hbm_pages = self.pager.release_seq(done.id) as u64;
-                self.hbm.free_kv(hbm_pages * self.page_bytes());
+                // release HBM capacity and reclaim the device copies —
+                // the pager is the placement book of record for what
+                // lived where, and device footprint tracks live residency
+                let (hbm_pages, freed) = self.pager.release_seq(done.id);
+                self.hbm.free_kv(hbm_pages as u64 * self.page_bytes());
+                for addr in freed {
+                    self.device
+                        .submit_one_at(Transaction::Free { block_addr: addr }, compute_done)?;
+                }
                 self.slots[i] = Slot::empty();
             }
         }
         self.metrics.engine_steps += 1;
         self.metrics.tokens_generated += generated as u64;
-        self.metrics.step_ms.push(t0.elapsed().as_secs_f64() * 1000.0);
+        self.metrics.wall_ms.push(t_wall.elapsed().as_secs_f64() * 1000.0);
+        self.metrics.step_model_ns.push(compute_done - t0);
+        self.clock.advance_to(compute_done);
+        self.metrics.model_ns = self.clock.now();
         Ok(generated)
     }
 
@@ -432,14 +749,37 @@ mod tests {
     fn device_sees_traffic_on_spill() {
         let mut e = engine(0);
         e.submit(vec![1; 8], 70);
-        e.run_to_completion(200).unwrap();
+        for _ in 0..40 {
+            e.step().unwrap();
+        }
         assert!(e.metrics.pages_spilled > 0);
         let stats = e.device.stats();
         assert!(stats.dram_bytes_written > 0);
         assert!(stats.dram_bytes_read > 0);
         assert!(e.metrics.kv_recall_bytes > 0);
-        // TRACE compresses the smooth mock KV
+        // TRACE compresses the smooth mock KV (live blocks, mid-run)
+        assert!(e.device.len() > 0);
         assert!(e.device.overall_ratio() > 1.05, "ratio={}", e.device.overall_ratio());
+        // a finished sequence reclaims its device blocks
+        e.run_to_completion(200).unwrap();
+        assert_eq!(e.device.len(), 0, "device must not accumulate dead KV");
+    }
+
+    #[test]
+    fn model_time_advances_with_fetch_and_compute() {
+        let mut e = engine(0);
+        e.submit(vec![1; 8], 40);
+        e.run_to_completion(200).unwrap();
+        let steps = e.metrics.engine_steps as f64;
+        // every step pays at least the compute reservation...
+        assert!(e.metrics.model_ns >= steps * e.cfg.compute_ns);
+        // ...and spilling steps pay the fetch chain on top (serial mode)
+        assert!(e.metrics.model_ns > steps * e.cfg.compute_ns + 1.0);
+        assert_eq!(e.metrics.step_model_ns.len(), e.metrics.engine_steps as usize);
+        // TTFT/TPOT were recorded in model time
+        assert_eq!(e.metrics.ttft().n, 1);
+        assert!(e.metrics.ttft().p50 > 0.0);
+        assert!(e.metrics.tpot().p50 >= e.cfg.compute_ns);
     }
 
     #[test]
@@ -501,5 +841,57 @@ mod tests {
         // the pager's placement book agrees with the device traffic
         assert_eq!(e.pager.spilled_pages, e.metrics.pages_spilled);
         assert!(e.pager.recalled_pages > 0);
+    }
+
+    #[test]
+    fn device_error_mid_step_leaves_engine_consistent() {
+        // a failed fetch must surface as Err without corrupting slot
+        // state: the taken work buffers go back, so the engine neither
+        // panics on the next step nor silently drops history
+        let mut e = engine(0);
+        e.submit(vec![1; 8], 60);
+        for _ in 0..20 {
+            e.step().unwrap();
+        }
+        let idx = e.pager.pages.iter().position(|p| p.cxl_addr.is_some()).unwrap();
+        let good_addr = e.pager.pages[idx].cxl_addr;
+        e.pager.pages[idx].cxl_addr = Some(0xdead_0000);
+        assert!(e.step().is_err(), "bogus address must fail the fetch");
+        assert!(e.step().is_err(), "second failing step must error, not panic");
+        // heal the mapping: the engine picks up where it left off
+        e.pager.pages[idx].cxl_addr = good_addr;
+        e.run_to_completion(200).unwrap();
+        assert_eq!(e.take_responses().len(), 1);
+    }
+
+    #[test]
+    fn promote_page_moves_residency_and_stops_fetches() {
+        let mut e = engine(0);
+        e.submit(vec![1; 8], 60);
+        for _ in 0..20 {
+            e.step().unwrap();
+        }
+        assert!(e.metrics.pages_spilled >= 1);
+        let recalls_before = e.pager.recalled_pages;
+        let blocks_before = e.device.len();
+        // no headroom in a zero-byte partition: promotion must refuse
+        // without touching pager or device state
+        assert!(!e.promote_page_to_hbm(0, 0));
+        assert_eq!(e.device.len(), blocks_before);
+        // model a capacity resize, then promote
+        let pb = e.page_bytes();
+        e.hbm.grow_usable(pb);
+        assert!(e.promote_page_to_hbm(0, 0));
+        assert!(!e.promote_page_to_hbm(0, 0), "already HBM-resident");
+        // the device copy is reclaimed: footprint tracks live residency
+        assert_eq!(e.device.len(), blocks_before - 1);
+        e.step().unwrap();
+        // page 0 no longer recalled: one fewer fetch than before
+        let spilled_now =
+            e.pager.seq_pages(0).iter().filter(|p| p.cxl_addr.is_some()).count() as u64;
+        assert_eq!(e.pager.recalled_pages - recalls_before, spilled_now);
+        assert_eq!(e.metrics.pages_promoted, 1);
+        e.run_to_completion(200).unwrap();
+        assert_eq!(e.take_responses().len(), 1);
     }
 }

@@ -1,8 +1,20 @@
 //! Serving metrics: token throughput, latency distributions, and the
 //! tier/device counters the experiment harnesses consume.
+//!
+//! Two time bases are kept strictly apart:
+//!
+//! * **wall time** — host execution cost of running the simulation
+//!   (`Instant`-based; `wall_ms`, [`Metrics::tok_per_s`]). Useful for
+//!   profiling the simulator itself, meaningless for the paper's claims.
+//! * **model time** — nanoseconds on the engine's
+//!   [`crate::sim::SimClock`]: per-step latency sourced from the clock
+//!   (`step_model_ns`), per-request TTFT/TPOT, and the model-time
+//!   throughput ([`Metrics::model_tok_per_s`]) the figure benches report.
 
 use crate::cxl::DeviceStats;
+use crate::util::json::Json;
 use crate::util::stats::Summary;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Engine-wide metrics.
@@ -15,13 +27,31 @@ pub struct Metrics {
     pub requests_finished: u64,
     /// Per-request end-to-end latency in engine steps.
     pub request_steps: Vec<f64>,
-    /// Wall time per decode step (ms).
-    pub step_ms: Vec<f64>,
-    /// KV pages committed to HBM / spilled to CXL.
+    /// Wall time per decode step (ms) — host cost of simulating the step.
+    pub wall_ms: Vec<f64>,
+    /// Model time per decode step (ns), from the engine's SimClock.
+    pub step_model_ns: Vec<f64>,
+    /// Total model time the engine has simulated (ns).
+    pub model_ns: f64,
+    /// Per-request model-time TTFT: admission → first generated token, ns.
+    /// Known limitation: prefill is currently modeled as instantaneous in
+    /// model time, so TTFT captures queueing + the first decode step's
+    /// fetch/compute, not prompt-length-proportional prefill cost.
+    pub ttft_model_ns: Vec<f64>,
+    /// Per-request model-time TPOT: mean inter-token gap after the first
+    /// token, ns (requests with ≥2 generated tokens).
+    pub tpot_model_ns: Vec<f64>,
+    /// KV pages committed to HBM / spilled to CXL / promoted back.
     pub pages_hbm: u64,
     pub pages_spilled: u64,
+    pub pages_promoted: u64,
     /// Raw KV bytes recalled from the CXL tier.
     pub kv_recall_bytes: u64,
+    /// Overlap pipeline counters: prefetch transactions issued, consumed
+    /// by the next step, and discarded by the correctness fence.
+    pub prefetch_issued: u64,
+    pub prefetch_hits: u64,
+    pub prefetch_stale: u64,
 }
 
 impl Default for Metrics {
@@ -33,10 +63,18 @@ impl Default for Metrics {
             tokens_generated: 0,
             requests_finished: 0,
             request_steps: Vec::new(),
-            step_ms: Vec::new(),
+            wall_ms: Vec::new(),
+            step_model_ns: Vec::new(),
+            model_ns: 0.0,
+            ttft_model_ns: Vec::new(),
+            tpot_model_ns: Vec::new(),
             pages_hbm: 0,
             pages_spilled: 0,
+            pages_promoted: 0,
             kv_recall_bytes: 0,
+            prefetch_issued: 0,
+            prefetch_hits: 0,
+            prefetch_stale: 0,
         }
     }
 }
@@ -50,7 +88,7 @@ impl Metrics {
         self.started.elapsed().as_secs_f64()
     }
 
-    /// Generated tokens per wall-clock second.
+    /// Generated tokens per wall-clock second (simulator host speed).
     pub fn tok_per_s(&self) -> f64 {
         let e = self.elapsed_s();
         if e == 0.0 {
@@ -60,8 +98,40 @@ impl Metrics {
         }
     }
 
+    /// Simulated seconds on the model-time clock.
+    pub fn model_elapsed_s(&self) -> f64 {
+        self.model_ns * 1e-9
+    }
+
+    /// Generated tokens per *model-time* second — the number the paper's
+    /// throughput figures are about.
+    pub fn model_tok_per_s(&self) -> f64 {
+        let e = self.model_elapsed_s();
+        if e == 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / e
+        }
+    }
+
+    /// Wall-time per-step summary (ms).
     pub fn step_latency(&self) -> Summary {
-        Summary::of(&self.step_ms)
+        Summary::of(&self.wall_ms)
+    }
+
+    /// Model-time per-step summary (ns).
+    pub fn model_step_latency(&self) -> Summary {
+        Summary::of(&self.step_model_ns)
+    }
+
+    /// Model-time TTFT summary (ns).
+    pub fn ttft(&self) -> Summary {
+        Summary::of(&self.ttft_model_ns)
+    }
+
+    /// Model-time TPOT summary (ns).
+    pub fn tpot(&self) -> Summary {
+        Summary::of(&self.tpot_model_ns)
     }
 
     pub fn request_latency_steps(&self) -> Summary {
@@ -71,22 +141,78 @@ impl Metrics {
     /// One-line human report, including the device counters.
     pub fn report(&self, dev: &DeviceStats) -> String {
         let s = self.step_latency();
+        let m = self.model_step_latency();
         format!(
-            "steps={} tokens={} finished={} tok/s={:.2} step_ms p50={:.2} p99={:.2} \
+            "steps={} tokens={} finished={} tok/s={:.2} model_tok/s={:.2} \
+             step_ms p50={:.2} p99={:.2} step_model_us p50={:.2} p99={:.2} \
              pages[hbm={} cxl={}] dev[dram_rd={} dram_wr={} link_out={} meta_miss={}]",
             self.engine_steps,
             self.tokens_generated,
             self.requests_finished,
             self.tok_per_s(),
+            self.model_tok_per_s(),
             s.p50,
             s.p99,
+            m.p50 / 1000.0,
+            m.p99 / 1000.0,
             self.pages_hbm,
             self.pages_spilled,
-            self.kv_recall_bytes,
+            dev.dram_bytes_read,
             dev.dram_bytes_written,
             dev.link_bytes_out,
             dev.metadata_dram_reads,
         )
+    }
+
+    /// Machine-readable dump of every counter and distribution, for the
+    /// experiment harnesses (`util::json`, no serde in the vendor set).
+    pub fn to_json(&self, dev: &DeviceStats) -> Json {
+        fn num(x: f64) -> Json {
+            Json::Num(x)
+        }
+        fn summary(s: &Summary) -> Json {
+            let mut m = BTreeMap::new();
+            m.insert("n".to_string(), num(s.n as f64));
+            m.insert("mean".to_string(), num(s.mean));
+            m.insert("min".to_string(), num(s.min));
+            m.insert("max".to_string(), num(s.max));
+            m.insert("p50".to_string(), num(s.p50));
+            m.insert("p90".to_string(), num(s.p90));
+            m.insert("p99".to_string(), num(s.p99));
+            Json::Obj(m)
+        }
+        let mut pages = BTreeMap::new();
+        pages.insert("hbm".to_string(), num(self.pages_hbm as f64));
+        pages.insert("spilled".to_string(), num(self.pages_spilled as f64));
+        pages.insert("promoted".to_string(), num(self.pages_promoted as f64));
+        let mut prefetch = BTreeMap::new();
+        prefetch.insert("issued".to_string(), num(self.prefetch_issued as f64));
+        prefetch.insert("hits".to_string(), num(self.prefetch_hits as f64));
+        prefetch.insert("stale".to_string(), num(self.prefetch_stale as f64));
+        let mut device = BTreeMap::new();
+        device.insert("dram_bytes_read".to_string(), num(dev.dram_bytes_read as f64));
+        device.insert("dram_bytes_written".to_string(), num(dev.dram_bytes_written as f64));
+        device.insert("link_bytes_in".to_string(), num(dev.link_bytes_in as f64));
+        device.insert("link_bytes_out".to_string(), num(dev.link_bytes_out as f64));
+        device.insert("metadata_dram_reads".to_string(), num(dev.metadata_dram_reads as f64));
+        let mut o = BTreeMap::new();
+        o.insert("engine_steps".to_string(), num(self.engine_steps as f64));
+        o.insert("prefills".to_string(), num(self.prefills as f64));
+        o.insert("tokens_generated".to_string(), num(self.tokens_generated as f64));
+        o.insert("requests_finished".to_string(), num(self.requests_finished as f64));
+        o.insert("wall_s".to_string(), num(self.elapsed_s()));
+        o.insert("tok_per_s_wall".to_string(), num(self.tok_per_s()));
+        o.insert("model_ns".to_string(), num(self.model_ns));
+        o.insert("tok_per_s_model".to_string(), num(self.model_tok_per_s()));
+        o.insert("step_wall_ms".to_string(), summary(&self.step_latency()));
+        o.insert("step_model_ns".to_string(), summary(&self.model_step_latency()));
+        o.insert("ttft_model_ns".to_string(), summary(&self.ttft()));
+        o.insert("tpot_model_ns".to_string(), summary(&self.tpot()));
+        o.insert("kv_recall_bytes".to_string(), num(self.kv_recall_bytes as f64));
+        o.insert("pages".to_string(), Json::Obj(pages));
+        o.insert("prefetch".to_string(), Json::Obj(prefetch));
+        o.insert("device".to_string(), Json::Obj(device));
+        Json::Obj(o)
     }
 }
 
@@ -100,9 +226,57 @@ mod tests {
         m.tokens_generated = 100;
         std::thread::sleep(std::time::Duration::from_millis(10));
         assert!(m.tok_per_s() > 0.0);
-        m.step_ms = vec![1.0, 2.0, 3.0];
+        m.wall_ms = vec![1.0, 2.0, 3.0];
         assert_eq!(m.step_latency().n, 3);
         let r = m.report(&DeviceStats::default());
         assert!(r.contains("tokens=100"));
+    }
+
+    #[test]
+    fn model_time_throughput_uses_the_clock() {
+        let mut m = Metrics::new();
+        m.tokens_generated = 50;
+        m.model_ns = 1e9; // one simulated second
+        assert!((m.model_tok_per_s() - 50.0).abs() < 1e-9);
+        assert_eq!(Metrics::new().model_tok_per_s(), 0.0);
+    }
+
+    #[test]
+    fn ttft_tpot_summaries() {
+        let mut m = Metrics::new();
+        m.ttft_model_ns = vec![1000.0, 3000.0];
+        m.tpot_model_ns = vec![500.0, 700.0, 900.0];
+        assert_eq!(m.ttft().n, 2);
+        assert!((m.ttft().p50 - 2000.0).abs() < 1e-9);
+        assert_eq!(m.tpot().n, 3);
+        assert!((m.tpot().p50 - 700.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_dump_roundtrips() {
+        let mut m = Metrics::new();
+        m.engine_steps = 7;
+        m.tokens_generated = 21;
+        m.model_ns = 3.5e6;
+        m.step_model_ns = vec![500.0, 500.0, 500.0];
+        m.ttft_model_ns = vec![1500.0];
+        m.prefetch_issued = 4;
+        let dev = DeviceStats { dram_bytes_read: 4096, ..Default::default() };
+        let j = m.to_json(&dev);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("engine_steps").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(parsed.get("tokens_generated").unwrap().as_usize().unwrap(), 21);
+        assert_eq!(
+            parsed.get("step_model_ns").unwrap().get("n").unwrap().as_usize().unwrap(),
+            3
+        );
+        assert_eq!(
+            parsed.get("prefetch").unwrap().get("issued").unwrap().as_usize().unwrap(),
+            4
+        );
+        assert_eq!(
+            parsed.get("device").unwrap().get("dram_bytes_read").unwrap().as_usize().unwrap(),
+            4096
+        );
     }
 }

@@ -13,9 +13,15 @@
 //! 5. at each step, spilled pages are fetched back through the device
 //!    (decompressed, optionally via a reduced-precision alias per the
 //!    page-tier policy) to rebuild the attention context — so every token
-//!    pays exactly the device traffic the paper models.
+//!    pays exactly the device traffic the paper models;
+//! 6. with `EngineConfig::overlap`, the engine runs as a two-stage
+//!    pipeline: step N+1's spilled-page reads are predicted and issued
+//!    while step N's compute occupies the backend timeline, fenced so
+//!    tokens and traffic stay bit-identical to the serial loop.
 //!
-//! Wall-clock throughput plus device byte counters feed the benches; the
+//! Every step advances a model-time clock ([`crate::sim::SimClock`]);
+//! [`Metrics`] keeps wall time and model time strictly apart (per-step
+//! latency, TTFT/TPOT, tok/s). Device byte counters feed the benches; the
 //! trace-driven model (`sysmodel`) converts the same counters into the
 //! paper's bandwidth-ceiling projections.
 

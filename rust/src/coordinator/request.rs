@@ -22,6 +22,12 @@ pub struct Request {
     /// Engine step at which the request was admitted / finished.
     pub admitted_step: Option<u64>,
     pub finished_step: Option<u64>,
+    /// Model-time stamps (ns on the engine's [`crate::sim::SimClock`]):
+    /// admission, first generated token, and completion. TTFT/TPOT in
+    /// `coordinator::metrics` derive from these.
+    pub admitted_ns: Option<f64>,
+    pub first_token_ns: Option<f64>,
+    pub finished_ns: Option<f64>,
 }
 
 impl Request {
@@ -34,6 +40,9 @@ impl Request {
             generated: Vec::new(),
             admitted_step: None,
             finished_step: None,
+            admitted_ns: None,
+            first_token_ns: None,
+            finished_ns: None,
         }
     }
 

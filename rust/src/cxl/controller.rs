@@ -180,6 +180,28 @@ pub fn write_latency(design: super::device::Design, ratio: f64) -> LatencyBreakd
     }
 }
 
+/// Deallocation command: front-end decode + index-entry invalidation +
+/// a scheduler slot. No DRAM data window — the freed planes are simply
+/// unreferenced (Plain has no index, so only the command cost remains).
+pub fn free_latency(design: super::device::Design) -> LatencyBreakdown {
+    use super::device::Design;
+    let (frontend, metadata, scheduler) = match design {
+        Design::Plain => (3, 0, 8),
+        Design::GComp => (3, 4, 8),
+        Design::Trace => (5, 4, 10),
+    };
+    LatencyBreakdown {
+        frontend,
+        metadata,
+        scheduler,
+        trcd: 0,
+        tcl: 0,
+        burst: 0,
+        codec: 0,
+        meta_miss: 0,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,6 +264,15 @@ mod tests {
         assert!(t3 < t);
         // writes never pay a metadata-miss window
         assert_eq!(write_latency(Design::Trace, 2.0).meta_miss, 0);
+    }
+
+    #[test]
+    fn free_is_command_only() {
+        for d in [Design::Plain, Design::GComp, Design::Trace] {
+            let f = free_latency(d);
+            assert_eq!(f.trcd + f.tcl + f.burst + f.codec + f.meta_miss, 0);
+            assert!(f.total_cycles() < write_latency(d, 1.0).total_cycles());
+        }
     }
 
     #[test]

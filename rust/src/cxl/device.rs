@@ -22,11 +22,13 @@
 use crate::bitplane::{DeviceBlock, KvWindow, PlaneMask, PrecisionView};
 use crate::codec::{self, CodecKind, CodecPolicy};
 use crate::formats::Fmt;
+use crate::sim::ResourceTimeline;
 use crate::util::bytes::{bytes_to_u16s, u16s_to_bytes};
 use std::collections::HashMap;
 use std::ops::Range;
 
-use super::controller::{latency, write_latency, LatencyBreakdown, LatencyCase};
+use super::controller::{free_latency, latency, write_latency, LatencyBreakdown, LatencyCase};
+use super::link::Link;
 use super::metadata::{IndexCache, PlaneIndex, ENTRY_BYTES};
 use super::txn::{Completion, MemDevice, Payload, Transaction, TxnId, TxnStats};
 
@@ -77,6 +79,18 @@ pub struct DeviceStats {
 }
 
 impl DeviceStats {
+    /// Lifetime KV compression from the cumulative counters: raw bytes
+    /// received from the host per compressed byte stored. Unlike
+    /// footprint-based `overall_ratio` this is unaffected by blocks later
+    /// freed (finished sequences reclaim their device copies).
+    pub fn lifetime_compression_ratio(&self) -> f64 {
+        if self.dram_bytes_written == 0 {
+            1.0
+        } else {
+            self.link_bytes_in as f64 / self.dram_bytes_written as f64
+        }
+    }
+
     /// Fold another counter set into this one (shard aggregation).
     pub fn accumulate(&mut self, o: &DeviceStats) {
         self.dram_bytes_written += o.dram_bytes_written;
@@ -98,6 +112,21 @@ pub struct CxlDevice {
     pub index: PlaneIndex,
     pub index_cache: IndexCache,
     pub stats: DeviceStats,
+    /// Controller-pipeline + device-DDR service timeline (model time).
+    /// When this device is one shard of a [`super::ShardedDevice`], the
+    /// sharded endpoint reserves on this timeline but shares one link.
+    pub service_tl: ResourceTimeline,
+    /// Host→device link direction (standalone use only).
+    pub link_in_tl: ResourceTimeline,
+    /// Device→host link direction (standalone use only).
+    pub link_out_tl: ResourceTimeline,
+    /// Device-DDR bandwidth for the service-time model, bytes/ns (GB/s).
+    /// Behind a [`super::ShardedDevice`] the fleet's `shard_ddr_gbps`
+    /// (seeded from this default at construction) is authoritative.
+    pub ddr_gbps: f64,
+    /// Link parameters for standalone scheduling; a sharded endpoint
+    /// uses its own fleet-shared copy instead.
+    pub link: Link,
 }
 
 impl CxlDevice {
@@ -109,7 +138,22 @@ impl CxlDevice {
             index: PlaneIndex::new(),
             index_cache: IndexCache::new(8192),
             stats: DeviceStats::default(),
+            service_tl: ResourceTimeline::new("cxl-service"),
+            link_in_tl: ResourceTimeline::new("link-in"),
+            link_out_tl: ResourceTimeline::new("link-out"),
+            // per-device DDR of the paper's system model (§IV-B, matching
+            // SystemConfig::paper_default().ddr_bw = 256 GB/s)
+            ddr_gbps: 256.0,
+            link: Link::paper_default(),
         }
+    }
+
+    /// Clear the model-time timelines (free at t=0, zero busy time)
+    /// without touching stored data or byte counters.
+    pub fn reset_time(&mut self) {
+        self.service_tl.reset();
+        self.link_in_tl.reset();
+        self.link_out_tl.reset();
     }
 
     fn stored_bytes_of(s: &Stored) -> usize {
@@ -306,6 +350,18 @@ impl CxlDevice {
         }
     }
 
+    /// Deallocate a stored block: drop the data and (TRACE) its plane
+    /// index entry. A pure command — no byte counters move.
+    fn do_free(&mut self, block_addr: u64) -> anyhow::Result<Payload> {
+        self.blocks
+            .remove(&block_addr)
+            .ok_or_else(|| anyhow::anyhow!("no block at {block_addr:#x}"))?;
+        if self.design == Design::Trace {
+            self.index.remove(block_addr);
+        }
+        Ok(Payload::Written)
+    }
+
     /// Charge the metadata lookup for compressed designs; returns whether
     /// the on-chip index cache hit.
     fn charge_metadata(&mut self, block_addr: u64) -> bool {
@@ -344,17 +400,19 @@ impl CxlDevice {
         };
         latency(case)
     }
-}
 
-impl MemDevice for CxlDevice {
-    fn design(&self) -> Design {
-        self.design
-    }
-
-    fn execute(&mut self, id: TxnId, txn: Transaction) -> Completion {
+    /// Functional execution only: storage mutation, byte accounting, and
+    /// the pipeline-latency breakdown — no resource-timeline scheduling
+    /// (`issued_ns`/`ready_at_ns` left at 0). [`MemDevice::execute_at`]
+    /// wraps this with the device's own timelines; a
+    /// [`super::ShardedDevice`] calls it directly and schedules the
+    /// completion onto the owning shard's service timeline plus the
+    /// fleet-shared link instead.
+    pub(crate) fn execute_functional(&mut self, id: TxnId, txn: Transaction) -> Completion {
         let before = self.stats;
         let block_addr = txn.block_addr();
         let kind = txn.kind();
+        let is_read = txn.is_read();
         let (result, breakdown) = match txn {
             Transaction::WriteWeights { block_addr, words, fmt } => {
                 let ratio = self.do_write_weights(block_addr, &words, fmt);
@@ -385,6 +443,9 @@ impl MemDevice for CxlDevice {
                     self.read_latency(hit, profile),
                 )
             }
+            Transaction::Free { block_addr } => {
+                (self.do_free(block_addr), free_latency(self.design))
+            }
         };
         Completion {
             id,
@@ -394,7 +455,32 @@ impl MemDevice for CxlDevice {
             result,
             stats: TxnStats::delta(&before, &self.stats),
             latency: Some(breakdown),
+            is_read,
+            issued_ns: 0.0,
+            ready_at_ns: 0.0,
         }
+    }
+}
+
+impl MemDevice for CxlDevice {
+    fn design(&self) -> Design {
+        self.design
+    }
+
+    fn execute_at(&mut self, id: TxnId, txn: Transaction, now_ns: f64) -> Completion {
+        let mut c = self.execute_functional(id, txn);
+        c.schedule(
+            now_ns,
+            super::txn::SchedResources {
+                service: &mut self.service_tl,
+                link_in: &mut self.link_in_tl,
+                link_out: &mut self.link_out_tl,
+                ddr_gbps: self.ddr_gbps,
+                link_gbps: self.link.gbps,
+                link_prop_ns: self.link.latency_ns,
+            },
+        );
+        c
     }
 
     fn stats(&self) -> DeviceStats {
@@ -582,6 +668,23 @@ mod tests {
     fn missing_block_errors() {
         let mut d = CxlDevice::new(Design::Trace, CodecPolicy::FastBest);
         assert!(read_full(&mut d, 0xdead000).is_err());
+    }
+
+    #[test]
+    fn free_reclaims_block_footprint() {
+        let mut r = Rng::new(211);
+        let kv = smooth_kv(&mut r, 32, 64);
+        for mut d in all_designs() {
+            write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
+            assert_eq!(MemDevice::len(&d), 1);
+            assert!(d.footprint_bytes() > 0);
+            d.submit_one(Transaction::Free { block_addr: 0x0 }).unwrap();
+            assert_eq!(MemDevice::len(&d), 0, "{:?}", d.design);
+            assert_eq!(d.footprint_bytes(), 0, "{:?}", d.design);
+            assert!(read_full(&mut d, 0x0).is_err(), "freed block must not read");
+            // double free is an error completion, not silence
+            assert!(d.submit_one(Transaction::Free { block_addr: 0x0 }).is_err());
+        }
     }
 
     #[test]

@@ -34,6 +34,11 @@ impl PlaneIndex {
         self.entries.get(&block_addr)
     }
 
+    /// Drop a block's entry (device-side deallocation).
+    pub fn remove(&mut self, block_addr: u64) -> Option<PlaneIndexEntry> {
+        self.entries.remove(&block_addr)
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }

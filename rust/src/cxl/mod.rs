@@ -14,14 +14,18 @@
 //!
 //! * [`txn`] — [`Transaction`] / [`SubmissionQueue`] / [`Completion`] and
 //!   the [`MemDevice`] trait every device generation implements. Each
-//!   completion carries its payload, per-transaction byte traffic, and the
-//!   controller pipeline latency.
+//!   completion carries its payload, per-transaction byte traffic, the
+//!   controller pipeline latency, and an absolute **ready-at model time**
+//!   produced by reserving the transaction on the device's
+//!   [`crate::sim`] resource timelines (controller+DDR service per
+//!   device/shard, shared host link per direction).
 //! * [`device`] — the functional single-device model: per-design storage,
 //!   correctness invariants (identical host-visible values), byte-traffic
 //!   accounting, plane-granular streaming reads.
 //! * [`sharded`] — [`ShardedDevice`]: N address-interleaved devices with
-//!   per-shard queues, round-robin / least-loaded dispatch, and a
-//!   parallel-time model for aggregate-bandwidth scaling.
+//!   per-shard queues, round-robin / least-loaded dispatch, per-shard
+//!   service timelines and a shared link timeline for
+//!   aggregate-bandwidth scaling in model time.
 //! * [`metadata`] — plane-index store + on-chip index cache (64 B/4 KB
 //!   entry, hit/miss statistics; §III-D "metadata management").
 //! * [`alias`] — precision-partitioned address aliasing (paper Fig. 9).

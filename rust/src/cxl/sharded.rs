@@ -12,19 +12,26 @@
 //! * `LeastLoaded` — always serve the shard whose modeled timeline is
 //!   least advanced, absorbing placement imbalance.
 //!
-//! Shards operate in parallel in real hardware, so the device keeps a
-//! per-shard busy-time model: every transaction adds its controller
-//! pipeline latency plus `dram_bytes / shard_ddr_gbps` to its shard's
-//! timeline. Aggregate elapsed time is the **max** over shards — with N
-//! balanced shards a batch drains in ~1/N the single-device time, which is
-//! exactly the aggregate-bandwidth scaling the `fig_shard_scaling` bench
-//! measures and `sysmodel::SystemConfig::with_shards` consumes analytically.
+//! Shards operate in parallel in real hardware, so each shard owns a
+//! [`ResourceTimeline`] for its controller pipeline + device DDR: every
+//! transaction reserves `pipeline latency + dram_bytes / shard_ddr_gbps`
+//! of service on its shard, while all shards share one host-link timeline
+//! per direction (a fleet behind one CXL port). Aggregate elapsed time is
+//! the **max** over shard timelines — with N balanced shards a batch
+//! drains in ~1/N the single-device time, which is exactly the
+//! aggregate-bandwidth scaling the `fig_shard_scaling` bench measures and
+//! `sysmodel::SystemConfig::with_shards` consumes analytically. Every
+//! completion carries the absolute `ready_at_ns` its reservation chain
+//! produced, so an overlapped caller sees per-transaction contention, not
+//! just fleet-level busy sums.
 
 use std::collections::VecDeque;
 
 use crate::codec::CodecPolicy;
+use crate::sim::ResourceTimeline;
 
 use super::device::{CxlDevice, Design, DeviceStats};
+use super::link::Link;
 use super::scheduler::round_robin_drain;
 use super::txn::{Completion, MemDevice, SubmissionQueue, Transaction, TxnId};
 
@@ -50,10 +57,13 @@ pub enum DispatchPolicy {
 pub struct ShardedDevice {
     shards: Vec<CxlDevice>,
     policy: DispatchPolicy,
-    /// Modeled busy time per shard, ns.
-    busy_ns: Vec<f64>,
+    /// Host-link timelines shared by every shard (one CXL port).
+    link_in_tl: ResourceTimeline,
+    link_out_tl: ResourceTimeline,
     /// Per-shard device-DDR bandwidth for the time model, bytes/ns (GB/s).
     pub shard_ddr_gbps: f64,
+    /// Shared host-link parameters.
+    pub link: Link,
 }
 
 impl ShardedDevice {
@@ -69,13 +79,19 @@ impl ShardedDevice {
         policy: DispatchPolicy,
     ) -> ShardedDevice {
         assert!(shards >= 1, "a sharded device needs at least one shard");
+        let devs: Vec<CxlDevice> = (0..shards).map(|_| CxlDevice::new(design, codec)).collect();
+        // fleet rates come from the single-device defaults (one source of
+        // truth in CxlDevice::new); behind this endpoint the fleet values
+        // are authoritative and the shards' own link timelines are unused
+        let shard_ddr_gbps = devs[0].ddr_gbps;
+        let link = devs[0].link;
         ShardedDevice {
-            shards: (0..shards).map(|_| CxlDevice::new(design, codec)).collect(),
+            shards: devs,
             policy,
-            busy_ns: vec![0.0; shards],
-            // per-device DDR of the paper's system model (§IV-B, matching
-            // SystemConfig::paper_default().ddr_bw = 256 GB/s per shard)
-            shard_ddr_gbps: 256.0,
+            link_in_tl: ResourceTimeline::new("fleet-link-in"),
+            link_out_tl: ResourceTimeline::new("fleet-link-out"),
+            shard_ddr_gbps,
+            link,
         }
     }
 
@@ -93,30 +109,45 @@ impl ShardedDevice {
         &self.shards
     }
 
-    /// Modeled busy time of each shard since the last [`Self::reset_time`].
-    pub fn busy_ns(&self) -> &[f64] {
-        &self.busy_ns
+    /// Modeled service (controller+DDR) busy time of each shard since the
+    /// last [`Self::reset_time`]. Excludes shared-link transfer time.
+    pub fn busy_ns(&self) -> Vec<f64> {
+        self.shards.iter().map(|s| s.service_tl.busy_ns()).collect()
     }
 
     /// Wall-clock of the fleet: shards run in parallel, so the slowest
     /// shard's timeline bounds the batch.
     pub fn elapsed_ns(&self) -> f64 {
-        self.busy_ns.iter().copied().fold(0.0, f64::max)
+        self.busy_ns().into_iter().fold(0.0, f64::max)
     }
 
     /// Serialized service time (what a single device would have spent).
     pub fn total_busy_ns(&self) -> f64 {
-        self.busy_ns.iter().sum()
+        self.busy_ns().iter().sum()
     }
 
     pub fn reset_time(&mut self) {
-        self.busy_ns.fill(0.0);
+        for s in self.shards.iter_mut() {
+            s.reset_time();
+        }
+        self.link_in_tl.reset();
+        self.link_out_tl.reset();
     }
 
-    fn service(&mut self, idx: usize, id: TxnId, txn: Transaction) -> Completion {
-        let mut c = self.shards[idx].execute(id, txn);
+    fn service(&mut self, idx: usize, id: TxnId, txn: Transaction, now_ns: f64) -> Completion {
+        let mut c = self.shards[idx].execute_functional(id, txn);
         c.shard = idx;
-        self.busy_ns[idx] += c.latency_ns() + c.stats.dram_bytes() as f64 / self.shard_ddr_gbps;
+        c.schedule(
+            now_ns,
+            super::txn::SchedResources {
+                service: &mut self.shards[idx].service_tl,
+                link_in: &mut self.link_in_tl,
+                link_out: &mut self.link_out_tl,
+                ddr_gbps: self.shard_ddr_gbps,
+                link_gbps: self.link.gbps,
+                link_prop_ns: self.link.latency_ns,
+            },
+        );
         c
     }
 }
@@ -126,12 +157,12 @@ impl MemDevice for ShardedDevice {
         self.shards[0].design
     }
 
-    fn execute(&mut self, id: TxnId, txn: Transaction) -> Completion {
+    fn execute_at(&mut self, id: TxnId, txn: Transaction, now_ns: f64) -> Completion {
         let idx = self.shard_of(txn.block_addr());
-        self.service(idx, id, txn)
+        self.service(idx, id, txn, now_ns)
     }
 
-    fn drain(&mut self, sq: &mut SubmissionQueue) -> Vec<Completion> {
+    fn drain_at(&mut self, sq: &mut SubmissionQueue, now_ns: f64) -> Vec<Completion> {
         let n = self.shards.len();
         let mut queues: Vec<VecDeque<(TxnId, Transaction)>> = vec![VecDeque::new(); n];
         while let Some((id, txn)) = sq.pop() {
@@ -142,18 +173,21 @@ impl MemDevice for ShardedDevice {
                 .into_iter()
                 .map(|(id, txn)| {
                     let idx = shard_of(txn.block_addr(), n);
-                    self.service(idx, id, txn)
+                    self.service(idx, id, txn, now_ns)
                 })
                 .collect(),
             DispatchPolicy::LeastLoaded => {
                 let mut out = Vec::new();
                 loop {
-                    let next = (0..n)
-                        .filter(|&i| !queues[i].is_empty())
-                        .min_by(|&a, &b| self.busy_ns[a].total_cmp(&self.busy_ns[b]));
+                    let next = (0..n).filter(|&i| !queues[i].is_empty()).min_by(|&a, &b| {
+                        self.shards[a]
+                            .service_tl
+                            .busy_ns()
+                            .total_cmp(&self.shards[b].service_tl.busy_ns())
+                    });
                     let Some(i) = next else { break };
                     let (id, txn) = queues[i].pop_front().unwrap();
-                    out.push(self.service(i, id, txn));
+                    out.push(self.service(i, id, txn, now_ns));
                 }
                 out
             }
@@ -330,5 +364,38 @@ mod tests {
         assert!(dev.busy_ns()[0] > 0.0);
         assert_eq!(dev.busy_ns()[1], 0.0);
         assert!((dev.elapsed_ns() - dev.total_busy_ns()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn completions_carry_absolute_ready_times() {
+        let mut r = Rng::new(306);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let mut dev = loaded(2, 4, &kv);
+        dev.reset_time();
+        let mut sq = SubmissionQueue::new();
+        for b in 0..4u64 {
+            sq.submit(Transaction::ReadFull { block_addr: b * STRIPE_BYTES });
+        }
+        let cs = dev.drain_at(&mut sq, 100.0);
+        for c in &cs {
+            assert_eq!(c.issued_ns, 100.0);
+            // service + link transfer + propagation: strictly more than
+            // the bare pipeline latency, anchored at the issue time
+            assert!(c.ready_at_ns > c.issued_ns + c.latency_ns());
+            assert!(c.service_ns() > 0.0);
+        }
+        // reservations on one shard's timeline serialize
+        for shard in 0..2usize {
+            let times: Vec<f64> =
+                cs.iter().filter(|c| c.shard == shard).map(|c| c.ready_at_ns).collect();
+            assert_eq!(times.len(), 2);
+            assert!(times[1] > times[0], "same-shard service must serialize");
+        }
+        // different shards overlap their service windows: the batch ends
+        // well before the serialized sum would
+        let horizon = cs.iter().map(|c| c.ready_at_ns).fold(0.0, f64::max) - 100.0;
+        let serialized: f64 = cs.iter().map(|c| c.latency_ns()).sum();
+        assert!(dev.elapsed_ns() < serialized);
+        assert!(horizon < serialized + dev.link.latency_ns * 4.0);
     }
 }

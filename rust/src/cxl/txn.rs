@@ -11,12 +11,20 @@
 //! invisible to the callers.
 //!
 //! A completion carries the payload, the per-transaction byte-traffic
-//! delta ([`TxnStats`]), and the controller pipeline latency breakdown
-//! ([`LatencyBreakdown`]) so schedulers and the bandwidth model can consume
-//! per-request costs instead of only device-lifetime aggregates.
+//! delta ([`TxnStats`]), the controller pipeline latency breakdown
+//! ([`LatencyBreakdown`]), and — since the model-time refactor — an
+//! **absolute ready-at model time** ([`Completion::ready_at_ns`]).
+//! Devices schedule every transaction onto [`crate::sim`] resource
+//! timelines (controller+DDR service, link transfer), so two completions
+//! in one batch contend for shared resources instead of each reporting an
+//! isolated latency scalar. Callers that care about time pass their
+//! clock's `now` into [`MemDevice::drain_at`]; the latency-free entry
+//! points ([`MemDevice::drain`], [`MemDevice::submit_one`]) issue at t=0.
 
 use std::collections::VecDeque;
 use std::ops::Range;
+
+use crate::sim::{schedule_read, schedule_write, ResourceTimeline};
 
 use crate::bitplane::{KvWindow, PrecisionView};
 use crate::formats::Fmt;
@@ -43,6 +51,10 @@ pub enum Transaction {
     /// positions fall in `range` (`[start, end)`, 0 = LSB plane). At full
     /// range this is identical to `ReadFull` on every design.
     ReadPlanes { block_addr: u64, range: Range<usize> },
+    /// Deallocate a stored block (index-entry invalidation; no DRAM data
+    /// access). Issued when a page migrates back to HBM so device
+    /// footprint and compression ratio track *live* residency.
+    Free { block_addr: u64 },
 }
 
 impl Transaction {
@@ -53,7 +65,8 @@ impl Transaction {
             | Transaction::WriteKv { block_addr, .. }
             | Transaction::ReadFull { block_addr }
             | Transaction::ReadView { block_addr, .. }
-            | Transaction::ReadPlanes { block_addr, .. } => *block_addr,
+            | Transaction::ReadPlanes { block_addr, .. }
+            | Transaction::Free { block_addr } => *block_addr,
         }
     }
 
@@ -75,6 +88,7 @@ impl Transaction {
             Transaction::ReadFull { .. } => "read_full",
             Transaction::ReadView { .. } => "read_view",
             Transaction::ReadPlanes { .. } => "read_planes",
+            Transaction::Free { .. } => "free",
         }
     }
 }
@@ -141,6 +155,17 @@ pub struct Completion {
     pub stats: TxnStats,
     /// Controller pipeline breakdown; populated for both loads and stores.
     pub latency: Option<LatencyBreakdown>,
+    /// Direction of the originating transaction
+    /// ([`Transaction::is_read`], captured at execution) — selects the
+    /// read or write resource chain when the completion is scheduled.
+    pub is_read: bool,
+    /// Model time the transaction was issued to the device.
+    pub issued_ns: f64,
+    /// Absolute model time the result is usable: for reads, the payload
+    /// has crossed the link back to the host; for writes, the data is
+    /// durably stored. Includes queueing on the device's resource
+    /// timelines, so `ready_at_ns - issued_ns >= latency_ns()`.
+    pub ready_at_ns: f64,
 }
 
 impl Completion {
@@ -149,10 +174,63 @@ impl Completion {
         self.result?.into_words()
     }
 
-    /// Modeled service time of this transaction in ns (pipeline only).
+    /// Modeled service time of this transaction in ns (controller
+    /// pipeline only — excludes resource queueing and link transfer; the
+    /// absolute completion time is [`Self::ready_at_ns`]).
     pub fn latency_ns(&self) -> f64 {
         self.latency.map_or(0.0, |l| l.total_ns())
     }
+
+    /// End-to-end modeled service time including queueing and transfer.
+    pub fn service_ns(&self) -> f64 {
+        self.ready_at_ns - self.issued_ns
+    }
+
+    /// Schedule this completion onto a device's resource timelines
+    /// ([`SchedResources`]): controller+DDR service (duration = pipeline
+    /// latency + DRAM bytes at the DDR bandwidth), then the matching link
+    /// direction with fixed propagation. Fills `issued_ns`/`ready_at_ns`.
+    pub(crate) fn schedule(&mut self, now_ns: f64, res: SchedResources<'_>) {
+        let service_ns = self.latency_ns() + self.stats.dram_bytes() as f64 / res.ddr_gbps;
+        let timing = if self.is_read {
+            schedule_read(
+                res.service,
+                res.link_out,
+                now_ns,
+                service_ns,
+                self.stats.link_bytes_out,
+                res.link_gbps,
+                res.link_prop_ns,
+            )
+        } else {
+            schedule_write(
+                res.service,
+                res.link_in,
+                now_ns,
+                service_ns,
+                self.stats.link_bytes_in,
+                res.link_gbps,
+                res.link_prop_ns,
+            )
+        };
+        self.issued_ns = timing.issued_ns;
+        self.ready_at_ns = timing.ready_ns;
+    }
+}
+
+/// The resource timelines and rates a device hands to
+/// [`Completion::schedule`]: the owning device/shard's service timeline
+/// plus the (possibly fleet-shared) link directions.
+pub(crate) struct SchedResources<'a> {
+    pub service: &'a mut ResourceTimeline,
+    pub link_in: &'a mut ResourceTimeline,
+    pub link_out: &'a mut ResourceTimeline,
+    /// Device-DDR bandwidth, bytes/ns (GB/s).
+    pub ddr_gbps: f64,
+    /// Link bandwidth per direction, bytes/ns (GB/s).
+    pub link_gbps: f64,
+    /// Fixed one-way link propagation, ns.
+    pub link_prop_ns: f64,
 }
 
 /// FIFO of submitted-but-not-yet-executed transactions.
@@ -201,32 +279,51 @@ pub trait MemDevice {
     /// Device design (a sharded device reports its shards' common design).
     fn design(&self) -> Design;
 
-    /// Execute one transaction immediately and produce its completion.
-    fn execute(&mut self, id: TxnId, txn: Transaction) -> Completion;
+    /// Execute one transaction issued at model time `now_ns`: perform the
+    /// functional work immediately and schedule its service onto the
+    /// device's resource timelines, stamping the completion's
+    /// `issued_ns`/`ready_at_ns`.
+    fn execute_at(&mut self, id: TxnId, txn: Transaction, now_ns: f64) -> Completion;
 
-    /// Drain a submission queue, executing every pending transaction.
-    /// Single devices serve FIFO; sharded devices reorder per dispatch
-    /// policy. Completions are returned in service order.
-    fn drain(&mut self, sq: &mut SubmissionQueue) -> Vec<Completion> {
+    /// [`Self::execute_at`] at model time 0 (timing-agnostic callers).
+    fn execute(&mut self, id: TxnId, txn: Transaction) -> Completion {
+        self.execute_at(id, txn, 0.0)
+    }
+
+    /// Drain a submission queue issued at model time `now_ns`, executing
+    /// every pending transaction. Single devices serve FIFO; sharded
+    /// devices reorder per dispatch policy. Completions are returned in
+    /// service order; their `ready_at_ns` reflects per-resource queueing.
+    fn drain_at(&mut self, sq: &mut SubmissionQueue, now_ns: f64) -> Vec<Completion> {
         let mut out = Vec::with_capacity(sq.len());
         while let Some((id, txn)) = sq.pop() {
-            out.push(self.execute(id, txn));
+            out.push(self.execute_at(id, txn, now_ns));
         }
         out
     }
 
-    /// One-shot convenience: submit a single transaction through a private
-    /// queue and return its payload.
-    fn submit_one(&mut self, txn: Transaction) -> anyhow::Result<Payload> {
+    /// [`Self::drain_at`] at model time 0 (timing-agnostic callers).
+    fn drain(&mut self, sq: &mut SubmissionQueue) -> Vec<Completion> {
+        self.drain_at(sq, 0.0)
+    }
+
+    /// One-shot convenience: submit a single transaction issued at
+    /// `now_ns` through a private queue and return its payload.
+    fn submit_one_at(&mut self, txn: Transaction, now_ns: f64) -> anyhow::Result<Payload> {
         let mut sq = SubmissionQueue::new();
         sq.submit(txn);
-        let mut completions = self.drain(&mut sq);
+        let mut completions = self.drain_at(&mut sq, now_ns);
         anyhow::ensure!(
             completions.len() == 1,
             "device completed {} of 1 transaction",
             completions.len()
         );
         completions.pop().unwrap().result
+    }
+
+    /// [`Self::submit_one_at`] at model time 0.
+    fn submit_one(&mut self, txn: Transaction) -> anyhow::Result<Payload> {
+        self.submit_one_at(txn, 0.0)
     }
 
     /// Cumulative counters, aggregated across shards.

@@ -17,33 +17,49 @@
 //!   requires ("plane-aligned fetch"), so device DRAM activations and bytes
 //!   scale with requested precision.
 //!
-//! ## Architecture: everything is a transaction
+//! ## Architecture: everything is a transaction on a model-time timeline
 //!
 //! The host side never calls concrete device methods. All reads and writes
 //! are typed [`cxl::Transaction`]s (`WriteWeights`, `WriteKv`, `ReadFull`,
-//! `ReadView`, `ReadPlanes`) pushed through a [`cxl::SubmissionQueue`] and
+//! `ReadView`, `ReadPlanes`, `Free`) pushed through a
+//! [`cxl::SubmissionQueue`] and
 //! drained as [`cxl::Completion`] records that carry the payload, the
-//! per-transaction byte traffic, and the controller-pipeline latency. The
-//! [`cxl::MemDevice`] trait abstracts *what* serves the queue:
+//! per-transaction byte traffic, the controller-pipeline latency, and an
+//! **absolute ready-at model time**: every transaction is reserved on
+//! [`sim`] resource timelines (controller+DDR service per device/shard,
+//! host link per direction), so contention and overlap are first-class
+//! instead of per-call latency scalars. Callers pass their clock's `now`
+//! into [`cxl::MemDevice::drain_at`]; the [`cxl::MemDevice`] trait
+//! abstracts *what* serves the queue:
 //!
 //! * [`cxl::CxlDevice`] — one functional device in any of the three Table
 //!   III designs (Plain / GComp / TRACE).
 //! * [`cxl::ShardedDevice`] — N address-interleaved devices (64 KB
 //!   stripes) with per-shard queues, round-robin or least-loaded dispatch,
-//!   and a parallel busy-time model, so aggregate read bandwidth scales
-//!   with the shard count (`benches/fig_shard_scaling.rs`).
+//!   per-shard service timelines behind one shared link, so aggregate
+//!   read bandwidth scales with the shard count
+//!   (`benches/fig_shard_scaling.rs`).
 //!
 //! The coordinator's decode loop batches every spilled-page fetch of a step
-//! into one submission and routes completions back by transaction id —
-//! see `docs/DEVICE_API.md` for the transaction lifecycle and the migration
-//! notes from the pre-transaction method API.
+//! into one submission and routes completions back by transaction id. With
+//! `EngineConfig::overlap` it runs as a **two-stage pipeline**: while step
+//! N's compute occupies the backend timeline, the engine predicts step
+//! N+1's spilled-page set from the pager and prefetches it on the device
+//! timelines, with a correctness fence that discards stale prefetches —
+//! tokens stay bit-identical to the serial engine, and device traffic
+//! too while no prefetch is invalidated; a discarded stale prefetch
+//! costs only its own reads (`tests/overlap_equiv.rs`,
+//! `benches/fig_overlap.rs`). See
+//! `docs/SIM_CLOCK.md` for the event model and `docs/DEVICE_API.md` for
+//! the transaction lifecycle and the ready-at-time contract.
 //!
 //! ## Crate layout
 //!
 //! Host/runtime side:
 //!
 //! * [`coordinator`] — serving engine: admission queue, continuous batcher,
-//!   decode loop with batched spill fetch through `dyn MemDevice`.
+//!   decode loop with batched spill fetch through `dyn MemDevice`, and the
+//!   overlapped prefetch pipeline driven by a [`sim::SimClock`].
 //! * [`runtime`] — model backends: the mock backend (always available) and
 //!   the PJRT/XLA engine for AOT artifacts (behind the `pjrt` feature; the
 //!   XLA bindings are not in the offline vendor set).
@@ -66,6 +82,9 @@
 //!
 //! Shared substrate:
 //!
+//! * [`sim`] — discrete-event model-time core: [`sim::SimClock`],
+//!   [`sim::ResourceTimeline`] (serial resources with reserve semantics),
+//!   [`sim::EventQueue`], and the canonical read/write scheduling chains.
 //! * [`formats`] — element formats (BF16/FP16/FP8/INT8/INT4/MXFP4) and
 //!   field splits.
 //! * [`gen`] — calibrated synthetic tensors, precision-mix and request
@@ -74,6 +93,7 @@
 //!   harness (the build is offline; no `rand`/`serde`/`clap`/`proptest`).
 
 pub mod util;
+pub mod sim;
 pub mod formats;
 pub mod bitplane;
 pub mod codec;

@@ -90,6 +90,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             policy: KvPolicy::FullKv,
             greedy: true,
             shards: args.get_usize("shards", 1),
+            overlap: args.flag("overlap"),
+            ..Default::default()
         },
     );
     let mut rng = Rng::new(args.get_u64("seed", 7));
@@ -98,10 +100,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         engine.submit(r.prompt, max_new.min(dims.t_max - dims.t_prompt - 2));
     }
     engine.run_to_completion(100_000)?;
-    println!("{}", engine.metrics.report(&engine.device.stats()));
+    let d = engine.device.stats();
+    println!("{}", engine.metrics.report(&d));
     println!(
-        "device KV compression ratio: {:.2}x ({} blocks across {} shard(s))",
-        engine.device.overall_ratio(),
+        "device lifetime KV compression: {:.2}x ({} live blocks across {} shard(s))",
+        d.lifetime_compression_ratio(),
         engine.device.len(),
         engine.device.shards()
     );

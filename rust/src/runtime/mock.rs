@@ -1,8 +1,12 @@
 //! Deterministic mock backend for coordinator tests (no artifacts needed).
 //!
-//! Produces pseudo-logits that depend on (token, pos) and KV entries that
-//! are smooth along the "token" axis per channel — so coordinator tests
-//! exercise the same compression-relevant statistics as the real model.
+//! Produces pseudo-logits that depend on (token, pos) **and on the KV
+//! history content** (a fixed-stride sample of the cache perturbs the
+//! logits), and KV entries that are smooth along the "token" axis per
+//! channel — so coordinator tests exercise the same compression-relevant
+//! statistics as the real model, and engine-equivalence tests (spill vs
+//! HBM, serial vs overlapped prefetch) are sensitive to the exact values
+//! the tier hands back, not just to the sampling path.
 
 use super::{DecodeOut, ModelBackend, ModelDims, PrefillOut};
 use crate::util::Rng;
@@ -60,6 +64,21 @@ impl MockBackend {
             })
             .collect()
     }
+
+    /// Deterministic O(1)-in-history summary of a slot's KV cache: a
+    /// fixed-stride sample, so decode output depends on the exact values
+    /// the memory tier reconstructed (f32 adds in a fixed order).
+    fn kv_signal(kv: &[f32]) -> f32 {
+        if kv.is_empty() {
+            return 0.0;
+        }
+        let stride = (kv.len() / 16).max(1);
+        let mut acc = 0.0f32;
+        for i in (0..kv.len()).step_by(stride) {
+            acc += kv[i];
+        }
+        acc
+    }
 }
 
 impl ModelBackend for MockBackend {
@@ -90,7 +109,12 @@ impl ModelBackend for MockBackend {
         let mut logits = Vec::new();
         let mut kv_new = Vec::new();
         for slot in 0..d.batch {
-            logits.push(self.logits_for(tokens.get(slot).copied().unwrap_or(0), pos));
+            let sig = Self::kv_signal(kv.get(slot).map(|v| v.as_slice()).unwrap_or(&[]));
+            let mut l = self.logits_for(tokens.get(slot).copied().unwrap_or(0), pos);
+            for (i, x) in l.iter_mut().enumerate() {
+                *x += (sig + i as f32 * 0.618).sin() * 0.25;
+            }
+            logits.push(l);
             kv_new.push(self.kv_entry(slot));
         }
         Ok(DecodeOut { logits, kv_new })
@@ -121,6 +145,19 @@ mod tests {
             series.push(d.kv_new[0][3] as f64);
         }
         assert!(crate::util::stats::autocorr1(&series) > 0.7);
+    }
+
+    #[test]
+    fn decode_attends_to_kv_content() {
+        let mut m = MockBackend::tiny();
+        let kv_a = vec![vec![0.5f32; 64], Vec::new()];
+        let mut kv_b = kv_a.clone();
+        kv_b[0][0] += 1.0; // position 0 is always in the stride sample
+        let a = m.decode(&[1, 1], &kv_a, 4).unwrap();
+        let b = m.decode(&[1, 1], &kv_b, 4).unwrap();
+        assert_ne!(a.logits[0], b.logits[0], "logits must read the cache");
+        // the untouched slot is unaffected by slot 0's cache
+        assert_eq!(a.logits[1], b.logits[1]);
     }
 
     #[test]

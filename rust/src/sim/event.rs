@@ -1,0 +1,130 @@
+//! Min-heap event queue with deterministic tie-breaking.
+
+use std::collections::BinaryHeap;
+
+struct Entry<T> {
+    at_ns: f64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq && self.at_ns == other.at_ns
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest-first, with
+        // insertion order breaking ties deterministically
+        other.at_ns.total_cmp(&self.at_ns).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Future events ordered by model time. Ties pop in insertion order, so a
+/// simulation that schedules deterministically replays deterministically.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> EventQueue<T> {
+        EventQueue::default()
+    }
+
+    /// Schedule `payload` to fire at absolute model time `at_ns`.
+    pub fn push(&mut self, at_ns: f64, payload: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { at_ns, seq, payload });
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|e| (e.at_ns, e.payload))
+    }
+
+    /// Pop the earliest event only if it fires at or before `now_ns`.
+    pub fn pop_ready(&mut self, now_ns: f64) -> Option<(f64, T)> {
+        if self.peek_time()? <= now_ns {
+            self.pop()
+        } else {
+            None
+        }
+    }
+
+    /// Fire time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.at_ns)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30.0, "c");
+        q.push(10.0, "a");
+        q.push(20.0, "b");
+        assert_eq!(q.peek_time(), Some(10.0));
+        assert_eq!(q.pop(), Some((10.0, "a")));
+        assert_eq!(q.pop(), Some((20.0, "b")));
+        assert_eq!(q.pop(), Some((30.0, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn ties_pop_in_insertion_order() {
+        let mut q = EventQueue::new();
+        for i in 0..8 {
+            q.push(5.0, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn pop_ready_respects_now() {
+        let mut q = EventQueue::new();
+        q.push(10.0, 1);
+        q.push(50.0, 2);
+        assert_eq!(q.pop_ready(5.0), None);
+        assert_eq!(q.pop_ready(10.0), Some((10.0, 1)));
+        assert_eq!(q.pop_ready(10.0), None);
+        assert_eq!(q.len(), 1);
+        assert!(!q.is_empty());
+        q.clear();
+        assert!(q.is_empty());
+    }
+}

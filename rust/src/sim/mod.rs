@@ -1,0 +1,36 @@
+//! Discrete-event model-time core.
+//!
+//! Every latency in this repo is *model time* — nanoseconds on a simulated
+//! hardware timeline, not host wall-clock. This module is the substrate
+//! the whole stack schedules onto:
+//!
+//! * [`SimClock`] — the monotonic model-time cursor one simulation owns
+//!   (the serving engine holds one; devices are passive and take the
+//!   caller's `now`).
+//! * [`ResourceTimeline`] — one serial hardware resource (a controller
+//!   pipeline, one shard's DDR channels, a CXL link direction, the
+//!   backend's compute). `reserve(earliest, duration)` appends work at
+//!   `max(earliest, free_at)` and returns the occupied interval, so
+//!   contention and idle gaps fall out of the bookkeeping instead of
+//!   hand-rolled busy-time sums.
+//! * [`EventQueue`] — a min-heap of `(ready_at, payload)` events with
+//!   deterministic FIFO tie-breaking; the engine uses it to hold
+//!   in-flight prefetch completions until the step that consumes them.
+//! * [`schedule_read`] / [`schedule_write`] — the canonical two-resource
+//!   transaction chains (device service ↔ link transfer) that turn a
+//!   completion's byte counts into an absolute ready-at time.
+//!
+//! The device models ([`crate::cxl::CxlDevice`],
+//! [`crate::cxl::ShardedDevice`]) reserve their controller+DDR service and
+//! link transfers here, and every [`crate::cxl::Completion`] carries the
+//! resulting `ready_at_ns`. The coordinator engine overlaps prefetch
+//! transactions with backend compute purely by reserving them on disjoint
+//! timelines — see `docs/SIM_CLOCK.md` for the full event model.
+
+pub mod clock;
+pub mod event;
+pub mod timeline;
+
+pub use clock::SimClock;
+pub use event::EventQueue;
+pub use timeline::{schedule_read, schedule_write, Reservation, ResourceTimeline, TxnTiming};

@@ -10,4 +10,4 @@ pub mod shapes;
 pub mod throughput;
 
 pub use shapes::ModelShape;
-pub use throughput::{SystemConfig, ThroughputModel, ThroughputPoint};
+pub use throughput::{OverlapMode, SystemConfig, ThroughputModel, ThroughputPoint};

@@ -21,6 +21,23 @@
 use super::shapes::ModelShape;
 use crate::cxl::Design;
 
+/// How compute (HBM-bound) and the CXL fetch path interact within one
+/// decode step. The discrete-event engine (`coordinator::Engine`) realises
+/// both regimes; this closed form mirrors them analytically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OverlapMode {
+    /// Fetch fully overlaps compute: step time is the slowest single
+    /// resource — the paper's bandwidth-bottleneck closed form. In the
+    /// non-overlapped limit (zero CXL traffic) this coincides exactly
+    /// with [`OverlapMode::Serial`].
+    #[default]
+    Overlapped,
+    /// Strictly serial engine: compute blocks on the fetch, so the CXL
+    /// path (link and device DDR pipeline against each other, hence their
+    /// max) adds to the HBM/compute time instead of hiding under it.
+    Serial,
+}
+
 /// System configuration (paper §IV-B defaults).
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -53,6 +70,9 @@ pub struct SystemConfig {
     /// Extra byte-reduction factor for *spilled* KV fetched through
     /// reduced-precision aliases (TRACE only; 1.0 disables).
     pub kv_elastic_factor: f64,
+    /// Compute/fetch interaction within a step (default overlapped — the
+    /// bandwidth-bottleneck closed form).
+    pub overlap: OverlapMode,
 }
 
 fn kv_ratio_default(d: Design) -> f64 {
@@ -91,6 +111,7 @@ impl SystemConfig {
             kv_ratio: kv_ratio_default,
             w_ratio: w_ratio_default,
             kv_elastic_factor: 1.0,
+            overlap: OverlapMode::Overlapped,
         }
     }
 
@@ -105,6 +126,12 @@ impl SystemConfig {
     /// `n · ddr_bw` while the host link is unchanged.
     pub fn with_shards(mut self, n: usize) -> SystemConfig {
         self.shards = n.max(1);
+        self
+    }
+
+    /// Variant with an explicit compute/fetch overlap mode.
+    pub fn with_overlap(mut self, mode: OverlapMode) -> SystemConfig {
+        self.overlap = mode;
         self
     }
 }
@@ -196,12 +223,20 @@ impl ThroughputModel {
         let step_hbm = hbm_bytes / c.hbm_bw;
         let step_link = link_bytes / c.link_bw;
         let step_ddr = ddr_bytes / (c.ddr_bw * c.shards.max(1) as f64);
-        let (step, bottleneck) = if step_hbm >= step_link && step_hbm >= step_ddr {
+        // bottleneck attribution: the slowest single resource either way
+        let (bottleneck_step, bottleneck) = if step_hbm >= step_link && step_hbm >= step_ddr {
             (step_hbm, Bottleneck::Hbm)
         } else if step_ddr >= step_link {
             (step_ddr, Bottleneck::Ddr)
         } else {
             (step_link, Bottleneck::Link)
+        };
+        let step = match c.overlap {
+            // perfect pipelining: the bottleneck resource bounds the step
+            OverlapMode::Overlapped => bottleneck_step,
+            // compute blocks on the fetch chain (link and DDR still
+            // pipeline against each other inside the device path)
+            OverlapMode::Serial => step_hbm + step_link.max(step_ddr),
         };
         let tok_s = if step > 0.0 { c.batch as f64 / step } else { f64::INFINITY };
 
@@ -322,6 +357,38 @@ mod tests {
         assert_ne!(p4.bottleneck, Bottleneck::Ddr);
         // pre-spill (HBM-bound) points are untouched by sharding
         assert_eq!(m1.eval(16384, Design::Trace).tok_s, m4.eval(16384, Design::Trace).tok_s);
+    }
+
+    #[test]
+    fn overlap_modes_agree_in_the_non_overlapped_limit() {
+        // pre-spill there is no CXL traffic, so serial == overlapped:
+        // the overlap-aware mode degenerates to the closed form exactly
+        let m_over = fig12_model();
+        let mut m_serial = fig12_model();
+        m_serial.cfg = m_serial.cfg.with_overlap(OverlapMode::Serial);
+        for ctx in [4096usize, 16384, 65536] {
+            for d in [Design::Plain, Design::GComp, Design::Trace] {
+                let a = m_over.eval(ctx, d);
+                let b = m_serial.eval(ctx, d);
+                assert_eq!(a.kv_spill_frac, 0.0);
+                assert!((a.tok_s - b.tok_s).abs() < 1e-9, "ctx={ctx} {d:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_strictly_helps_once_spill_traffic_is_nonzero() {
+        let m_over = fig12_model();
+        let mut m_serial = fig12_model();
+        m_serial.cfg = m_serial.cfg.with_overlap(OverlapMode::Serial);
+        for d in [Design::Plain, Design::GComp, Design::Trace] {
+            let a = m_over.eval(131072, d);
+            let b = m_serial.eval(131072, d);
+            assert!(a.kv_spill_frac > 0.0);
+            assert!(a.tok_s > b.tok_s, "{d:?}: overlapped {} vs serial {}", a.tok_s, b.tok_s);
+            // and serial is never worse than the sum-of-everything bound
+            assert!(b.tok_s > 0.0);
+        }
     }
 
     #[test]

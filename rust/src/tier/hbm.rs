@@ -54,6 +54,12 @@ impl HbmPartition {
         self.kv_used = self.kv_used.saturating_sub(bytes);
     }
 
+    /// Enlarge the partition (an explicit capacity resize — e.g. before
+    /// migrating spilled pages back in). Never done implicitly.
+    pub fn grow_usable(&mut self, bytes: u64) {
+        self.usable_bytes += bytes;
+    }
+
     pub fn kv_used(&self) -> u64 {
         self.kv_used
     }
@@ -92,5 +98,14 @@ mod tests {
         h.free_kv(25);
         assert!(h.try_alloc_kv(10));
         assert_eq!(h.kv_used(), 35);
+    }
+
+    #[test]
+    fn grow_usable_adds_headroom() {
+        let mut h = HbmPartition::new(0, 0.5, 0);
+        assert!(!h.try_alloc_kv(64));
+        h.grow_usable(64);
+        assert!(h.try_alloc_kv(64));
+        assert!(!h.try_alloc_kv(1));
     }
 }

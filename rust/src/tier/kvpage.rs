@@ -239,6 +239,24 @@ impl KvPageManager {
         v
     }
 
+    /// Promote a spilled page of `seq` back to HBM residency: clears the
+    /// device address so subsequent fetch plans skip it. Returns false if
+    /// the page does not exist or is already HBM-resident. Residency
+    /// changes like this are exactly what the engine's prefetch fence
+    /// guards against — an in-flight prefetch of the old address is
+    /// discarded, never consumed.
+    pub fn promote(&mut self, seq: u64, index: usize) -> bool {
+        for p in self.pages.iter_mut() {
+            if p.seq == seq && p.index == index && p.home == PageHome::Cxl {
+                p.home = PageHome::Hbm;
+                p.cxl_addr = None;
+                p.shard = 0;
+                return true;
+            }
+        }
+        false
+    }
+
     /// Re-tier a sequence's pages under a policy using current importance.
     pub fn retier(&mut self, seq: u64, policy: KvPolicy) {
         let mut idx: Vec<usize> = (0..self.pages.len()).filter(|&i| self.pages[i].seq == seq).collect();
@@ -250,15 +268,21 @@ impl KvPageManager {
         }
     }
 
-    /// Drop all pages of a finished sequence; returns how many were in HBM.
-    pub fn release_seq(&mut self, seq: u64) -> usize {
-        let in_hbm = self
-            .pages
-            .iter()
-            .filter(|p| p.seq == seq && p.home == PageHome::Hbm)
-            .count();
+    /// Drop all pages of a finished sequence. Returns how many were
+    /// HBM-resident (so the caller can return that capacity) and the
+    /// device addresses of the CXL-resident ones (so the caller can
+    /// `Free` them — device footprint tracks live residency).
+    pub fn release_seq(&mut self, seq: u64) -> (usize, Vec<u64>) {
+        let mut in_hbm = 0usize;
+        let mut spilled = Vec::new();
+        for p in self.pages.iter().filter(|p| p.seq == seq) {
+            match p.cxl_addr {
+                Some(addr) => spilled.push(addr),
+                None => in_hbm += 1,
+            }
+        }
         self.pages.retain(|p| p.seq != seq);
-        in_hbm
+        (in_hbm, spilled)
     }
 }
 
@@ -336,8 +360,31 @@ mod tests {
         assert_eq!(m.seq_pages(1).len(), 3);
         assert!(m.seq_pages(1)[2].cxl_addr.is_some());
         m.retier(1, KvPolicy::DynamicQuant { bf16: 1, fp8: 1, fp4: 1 });
-        assert_eq!(m.release_seq(1), 2);
+        let (hbm, spilled) = m.release_seq(1);
+        assert_eq!(hbm, 2);
+        assert_eq!(spilled.len(), 1, "spilled page addresses come back for device Free");
         assert!(m.pages.is_empty());
+    }
+
+    #[test]
+    fn promote_clears_device_address() {
+        let mut m = KvPageManager::new();
+        m.add_page(1, 0, false);
+        m.add_page(1, 1, true);
+        assert!(m.seq_pages(1)[0].cxl_addr.is_some());
+        assert!(m.promote(1, 0));
+        let p = &m.seq_pages(1)[0];
+        assert_eq!(p.home, PageHome::Hbm);
+        assert!(p.cxl_addr.is_none());
+        // idempotence / missing pages
+        assert!(!m.promote(1, 0), "already HBM");
+        assert!(!m.promote(1, 1), "was never spilled");
+        assert!(!m.promote(2, 0), "unknown sequence");
+        // release counts the promoted page as HBM-resident, and its old
+        // device address is gone (nothing left to free)
+        let (hbm, spilled) = m.release_seq(1);
+        assert_eq!(hbm, 2);
+        assert!(spilled.is_empty());
     }
 
     #[test]

@@ -118,6 +118,7 @@ mod pjrt_backed {
                 policy: KvPolicy::FullKv,
                 greedy: true,
                 shards: 1,
+                ..Default::default()
             },
         );
         engine.submit(vec![1, 2, 3, 4], 18);

@@ -1,0 +1,196 @@
+//! Serial vs overlapped-pipeline equivalence matrix, and the
+//! stale-prefetch fence regression test.
+//!
+//! The overlapped engine prefetches step N+1's spilled pages during step
+//! N's compute. That is a pure *timing* optimization: across every device
+//! design, shard count, and page-tier policy it must produce bit-identical
+//! tokens AND identical aggregate device byte traffic (the mock backend's
+//! decode reads the KV content, so a single wrong scattered value changes
+//! tokens). Model time, however, must strictly improve whenever there is
+//! spill traffic to hide.
+
+use trace_cxl::coordinator::{Engine, EngineConfig};
+use trace_cxl::cxl::{Design, DeviceStats, MemDevice};
+use trace_cxl::runtime::MockBackend;
+use trace_cxl::tier::KvPolicy;
+
+struct RunOut {
+    tokens: Vec<Vec<u32>>,
+    stats: DeviceStats,
+    spilled: u64,
+    model_ns: f64,
+    prefetch_hits: u64,
+    prefetch_stale: u64,
+}
+
+fn run(design: Design, shards: usize, overlap: bool, policy: KvPolicy) -> RunOut {
+    let mut e = Engine::new(
+        MockBackend::tiny(),
+        EngineConfig { design, hbm_kv_bytes: 0, shards, overlap, policy, ..Default::default() },
+    );
+    e.submit(vec![1, 2, 3, 4], 60);
+    e.submit(vec![5, 6], 60);
+    e.run_to_completion(300).unwrap();
+    let mut rs = e.take_responses();
+    rs.sort_by_key(|r| r.id);
+    RunOut {
+        tokens: rs.into_iter().map(|r| r.tokens).collect(),
+        stats: e.device.stats(),
+        spilled: e.metrics.pages_spilled,
+        model_ns: e.metrics.model_ns,
+        prefetch_hits: e.metrics.prefetch_hits,
+        prefetch_stale: e.metrics.prefetch_stale,
+    }
+}
+
+#[test]
+fn overlap_matrix_bit_identical_across_designs_and_shards() {
+    for design in [Design::Plain, Design::GComp, Design::Trace] {
+        for shards in [1usize, 4] {
+            let serial = run(design, shards, false, KvPolicy::FullKv);
+            let over = run(design, shards, true, KvPolicy::FullKv);
+            let tag = format!("{design:?} shards={shards}");
+            assert!(serial.spilled > 0, "{tag}: workload must spill");
+            assert_eq!(serial.tokens, over.tokens, "{tag}: tokens must be bit-identical");
+            assert_eq!(serial.stats, over.stats, "{tag}: aggregate device traffic must match");
+            assert!(over.prefetch_hits > 0, "{tag}: pipeline must actually prefetch");
+            assert_eq!(over.prefetch_stale, 0, "{tag}: steady state has no stale prefetches");
+            assert!(
+                over.model_ns < serial.model_ns,
+                "{tag}: overlap must strictly help ({} vs {} ns)",
+                over.model_ns,
+                serial.model_ns
+            );
+        }
+    }
+}
+
+#[test]
+fn overlap_matrix_with_tier_ladder_policy() {
+    // DynamicQuant shifts page tiers every time a page commits, so the
+    // prefetcher must predict next step's ranking, not reuse this step's
+    let policy = KvPolicy::DynamicQuant { bf16: 2, fp8: 2, fp4: 30 };
+    for shards in [1usize, 4] {
+        let serial = run(Design::Trace, shards, false, policy);
+        let over = run(Design::Trace, shards, true, policy);
+        let tag = format!("dynquant shards={shards}");
+        assert!(serial.spilled > 0, "{tag}");
+        assert_eq!(serial.tokens, over.tokens, "{tag}: tokens");
+        assert_eq!(serial.stats, over.stats, "{tag}: traffic");
+        assert_eq!(over.prefetch_stale, 0, "{tag}: tier shifts must be predicted, not fenced");
+        assert!(over.model_ns < serial.model_ns, "{tag}: model time");
+    }
+}
+
+#[test]
+fn overlap_matrix_with_page_drops() {
+    // an aggressive ladder ({1,1,1}) pushes the coldest page off the end
+    // once a sequence holds 5 pages: its last reduced-precision scatter
+    // must be restored from the authoritative copy in BOTH pipelines, and
+    // the prefetcher must predict the drop instead of issuing a dead read
+    let policy = KvPolicy::DynamicQuant { bf16: 1, fp8: 1, fp4: 1 };
+    let run80 = |overlap: bool| {
+        let mut e = Engine::new(
+            MockBackend::tiny(),
+            EngineConfig { hbm_kv_bytes: 0, overlap, policy, ..Default::default() },
+        );
+        e.submit(vec![1, 2, 3, 4], 80);
+        e.run_to_completion(400).unwrap();
+        (
+            e.take_responses().pop().unwrap().tokens,
+            e.device.stats(),
+            e.metrics.pages_spilled,
+            e.metrics.prefetch_stale,
+        )
+    };
+    let (st, ss, spilled, _) = run80(false);
+    let (ot, os, _, stale) = run80(true);
+    assert!(spilled >= 5, "need enough pages for a drop, got {spilled}");
+    assert_eq!(st, ot, "tokens across a drop transition");
+    assert_eq!(ss, os, "traffic across a drop transition");
+    assert_eq!(stale, 0, "drops must be predicted, not fenced");
+}
+
+#[test]
+fn overlap_never_slower_and_equal_without_spill() {
+    // generous HBM: nothing spills, there is nothing to prefetch, and the
+    // two pipelines take identical model time
+    let run_hbm = |overlap: bool| -> (Vec<Vec<u32>>, u64, f64, u64) {
+        let mut e = Engine::new(
+            MockBackend::tiny(),
+            EngineConfig { hbm_kv_bytes: 16 << 20, overlap, ..Default::default() },
+        );
+        e.submit(vec![1, 2, 3, 4], 40);
+        e.run_to_completion(200).unwrap();
+        let toks = e.take_responses().pop().unwrap().tokens;
+        (vec![toks], e.metrics.pages_spilled, e.metrics.model_ns, e.metrics.prefetch_issued)
+    };
+    let (st, s_spill, s_ns, _) = run_hbm(false);
+    let (ot, o_spill, o_ns, o_issued) = run_hbm(true);
+    assert_eq!((s_spill, o_spill), (0, 0));
+    assert_eq!(st, ot);
+    assert_eq!(o_issued, 0, "nothing spilled, nothing to prefetch");
+    assert!((s_ns - o_ns).abs() < 1e-6, "serial {s_ns} vs overlapped {o_ns}");
+}
+
+#[test]
+fn stale_prefetch_fence_discards_promoted_page() {
+    // Regression: a page promoted CXL→HBM *between* prefetch issue and
+    // consumption must be discarded by the fence. With a reduced-precision
+    // tier ladder the stale payload holds truncated values, so consuming
+    // it would visibly corrupt the attention input (the mock decode reads
+    // the cache) — tokens must instead match the serial engine subjected
+    // to the identical promotion schedule.
+    let policy = KvPolicy::DynamicQuant { bf16: 1, fp8: 1, fp4: 30 };
+    let run = |overlap: bool| -> (Vec<u32>, u64, u64) {
+        let mut e = Engine::new(
+            MockBackend::tiny(),
+            EngineConfig { hbm_kv_bytes: 0, overlap, policy, ..Default::default() },
+        );
+        e.submit(vec![1, 2, 3, 4], 50);
+        // run until 3 pages spilled: page 0 has slid down the ladder to a
+        // truncated (FP8) tier, so its in-flight prefetch payload differs
+        // from the full-precision HBM copy — consuming it would corrupt
+        for _ in 0..45 {
+            e.step().unwrap();
+        }
+        assert!(e.metrics.pages_spilled >= 3, "need ≥3 spilled pages before promoting");
+        // the overlap engine has already prefetched page 0 for step 46;
+        // grow the (zero-byte) partition so the migration has headroom
+        let pb = e.page_bytes();
+        e.hbm.grow_usable(pb);
+        assert!(e.promote_page_to_hbm(0, 0));
+        e.run_to_completion(300).unwrap();
+        let tokens = e.take_responses().pop().unwrap().tokens;
+        (tokens, e.metrics.prefetch_stale, e.metrics.pages_promoted)
+    };
+    let (serial_tokens, serial_stale, sp) = run(false);
+    let (overlap_tokens, overlap_stale, op) = run(true);
+    assert_eq!((sp, op), (1, 1));
+    assert_eq!(serial_stale, 0);
+    assert!(overlap_stale >= 1, "promotion must invalidate the in-flight prefetch");
+    assert_eq!(serial_tokens, overlap_tokens, "fence must keep tokens identical");
+}
+
+#[test]
+fn overlapped_model_time_converges_to_compute_bound() {
+    // with everything spilled and FullKv, the overlapped engine should
+    // hide (nearly) the whole fetch under compute: its per-step model
+    // time approaches compute_ns, while the serial engine pays the chain
+    let run = |overlap: bool| -> (f64, u64) {
+        let mut e = Engine::new(
+            MockBackend::tiny(),
+            EngineConfig { hbm_kv_bytes: 0, overlap, ..Default::default() },
+        );
+        e.submit(vec![1; 8], 64);
+        e.run_to_completion(300).unwrap();
+        (e.metrics.model_ns, e.metrics.engine_steps)
+    };
+    let (serial_ns, steps_s) = run(false);
+    let (overlap_ns, steps_o) = run(true);
+    assert_eq!(steps_s, steps_o, "same step count either way");
+    let compute_floor = steps_s as f64 * EngineConfig::default().compute_ns;
+    // overlapped: within 20% of pure compute; serial: clearly above it
+    assert!(overlap_ns < compute_floor * 1.2, "overlap {overlap_ns} floor {compute_floor}");
+    assert!(serial_ns > overlap_ns * 1.02, "serial {serial_ns} overlap {overlap_ns}");
+}
