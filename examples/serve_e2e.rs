@@ -2,23 +2,32 @@
 //! stack, spill KV to the simulated TRACE CXL tier (optionally sharded
 //! with `--shards N`), and report latency/throughput + device traffic.
 //!
+//! Scheduling is pluggable (`--policy fcfs|sjf|priority`). With `--rate R`
+//! the driver replays an open-loop Poisson arrival trace (R requests per
+//! model-time second, `--interactive-frac` of them in the interactive QoS
+//! class with quarter-length decodes) through `Engine::submit_at`, and
+//! reports offered vs served load plus the per-class latency breakdown.
+//! Without `--rate` every request is submitted at model time 0, as the
+//! earlier revisions did.
+//!
 //! With AOT artifacts present (`make artifacts`, requires the `pjrt`
 //! feature) the real ~100M-parameter compiled transformer serves the
 //! requests; otherwise the deterministic mock backend runs the identical
 //! coordinator/tier/device path, so the example always exercises the
 //! transaction API end-to-end.
 //!
-//! Run: `cargo run --release --example serve_e2e -- --shards 4`
+//! Run: `cargo run --release --example serve_e2e -- --shards 4 --policy priority --rate 20000`
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
 use trace_cxl::codec::CodecPolicy;
-use trace_cxl::coordinator::{Engine, EngineConfig};
+use trace_cxl::coordinator::{Engine, EngineConfig, SchedKind, SlaClass};
 use trace_cxl::cxl::{Design, MemDevice};
-use trace_cxl::gen::SynthCorpus;
+use trace_cxl::gen::{RequestGen, SynthCorpus};
 use trace_cxl::runtime::{MockBackend, ModelBackend, PjrtEngine};
 use trace_cxl::tier::KvPolicy;
 use trace_cxl::util::cli::Args;
 use trace_cxl::util::stats::human_bytes;
+use trace_cxl::util::Rng;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -44,6 +53,10 @@ fn run<B: ModelBackend>(backend: B, args: &Args) -> anyhow::Result<()> {
     let n_requests = args.get_usize("requests", 6);
     let max_new = args.get_usize("max-new", 64);
     let shards = args.get_usize("shards", 1).max(1);
+    let sched = SchedKind::parse(args.get_or("policy", "fcfs"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --policy (fcfs|sjf|priority)"))?;
+    let rate = args.get_f64("rate", 0.0);
+    let interactive_frac = args.get_f64("interactive-frac", 0.5);
     println!(
         "model: {} layers, d_model {}, vocab {} (~{:.1}M params), batch {}, t_max {}",
         dims.layers,
@@ -69,25 +82,56 @@ fn run<B: ModelBackend>(backend: B, args: &Args) -> anyhow::Result<()> {
             shards,
             overlap,
             compute_ns: args.get_f64("compute-ns", 2000.0),
+            sched,
+            ..Default::default()
         },
     );
 
-    let mut corpus = SynthCorpus::new(dims.vocab as u32, 7);
-    let prompt_span = dims.t_prompt.saturating_sub(2).max(1);
-    for i in 0..n_requests {
-        let plen = (2 + (i * 5) % prompt_span).min(dims.t_prompt);
-        let prompt = corpus.take(plen);
-        let new = max_new.min(dims.t_max.saturating_sub(dims.t_prompt + 2)).max(1);
-        engine.submit(prompt, new);
+    let cap = max_new.min(dims.t_max.saturating_sub(dims.t_prompt + 2)).max(1);
+    let mut offered_span_ns = 0.0f64;
+    if rate > 0.0 {
+        // open-loop Poisson arrivals: the engine's clock must reach an
+        // arrival before the scheduler may admit it
+        let mut rng = Rng::new(args.get_u64("seed", 11));
+        let gen = RequestGen::new(rate, 2, dims.t_prompt, max_new, dims.vocab as u32);
+        for r in gen.generate(&mut rng, n_requests) {
+            let interactive = rng.chance(interactive_frac);
+            let (sla, decode) = if interactive {
+                (SlaClass::Interactive, (cap / 4).max(1))
+            } else {
+                (SlaClass::Batch, cap)
+            };
+            offered_span_ns = offered_span_ns.max(r.arrival_ns());
+            engine.submit_at(r.prompt, decode, r.arrival_ns(), sla);
+        }
+        println!(
+            "submitted {n_requests} requests open-loop at {rate:.0} req/s over {:.1} us \
+             ({:.0}% interactive), policy {}, HBM-KV {}, {} shard(s), {} pipeline",
+            offered_span_ns / 1000.0,
+            interactive_frac * 100.0,
+            sched.name(),
+            human_bytes(hbm_kv as f64),
+            shards,
+            if overlap { "overlapped" } else { "serial" }
+        );
+    } else {
+        let mut corpus = SynthCorpus::new(dims.vocab as u32, 7);
+        let prompt_span = dims.t_prompt.saturating_sub(2).max(1);
+        for i in 0..n_requests {
+            let plen = (2 + (i * 5) % prompt_span).min(dims.t_prompt);
+            let prompt = corpus.take(plen);
+            engine.submit(prompt, cap);
+        }
+        println!(
+            "submitted {n_requests} requests (max_new={max_new}, policy {}, HBM-KV budget {}, {} shard(s), {} pipeline)",
+            sched.name(),
+            human_bytes(hbm_kv as f64),
+            shards,
+            if overlap { "overlapped" } else { "serial" }
+        );
     }
-    println!(
-        "submitted {n_requests} requests (max_new={max_new}, HBM-KV budget {}, {} shard(s), {} pipeline)",
-        human_bytes(hbm_kv as f64),
-        shards,
-        if overlap { "overlapped" } else { "serial" }
-    );
 
-    engine.run_to_completion(50_000)?;
+    engine.run_to_completion(200_000)?;
     let responses = engine.take_responses();
 
     println!("\n-- results --");
@@ -126,6 +170,39 @@ fn run<B: ModelBackend>(backend: B, args: &Args) -> anyhow::Result<()> {
         m.tpot().p50 / 1000.0,
         m.tpot().p99 / 1000.0
     );
+    if rate > 0.0 {
+        // offered vs served: arrival-window request rate vs what the
+        // engine actually sustained in model time
+        let offered = n_requests as f64 / (offered_span_ns * 1e-9).max(1e-12);
+        let served = m.requests_finished as f64 / m.model_elapsed_s().max(1e-12);
+        println!(
+            "load: offered {:.0} req/s over the arrival window, served {:.0} req/s end-to-end ({:.2}x)",
+            offered,
+            served,
+            offered / served.max(1e-12)
+        );
+        println!(
+            "queue delay: p50 {:.2} us p99 {:.2} us   sched: {} preemptions, {} resumes, {} idle jumps, restore {}",
+            m.queue_delay().p50 / 1000.0,
+            m.queue_delay().p99 / 1000.0,
+            m.preemptions,
+            m.resumes,
+            m.idle_jumps,
+            human_bytes(m.restore_bytes as f64)
+        );
+        for class in SlaClass::ALL {
+            let t = m.ttft_class(class);
+            if t.n > 0 {
+                println!(
+                    "  {:<12} {:>2} finished   TTFT p50 {:>9.2} us p99 {:>9.2} us",
+                    class.name(),
+                    t.n,
+                    t.p50 / 1000.0,
+                    t.p99 / 1000.0
+                );
+            }
+        }
+    }
     if overlap {
         println!(
             "prefetch pipeline: {} issued, {} consumed, {} stale-discarded",

@@ -1,6 +1,6 @@
 //! The serving engine: continuous batching over a fixed slot count, with
 //! KV pages placed across HBM and the simulated TRACE CXL tier, driven by
-//! a discrete-event model-time clock.
+//! a discrete-event model-time clock and a pluggable request scheduler.
 //!
 //! The device side is a `Box<dyn MemDevice>` — a single
 //! [`CxlDevice`](crate::cxl::CxlDevice) or an N-way
@@ -10,6 +10,36 @@
 //! completions (each carrying an absolute ready-at model time from the
 //! device's resource timelines), and scatters the payloads back into each
 //! slot's attention KV.
+//!
+//! ## Scheduling (`EngineConfig::sched`, [`SchedulerPolicy`])
+//!
+//! Every step the engine snapshots its queue and slots into a
+//! [`SchedView`] and asks the policy which queued requests to admit and
+//! which running slots to preempt. The engine owns the mechanism:
+//!
+//! * **Open-loop admission** — [`Engine::submit_at`] stamps an arrival
+//!   time; a request is invisible to the policy until the model-time
+//!   clock reaches it. With nothing running and nothing arrived, the
+//!   clock jumps to the next arrival instead of spinning.
+//! * **Preemption** — a victim's HBM-resident pages (plus the partial
+//!   live page) are spilled to the device with `WriteKv`; the request
+//!   re-enters the queue head carrying a [`ResumeState`]. On re-admission
+//!   the whole context is fetched back full-precision, the partial page's
+//!   device block is reclaimed with [`Transaction::Free`], and previously
+//!   HBM-resident pages re-claim HBM while there is room. The roundtrip
+//!   is BF16-lossless, so tokens are bit-identical to an uninterrupted
+//!   run (`tests/sched_equiv.rs`).
+//! * **Chunked prefill** — with `prefill_chunk_pages > 0`, a newly
+//!   admitted request charges its prompt's model-time prefill cost
+//!   page-chunk by page-chunk on the shared compute timeline, decode
+//!   steps of other slots interleaving, instead of joining decode
+//!   instantaneously (the legacy behavior at `0`, which
+//!   [`SchedKind::Fcfs`] reproduces bit-identically).
+//!
+//! Serving progress is streamed as [`EngineEvent`]s via
+//! [`Engine::poll_events`] (`Admitted`/`Token`/`Preempted`/`Resumed`/
+//! `Finished`); [`Engine::take_responses`] remains as the finished-only
+//! summary view of the same stream.
 //!
 //! ## Two-stage pipeline (`EngineConfig::overlap`)
 //!
@@ -25,22 +55,26 @@
 //! step N+1 consumes them. A correctness fence re-derives the demand plan
 //! at consumption time and discards any prefetch whose (sequence, page,
 //! device address, precision tier) no longer matches — e.g. a page
-//! promoted back to HBM in between. Tokens are therefore bit-identical to
-//! the serial engine unconditionally, and aggregate device byte traffic
-//! is identical whenever no prefetch was invalidated (the steady state:
-//! the prediction is exact, so `Metrics::prefetch_stale` stays 0) *and*
-//! the spilled working set fits the device's on-chip index cache —
-//! prefetching reorders reads, and metadata-cache **conflict** misses
-//! are order-sensitive, so byte-exact equality additionally assumes no
-//! cache aliasing (8192 entries = 32 MB of 4 KB blocks by default;
-//! compulsory misses are order-independent). A discarded stale prefetch
-//! costs exactly its own already-executed reads and nothing else
+//! promoted back to HBM in between, or a slot preempted under an
+//! in-flight prefetch. Tokens are therefore bit-identical to the serial
+//! engine unconditionally, and aggregate device byte traffic is identical
+//! whenever no prefetch was invalidated (the steady state: the prediction
+//! is exact, so `Metrics::prefetch_stale` stays 0) *and* the spilled
+//! working set fits the device's on-chip index cache — prefetching
+//! reorders reads, and metadata-cache **conflict** misses are
+//! order-sensitive, so byte-exact equality additionally assumes no cache
+//! aliasing (8192 entries = 32 MB of 4 KB blocks by default; compulsory
+//! misses are order-independent). A discarded stale prefetch costs
+//! exactly its own already-executed reads and nothing else
 //! (`tests/overlap_equiv.rs`). The page a step commits mid-flight cannot
 //! be prefetched (it is not written until after compute) and is
 //! demand-fetched next step.
 
 use super::metrics::Metrics;
-use super::request::{AdmissionQueue, Request, RequestState, Response};
+use super::request::{
+    AdmissionQueue, EngineEvent, Request, RequestState, Response, ResumeState, SlaClass,
+};
+use super::sched::{QueuedView, SchedKind, SchedView, SchedulerPolicy, SlotView};
 use crate::codec::CodecPolicy;
 use crate::cxl::{
     CxlDevice, Design, MemDevice, ShardedDevice, SubmissionQueue, Transaction, TxnId,
@@ -74,6 +108,19 @@ pub struct EngineConfig {
     /// placeholder magnitude (≈0.5k tok/s per slot); figure benches and
     /// `serve_e2e --compute-ns` calibrate it per deployment.
     pub compute_ns: f64,
+    /// Built-in request-scheduling policy ([`SchedKind::Fcfs`] is
+    /// bit-identical to the pre-scheduler engine). Custom policies:
+    /// [`Engine::set_scheduler`].
+    pub sched: SchedKind,
+    /// Page-chunks of prompt prefill charged on the compute timeline per
+    /// engine step. `0` (default) keeps the legacy behavior: prefill is
+    /// instantaneous in model time and the request decodes in its
+    /// admission step.
+    pub prefill_chunk_pages: usize,
+    /// Model-time cost per prompt token when prefill is chunked, ns.
+    /// Ignored at `prefill_chunk_pages == 0`. Placeholder magnitude, like
+    /// `compute_ns`.
+    pub prefill_ns_per_token: f64,
 }
 
 impl Default for EngineConfig {
@@ -87,6 +134,9 @@ impl Default for EngineConfig {
             shards: 1,
             overlap: false,
             compute_ns: 2000.0,
+            sched: SchedKind::Fcfs,
+            prefill_chunk_pages: 0,
+            prefill_ns_per_token: 125.0,
         }
     }
 }
@@ -94,6 +144,12 @@ impl Default for EngineConfig {
 /// One sequence's `(page index, device address)` pairs in index order —
 /// `None` marks HBM residency.
 type PageList = Vec<(usize, Option<u64>)>;
+
+/// Retention cap of the [`Engine::poll_events`] log: callers that never
+/// poll (the figure benches, legacy `take_responses` users) must not pay
+/// unbounded memory for it. Past the cap the oldest half is shed and
+/// counted in `Metrics::events_dropped`.
+const MAX_EVENT_LOG: usize = 1 << 16;
 
 /// One spilled-page fetch the current step must perform: which page,
 /// where it lives on the device, and through which precision tier.
@@ -133,6 +189,10 @@ struct Slot {
     /// Number of cached tokens.
     pos: usize,
     cur_token: u32,
+    /// Chunked-prefill progress: page-chunks charged / total. Both zero
+    /// on the legacy instantaneous path.
+    prefill_units_done: usize,
+    prefill_units_total: usize,
 }
 
 impl Slot {
@@ -144,6 +204,8 @@ impl Slot {
             viewed: HashSet::new(),
             pos: 0,
             cur_token: 0,
+            prefill_units_done: 0,
+            prefill_units_total: 0,
         }
     }
 }
@@ -160,12 +222,26 @@ pub struct Engine<B: ModelBackend> {
     pub pager: KvPageManager,
     /// The engine's model-time clock; advances to each step's compute-done.
     pub clock: SimClock,
-    /// Backend compute resource (one decode step at a time).
+    /// Backend compute resource (one decode step at a time; chunked
+    /// prefill work shares it).
     compute_tl: ResourceTimeline,
     /// In-flight prefetch completions, keyed by ready-at model time.
     inflight: EventQueue<Prefetched>,
+    /// The request-scheduling policy (admission order + preemption).
+    scheduler: Box<dyn SchedulerPolicy>,
+    /// Requests whose arrival time is still in the future, sorted by
+    /// (arrival, id) ascending.
+    future: Vec<Request>,
+    /// Arrived requests awaiting a slot, FIFO.
     queue: AdmissionQueue,
     slots: Vec<Slot>,
+    /// Monotonic sequence-id source for submissions.
+    next_seq: u64,
+    /// Streaming lifecycle log drained by [`Engine::poll_events`].
+    events: Vec<EngineEvent>,
+    /// Ready-at fence of this step's preemption restores (consumed by the
+    /// next compute start).
+    restore_ready_ns: f64,
     pub metrics: Metrics,
     responses: Vec<Response>,
     kv_entry_len: usize,
@@ -173,6 +249,17 @@ pub struct Engine<B: ModelBackend> {
 
 impl<B: ModelBackend> Engine<B> {
     pub fn new(backend: B, cfg: EngineConfig) -> Engine<B> {
+        let scheduler = cfg.sched.build();
+        Self::with_scheduler(backend, cfg, scheduler)
+    }
+
+    /// An engine driven by a custom [`SchedulerPolicy`] (ignores
+    /// `cfg.sched`).
+    pub fn with_scheduler(
+        backend: B,
+        cfg: EngineConfig,
+        scheduler: Box<dyn SchedulerPolicy>,
+    ) -> Engine<B> {
         let dims = backend.dims().clone();
         let slots = (0..dims.batch).map(|_| Slot::empty()).collect();
         let device: Box<dyn MemDevice> = if cfg.shards > 1 {
@@ -192,25 +279,88 @@ impl<B: ModelBackend> Engine<B> {
             clock: SimClock::new(),
             compute_tl: ResourceTimeline::new("backend-compute"),
             inflight: EventQueue::new(),
+            scheduler,
+            future: Vec::new(),
             queue: AdmissionQueue::new(),
             slots,
+            next_seq: 0,
+            events: Vec::new(),
+            restore_ready_ns: 0.0,
             metrics: Metrics::new(),
             responses: Vec::new(),
         }
     }
 
+    /// Replace the scheduling policy mid-flight. Queued and running
+    /// requests are simply decided by the new policy from the next step.
+    pub fn set_scheduler(&mut self, scheduler: Box<dyn SchedulerPolicy>) {
+        self.scheduler = scheduler;
+    }
+
+    /// Name of the active scheduling policy.
+    pub fn scheduler_name(&self) -> &'static str {
+        self.scheduler.name()
+    }
+
+    /// Submit a request arriving now (model time 0 before the first
+    /// step), batch QoS class. Equivalent to the pre-scheduler API.
     pub fn submit(&mut self, prompt: Vec<u32>, max_new: usize) -> u64 {
-        let id = self.queue.submitted;
-        self.queue.submit(Request::new(id, prompt, max_new));
+        self.submit_at(prompt, max_new, 0.0, SlaClass::Batch)
+    }
+
+    /// Submit a request that *arrives* at model time `arrival_ns` with a
+    /// QoS class. Admission is open-loop: the scheduler cannot see the
+    /// request before the engine clock reaches its arrival, so a Poisson
+    /// arrival trace ([`crate::gen::RequestGen`]) replays faithfully
+    /// instead of being admitted up front.
+    pub fn submit_at(
+        &mut self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        arrival_ns: f64,
+        sla: SlaClass,
+    ) -> u64 {
+        let id = self.next_seq;
+        self.next_seq += 1;
+        let req = Request::arriving(id, prompt, max_new, arrival_ns.max(0.0), sla);
+        // keep `future` sorted by (arrival, id); submissions usually come
+        // in arrival order, making this an append
+        let at = self
+            .future
+            .partition_point(|r| (r.arrival_ns, r.id) <= (req.arrival_ns, req.id));
+        self.future.insert(at, req);
         id
     }
 
+    /// Drain completed-request summaries (the finished-only view of the
+    /// event stream; [`Engine::poll_events`] carries the full lifecycle).
     pub fn take_responses(&mut self) -> Vec<Response> {
         std::mem::take(&mut self.responses)
     }
 
+    /// Drain the streaming lifecycle log accumulated since the last call:
+    /// `Admitted`, `Token`, `Preempted`, `Resumed`, `Finished`, in engine
+    /// order. The log retains at most [`MAX_EVENT_LOG`] entries between
+    /// polls — past that the oldest are shed (counted in
+    /// `Metrics::events_dropped`), so non-polling callers pay bounded
+    /// memory; streaming consumers should poll every few steps.
+    pub fn poll_events(&mut self) -> Vec<EngineEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Append to the event log, shedding the oldest half at the cap.
+    fn push_event(&mut self, ev: EngineEvent) {
+        if self.events.len() >= MAX_EVENT_LOG {
+            self.events.drain(..MAX_EVENT_LOG / 2);
+            self.metrics.events_dropped += (MAX_EVENT_LOG / 2) as u64;
+        }
+        self.events.push(ev);
+    }
+
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.slots.iter().filter(|s| s.req.is_some()).count()
+        self.future.len()
+            + self.queue.len()
+            + self.slots.iter().filter(|s| s.req.is_some()).count()
     }
 
     /// Page-size in bytes (BF16 storage).
@@ -218,27 +368,132 @@ impl<B: ModelBackend> Engine<B> {
         (PAGE_TOKENS * self.kv_entry_len * 2) as u64
     }
 
-    /// Admit queued requests into free slots and prefill them.
-    fn admit(&mut self) -> Result<()> {
-        let dims = self.backend.dims().clone();
-        // find free slots
-        let free: Vec<usize> =
-            (0..self.slots.len()).filter(|&i| self.slots[i].req.is_none()).collect();
-        if free.is_empty() || self.queue.is_empty() {
+    /// Move requests whose arrival time has been reached into the
+    /// scheduler-visible queue, in (arrival, id) order.
+    fn release_arrivals(&mut self) {
+        let now = self.clock.now();
+        let n = self.future.partition_point(|r| r.arrival_ns <= now);
+        for req in self.future.drain(..n) {
+            self.queue.submit(req);
+        }
+    }
+
+    fn next_arrival_ns(&self) -> Option<f64> {
+        self.future.first().map(|r| r.arrival_ns)
+    }
+
+    /// Snapshot queue + slots, ask the policy for a plan, and apply it:
+    /// preemptions first (victims re-enter the queue head), then
+    /// admissions in plan order into free slots in index order, then
+    /// chunked-prefill progress. Invalid plan entries are skipped — a
+    /// policy can waste capacity but not corrupt the engine.
+    fn schedule(&mut self) -> Result<()> {
+        let occupied = self.slots.iter().filter(|s| s.req.is_some()).count();
+        if self.queue.is_empty() && occupied == 0 {
             return Ok(());
         }
-        let mut admitted = Vec::new();
-        for &slot in &free {
-            if let Some(mut req) = self.queue.pop() {
-                req.state = RequestState::Prefilling;
-                req.admitted_step = Some(self.metrics.engine_steps);
-                req.admitted_ns = Some(self.clock.now());
-                admitted.push((slot, req));
+        let now = self.clock.now();
+        let queued: Vec<QueuedView> = self
+            .queue
+            .iter()
+            .map(|r| QueuedView {
+                seq: r.id,
+                arrival_ns: r.arrival_ns,
+                sla: r.sla,
+                prompt_len: r.prompt.len(),
+                max_new: r.max_new_tokens,
+                generated: r.generated.len(),
+                preemptions: r.preemptions,
+            })
+            .collect();
+        let running: Vec<SlotView> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| {
+                s.req.as_ref().map(|r| SlotView {
+                    slot: i,
+                    seq: r.id,
+                    sla: r.sla,
+                    decoding: r.state == RequestState::Decoding,
+                    pos: s.pos,
+                    generated: r.generated.len(),
+                    max_new: r.max_new_tokens,
+                    admitted_ns: r.admitted_ns.unwrap_or(now),
+                })
+            })
+            .collect();
+        let view = SchedView {
+            now_ns: now,
+            queued: &queued,
+            running: &running,
+            free_slots: self.slots.len() - occupied,
+        };
+        let plan = self.scheduler.plan(&view);
+
+        // preemptions: victims free their slots and re-enter the queue
+        // head in plan order (their arrivals are the oldest around)
+        let mut victims: Vec<Request> = Vec::new();
+        let mut preempt_err = None;
+        for &seq in &plan.preempt {
+            if victims.iter().any(|r| r.id == seq) {
+                continue;
+            }
+            let Some(slot) = self.slots.iter().position(|s| {
+                s.req
+                    .as_ref()
+                    .is_some_and(|r| r.id == seq && r.state == RequestState::Decoding)
+            }) else {
+                continue; // unknown, queued, or prefilling: not preemptable
+            };
+            match self.preempt_slot(slot) {
+                Ok(req) => victims.push(req),
+                Err(e) => {
+                    // already-evicted victims must still be requeued, or a
+                    // failed save would lose them
+                    preempt_err = Some(e);
+                    break;
+                }
             }
         }
+        for req in victims.into_iter().rev() {
+            self.queue.requeue_front(req);
+        }
+        if let Some(e) = preempt_err {
+            return Err(e);
+        }
+
+        // admissions
+        let free: Vec<usize> =
+            (0..self.slots.len()).filter(|&i| self.slots[i].req.is_none()).collect();
+        let mut next_free = 0usize;
+        let mut wave: Vec<(usize, Request)> = Vec::new();
+        for &seq in &plan.admit {
+            if next_free >= free.len() {
+                break; // plan over-admitted: drop the tail
+            }
+            let Some(req) = self.queue.take(seq) else { continue };
+            let slot = free[next_free];
+            next_free += 1;
+            if req.resume.is_some() {
+                self.resume_slot(slot, req)?;
+            } else {
+                wave.push((slot, req));
+            }
+        }
+        self.admit_wave(wave)?;
+        self.advance_prefill()
+    }
+
+    /// Prefill and seat one admission wave (one batched `prefill` call,
+    /// exactly like the pre-scheduler engine). With chunked prefill the
+    /// numeric prefill still happens here; only its model-time cost is
+    /// deferred to [`Self::advance_prefill`].
+    fn admit_wave(&mut self, admitted: Vec<(usize, Request)>) -> Result<()> {
         if admitted.is_empty() {
             return Ok(());
         }
+        let dims = self.backend.dims().clone();
         // Prefill runs over the whole batch; inactive slots get empty prompts.
         let mut batch_prompts = vec![Vec::new(); dims.batch];
         for (slot, req) in &admitted {
@@ -247,7 +502,17 @@ impl<B: ModelBackend> Engine<B> {
         let out = self.backend.prefill(&batch_prompts)?;
         self.metrics.prefills += 1;
         let now = self.clock.now();
+        let chunked = self.cfg.prefill_chunk_pages > 0;
         for (slot, mut req) in admitted {
+            req.admitted_step = Some(self.metrics.engine_steps);
+            req.admitted_ns = Some(now);
+            let delay = (now - req.arrival_ns).max(0.0);
+            self.metrics.queue_delay_ns.push(delay);
+            self.push_event(EngineEvent::Admitted {
+                seq: req.id,
+                at_ns: now,
+                queue_delay_ns: delay,
+            });
             let plen = req.prompt.len().min(dims.t_prompt);
             // round prefill KV through BF16 (the storage format)
             let take = plen * self.kv_entry_len;
@@ -256,20 +521,261 @@ impl<B: ModelBackend> Engine<B> {
                 .map(|&x| bf16_to_f32(bf16_from_f32(x)))
                 .collect();
             let first = Self::sample(&out.logits[slot]);
-            req.state = RequestState::Decoding;
+            let units = plen.div_ceil(PAGE_TOKENS);
+            req.state = if chunked && units > 0 {
+                RequestState::Prefilling
+            } else {
+                RequestState::Decoding
+            };
             let s = &mut self.slots[slot];
             s.work = kv.clone();
             s.kv = kv;
             s.viewed.clear();
             s.pos = plen;
             s.cur_token = first;
+            s.prefill_units_total = if chunked { units } else { 0 };
+            s.prefill_units_done = 0;
             s.req = Some(req);
-            // commit full prompt pages
-            let full_pages = plen / PAGE_TOKENS;
-            for p in 0..full_pages {
-                self.commit_page(slot, p, now)?;
+            if !chunked {
+                // commit full prompt pages instantaneously (legacy path)
+                let full_pages = plen / PAGE_TOKENS;
+                for p in 0..full_pages {
+                    self.commit_page(slot, p, now)?;
+                }
             }
         }
+        Ok(())
+    }
+
+    /// Charge up to `prefill_chunk_pages` page-chunks of prompt prefill
+    /// cost per prefilling slot on the shared compute timeline, committing
+    /// each fully-charged prompt page at its chunk's completion time.
+    /// Slots whose last chunk completes transition to `Decoding` and join
+    /// this very step's decode — prefill work interleaves with other
+    /// slots' decode steps instead of blocking the batch.
+    fn advance_prefill(&mut self) -> Result<()> {
+        let chunk = self.cfg.prefill_chunk_pages;
+        if chunk == 0 {
+            return Ok(());
+        }
+        let t_prompt = self.backend.dims().t_prompt;
+        let now = self.clock.now();
+        for i in 0..self.slots.len() {
+            let Some(req) = self.slots[i].req.as_ref() else { continue };
+            if req.state != RequestState::Prefilling {
+                continue;
+            }
+            let plen = req.prompt.len().min(t_prompt);
+            let total = self.slots[i].prefill_units_total;
+            let done = self.slots[i].prefill_units_done;
+            let take = chunk.min(total - done);
+            for u in done..done + take {
+                let tokens_in_unit = PAGE_TOKENS.min(plen - u * PAGE_TOKENS);
+                let cost = tokens_in_unit as f64 * self.cfg.prefill_ns_per_token;
+                let r = self.compute_tl.reserve(now, cost);
+                if (u + 1) * PAGE_TOKENS <= plen {
+                    self.commit_page(i, u, r.end_ns)?;
+                }
+            }
+            self.slots[i].prefill_units_done = done + take;
+            if done + take == total {
+                self.slots[i].req.as_mut().unwrap().state = RequestState::Decoding;
+            }
+        }
+        Ok(())
+    }
+
+    /// BF16 words of one page of a slot's authoritative KV, zero-padded
+    /// to the full page size (the preemption save spills the partial live
+    /// page too; BF16 zeros round-trip exactly).
+    fn page_words(&self, slot: usize, page: usize) -> Vec<u16> {
+        let el = self.kv_entry_len;
+        let start = page * PAGE_TOKENS * el;
+        let end = (start + PAGE_TOKENS * el).min(self.slots[slot].kv.len());
+        let mut words: Vec<u16> =
+            self.slots[slot].kv[start..end].iter().map(|&x| bf16_from_f32(x)).collect();
+        words.resize(PAGE_TOKENS * el, 0);
+        words
+    }
+
+    /// Evict one decoding slot: spill its HBM-resident pages (and the
+    /// partial live page) to the device, free the HBM capacity, and hand
+    /// the request back carrying a [`ResumeState`]. The caller requeues
+    /// it. Already-spilled pages stay where they are.
+    ///
+    /// A failed device write aborts the preemption without losing the
+    /// request: the slot keeps it (its kv/pos were never touched), the
+    /// failing page's demotion is rolled back, and pages already saved
+    /// simply stay spilled — coherent, just colder than before.
+    fn preempt_slot(&mut self, slot: usize) -> Result<Request> {
+        let now = self.clock.now();
+        let el = self.kv_entry_len;
+        let pb = self.page_bytes();
+        let seq = self.slots[slot].req.as_ref().expect("preempting an occupied slot").id;
+        let pos = self.slots[slot].pos;
+
+        let hbm_pages: Vec<usize> = self
+            .pager
+            .seq_pages(seq)
+            .iter()
+            .filter(|p| p.cxl_addr.is_none())
+            .map(|p| p.index)
+            .collect();
+        let mut saved = 0usize;
+        for &p in &hbm_pages {
+            let words = self.page_words(slot, p);
+            let addr = self.pager.demote(seq, p).expect("HBM-resident page demotes");
+            if let Err(e) = self.device.submit_one_at(
+                Transaction::WriteKv {
+                    block_addr: addr,
+                    words,
+                    window: crate::bitplane::KvWindow::new(PAGE_TOKENS, el),
+                },
+                now,
+            ) {
+                // nothing stored: undo the demotion, keep the slot running
+                self.pager.promote(seq, p);
+                return Err(e);
+            }
+            self.metrics.pages_spilled += 1;
+            self.hbm.free_kv(pb);
+            saved += 1;
+        }
+        // the partial live page (not yet committed anywhere)
+        if pos % PAGE_TOKENS != 0 {
+            let p_last = pos / PAGE_TOKENS;
+            let words = self.page_words(slot, p_last);
+            let addr = self
+                .pager
+                .add_page(seq, p_last, false)
+                .cxl_addr
+                .expect("spilled page carries a device address");
+            if let Err(e) = self.device.submit_one_at(
+                Transaction::WriteKv {
+                    block_addr: addr,
+                    words,
+                    window: crate::bitplane::KvWindow::new(PAGE_TOKENS, el),
+                },
+                now,
+            ) {
+                let _ = self.pager.remove_page(seq, p_last);
+                return Err(e);
+            }
+            self.metrics.pages_spilled += 1;
+            saved += 1;
+        }
+        let mut req = self.slots[slot].req.take().expect("preempting an occupied slot");
+        req.resume =
+            Some(ResumeState { pos, cur_token: self.slots[slot].cur_token, hbm_pages });
+        req.state = RequestState::Preempted;
+        req.preemptions += 1;
+        self.metrics.preemptions += 1;
+        self.push_event(EngineEvent::Preempted { seq, at_ns: now, pages_saved: saved });
+        self.slots[slot] = Slot::empty();
+        Ok(req)
+    }
+
+    /// Re-seat a preempted request: fetch its whole saved context back
+    /// from the device full-precision (BF16-lossless, so the token stream
+    /// continues bit-identically), reclaim the partial page's device
+    /// block, and let previously HBM-resident pages re-claim HBM while
+    /// the partition has room. The restore's ready-at time fences this
+    /// step's compute start.
+    fn resume_slot(&mut self, slot: usize, mut req: Request) -> Result<()> {
+        let now = self.clock.now();
+        let el = self.kv_entry_len;
+        let rs = req.resume.take().expect("resumed request carries saved state");
+        let seq = req.id;
+        let pos = rs.pos;
+        let pb = self.page_bytes();
+
+        // one submission fetches the whole saved context, full precision
+        let mut sq = SubmissionQueue::new();
+        let mut routes: HashMap<TxnId, usize> = HashMap::new();
+        for p in self.pager.seq_pages(seq) {
+            let addr = p.cxl_addr.expect("a preempted sequence is fully device-resident");
+            routes.insert(sq.submit(Transaction::ReadFull { block_addr: addr }), p.index);
+        }
+        let mut kv = vec![0f32; pos * el];
+        let mut ready = now;
+        let mut restored = 0usize;
+        let mut failed = None;
+        for c in self.device.drain_at(&mut sq, now) {
+            let page = routes[&c.id];
+            ready = ready.max(c.ready_at_ns);
+            match c.words() {
+                Ok(words) => {
+                    self.metrics.restore_bytes += (words.len() * 2) as u64;
+                    let start = page * PAGE_TOKENS * el;
+                    for (j, &w) in words.iter().enumerate() {
+                        // the saved partial page is zero-padded: keep the
+                        // prefix that is real history
+                        if start + j < kv.len() {
+                            kv[start + j] = bf16_to_f32(w);
+                        }
+                    }
+                    restored += 1;
+                }
+                Err(e) => failed = Some(e),
+            }
+        }
+        if let Some(e) = failed {
+            // a device error must not lose the request: requeue it intact
+            req.resume = Some(rs);
+            self.queue.requeue_front(req);
+            return Err(e);
+        }
+        // the partial live page is not a committed page — reclaim it (it
+        // re-commits when it next fills during decode). A failed Free
+        // must not lose the request: re-insert the record and requeue.
+        if pos % PAGE_TOKENS != 0 {
+            let p_last = pos / PAGE_TOKENS;
+            let meta = self.pager.remove_page(seq, p_last).expect("partial page was saved");
+            let addr = meta.cxl_addr.expect("saved partial page lives on the device");
+            if let Err(e) = self.device.submit_one_at(Transaction::Free { block_addr: addr }, now)
+            {
+                self.pager.pages.push(meta);
+                req.resume = Some(rs);
+                self.queue.requeue_front(req);
+                return Err(e);
+            }
+        }
+        // previously HBM-resident pages re-claim HBM in index order;
+        // stragglers stay spilled and are demand-fetched like any page.
+        // A failed device Free rolls the allocation back and leaves the
+        // page spilled, like `promote_page_to_hbm`.
+        for &p in &rs.hbm_pages {
+            if !self.hbm.try_alloc_kv(pb) {
+                break; // no headroom — later pages are the same size
+            }
+            let addr = self
+                .pager
+                .seq_pages(seq)
+                .iter()
+                .find(|m| m.index == p)
+                .and_then(|m| m.cxl_addr)
+                .expect("demoted page holds a device address");
+            if self.device.submit_one_at(Transaction::Free { block_addr: addr }, now).is_err() {
+                self.hbm.free_kv(pb);
+                break;
+            }
+            let promoted = self.pager.promote(seq, p);
+            debug_assert!(promoted, "a page with a device address must be CXL-resident");
+            self.metrics.pages_promoted += 1;
+        }
+        req.state = RequestState::Decoding;
+        let s = &mut self.slots[slot];
+        s.work = kv.clone();
+        s.kv = kv;
+        s.viewed.clear();
+        s.pos = pos;
+        s.cur_token = rs.cur_token;
+        s.prefill_units_done = 0;
+        s.prefill_units_total = 0;
+        s.req = Some(req);
+        self.restore_ready_ns = self.restore_ready_ns.max(ready);
+        self.metrics.resumes += 1;
+        self.push_event(EngineEvent::Resumed { seq, at_ns: now, pages_restored: restored });
         Ok(())
     }
 
@@ -299,10 +805,7 @@ impl<B: ModelBackend> Engine<B> {
         // spill: BF16-round the page and write through Mechanism I
         self.metrics.pages_spilled += 1;
         let el = self.kv_entry_len;
-        let start = page * PAGE_TOKENS * el;
-        let end = start + PAGE_TOKENS * el;
-        let words: Vec<u16> =
-            self.slots[slot].kv[start..end].iter().map(|&x| bf16_from_f32(x)).collect();
+        let words = self.page_words(slot, page);
         let addr = self
             .pager
             .add_page(seq, page, false)
@@ -514,9 +1017,10 @@ impl<B: ModelBackend> Engine<B> {
     /// whether this step finishes the slot or completes a page is known
     /// before compute — so the predicted plan (including the tier shifts
     /// a new page causes in the ranking) matches next step's demand plan
-    /// exactly, unless residency is changed externally (the fence's job).
-    /// The page this step commits cannot be prefetched: it is not written
-    /// until after compute.
+    /// exactly, unless residency is changed externally (the fence's job —
+    /// promotion and preemption both invalidate). The page this step
+    /// commits cannot be prefetched: it is not written until after
+    /// compute.
     fn issue_prefetch(
         &mut self,
         active: &[usize],
@@ -557,21 +1061,35 @@ impl<B: ModelBackend> Engine<B> {
         Ok(())
     }
 
-    /// Run one engine step: admit + decode one token for all active slots.
-    /// Returns the number of tokens generated this step.
+    /// Run one engine step: release arrivals, apply the scheduler's plan
+    /// (preempt/admit/prefill), and decode one token for every decoding
+    /// slot. Returns the number of tokens generated this step.
     pub fn step(&mut self) -> Result<usize> {
-        self.admit()?;
-        let active: Vec<usize> =
-            (0..self.slots.len()).filter(|&i| self.slots[i].req.is_some()).collect();
+        self.release_arrivals();
+        // event-driven idle: with nothing running and nothing arrived,
+        // jump the clock to the next arrival instead of spinning
+        if self.queue.is_empty() && self.slots.iter().all(|s| s.req.is_none()) {
+            let Some(t) = self.next_arrival_ns() else { return Ok(0) };
+            self.clock.advance_to(t);
+            self.metrics.idle_jumps += 1;
+            self.release_arrivals();
+        }
+        self.schedule()?;
+        let active: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| {
+                self.slots[i].req.as_ref().is_some_and(|r| r.state == RequestState::Decoding)
+            })
+            .collect();
         if active.is_empty() {
+            // prefill-only step: chunk progress was charged in schedule()
             return Ok(0);
         }
         let t_wall = Instant::now();
         let t0 = self.clock.now();
         let dims = self.backend.dims().clone();
-        // all slots share one position counter (the max); shorter slots are
-        // right-aligned by zero-padding their KV history
-        let pos = self.slots.iter().map(|s| s.pos).max().unwrap_or(0);
+        // all decoding slots share one position counter (the max); shorter
+        // slots are right-aligned by zero-padding their KV history
+        let pos = active.iter().map(|&i| self.slots[i].pos).max().unwrap_or(0);
         anyhow::ensure!(pos < dims.t_max, "KV capacity exceeded: {pos}");
 
         let mut tokens = vec![0u32; dims.batch];
@@ -579,7 +1097,8 @@ impl<B: ModelBackend> Engine<B> {
             *t = self.slots[i].cur_token;
         }
         let (kvs, fetch_ready, page_lists) = self.gather_kvs(&active)?;
-        let compute_start = fetch_ready.max(t0);
+        let restore_ready = std::mem::replace(&mut self.restore_ready_ns, 0.0);
+        let compute_start = fetch_ready.max(t0).max(restore_ready);
         let compute_done = self.compute_tl.reserve(compute_start, self.cfg.compute_ns).end_ns;
         // overlapped pipeline: next step's reads run under this compute
         if self.cfg.overlap {
@@ -614,9 +1133,16 @@ impl<B: ModelBackend> Engine<B> {
             if req.first_token_ns.is_none() {
                 req.first_token_ns = Some(compute_done);
             }
-            generated += 1;
+            let (seq, tok_index) = (req.id, req.generated.len() - 1);
             let finished_page = s.pos % PAGE_TOKENS == 0;
             let page_idx = s.pos / PAGE_TOKENS - if finished_page { 1 } else { 0 };
+            self.push_event(EngineEvent::Token {
+                seq,
+                token: tok,
+                index: tok_index,
+                at_ns: compute_done,
+            });
+            generated += 1;
             if finished_page {
                 self.commit_page(i, page_idx, compute_done)?;
             }
@@ -632,22 +1158,31 @@ impl<B: ModelBackend> Engine<B> {
                     done.finished_step.unwrap() - done.admitted_step.unwrap_or(0) + 1;
                 self.metrics.request_steps.push(steps as f64);
                 self.metrics.requests_finished += 1;
-                if let (Some(admitted), Some(first), Some(finish)) =
-                    (done.admitted_ns, done.first_token_ns, done.finished_ns)
+                if let (Some(first), Some(finish)) = (done.first_token_ns, done.finished_ns)
                 {
-                    self.metrics.ttft_model_ns.push(first - admitted);
+                    // TTFT is arrival → first token: queueing (and, when
+                    // chunked, prefill) included — the serving-side number
+                    let ttft = first - done.arrival_ns;
+                    self.metrics.ttft_model_ns.push(ttft);
+                    self.metrics.ttft_class_ns[done.sla.index()].push(ttft);
                     if done.generated.len() > 1 {
-                        self.metrics
-                            .tpot_model_ns
-                            .push((finish - first) / (done.generated.len() - 1) as f64);
+                        let tpot = (finish - first) / (done.generated.len() - 1) as f64;
+                        self.metrics.tpot_model_ns.push(tpot);
+                        self.metrics.tpot_class_ns[done.sla.index()].push(tpot);
                     }
                 }
-                self.responses.push(Response {
+                let response = Response {
                     id: done.id,
                     prompt_len: done.prompt.len(),
                     tokens: done.generated.clone(),
                     steps_in_flight: steps,
+                };
+                self.push_event(EngineEvent::Finished {
+                    seq: done.id,
+                    at_ns: compute_done,
+                    response: response.clone(),
                 });
+                self.responses.push(response);
                 // release HBM capacity and reclaim the device copies —
                 // the pager is the placement book of record for what
                 // lived where, and device footprint tracks live residency
@@ -688,7 +1223,7 @@ impl<B: ModelBackend> Engine<B> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::MockBackend;
+    use crate::runtime::{MockBackend, ModelDims};
 
     fn engine(hbm_bytes: u64) -> Engine<MockBackend> {
         Engine::new(
@@ -893,5 +1428,107 @@ mod tests {
         assert_eq!(e.metrics.pages_promoted, 1);
         e.run_to_completion(200).unwrap();
         assert_eq!(e.take_responses().len(), 1);
+    }
+
+    #[test]
+    fn submit_at_gates_admission_on_arrival() {
+        let mut e = engine(1 << 20);
+        let arrival = 1_000_000.0; // 1 ms of model time
+        e.submit_at(vec![1, 2, 3], 6, arrival, SlaClass::Interactive);
+        assert_eq!(e.pending(), 1);
+        // nothing has arrived: the first step jumps the clock instead of
+        // admitting early
+        e.run_to_completion(200).unwrap();
+        assert!(e.metrics.idle_jumps >= 1, "idle engine must jump to the arrival");
+        assert!(e.clock.now() >= arrival);
+        let rs = e.take_responses();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].tokens.len(), 6);
+        // the admission stamp respects the arrival
+        let events = e.poll_events();
+        let admitted = events
+            .iter()
+            .find_map(|ev| match ev {
+                EngineEvent::Admitted { at_ns, .. } => Some(*at_ns),
+                _ => None,
+            })
+            .expect("admission event");
+        assert!(admitted >= arrival);
+        // per-class accounting went to the interactive bucket
+        assert_eq!(e.metrics.ttft_class_ns[SlaClass::Interactive.index()].len(), 1);
+        assert_eq!(e.metrics.ttft_class_ns[SlaClass::Batch.index()].len(), 0);
+    }
+
+    #[test]
+    fn events_stream_covers_lifecycle() {
+        let mut e = engine(1 << 20);
+        e.submit(vec![1, 2, 3], 5);
+        e.run_to_completion(100).unwrap();
+        let events = e.poll_events();
+        assert!(matches!(events.first(), Some(EngineEvent::Admitted { seq: 0, .. })));
+        assert!(matches!(events.last(), Some(EngineEvent::Finished { seq: 0, .. })));
+        let tokens: Vec<u32> = events
+            .iter()
+            .filter_map(|ev| match ev {
+                EngineEvent::Token { token, .. } => Some(*token),
+                _ => None,
+            })
+            .collect();
+        let rs = e.take_responses();
+        assert_eq!(tokens, rs[0].tokens, "token events mirror the response");
+        // times are nondecreasing
+        for w in events.windows(2) {
+            assert!(w[1].at_ns() >= w[0].at_ns());
+        }
+        // a second poll is empty (the log drains)
+        assert!(e.poll_events().is_empty());
+    }
+
+    #[test]
+    fn chunked_prefill_charges_model_time_but_keeps_tokens() {
+        // a long prompt, one request: the backend call sequence is
+        // identical whether prefill cost is instantaneous or chunked
+        // (prefill-only steps make no backend calls), so tokens must
+        // match while model time grows by the prefill cost
+        let dims = ModelDims {
+            layers: 2,
+            batch: 2,
+            t_max: 256,
+            t_prompt: 48,
+            d_model: 16,
+            heads: 2,
+            head_dim: 4,
+            ffn: 32,
+            vocab: 64,
+        };
+        let run = |chunk: usize| {
+            let mut e = Engine::new(
+                MockBackend::new(dims.clone(), 42),
+                EngineConfig {
+                    hbm_kv_bytes: 0,
+                    prefill_chunk_pages: chunk,
+                    prefill_ns_per_token: 100.0,
+                    ..Default::default()
+                },
+            );
+            e.submit((1u32..=48).collect(), 20);
+            e.run_to_completion(400).unwrap();
+            let r = e.take_responses().pop().unwrap();
+            (r.tokens, e.metrics.model_ns, e.metrics.ttft().p50)
+        };
+        let (t_instant, ns_instant, _) = run(0);
+        let (t_chunked, ns_chunked, ttft_chunked) = run(1);
+        assert_eq!(t_instant, t_chunked, "chunked prefill must not change tokens");
+        // 48 prompt tokens at 100 ns each occupy the compute timeline
+        // before the first decode reservation, so the first token (and
+        // hence total model time) moves strictly later; device write
+        // scheduling may overlap the prefill window, so the exact shift
+        // is not additive
+        assert!(ns_chunked > ns_instant, "chunked {ns_chunked} vs instant {ns_instant}");
+        assert!(
+            ns_chunked >= 4800.0 + 20.0 * 2000.0,
+            "model time must cover prefill + decode compute: {ns_chunked}"
+        );
+        assert!(ttft_chunked >= 4800.0 + 2000.0, "TTFT must include the prefill cost");
     }
 }

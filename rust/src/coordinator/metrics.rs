@@ -1,5 +1,6 @@
-//! Serving metrics: token throughput, latency distributions, and the
-//! tier/device counters the experiment harnesses consume.
+//! Serving metrics: token throughput, latency distributions, scheduler
+//! accounting, and the tier/device counters the experiment harnesses
+//! consume.
 //!
 //! Two time bases are kept strictly apart:
 //!
@@ -8,14 +9,31 @@
 //!   profiling the simulator itself, meaningless for the paper's claims.
 //! * **model time** — nanoseconds on the engine's
 //!   [`crate::sim::SimClock`]: per-step latency sourced from the clock
-//!   (`step_model_ns`), per-request TTFT/TPOT, and the model-time
-//!   throughput ([`Metrics::model_tok_per_s`]) the figure benches report.
+//!   (`step_model_ns`), per-request TTFT/TPOT and queue delay, and the
+//!   model-time throughput ([`Metrics::model_tok_per_s`]) the figure
+//!   benches report.
+//!
+//! Serving-side latency definitions (model time):
+//!
+//! * **queue delay** — arrival → admission into a batch slot.
+//! * **TTFT** — arrival → first generated token, so queueing (and, with
+//!   chunked prefill, prompt processing) is included. This is the number
+//!   QoS policies trade against throughput (`benches/fig_sched_qos.rs`).
+//! * **TPOT** — mean inter-token gap after the first token.
+//!
+//! TTFT/TPOT are additionally broken down per [`SlaClass`] so the
+//! interactive tail is visible separately from batch traffic.
 
+use super::request::SlaClass;
 use crate::cxl::DeviceStats;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 use std::collections::BTreeMap;
 use std::time::Instant;
+
+/// Log₂ bucket count of [`Metrics::queue_delay_histogram`]: `[0, 1µs)`,
+/// then doubling up to `[2^(N-2), 2^(N-1) µs)`, then overflow.
+pub const QUEUE_DELAY_BUCKETS: usize = 14;
 
 /// Engine-wide metrics.
 #[derive(Debug)]
@@ -25,6 +43,14 @@ pub struct Metrics {
     pub prefills: u64,
     pub tokens_generated: u64,
     pub requests_finished: u64,
+    /// Requests evicted mid-decode by the scheduler / later re-seated.
+    pub preemptions: u64,
+    pub resumes: u64,
+    /// Steps where the idle engine jumped the clock to the next arrival.
+    pub idle_jumps: u64,
+    /// Lifecycle events shed because the `poll_events` log hit its
+    /// retention cap without being drained.
+    pub events_dropped: u64,
     /// Per-request end-to-end latency in engine steps.
     pub request_steps: Vec<f64>,
     /// Wall time per decode step (ms) — host cost of simulating the step.
@@ -33,20 +59,29 @@ pub struct Metrics {
     pub step_model_ns: Vec<f64>,
     /// Total model time the engine has simulated (ns).
     pub model_ns: f64,
-    /// Per-request model-time TTFT: admission → first generated token, ns.
-    /// Known limitation: prefill is currently modeled as instantaneous in
-    /// model time, so TTFT captures queueing + the first decode step's
-    /// fetch/compute, not prompt-length-proportional prefill cost.
+    /// Per-request model-time TTFT: arrival → first generated token, ns.
+    /// Includes queueing; with instantaneous (non-chunked) prefill the
+    /// prompt-processing cost is not modeled and therefore not included.
     pub ttft_model_ns: Vec<f64>,
     /// Per-request model-time TPOT: mean inter-token gap after the first
     /// token, ns (requests with ≥2 generated tokens).
     pub tpot_model_ns: Vec<f64>,
+    /// TTFT/TPOT broken down by QoS class (index = [`SlaClass::index`]).
+    pub ttft_class_ns: [Vec<f64>; 2],
+    pub tpot_class_ns: [Vec<f64>; 2],
+    /// Per-admission queue delay: arrival → slot grant, ns (first
+    /// admission only; resumes after preemption are not re-counted).
+    pub queue_delay_ns: Vec<f64>,
     /// KV pages committed to HBM / spilled to CXL / promoted back.
     pub pages_hbm: u64,
     pub pages_spilled: u64,
     pub pages_promoted: u64,
-    /// Raw KV bytes recalled from the CXL tier.
+    /// Raw KV bytes recalled from the CXL tier by decode-step fetches.
     pub kv_recall_bytes: u64,
+    /// Raw KV bytes read back by preemption restores (kept apart from
+    /// `kv_recall_bytes`: restores are scheduler overhead, not decode
+    /// demand).
+    pub restore_bytes: u64,
     /// Overlap pipeline counters: prefetch transactions issued, consumed
     /// by the next step, and discarded by the correctness fence.
     pub prefetch_issued: u64,
@@ -62,16 +97,24 @@ impl Default for Metrics {
             prefills: 0,
             tokens_generated: 0,
             requests_finished: 0,
+            preemptions: 0,
+            resumes: 0,
+            idle_jumps: 0,
+            events_dropped: 0,
             request_steps: Vec::new(),
             wall_ms: Vec::new(),
             step_model_ns: Vec::new(),
             model_ns: 0.0,
             ttft_model_ns: Vec::new(),
             tpot_model_ns: Vec::new(),
+            ttft_class_ns: [Vec::new(), Vec::new()],
+            tpot_class_ns: [Vec::new(), Vec::new()],
+            queue_delay_ns: Vec::new(),
             pages_hbm: 0,
             pages_spilled: 0,
             pages_promoted: 0,
             kv_recall_bytes: 0,
+            restore_bytes: 0,
             prefetch_issued: 0,
             prefetch_hits: 0,
             prefetch_stale: 0,
@@ -124,14 +167,58 @@ impl Metrics {
         Summary::of(&self.step_model_ns)
     }
 
-    /// Model-time TTFT summary (ns).
+    /// Model-time TTFT summary (ns), all classes.
     pub fn ttft(&self) -> Summary {
         Summary::of(&self.ttft_model_ns)
     }
 
-    /// Model-time TPOT summary (ns).
+    /// Model-time TPOT summary (ns), all classes.
     pub fn tpot(&self) -> Summary {
         Summary::of(&self.tpot_model_ns)
+    }
+
+    /// Model-time TTFT summary of one QoS class (zeros if no request of
+    /// that class finished — check `.n` before comparing percentiles).
+    pub fn ttft_class(&self, sla: SlaClass) -> Summary {
+        Summary::of(&self.ttft_class_ns[sla.index()])
+    }
+
+    /// Model-time TPOT summary of one QoS class.
+    pub fn tpot_class(&self, sla: SlaClass) -> Summary {
+        Summary::of(&self.tpot_class_ns[sla.index()])
+    }
+
+    /// Queue-delay summary (arrival → admission, ns).
+    pub fn queue_delay(&self) -> Summary {
+        Summary::of(&self.queue_delay_ns)
+    }
+
+    /// Queue-delay histogram in log₂ microsecond buckets:
+    /// `(upper_bound_us, count)` with `f64::INFINITY` closing the last
+    /// bucket. Bucket 0 is `[0, 1µs]`, bucket k is `(2^(k-1), 2^k µs]`.
+    pub fn queue_delay_histogram(&self) -> Vec<(f64, u64)> {
+        let mut counts = vec![0u64; QUEUE_DELAY_BUCKETS + 1];
+        for &d in &self.queue_delay_ns {
+            let us = d / 1000.0;
+            let b = if us.is_finite() && us > 1.0 {
+                (us.log2().ceil() as usize).min(QUEUE_DELAY_BUCKETS)
+            } else {
+                0 // ≤ 1µs (admission in the arrival step) or non-finite
+            };
+            counts[b] += 1;
+        }
+        counts
+            .into_iter()
+            .enumerate()
+            .map(|(k, c)| {
+                let le = if k >= QUEUE_DELAY_BUCKETS {
+                    f64::INFINITY
+                } else {
+                    (1u64 << k) as f64
+                };
+                (le, c)
+            })
+            .collect()
     }
 
     pub fn request_latency_steps(&self) -> Summary {
@@ -143,12 +230,13 @@ impl Metrics {
         let s = self.step_latency();
         let m = self.model_step_latency();
         format!(
-            "steps={} tokens={} finished={} tok/s={:.2} model_tok/s={:.2} \
+            "steps={} tokens={} finished={} preempt={} tok/s={:.2} model_tok/s={:.2} \
              step_ms p50={:.2} p99={:.2} step_model_us p50={:.2} p99={:.2} \
              pages[hbm={} cxl={}] dev[dram_rd={} dram_wr={} link_out={} meta_miss={}]",
             self.engine_steps,
             self.tokens_generated,
             self.requests_finished,
+            self.preemptions,
             self.tok_per_s(),
             self.model_tok_per_s(),
             s.p50,
@@ -189,6 +277,36 @@ impl Metrics {
         prefetch.insert("issued".to_string(), num(self.prefetch_issued as f64));
         prefetch.insert("hits".to_string(), num(self.prefetch_hits as f64));
         prefetch.insert("stale".to_string(), num(self.prefetch_stale as f64));
+        let mut sched = BTreeMap::new();
+        sched.insert("preemptions".to_string(), num(self.preemptions as f64));
+        sched.insert("resumes".to_string(), num(self.resumes as f64));
+        sched.insert("idle_jumps".to_string(), num(self.idle_jumps as f64));
+        sched.insert("events_dropped".to_string(), num(self.events_dropped as f64));
+        sched.insert("restore_bytes".to_string(), num(self.restore_bytes as f64));
+        sched.insert("queue_delay_ns".to_string(), summary(&self.queue_delay()));
+        let hist: Vec<Json> = self
+            .queue_delay_histogram()
+            .into_iter()
+            .map(|(le, c)| {
+                let mut b = BTreeMap::new();
+                // JSON has no Infinity literal: the overflow bucket
+                // serializes as le_us = -1
+                b.insert(
+                    "le_us".to_string(),
+                    num(if le.is_finite() { le } else { -1.0 }),
+                );
+                b.insert("count".to_string(), num(c as f64));
+                Json::Obj(b)
+            })
+            .collect();
+        sched.insert("queue_delay_hist".to_string(), Json::Arr(hist));
+        let mut sla = BTreeMap::new();
+        for class in SlaClass::ALL {
+            let mut c = BTreeMap::new();
+            c.insert("ttft_model_ns".to_string(), summary(&self.ttft_class(class)));
+            c.insert("tpot_model_ns".to_string(), summary(&self.tpot_class(class)));
+            sla.insert(class.name().to_string(), Json::Obj(c));
+        }
         let mut device = BTreeMap::new();
         device.insert("dram_bytes_read".to_string(), num(dev.dram_bytes_read as f64));
         device.insert("dram_bytes_written".to_string(), num(dev.dram_bytes_written as f64));
@@ -211,6 +329,8 @@ impl Metrics {
         o.insert("kv_recall_bytes".to_string(), num(self.kv_recall_bytes as f64));
         o.insert("pages".to_string(), Json::Obj(pages));
         o.insert("prefetch".to_string(), Json::Obj(prefetch));
+        o.insert("sched".to_string(), Json::Obj(sched));
+        o.insert("sla".to_string(), Json::Obj(sla));
         o.insert("device".to_string(), Json::Obj(device));
         Json::Obj(o)
     }
@@ -230,6 +350,7 @@ mod tests {
         assert_eq!(m.step_latency().n, 3);
         let r = m.report(&DeviceStats::default());
         assert!(r.contains("tokens=100"));
+        assert!(r.contains("preempt=0"));
     }
 
     #[test]
@@ -253,6 +374,37 @@ mod tests {
     }
 
     #[test]
+    fn class_summaries_are_independent_and_guarded() {
+        let mut m = Metrics::new();
+        m.ttft_class_ns[SlaClass::Interactive.index()] = vec![100.0, 200.0];
+        assert_eq!(m.ttft_class(SlaClass::Interactive).n, 2);
+        // no batch samples: summary is explicit zeros, not garbage/panic
+        let b = m.ttft_class(SlaClass::Batch);
+        assert_eq!((b.n, b.p50, b.p99), (0, 0.0, 0.0));
+        // single-sample population: every percentile is the sample
+        m.tpot_class_ns[SlaClass::Batch.index()] = vec![42.0];
+        let t = m.tpot_class(SlaClass::Batch);
+        assert_eq!((t.n, t.p50, t.p99, t.min, t.max), (1, 42.0, 42.0, 42.0, 42.0));
+    }
+
+    #[test]
+    fn queue_delay_histogram_buckets() {
+        let mut m = Metrics::new();
+        // 0.5µs, 1.5µs, 3µs, 1s → buckets 0, 1, 2, overflow
+        m.queue_delay_ns = vec![500.0, 1500.0, 3000.0, 1e9];
+        let h = m.queue_delay_histogram();
+        assert_eq!(h.len(), QUEUE_DELAY_BUCKETS + 1);
+        assert_eq!(h[0], (1.0, 1));
+        assert_eq!(h[1], (2.0, 1));
+        assert_eq!(h[2], (4.0, 1));
+        let (last_le, last_c) = h[QUEUE_DELAY_BUCKETS];
+        assert!(last_le.is_infinite());
+        assert_eq!(last_c, 1);
+        let total: u64 = h.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 4, "every sample lands in exactly one bucket");
+    }
+
+    #[test]
     fn json_dump_roundtrips() {
         let mut m = Metrics::new();
         m.engine_steps = 7;
@@ -260,6 +412,9 @@ mod tests {
         m.model_ns = 3.5e6;
         m.step_model_ns = vec![500.0, 500.0, 500.0];
         m.ttft_model_ns = vec![1500.0];
+        m.ttft_class_ns[SlaClass::Interactive.index()] = vec![1500.0];
+        m.queue_delay_ns = vec![800.0, 2500.0];
+        m.preemptions = 2;
         m.prefetch_issued = 4;
         let dev = DeviceStats { dram_bytes_read: 4096, ..Default::default() };
         let j = m.to_json(&dev);
@@ -277,6 +432,38 @@ mod tests {
         assert_eq!(
             parsed.get("device").unwrap().get("dram_bytes_read").unwrap().as_usize().unwrap(),
             4096
+        );
+        let sched = parsed.get("sched").unwrap();
+        assert_eq!(sched.get("preemptions").unwrap().as_usize().unwrap(), 2);
+        let hist = sched.get("queue_delay_hist").unwrap().as_arr().unwrap();
+        assert_eq!(hist.len(), QUEUE_DELAY_BUCKETS + 1);
+        let counted: f64 = hist
+            .iter()
+            .map(|b| b.get("count").unwrap().as_f64().unwrap())
+            .sum();
+        assert_eq!(counted as u64, 2);
+        let sla = parsed.get("sla").unwrap();
+        assert_eq!(
+            sla.get("interactive")
+                .unwrap()
+                .get("ttft_model_ns")
+                .unwrap()
+                .get("n")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            1
+        );
+        assert_eq!(
+            sla.get("batch")
+                .unwrap()
+                .get("ttft_model_ns")
+                .unwrap()
+                .get("n")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            0
         );
     }
 }

@@ -1,34 +1,52 @@
-//! Serving coordinator (Layer 3): request router, continuous batcher, and
-//! the decode loop that places KV across the HBM/CXL tiers.
+//! Serving coordinator (Layer 3): request router, continuous batcher,
+//! pluggable scheduler, and the decode loop that places KV across the
+//! HBM/CXL tiers.
 //!
 //! The control flow mirrors a vLLM-style engine scaled to this repo's
 //! single-node CPU testbed:
 //!
-//! 1. requests arrive in an admission queue;
-//! 2. free batch slots are filled (continuous batching), prompts prefilled;
-//! 3. every engine step decodes one token for all active slots;
-//! 4. generated KV appends to the slot's page buffer; full pages commit to
-//!    HBM while it has room, else they spill into the simulated TRACE CXL
-//!    device (compressed, bit-plane form);
-//! 5. at each step, spilled pages are fetched back through the device
+//! 1. requests arrive open-loop ([`Engine::submit_at`] stamps a
+//!    model-time arrival; the clock jumps over idle gaps);
+//! 2. each step a [`SchedulerPolicy`] ([`sched`]) decides which arrived
+//!    requests to admit into free batch slots and which running slots to
+//!    preempt — [`Fcfs`] reproduces plain continuous batching,
+//!    [`ShortestJobFirst`] and [`PriorityClass`] trade order and slots
+//!    for latency under overload;
+//! 3. admitted prompts prefill (instantaneously, or page-chunked on the
+//!    compute timeline with `EngineConfig::prefill_chunk_pages`);
+//!    preempted requests have their KV spilled to the device and restored
+//!    losslessly on resume;
+//! 4. every engine step decodes one token for all decoding slots;
+//! 5. generated KV appends to the slot's page buffer; full pages commit
+//!    to HBM while it has room, else they spill into the simulated TRACE
+//!    CXL device (compressed, bit-plane form);
+//! 6. at each step, spilled pages are fetched back through the device
 //!    (decompressed, optionally via a reduced-precision alias per the
 //!    page-tier policy) to rebuild the attention context — so every token
 //!    pays exactly the device traffic the paper models;
-//! 6. with `EngineConfig::overlap`, the engine runs as a two-stage
+//! 7. with `EngineConfig::overlap`, the engine runs as a two-stage
 //!    pipeline: step N+1's spilled-page reads are predicted and issued
 //!    while step N's compute occupies the backend timeline, fenced so
 //!    tokens and traffic stay bit-identical to the serial loop.
 //!
-//! Every step advances a model-time clock ([`crate::sim::SimClock`]);
+//! Progress streams as [`EngineEvent`]s ([`Engine::poll_events`]); every
+//! step advances a model-time clock ([`crate::sim::SimClock`]);
 //! [`Metrics`] keeps wall time and model time strictly apart (per-step
-//! latency, TTFT/TPOT, tok/s). Device byte counters feed the benches; the
-//! trace-driven model (`sysmodel`) converts the same counters into the
-//! paper's bandwidth-ceiling projections.
+//! latency, TTFT/TPOT/queue delay with per-[`SlaClass`] breakdowns,
+//! tok/s). Device byte counters feed the benches; the trace-driven model
+//! (`sysmodel`) converts the same counters into the paper's
+//! bandwidth-ceiling projections. See `docs/SERVING.md` for the policy
+//! contract and lifecycle.
 
 pub mod request;
+pub mod sched;
 pub mod engine;
 pub mod metrics;
 
 pub use engine::{Engine, EngineConfig};
 pub use metrics::Metrics;
-pub use request::{Request, RequestState, Response};
+pub use request::{EngineEvent, Request, RequestState, Response, ResumeState, SlaClass};
+pub use sched::{
+    Fcfs, PriorityClass, QueuedView, SchedKind, SchedPlan, SchedView, SchedulerPolicy,
+    ShortestJobFirst, SlotView,
+};

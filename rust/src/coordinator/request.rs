@@ -1,6 +1,40 @@
-//! Request/response types and the admission queue.
+//! Request/response types, the engine event stream, and the admission
+//! queue.
 
 use std::collections::VecDeque;
+
+/// QoS tier of a request — the unit the [`super::sched::PriorityClass`]
+/// policy and the per-class latency metrics discriminate on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SlaClass {
+    /// Latency-sensitive traffic (chat turns): favored for admission,
+    /// never preempted by the built-in policies.
+    Interactive,
+    /// Throughput traffic (analytics, batch jobs): yields slots to
+    /// interactive work under overload.
+    #[default]
+    Batch,
+}
+
+impl SlaClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            SlaClass::Interactive => "interactive",
+            SlaClass::Batch => "batch",
+        }
+    }
+
+    /// Dense index for per-class metric arrays.
+    pub fn index(self) -> usize {
+        match self {
+            SlaClass::Interactive => 0,
+            SlaClass::Batch => 1,
+        }
+    }
+
+    /// All classes, in [`Self::index`] order.
+    pub const ALL: [SlaClass; 2] = [SlaClass::Interactive, SlaClass::Batch];
+}
 
 /// Lifecycle state of a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -8,7 +42,25 @@ pub enum RequestState {
     Queued,
     Prefilling,
     Decoding,
+    /// Evicted from its slot mid-decode; its KV lives on the CXL device
+    /// until the scheduler re-admits it ([`Request::resume`]).
+    Preempted,
     Finished,
+}
+
+/// What a preempted request needs to pick up exactly where it stopped:
+/// the engine restores the KV pages from the device and re-seeds the slot
+/// from these fields, so resumption never re-runs prefill and the token
+/// stream is bit-identical to an uninterrupted run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResumeState {
+    /// Context length (prompt + generated) at preemption.
+    pub pos: usize,
+    /// The sampled-but-not-yet-consumed next input token.
+    pub cur_token: u32,
+    /// Page indices that were HBM-resident at preemption (spilled for the
+    /// save; they re-claim HBM on resume if the partition has room).
+    pub hbm_pages: Vec<usize>,
 }
 
 /// One inference request.
@@ -19,12 +71,21 @@ pub struct Request {
     pub max_new_tokens: usize,
     pub state: RequestState,
     pub generated: Vec<u32>,
+    /// Model time the request arrived ([`super::Engine::submit_at`]);
+    /// admission never happens before this.
+    pub arrival_ns: f64,
+    pub sla: SlaClass,
+    /// How many times this request has been preempted.
+    pub preemptions: u32,
+    /// Present while the request waits to resume after a preemption.
+    pub resume: Option<ResumeState>,
     /// Engine step at which the request was admitted / finished.
     pub admitted_step: Option<u64>,
     pub finished_step: Option<u64>,
     /// Model-time stamps (ns on the engine's [`crate::sim::SimClock`]):
-    /// admission, first generated token, and completion. TTFT/TPOT in
-    /// `coordinator::metrics` derive from these.
+    /// first admission, first generated token, and completion. TTFT/TPOT
+    /// and queue delay in `coordinator::metrics` derive from these plus
+    /// `arrival_ns`.
     pub admitted_ns: Option<f64>,
     pub first_token_ns: Option<f64>,
     pub finished_ns: Option<f64>,
@@ -38,12 +99,30 @@ impl Request {
             max_new_tokens,
             state: RequestState::Queued,
             generated: Vec::new(),
+            arrival_ns: 0.0,
+            sla: SlaClass::Batch,
+            preemptions: 0,
+            resume: None,
             admitted_step: None,
             finished_step: None,
             admitted_ns: None,
             first_token_ns: None,
             finished_ns: None,
         }
+    }
+
+    /// [`Self::new`] with an arrival time and QoS class.
+    pub fn arriving(
+        id: u64,
+        prompt: Vec<u32>,
+        max_new_tokens: usize,
+        arrival_ns: f64,
+        sla: SlaClass,
+    ) -> Request {
+        let mut r = Request::new(id, prompt, max_new_tokens);
+        r.arrival_ns = arrival_ns;
+        r.sla = sla;
+        r
     }
 
     pub fn is_done(&self) -> bool {
@@ -60,7 +139,55 @@ pub struct Response {
     pub steps_in_flight: u64,
 }
 
-/// FIFO admission queue with basic accounting.
+/// One entry of the engine's streaming event log
+/// ([`super::Engine::poll_events`]) — the serving-side view of a request
+/// moving through admission, decode, preemption, and completion. All
+/// times are model-time ns.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineEvent {
+    /// The request was granted a batch slot (first admission only;
+    /// re-admission after preemption is `Resumed`).
+    Admitted { seq: u64, at_ns: f64, queue_delay_ns: f64 },
+    /// One generated token. `index` counts from 0 per request.
+    Token { seq: u64, token: u32, index: usize, at_ns: f64 },
+    /// The scheduler evicted the request; `pages_saved` KV pages were
+    /// written to the device on top of those already spilled.
+    Preempted { seq: u64, at_ns: f64, pages_saved: usize },
+    /// The request re-entered a slot; its whole KV history
+    /// (`pages_restored` pages) was fetched back from the device.
+    Resumed { seq: u64, at_ns: f64, pages_restored: usize },
+    /// The request completed; the summary mirrors
+    /// [`super::Engine::take_responses`].
+    Finished { seq: u64, at_ns: f64, response: Response },
+}
+
+impl EngineEvent {
+    /// The request this event concerns.
+    pub fn seq(&self) -> u64 {
+        match self {
+            EngineEvent::Admitted { seq, .. }
+            | EngineEvent::Token { seq, .. }
+            | EngineEvent::Preempted { seq, .. }
+            | EngineEvent::Resumed { seq, .. }
+            | EngineEvent::Finished { seq, .. } => *seq,
+        }
+    }
+
+    /// Model time of the event.
+    pub fn at_ns(&self) -> f64 {
+        match self {
+            EngineEvent::Admitted { at_ns, .. }
+            | EngineEvent::Token { at_ns, .. }
+            | EngineEvent::Preempted { at_ns, .. }
+            | EngineEvent::Resumed { at_ns, .. }
+            | EngineEvent::Finished { at_ns, .. } => *at_ns,
+        }
+    }
+}
+
+/// FIFO admission queue with basic accounting. The scheduler may admit
+/// from any position ([`Self::take`]); preempted requests re-enter at the
+/// head ([`Self::requeue_front`]) since they carry the oldest arrivals.
 #[derive(Debug, Default)]
 pub struct AdmissionQueue {
     queue: VecDeque<Request>,
@@ -79,6 +206,23 @@ impl AdmissionQueue {
 
     pub fn pop(&mut self) -> Option<Request> {
         self.queue.pop_front()
+    }
+
+    /// Remove the request with id `seq` from any queue position.
+    pub fn take(&mut self, seq: u64) -> Option<Request> {
+        let i = self.queue.iter().position(|r| r.id == seq)?;
+        self.queue.remove(i)
+    }
+
+    /// Re-enter a preempted request at the queue head without counting a
+    /// new submission.
+    pub fn requeue_front(&mut self, req: Request) {
+        self.queue.push_front(req);
+    }
+
+    /// Queued requests in FIFO order.
+    pub fn iter(&self) -> impl Iterator<Item = &Request> {
+        self.queue.iter()
     }
 
     pub fn len(&self) -> usize {
@@ -113,5 +257,40 @@ mod tests {
         r.generated.push(5);
         r.generated.push(6);
         assert!(r.is_done());
+    }
+
+    #[test]
+    fn take_removes_mid_queue_and_requeue_front_restores_head() {
+        let mut q = AdmissionQueue::new();
+        for id in 1..=3 {
+            q.submit(Request::new(id, vec![1], 4));
+        }
+        let r2 = q.take(2).unwrap();
+        assert_eq!(r2.id, 2);
+        assert!(q.take(9).is_none());
+        assert_eq!(q.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        q.requeue_front(r2);
+        assert_eq!(q.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 1, 3]);
+        // requeue does not inflate the submission counter
+        assert_eq!(q.submitted, 3);
+    }
+
+    #[test]
+    fn arriving_carries_sla_and_arrival() {
+        let r = Request::arriving(7, vec![1, 2], 8, 1500.0, SlaClass::Interactive);
+        assert_eq!(r.arrival_ns, 1500.0);
+        assert_eq!(r.sla, SlaClass::Interactive);
+        assert_eq!(r.sla.name(), "interactive");
+        assert_eq!(SlaClass::default(), SlaClass::Batch);
+        assert_eq!(SlaClass::ALL[r.sla.index()], r.sla);
+    }
+
+    #[test]
+    fn event_accessors() {
+        let e = EngineEvent::Token { seq: 4, token: 9, index: 0, at_ns: 2.5 };
+        assert_eq!(e.seq(), 4);
+        assert_eq!(e.at_ns(), 2.5);
+        let p = EngineEvent::Preempted { seq: 1, at_ns: 7.0, pages_saved: 3 };
+        assert_eq!((p.seq(), p.at_ns()), (1, 7.0));
     }
 }

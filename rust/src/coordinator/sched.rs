@@ -1,0 +1,392 @@
+//! Pluggable request-scheduling policies for the serving engine.
+//!
+//! Every engine step the [`crate::coordinator::Engine`] snapshots its
+//! admission queue and batch slots into a [`SchedView`] and asks one
+//! [`SchedulerPolicy`] for a [`SchedPlan`]: which queued requests to admit
+//! into free slots and which running slots to preempt. The engine owns all
+//! *mechanism* (batch prefill, KV save/restore through the device,
+//! continuous batching); policies own only the *decision*, so new serving
+//! disciplines are one small `impl` away and never touch the data path.
+//!
+//! Built-in policies:
+//!
+//! * [`Fcfs`] — first-come-first-served, never preempts. Bit-identical to
+//!   the pre-scheduler engine (`tests/sched_equiv.rs` gates this).
+//! * [`ShortestJobFirst`] — admits by fewest remaining tokens; classic
+//!   mean-latency optimizer for batch analytics traffic.
+//! * [`PriorityClass`] — two QoS tiers ([`SlaClass`]): interactive
+//!   requests jump the queue and, when no slot is free, preempt running
+//!   batch requests (the engine spills the victim's KV to the CXL device
+//!   and restores it losslessly on resume). Under overload this trades a
+//!   bounded amount of aggregate throughput for interactive tail latency
+//!   (`benches/fig_sched_qos.rs` gates both directions).
+//!
+//! Not to be confused with [`crate::cxl::scheduler`], which orders DRAM
+//! plane reads *inside* a device — this module schedules *requests* onto
+//! batch slots, one layer up (see `docs/SERVING.md`).
+//!
+//! ## Contract
+//!
+//! The engine validates every plan defensively; a policy cannot corrupt
+//! the engine, only waste capacity:
+//!
+//! * `admit` ids must name queued requests; unknown ids are skipped.
+//!   Admissions beyond the free-slot count (after preemptions free
+//!   theirs) are dropped.
+//! * `preempt` ids must name slots in the decoding state; ids naming
+//!   prefilling slots, finished requests, or nothing are skipped.
+//! * A plan may preempt a sequence and admit it again in the same step
+//!   (the victim re-enters the queue head before admissions are applied);
+//!   the save/restore roundtrip is exercised but no decode step is lost.
+//! * Queued requests appear in FIFO order (preempted requests re-enter at
+//!   the head, keeping the oldest arrival first).
+
+use super::request::SlaClass;
+
+/// One queued (arrived, not yet running) request, as shown to a policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueuedView {
+    pub seq: u64,
+    /// Model time the request arrived (`Engine::submit_at`).
+    pub arrival_ns: f64,
+    pub sla: SlaClass,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    /// Tokens already generated — nonzero only for a preempted request
+    /// waiting to resume.
+    pub generated: usize,
+    /// How many times this request has been preempted.
+    pub preemptions: u32,
+}
+
+impl QueuedView {
+    /// Decode tokens still owed to this request.
+    pub fn remaining_tokens(&self) -> usize {
+        self.max_new.saturating_sub(self.generated)
+    }
+}
+
+/// One occupied batch slot, as shown to a policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotView {
+    pub slot: usize,
+    pub seq: u64,
+    pub sla: SlaClass,
+    /// True once prefill completed and the slot decodes each step. Only
+    /// decoding slots are preemptable.
+    pub decoding: bool,
+    /// Context length held (prompt + generated tokens).
+    pub pos: usize,
+    pub generated: usize,
+    pub max_new: usize,
+    /// Model time this request was (first) admitted.
+    pub admitted_ns: f64,
+}
+
+impl SlotView {
+    /// Decode tokens still owed to this slot's request.
+    pub fn remaining_tokens(&self) -> usize {
+        self.max_new.saturating_sub(self.generated)
+    }
+}
+
+/// The engine state a policy decides over, one engine step.
+#[derive(Debug)]
+pub struct SchedView<'a> {
+    /// Current model time.
+    pub now_ns: f64,
+    /// Arrived-but-not-running requests, FIFO (oldest first). Requests
+    /// whose `arrival_ns` is in the future are *not* shown — admission is
+    /// open-loop and gated on model time.
+    pub queued: &'a [QueuedView],
+    /// Occupied slots.
+    pub running: &'a [SlotView],
+    /// Unoccupied slot count before this plan is applied.
+    pub free_slots: usize,
+}
+
+/// A policy's decision for one engine step.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SchedPlan {
+    /// Running sequences to preempt, applied before admissions. Victims'
+    /// KV is spilled to the device and the requests re-enter the queue
+    /// head with their progress intact.
+    pub preempt: Vec<u64>,
+    /// Queued sequences to admit, in order, into free slots (including
+    /// slots freed by `preempt` this step).
+    pub admit: Vec<u64>,
+}
+
+/// A request-scheduling discipline. See the module docs for the plan
+/// contract the engine enforces.
+pub trait SchedulerPolicy {
+    /// Short policy name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Decide this step's admissions and preemptions.
+    fn plan(&mut self, view: &SchedView<'_>) -> SchedPlan;
+}
+
+/// First-come-first-served: admit the queue head into every free slot,
+/// never preempt. Reproduces the pre-scheduler engine bit-identically.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fcfs;
+
+impl SchedulerPolicy for Fcfs {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn plan(&mut self, view: &SchedView<'_>) -> SchedPlan {
+        SchedPlan {
+            preempt: Vec::new(),
+            admit: view.queued.iter().take(view.free_slots).map(|q| q.seq).collect(),
+        }
+    }
+}
+
+/// Shortest-job-first: admit queued requests by fewest remaining decode
+/// tokens (ties broken FIFO), never preempt.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShortestJobFirst;
+
+impl SchedulerPolicy for ShortestJobFirst {
+    fn name(&self) -> &'static str {
+        "sjf"
+    }
+
+    fn plan(&mut self, view: &SchedView<'_>) -> SchedPlan {
+        let mut order: Vec<&QueuedView> = view.queued.iter().collect();
+        // stable sort: equal remaining keeps FIFO order
+        order.sort_by_key(|q| q.remaining_tokens());
+        SchedPlan {
+            preempt: Vec::new(),
+            admit: order.into_iter().take(view.free_slots).map(|q| q.seq).collect(),
+        }
+    }
+}
+
+/// Two-tier QoS: [`SlaClass::Interactive`] requests are admitted before
+/// [`SlaClass::Batch`] ones, and when interactive requests are still
+/// waiting after every free slot is filled, running batch slots are
+/// preempted to make room. Victims are chosen cheapest-first — smallest
+/// resident context (`pos`), i.e. the least KV to save and restore
+/// through the device — which bounds the throughput cost of preemption.
+/// Interactive slots are never preempted.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PriorityClass;
+
+impl SchedulerPolicy for PriorityClass {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn plan(&mut self, view: &SchedView<'_>) -> SchedPlan {
+        let interactive: Vec<&QueuedView> =
+            view.queued.iter().filter(|q| q.sla == SlaClass::Interactive).collect();
+        let batch: Vec<&QueuedView> =
+            view.queued.iter().filter(|q| q.sla == SlaClass::Batch).collect();
+
+        // fill free slots: interactive first, each class FIFO
+        let mut admit: Vec<u64> = interactive
+            .iter()
+            .chain(batch.iter())
+            .take(view.free_slots)
+            .map(|q| q.seq)
+            .collect();
+
+        // interactive requests still waiting preempt running batch slots
+        let admitted_interactive = interactive.len().min(view.free_slots);
+        let waiting = interactive.len() - admitted_interactive;
+        let mut preempt = Vec::new();
+        if waiting > 0 {
+            let mut victims: Vec<&SlotView> = view
+                .running
+                .iter()
+                .filter(|s| s.sla == SlaClass::Batch && s.decoding)
+                .collect();
+            // cheapest roundtrip first: the smallest resident context has
+            // the least KV to spill and restore
+            victims.sort_by(|a, b| a.pos.cmp(&b.pos).then(b.slot.cmp(&a.slot)));
+            for v in victims.into_iter().take(waiting) {
+                preempt.push(v.seq);
+            }
+            for q in interactive.iter().skip(admitted_interactive).take(preempt.len()) {
+                admit.push(q.seq);
+            }
+        }
+        SchedPlan { preempt, admit }
+    }
+}
+
+/// Built-in policy selector — the `Clone`-able handle [`super::EngineConfig`]
+/// carries; custom [`SchedulerPolicy`] impls are injected with
+/// [`super::Engine::set_scheduler`] instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedKind {
+    #[default]
+    Fcfs,
+    Sjf,
+    Priority,
+}
+
+impl SchedKind {
+    /// Parse a CLI name (`fcfs`, `sjf`, `priority`).
+    pub fn parse(s: &str) -> Option<SchedKind> {
+        match s {
+            "fcfs" | "fifo" => Some(SchedKind::Fcfs),
+            "sjf" | "shortest" => Some(SchedKind::Sjf),
+            "priority" | "qos" => Some(SchedKind::Priority),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedKind::Fcfs => "fcfs",
+            SchedKind::Sjf => "sjf",
+            SchedKind::Priority => "priority",
+        }
+    }
+
+    /// Construct the policy this selector names.
+    pub fn build(self) -> Box<dyn SchedulerPolicy> {
+        match self {
+            SchedKind::Fcfs => Box::new(Fcfs),
+            SchedKind::Sjf => Box::new(ShortestJobFirst),
+            SchedKind::Priority => Box::new(PriorityClass),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queued(seq: u64, sla: SlaClass, max_new: usize, generated: usize) -> QueuedView {
+        QueuedView {
+            seq,
+            arrival_ns: seq as f64,
+            sla,
+            prompt_len: 4,
+            max_new,
+            generated,
+            preemptions: 0,
+        }
+    }
+
+    fn running(slot: usize, seq: u64, sla: SlaClass, pos: usize) -> SlotView {
+        SlotView {
+            slot,
+            seq,
+            sla,
+            decoding: true,
+            pos,
+            generated: 0,
+            max_new: 64,
+            admitted_ns: 0.0,
+        }
+    }
+
+    #[test]
+    fn fcfs_admits_in_queue_order_up_to_free_slots() {
+        let q = [
+            queued(3, SlaClass::Batch, 10, 0),
+            queued(5, SlaClass::Interactive, 4, 0),
+            queued(7, SlaClass::Batch, 2, 0),
+        ];
+        let v = SchedView { now_ns: 0.0, queued: &q, running: &[], free_slots: 2 };
+        let plan = Fcfs.plan(&v);
+        assert_eq!(plan.admit, vec![3, 5]);
+        assert!(plan.preempt.is_empty());
+        // zero free slots: empty plan
+        let v0 = SchedView { free_slots: 0, ..v };
+        assert_eq!(Fcfs.plan(&v0), SchedPlan::default());
+    }
+
+    #[test]
+    fn sjf_orders_by_remaining_with_fifo_ties() {
+        let q = [
+            queued(0, SlaClass::Batch, 40, 0),
+            queued(1, SlaClass::Batch, 5, 0),
+            queued(2, SlaClass::Batch, 30, 25), // remaining 5: ties with seq 1, FIFO keeps 1 first
+            queued(3, SlaClass::Batch, 8, 0),
+        ];
+        let v = SchedView { now_ns: 0.0, queued: &q, running: &[], free_slots: 3 };
+        assert_eq!(ShortestJobFirst.plan(&v).admit, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn priority_admits_interactive_first() {
+        let q = [
+            queued(0, SlaClass::Batch, 64, 0),
+            queued(1, SlaClass::Interactive, 8, 0),
+            queued(2, SlaClass::Interactive, 8, 0),
+        ];
+        let v = SchedView { now_ns: 0.0, queued: &q, running: &[], free_slots: 2 };
+        let plan = PriorityClass.plan(&v);
+        assert_eq!(plan.admit, vec![1, 2]);
+        assert!(plan.preempt.is_empty());
+    }
+
+    #[test]
+    fn priority_preempts_cheapest_batch_for_waiting_interactive() {
+        let q = [queued(9, SlaClass::Interactive, 8, 0)];
+        let r = [
+            running(0, 1, SlaClass::Batch, 48),
+            running(1, 2, SlaClass::Interactive, 8),
+            running(2, 3, SlaClass::Batch, 12),
+        ];
+        let v = SchedView { now_ns: 0.0, queued: &q, running: &r, free_slots: 0 };
+        let plan = PriorityClass.plan(&v);
+        // the batch slot with the smallest resident context (cheapest KV
+        // save/restore) is the victim; the interactive slot is untouchable
+        assert_eq!(plan.preempt, vec![3]);
+        assert_eq!(plan.admit, vec![9]);
+    }
+
+    #[test]
+    fn priority_never_preempts_without_waiting_interactive() {
+        let q = [queued(9, SlaClass::Batch, 8, 0)];
+        let r = [running(0, 1, SlaClass::Batch, 60), running(1, 2, SlaClass::Batch, 60)];
+        let v = SchedView { now_ns: 0.0, queued: &q, running: &r, free_slots: 0 };
+        let plan = PriorityClass.plan(&v);
+        assert!(plan.preempt.is_empty());
+        assert!(plan.admit.is_empty());
+    }
+
+    #[test]
+    fn priority_caps_preemptions_at_available_victims() {
+        let q = [
+            queued(7, SlaClass::Interactive, 8, 0),
+            queued(8, SlaClass::Interactive, 8, 0),
+            queued(9, SlaClass::Interactive, 8, 0),
+        ];
+        let r = [running(0, 1, SlaClass::Batch, 60), running(1, 2, SlaClass::Interactive, 8)];
+        let v = SchedView { now_ns: 0.0, queued: &q, running: &r, free_slots: 0 };
+        let plan = PriorityClass.plan(&v);
+        assert_eq!(plan.preempt, vec![1], "only one batch victim exists");
+        assert_eq!(plan.admit, vec![7], "admissions match freed capacity");
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for kind in [SchedKind::Fcfs, SchedKind::Sjf, SchedKind::Priority] {
+            assert_eq!(SchedKind::parse(kind.name()), Some(kind));
+            assert_eq!(kind.build().name(), kind.name());
+        }
+        assert_eq!(SchedKind::parse("nope"), None);
+        assert_eq!(SchedKind::default(), SchedKind::Fcfs);
+    }
+
+    #[test]
+    fn remaining_tokens_saturate() {
+        let q = queued(0, SlaClass::Batch, 4, 9);
+        assert_eq!(q.remaining_tokens(), 0);
+        let mut s = running(0, 0, SlaClass::Batch, 8);
+        s.generated = 60;
+        assert_eq!(s.remaining_tokens(), 4);
+        s.generated = 70;
+        assert_eq!(s.remaining_tokens(), 0);
+    }
+}

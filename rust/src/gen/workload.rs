@@ -18,6 +18,15 @@ pub struct GenRequest {
     pub decode_tokens: usize,
 }
 
+impl GenRequest {
+    /// Arrival time in the engine's model-time unit (ns) — what
+    /// `Engine::submit_at` expects, so the generated Poisson arrival
+    /// trace replays open-loop instead of being submitted up front.
+    pub fn arrival_ns(&self) -> f64 {
+        self.arrival_ms * 1e6
+    }
+}
+
 /// Poisson arrivals, configurable prompt/decode length distributions.
 #[derive(Debug, Clone)]
 pub struct RequestGen {
@@ -106,6 +115,7 @@ mod tests {
         for r in &reqs {
             assert!(r.prompt.len() >= 32 && r.prompt.len() <= 1024);
             assert!(r.decode_tokens >= 1);
+            assert!((r.arrival_ns() - r.arrival_ms * 1e6).abs() < 1e-9);
         }
     }
 

@@ -53,6 +53,17 @@
 //! `docs/SIM_CLOCK.md` for the event model and `docs/DEVICE_API.md` for
 //! the transaction lifecycle and the ready-at-time contract.
 //!
+//! Serving is **scheduler-driven**: a pluggable
+//! [`coordinator::SchedulerPolicy`] decides each step's admissions and
+//! preemptions over an open-loop arrival stream
+//! ([`coordinator::Engine::submit_at`]), with QoS classes
+//! ([`coordinator::SlaClass`]), KV save/restore through the device on
+//! preemption (token-lossless), page-chunked prefill on the compute
+//! timeline, and a streaming [`coordinator::EngineEvent`] lifecycle log.
+//! `Fcfs` reproduces plain continuous batching bit-identically
+//! (`tests/sched_equiv.rs`); `benches/fig_sched_qos.rs` gates the
+//! QoS-vs-throughput tradeoff under overload. See `docs/SERVING.md`.
+//!
 //! ## Crate layout
 //!
 //! Host/runtime side:

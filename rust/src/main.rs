@@ -12,7 +12,7 @@
 
 use trace_cxl::bitplane::{DeviceBlock, KvWindow};
 use trace_cxl::codec::CodecPolicy;
-use trace_cxl::coordinator::{Engine, EngineConfig};
+use trace_cxl::coordinator::{Engine, EngineConfig, SchedKind, SlaClass};
 use trace_cxl::cxl::{latency, ppa_for, Design, LatencyCase, MemDevice};
 use trace_cxl::gen::{KvGen, RequestGen, WeightGen};
 use trace_cxl::runtime::{Manifest, ModelBackend, PjrtEngine};
@@ -47,6 +47,7 @@ fn print_help() {
          USAGE: trace-cxl <serve|throughput|compress|latency|ppa|info> [--options]\n\
          \n\
          serve      --artifacts DIR --requests N --max-new N --hbm-kv BYTES --design plain|gcomp|trace --shards N\n\
+         \x20          [--policy fcfs|sjf|priority] [--rate REQ_PER_S] [--interactive-frac F] [--overlap]\n\
          throughput --model mxfp4|bf16 --ctx N [--alpha F] [--elastic F] [--shards N]\n\
          compress   --kind kv|weights [--blocks N]\n\
          latency    (controller pipeline breakdowns, Figs 22-23)\n\
@@ -91,17 +92,36 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             greedy: true,
             shards: args.get_usize("shards", 1),
             overlap: args.flag("overlap"),
+            sched: SchedKind::parse(args.get_or("policy", "fcfs"))
+                .ok_or_else(|| anyhow::anyhow!("unknown --policy (fcfs|sjf|priority)"))?,
             ..Default::default()
         },
     );
     let mut rng = Rng::new(args.get_u64("seed", 7));
-    let reqgen = RequestGen::new(50.0, 8, dims.t_prompt, max_new, dims.vocab as u32);
+    let rate = args.get_f64("rate", 50.0);
+    let interactive_frac = args.get_f64("interactive-frac", 0.0);
+    let cap = max_new.min(dims.t_max - dims.t_prompt - 2);
+    let reqgen = RequestGen::new(rate, 8, dims.t_prompt, max_new, dims.vocab as u32);
     for r in reqgen.generate(&mut rng, n_requests) {
-        engine.submit(r.prompt, max_new.min(dims.t_max - dims.t_prompt - 2));
+        // the generated Poisson arrivals drive open-loop admission
+        let (sla, decode) = if rng.chance(interactive_frac) {
+            (SlaClass::Interactive, (cap / 4).max(1))
+        } else {
+            (SlaClass::Batch, cap)
+        };
+        engine.submit_at(r.prompt, decode, r.arrival_ns(), sla);
     }
     engine.run_to_completion(100_000)?;
     let d = engine.device.stats();
     println!("{}", engine.metrics.report(&d));
+    println!(
+        "policy {}: queue delay p99 {:.2} us, {} preemptions, {} resumes, {} idle jumps",
+        engine.scheduler_name(),
+        engine.metrics.queue_delay().p99 / 1000.0,
+        engine.metrics.preemptions,
+        engine.metrics.resumes,
+        engine.metrics.idle_jumps
+    );
     println!(
         "device lifetime KV compression: {:.2}x ({} live blocks across {} shard(s))",
         d.lifetime_compression_ratio(),

@@ -257,6 +257,36 @@ impl KvPageManager {
         false
     }
 
+    /// Demote an HBM-resident page of `seq` to the CXL tier: allocates a
+    /// fresh stripe-aligned device address (the caller must write the
+    /// page's data there) and counts it as a spill. Returns the new
+    /// address, or `None` if the page is missing or already CXL-resident.
+    /// This is the inverse of [`Self::promote`] and is what the engine's
+    /// preemption path uses to park a victim's hot pages on the device.
+    pub fn demote(&mut self, seq: u64, index: usize) -> Option<u64> {
+        for p in self.pages.iter_mut() {
+            if p.seq == seq && p.index == index && p.home == PageHome::Hbm {
+                let a = self.next_cxl_addr;
+                self.next_cxl_addr += STRIPE_BYTES;
+                p.home = PageHome::Cxl;
+                p.cxl_addr = Some(a);
+                p.shard = shard_of(a, self.shards);
+                self.spilled_pages += 1;
+                return Some(a);
+            }
+        }
+        None
+    }
+
+    /// Remove one page's bookkeeping entirely, returning its record (the
+    /// caller frees any device copy). The preemption path uses this for
+    /// the saved partial live page, which is not a committed page and
+    /// re-commits when it next fills during decode.
+    pub fn remove_page(&mut self, seq: u64, index: usize) -> Option<PageMeta> {
+        let i = self.pages.iter().position(|p| p.seq == seq && p.index == index)?;
+        Some(self.pages.remove(i))
+    }
+
     /// Re-tier a sequence's pages under a policy using current importance.
     pub fn retier(&mut self, seq: u64, policy: KvPolicy) {
         let mut idx: Vec<usize> = (0..self.pages.len()).filter(|&i| self.pages[i].seq == seq).collect();
@@ -385,6 +415,41 @@ mod tests {
         let (hbm, spilled) = m.release_seq(1);
         assert_eq!(hbm, 2);
         assert!(spilled.is_empty());
+    }
+
+    #[test]
+    fn demote_allocates_address_and_counts_spill() {
+        let mut m = KvPageManager::with_shards(4);
+        m.add_page(1, 0, true);
+        m.add_page(1, 1, false);
+        let spilled_before = m.spilled_pages;
+        let addr = m.demote(1, 0).expect("HBM page demotes");
+        let p = &m.seq_pages(1)[0];
+        assert_eq!(p.home, PageHome::Cxl);
+        assert_eq!(p.cxl_addr, Some(addr));
+        assert_eq!(p.shard, shard_of(addr, 4));
+        assert_eq!(m.spilled_pages, spilled_before + 1);
+        // invalid demotions: already CXL, unknown page/sequence
+        assert!(m.demote(1, 0).is_none(), "already on the device");
+        assert!(m.demote(1, 1).is_none(), "was spilled at commit");
+        assert!(m.demote(2, 0).is_none(), "unknown sequence");
+        // demote → promote round-trips back to HBM residency
+        assert!(m.promote(1, 0));
+        assert!(m.seq_pages(1)[0].cxl_addr.is_none());
+    }
+
+    #[test]
+    fn remove_page_returns_record_and_forgets_it() {
+        let mut m = KvPageManager::new();
+        m.add_page(1, 0, false);
+        m.add_page(1, 1, true);
+        let meta = m.remove_page(1, 0).expect("page exists");
+        assert_eq!(meta.index, 0);
+        assert!(meta.cxl_addr.is_some(), "caller gets the address to free");
+        assert_eq!(m.seq_pages(1).len(), 1);
+        assert!(m.remove_page(1, 0).is_none(), "already removed");
+        // the cumulative spill counter is history, not live state
+        assert_eq!(m.spilled_pages, 1);
     }
 
     #[test]

@@ -14,16 +14,20 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Compute a summary. Returns zeros for an empty sample.
+    /// Compute a summary. Guarded against degenerate populations instead
+    /// of returning garbage: an empty sample yields explicit zeros, a
+    /// single sample reports itself as every percentile, and non-finite
+    /// values (NaN/±inf) are dropped rather than poisoning the sort and
+    /// the moments (`n` counts the finite samples actually summarized).
     pub fn of(xs: &[f64]) -> Summary {
-        if xs.is_empty() {
+        let mut sorted: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+        if sorted.is_empty() {
             return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p90: 0.0, p99: 0.0 };
         }
-        let n = xs.len();
-        let mean = xs.iter().sum::<f64>() / n as f64;
-        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
-        let mut sorted: Vec<f64> = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
         Summary {
             n,
             mean,
@@ -34,6 +38,12 @@ impl Summary {
             p90: percentile_sorted(&sorted, 0.90),
             p99: percentile_sorted(&sorted, 0.99),
         }
+    }
+
+    /// True when no (finite) samples were summarized — percentile fields
+    /// are the explicit zero placeholders, not measurements.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
     }
 }
 
@@ -133,7 +143,31 @@ mod tests {
 
     #[test]
     fn summary_empty() {
-        assert_eq!(Summary::of(&[]).n, 0);
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert!(s.is_empty());
+        assert_eq!((s.p50, s.p90, s.p99, s.min, s.max), (0.0, 0.0, 0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn summary_single_sample_is_its_own_percentiles() {
+        let s = Summary::of(&[7.5]);
+        assert_eq!(s.n, 1);
+        assert!(!s.is_empty());
+        assert_eq!((s.p50, s.p90, s.p99), (7.5, 7.5, 7.5));
+        assert_eq!((s.min, s.max, s.mean, s.std), (7.5, 7.5, 7.5, 0.0));
+    }
+
+    #[test]
+    fn summary_drops_non_finite_instead_of_poisoning() {
+        // a NaN used to panic the sort; infinities used to wreck mean/max
+        let s = Summary::of(&[1.0, f64::NAN, 3.0, f64::INFINITY, f64::NEG_INFINITY]);
+        assert_eq!(s.n, 2, "only the finite samples count");
+        assert_eq!((s.min, s.max), (1.0, 3.0));
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.p50 - 2.0).abs() < 1e-12);
+        // all-non-finite degenerates to the explicit empty summary
+        assert!(Summary::of(&[f64::NAN]).is_empty());
     }
 
     #[test]

@@ -1,0 +1,322 @@
+//! Scheduler-API equivalence and preemption save/restore regressions.
+//!
+//! The engine was redesigned around a pluggable `SchedulerPolicy`; these
+//! tests pin the redesign's safety net:
+//!
+//! * `Fcfs` (the default) must reproduce the pre-scheduler engine
+//!   bit-identically — same tokens AND same aggregate device traffic —
+//!   whether it is selected by config, injected as a boxed policy, or
+//!   simply left as the default, across device designs, shard counts, and
+//!   the overlapped pipeline. (The untouched legacy suites —
+//!   `engine.rs` unit tests, `tests/overlap_equiv.rs`,
+//!   `tests/integration.rs` — additionally pin the absolute legacy
+//!   behaviors this equivalence is anchored to.)
+//! * Open-loop admission must gate on model-time arrivals and keep FIFO
+//!   order under `Fcfs`.
+//! * A preempt→resume roundtrip through the device (save the victim's
+//!   KV, free its slot, restore later) must be BF16-lossless: a request
+//!   preempted and re-admitted in the same step loses no decode step and
+//!   must emit exactly the token stream of an uninterrupted run, across
+//!   KV policies, shard counts, HBM budgets, and both pipelines — and
+//!   the device must drain to zero blocks when everything finishes.
+
+use trace_cxl::coordinator::{
+    Engine, EngineConfig, EngineEvent, Fcfs, SchedKind, SchedPlan, SchedView, SchedulerPolicy,
+    SlaClass,
+};
+use trace_cxl::cxl::{Design, DeviceStats, MemDevice};
+use trace_cxl::runtime::MockBackend;
+use trace_cxl::tier::KvPolicy;
+
+struct RunOut {
+    tokens: Vec<Vec<u32>>,
+    stats: DeviceStats,
+    spilled: u64,
+}
+
+fn collect(e: &mut Engine<MockBackend>) -> RunOut {
+    let mut rs = e.take_responses();
+    rs.sort_by_key(|r| r.id);
+    RunOut {
+        tokens: rs.into_iter().map(|r| r.tokens).collect(),
+        stats: e.device.stats(),
+        spilled: e.metrics.pages_spilled,
+    }
+}
+
+fn workload(e: &mut Engine<MockBackend>, via_submit_at: bool) {
+    if via_submit_at {
+        e.submit_at(vec![1, 2, 3, 4], 60, 0.0, SlaClass::Batch);
+        e.submit_at(vec![5, 6], 60, 0.0, SlaClass::Batch);
+        e.submit_at(vec![7, 8, 9], 40, 0.0, SlaClass::Batch);
+    } else {
+        e.submit(vec![1, 2, 3, 4], 60);
+        e.submit(vec![5, 6], 60);
+        e.submit(vec![7, 8, 9], 40);
+    }
+}
+
+#[test]
+fn fcfs_is_identical_across_construction_paths_and_designs() {
+    for design in [Design::Plain, Design::GComp, Design::Trace] {
+        for shards in [1usize, 4] {
+            for overlap in [false, true] {
+                let cfg = EngineConfig {
+                    design,
+                    hbm_kv_bytes: 0,
+                    shards,
+                    overlap,
+                    ..Default::default()
+                };
+                let tag = format!("{design:?} shards={shards} overlap={overlap}");
+
+                // 1) default config (sched = Fcfs), legacy submit()
+                let mut a = Engine::new(MockBackend::tiny(), cfg.clone());
+                workload(&mut a, false);
+                a.run_to_completion(500).unwrap();
+                let a = collect(&mut a);
+                assert!(a.spilled > 0, "{tag}: workload must spill");
+
+                // 2) explicit SchedKind::Fcfs, open-loop submit_at(t=0)
+                let mut b = Engine::new(
+                    MockBackend::tiny(),
+                    EngineConfig { sched: SchedKind::Fcfs, ..cfg.clone() },
+                );
+                workload(&mut b, true);
+                b.run_to_completion(500).unwrap();
+                let b = collect(&mut b);
+
+                // 3) Fcfs injected through the pluggable-policy seam
+                let mut c =
+                    Engine::with_scheduler(MockBackend::tiny(), cfg.clone(), Box::new(Fcfs));
+                workload(&mut c, false);
+                c.run_to_completion(500).unwrap();
+                let c = collect(&mut c);
+
+                assert_eq!(a.tokens, b.tokens, "{tag}: submit vs submit_at tokens");
+                assert_eq!(a.stats, b.stats, "{tag}: submit vs submit_at traffic");
+                assert_eq!(a.tokens, c.tokens, "{tag}: built-in vs injected tokens");
+                assert_eq!(a.stats, c.stats, "{tag}: built-in vs injected traffic");
+            }
+        }
+    }
+}
+
+#[test]
+fn fcfs_admission_order_is_fifo_and_steps_nondecreasing() {
+    let mut e = Engine::new(MockBackend::tiny(), EngineConfig::default());
+    for i in 0..6u32 {
+        e.submit(vec![i + 1], 5);
+    }
+    e.run_to_completion(500).unwrap();
+    assert_eq!(e.take_responses().len(), 6);
+    let events = e.poll_events();
+    let admitted: Vec<u64> = events
+        .iter()
+        .filter_map(|ev| match ev {
+            EngineEvent::Admitted { seq, .. } => Some(*seq),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(admitted, vec![0, 1, 2, 3, 4, 5], "FCFS admits in submission order");
+    let times: Vec<f64> = events
+        .iter()
+        .filter_map(|ev| match ev {
+            EngineEvent::Admitted { at_ns, .. } => Some(*at_ns),
+            _ => None,
+        })
+        .collect();
+    for w in times.windows(2) {
+        assert!(w[1] >= w[0]);
+    }
+}
+
+#[test]
+fn sjf_admits_shortest_remaining_first() {
+    let mut e = Engine::new(
+        MockBackend::tiny(),
+        EngineConfig { sched: SchedKind::Priority, ..Default::default() },
+    );
+    assert_eq!(e.scheduler_name(), "priority");
+    e.set_scheduler(SchedKind::Sjf.build());
+    assert_eq!(e.scheduler_name(), "sjf");
+    // submission order: 40, 5, 30, 8 decode tokens; two slots
+    e.submit(vec![1], 40);
+    e.submit(vec![2], 5);
+    e.submit(vec![3], 30);
+    e.submit(vec![4], 8);
+    e.run_to_completion(500).unwrap();
+    assert_eq!(e.metrics.requests_finished, 4);
+    let admitted: Vec<u64> = e
+        .poll_events()
+        .iter()
+        .filter_map(|ev| match ev {
+            EngineEvent::Admitted { seq, .. } => Some(*seq),
+            _ => None,
+        })
+        .collect();
+    // first wave: the two shortest (5 and 8); then 30, then 40
+    assert_eq!(admitted, vec![1, 3, 2, 0], "SJF admission order");
+}
+
+#[test]
+fn open_loop_arrivals_gate_admission_in_fifo_order() {
+    let mut e = Engine::new(MockBackend::tiny(), EngineConfig::default());
+    // second request arrives long after the first finishes: the engine
+    // must idle-jump, not busy-spin, and must not admit early
+    let late = 10_000_000.0; // 10 ms
+    e.submit_at(vec![1, 2], 6, 0.0, SlaClass::Batch);
+    e.submit_at(vec![3, 4], 6, late, SlaClass::Interactive);
+    e.run_to_completion(500).unwrap();
+    assert_eq!(e.metrics.requests_finished, 2);
+    assert!(e.metrics.idle_jumps >= 1, "the gap must be jumped, not spun");
+    let events = e.poll_events();
+    let admissions: Vec<(u64, f64)> = events
+        .iter()
+        .filter_map(|ev| match ev {
+            EngineEvent::Admitted { seq, at_ns, .. } => Some((*seq, *at_ns)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(admissions.len(), 2);
+    assert_eq!(admissions[0].0, 0);
+    assert_eq!(admissions[1].0, 1);
+    assert!(admissions[1].1 >= late, "no admission before arrival");
+    // queue delays were recorded and are non-negative
+    assert_eq!(e.metrics.queue_delay_ns.len(), 2);
+    assert!(e.metrics.queue_delay_ns.iter().all(|&d| d >= 0.0));
+    // per-class accounting landed in both buckets
+    assert_eq!(e.metrics.ttft_class(SlaClass::Batch).n, 1);
+    assert_eq!(e.metrics.ttft_class(SlaClass::Interactive).n, 1);
+}
+
+/// FCFS admissions plus exactly one forced preempt-and-readmit of the
+/// first running slot at plan call `at` — the victim's KV round-trips
+/// through the device within a single step, so no decode step is lost
+/// and tokens must match an uninterrupted run bit-for-bit.
+struct PreemptResumeOnce {
+    calls: u64,
+    at: u64,
+}
+
+impl SchedulerPolicy for PreemptResumeOnce {
+    fn name(&self) -> &'static str {
+        "preempt-resume-once"
+    }
+
+    fn plan(&mut self, view: &SchedView<'_>) -> SchedPlan {
+        self.calls += 1;
+        let mut plan = SchedPlan {
+            preempt: Vec::new(),
+            admit: view.queued.iter().take(view.free_slots).map(|q| q.seq).collect(),
+        };
+        if self.calls == self.at {
+            if let Some(victim) = view.running.iter().find(|s| s.decoding) {
+                plan.preempt.push(victim.seq);
+                plan.admit.push(victim.seq);
+            }
+        }
+        plan
+    }
+}
+
+#[test]
+fn preempt_resume_roundtrip_is_token_identical_and_drains_device() {
+    // one request long enough to hold HBM pages, spilled pages, and a
+    // partial live page at the preemption point (pos = 8 + 29 = 37)
+    for policy in [KvPolicy::FullKv, KvPolicy::DynamicQuant { bf16: 2, fp8: 2, fp4: 30 }] {
+        for shards in [1usize, 4] {
+            for hbm in [0u64, 1024, 2048] {
+                for overlap in [false, true] {
+                    let cfg = EngineConfig {
+                        hbm_kv_bytes: hbm,
+                        policy,
+                        shards,
+                        overlap,
+                        ..Default::default()
+                    };
+                    let tag =
+                        format!("{policy:?} shards={shards} hbm={hbm} overlap={overlap}");
+
+                    let mut base = Engine::new(MockBackend::tiny(), cfg.clone());
+                    base.submit(vec![1, 2, 3, 4, 5, 6, 7, 8], 50);
+                    base.run_to_completion(300).unwrap();
+                    let base_tokens = base.take_responses().pop().unwrap().tokens;
+                    assert_eq!(base.metrics.preemptions, 0);
+
+                    let mut e = Engine::with_scheduler(
+                        MockBackend::tiny(),
+                        cfg,
+                        Box::new(PreemptResumeOnce { calls: 0, at: 30 }),
+                    );
+                    e.submit(vec![1, 2, 3, 4, 5, 6, 7, 8], 50);
+                    e.run_to_completion(300).unwrap();
+                    let tokens = e.take_responses().pop().unwrap().tokens;
+
+                    assert_eq!(tokens, base_tokens, "{tag}: save/restore must be lossless");
+                    assert_eq!(e.metrics.preemptions, 1, "{tag}");
+                    assert_eq!(e.metrics.resumes, 1, "{tag}");
+                    assert!(e.metrics.restore_bytes > 0, "{tag}: restore reads the device");
+                    // the save wrote extra pages the baseline never did
+                    assert!(
+                        e.metrics.pages_spilled > base.metrics.pages_spilled,
+                        "{tag}: preemption must spill the resident pages"
+                    );
+                    assert!(
+                        e.device.stats().dram_bytes_written
+                            > base.device.stats().dram_bytes_written,
+                        "{tag}: save traffic must hit the device"
+                    );
+                    // lifecycle events fired in order
+                    let events = e.poll_events();
+                    let p = events
+                        .iter()
+                        .position(|ev| matches!(ev, EngineEvent::Preempted { .. }))
+                        .expect("preempted event");
+                    let r = events
+                        .iter()
+                        .position(|ev| matches!(ev, EngineEvent::Resumed { .. }))
+                        .expect("resumed event");
+                    assert!(p < r, "{tag}: preempt precedes resume");
+                    // everything finished: the device holds no dead KV
+                    assert_eq!(e.device.len(), 0, "{tag}: device must drain");
+                    assert_eq!(e.pager.pages.len(), 0, "{tag}: pager must drain");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn priority_class_preempts_batch_for_late_interactive_and_cuts_ttft() {
+    let run = |kind: SchedKind| -> (f64, u64, u64) {
+        let mut e = Engine::new(
+            MockBackend::tiny(),
+            EngineConfig { hbm_kv_bytes: 0, sched: kind, ..Default::default() },
+        );
+        // two long batch jobs occupy both slots from t=0...
+        e.submit_at(vec![1, 2, 3, 4], 60, 0.0, SlaClass::Batch);
+        e.submit_at(vec![5, 6], 60, 0.0, SlaClass::Batch);
+        // ...and two short interactive requests arrive mid-flight
+        e.submit_at(vec![7, 8], 8, 30_000.0, SlaClass::Interactive);
+        e.submit_at(vec![9], 8, 40_000.0, SlaClass::Interactive);
+        e.run_to_completion(1000).unwrap();
+        assert_eq!(e.metrics.requests_finished, 4);
+        assert_eq!(e.device.len(), 0, "device must drain after resumes");
+        assert_eq!(e.metrics.ttft_class(SlaClass::Interactive).n, 2);
+        (
+            e.metrics.ttft_class(SlaClass::Interactive).max,
+            e.metrics.preemptions,
+            e.metrics.resumes,
+        )
+    };
+    let (fcfs_ttft, fcfs_preempt, _) = run(SchedKind::Fcfs);
+    let (prio_ttft, prio_preempt, prio_resume) = run(SchedKind::Priority);
+    assert_eq!(fcfs_preempt, 0, "FCFS never preempts");
+    assert!(prio_preempt >= 1, "interactive arrivals must preempt batch slots");
+    assert_eq!(prio_resume, prio_preempt, "every victim must resume and finish");
+    assert!(
+        prio_ttft < fcfs_ttft,
+        "priority must cut interactive TTFT (priority {prio_ttft} vs fcfs {fcfs_ttft})"
+    );
+}
