@@ -5,18 +5,105 @@
 //! Targets (DESIGN.md §6): bit-transpose ≥ 1 GB/s/core, LZ4 compress ≥
 //! 300 MB/s/core, KV transform ≥ 500 MB/s, DRAM sim ≥ 10 M cmds/s,
 //! device write path ≥ 100 MB/s with ZSTD enabled.
+//!
+//! PR-5 gates (docs/PERF.md):
+//! * **zero-alloc decode** — a steady-state single-block decode through
+//!   [`BlockScratch`] performs zero heap allocations, proven by a
+//!   counting global allocator (exact, not sampled).
+//! * **batch spill-decode ≥ 2×** — the batched 4-shard spill-decode
+//!   workload (pool 4 + decoded-plane cache + scratch) beats the serial
+//!   cache-off path (the PR-4 baseline) by ≥ 2× wall-clock.
+//!
+//! Flags: `--quick` shrinks the measure window and reports (instead of
+//! asserting) every wall-clock threshold — absolute rates AND the ≥2×
+//! relative speedup, since a shared CI runner can stall either side of a
+//! ratio — while keeping the fully deterministic allocation-count gate.
+//! Every section's throughput lands in `BENCH_hotpaths.json` (GB/s +
+//! ns/op) so the perf trajectory is tracked across PRs.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
-use trace_cxl::bitplane::{transpose_from_planes, transpose_to_planes, DeviceBlock, KvTransform, KvWindow};
+
+use trace_cxl::bitplane::{
+    transpose_from_planes, transpose_to_planes, BlockScratch, DeviceBlock, KvTransform, KvWindow,
+};
 use trace_cxl::codec::{self, compress_best, CodecKind, CodecPolicy};
 use trace_cxl::coordinator::{Engine, EngineConfig};
-use trace_cxl::cxl::{CxlDevice, Design, MemDevice, Transaction};
+use trace_cxl::cxl::{
+    CxlDevice, Design, MemDevice, ShardedDevice, SubmissionQueue, Transaction, STRIPE_BYTES,
+};
 use trace_cxl::dram::{AddrMap, DramConfig, DramSim, EnergyParams, Request};
 use trace_cxl::gen::KvGen;
 use trace_cxl::runtime::{MockBackend, ModelDims};
+use trace_cxl::util::json::Json;
 use trace_cxl::util::Rng;
 
-fn bench<F: FnMut() -> usize>(name: &str, bytes_label: &str, mut f: F) -> f64 {
+/// Counting allocator: every `alloc`/`realloc`/`alloc_zeroed` bumps a
+/// global counter, so "zero allocations" is provable, not inferred.
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
+
+/// One report row: throughput + per-iteration latency.
+struct Report {
+    sections: BTreeMap<String, Json>,
+    measure_secs: f64,
+}
+
+impl Report {
+    fn record(&mut self, name: &str, rate_units_per_s: f64, units_per_iter: usize) {
+        let mut o = BTreeMap::new();
+        o.insert("gbps".to_string(), Json::Num(rate_units_per_s / 1e9));
+        o.insert(
+            "ns_per_op".to_string(),
+            Json::Num(if rate_units_per_s > 0.0 {
+                units_per_iter as f64 / rate_units_per_s * 1e9
+            } else {
+                0.0
+            }),
+        );
+        self.sections.insert(name.to_string(), Json::Obj(o));
+    }
+
+    fn record_raw(&mut self, name: &str, value: f64) {
+        self.sections.insert(name.to_string(), Json::Num(value));
+    }
+
+    fn write(&self, path: &str) {
+        let doc = Json::Obj(self.sections.clone());
+        std::fs::write(path, format!("{doc}\n")).expect("write bench json");
+        println!("\nwrote {path}");
+    }
+}
+
+fn bench<F: FnMut() -> usize>(r: &mut Report, name: &str, bytes_label: &str, mut f: F) -> f64 {
     // warmup
     let mut processed = 0usize;
     for _ in 0..2 {
@@ -25,7 +112,7 @@ fn bench<F: FnMut() -> usize>(name: &str, bytes_label: &str, mut f: F) -> f64 {
     let t0 = Instant::now();
     let mut total = 0usize;
     let mut iters = 0;
-    while t0.elapsed().as_secs_f64() < 0.5 {
+    while t0.elapsed().as_secs_f64() < r.measure_secs {
         total += f();
         iters += 1;
     }
@@ -35,35 +122,88 @@ fn bench<F: FnMut() -> usize>(name: &str, bytes_label: &str, mut f: F) -> f64 {
         "{name:<28} {:>10.1} M{bytes_label}/s   ({iters} iters, {processed} per iter)",
         rate / 1e6
     );
+    r.record(name, rate, processed);
     rate
 }
 
+/// The batched 4-shard spill-decode workload: the shape of one engine
+/// decode step under heavy spill — every block of the working set fetched
+/// as one submission batch, repeatedly (the steady-state refetch of
+/// tier-resident KV). Returns seconds per batch.
+fn spill_decode_workload(pool: usize, cache: usize, batches: usize) -> f64 {
+    let mut rng = Rng::new(0xBA7C);
+    let kv = KvGen::default_for(64).generate(&mut rng, 32);
+    let mut dev = ShardedDevice::new(4, Design::Trace, CodecPolicy::FastBest);
+    dev.set_pool(pool);
+    dev.set_decode_cache(cache);
+    let blocks = 32u64;
+    let mut sq = SubmissionQueue::new();
+    for b in 0..blocks {
+        sq.submit(Transaction::WriteKv {
+            block_addr: b * STRIPE_BYTES,
+            words: kv.clone(),
+            window: KvWindow::new(32, 64),
+        });
+    }
+    for c in dev.drain(&mut sq) {
+        c.result.unwrap();
+    }
+    // warmup round (fills the decode cache when enabled)
+    let round = |dev: &mut ShardedDevice| {
+        let mut sq = SubmissionQueue::new();
+        for b in 0..blocks {
+            sq.submit(Transaction::ReadFull { block_addr: b * STRIPE_BYTES });
+        }
+        for c in dev.drain(&mut sq) {
+            std::hint::black_box(c.result.unwrap());
+        }
+    };
+    round(&mut dev);
+    let t0 = Instant::now();
+    for _ in 0..batches {
+        round(&mut dev);
+    }
+    t0.elapsed().as_secs_f64() / batches as f64
+}
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut report =
+        Report { sections: BTreeMap::new(), measure_secs: if quick { 0.06 } else { 0.5 } };
+    let gate = |ok: bool, msg: &str| {
+        if quick {
+            if !ok {
+                println!("  (quick mode: timing threshold skipped — {msg})");
+            }
+        } else {
+            assert!(ok, "{msg}");
+        }
+    };
     let mut rng = Rng::new(0x9E7F);
-    println!("# Perf hot paths (single core)");
+    println!("# Perf hot paths (single core{})", if quick { ", --quick" } else { "" });
 
     // bit transpose
     let words: Vec<u16> = (0..32 * 2048).map(|_| rng.next_u32() as u16).collect();
     let n_bytes = words.len() * 2;
     // Target revised after the §Perf pass (EXPERIMENTS.md): scalar SWAR
     // roofline on this box is ~0.7 GB/s; 0.5 GB/s is the regression gate.
-    let r = bench("bit transpose (to planes)", "B", || {
+    let r = bench(&mut report, "bit transpose (to planes)", "B", || {
         std::hint::black_box(transpose_to_planes(&words, 16));
         n_bytes
     });
-    assert!(r > 250e6, "transpose gate 250 MB/s, got {:.0} MB/s", r / 1e6);
+    gate(r > 250e6, &format!("transpose gate 250 MB/s, got {:.0} MB/s", r / 1e6));
 
     let planes = transpose_to_planes(&words, 16);
-    let r = bench("bit transpose (from planes)", "B", || {
+    let r = bench(&mut report, "bit transpose (from planes)", "B", || {
         std::hint::black_box(transpose_from_planes(&planes, words.len(), 16, 0xffff));
         n_bytes
     });
-    assert!(r > 150e6, "inverse transpose gate 150 MB/s, got {:.0} MB/s", r / 1e6);
+    gate(r > 150e6, &format!("inverse transpose gate 150 MB/s, got {:.0} MB/s", r / 1e6));
 
     // KV transform
     let kv = KvGen::default_for(128).generate(&mut rng, 512);
     let kvb = kv.len() * 2;
-    bench("KV transform (fwd)", "B", || {
+    bench(&mut report, "KV transform (fwd)", "B", || {
         std::hint::black_box(KvTransform::forward(&kv, KvWindow::new(512, 128)));
         kvb
     });
@@ -73,17 +213,24 @@ fn main() {
     for (i, b) in mixed.iter_mut().enumerate() {
         *b = if i % 7 == 0 { (i / 97) as u8 } else { 0 };
     }
-    let r = bench("LZ4 compress (sparse)", "B", || {
+    let r = bench(&mut report, "LZ4 compress (sparse)", "B", || {
         std::hint::black_box(codec::compress(CodecKind::Lz4, &mixed));
         mixed.len()
     });
-    assert!(r > 150e6, "LZ4 target 150 MB/s, got {:.0} MB/s", r / 1e6);
+    gate(r > 150e6, &format!("LZ4 target 150 MB/s, got {:.0} MB/s", r / 1e6));
     let enc = codec::compress(CodecKind::Lz4, &mixed);
-    bench("LZ4 decompress", "B", || {
+    bench(&mut report, "LZ4 decompress", "B", || {
         std::hint::black_box(codec::decompress(CodecKind::Lz4, &enc, mixed.len()).unwrap());
         mixed.len()
     });
-    bench("ZSTD compress (sparse)", "B", || {
+    // the scratch path must not be slower than the allocating path
+    let mut lz4_out = vec![0u8; mixed.len()];
+    bench(&mut report, "LZ4 decompress_into", "B", || {
+        codec::decompress_into(CodecKind::Lz4, &enc, &mut lz4_out).unwrap();
+        std::hint::black_box(&lz4_out);
+        mixed.len()
+    });
+    bench(&mut report, "ZSTD compress (sparse)", "B", || {
         std::hint::black_box(codec::compress(CodecKind::Zstd, &mixed));
         mixed.len()
     });
@@ -94,16 +241,16 @@ fn main() {
     // no extra 64 KB memcpy in the loop.
     let (win_kind, _) = compress_best(CodecPolicy::FastBest, &mixed);
     assert_ne!(win_kind, CodecKind::Raw, "sparse buffer must be compressible");
-    let r = bench("compress_best (winner path)", "B", || {
+    let r = bench(&mut report, "compress_best (winner path)", "B", || {
         std::hint::black_box(compress_best(CodecPolicy::FastBest, &mixed));
         mixed.len()
     });
-    assert!(r > 80e6, "compress_best winner-path gate 80 MB/s, got {:.0} MB/s", r / 1e6);
+    gate(r > 80e6, &format!("compress_best winner-path gate 80 MB/s, got {:.0} MB/s", r / 1e6));
 
     // device write/read path (Mechanism I end-to-end)
     let kv_blk = KvGen::default_for(64).generate(&mut rng, 64);
     let blk_bytes = kv_blk.len() * 2;
-    bench("TRACE KV write path", "B", || {
+    bench(&mut report, "TRACE KV write path", "B", || {
         std::hint::black_box(DeviceBlock::encode_kv(
             &kv_blk,
             KvWindow::new(64, 64),
@@ -112,10 +259,45 @@ fn main() {
         blk_bytes
     });
     let blk = DeviceBlock::encode_kv(&kv_blk, KvWindow::new(64, 64), CodecPolicy::FastBest);
-    bench("TRACE KV read path", "B", || {
+    bench(&mut report, "TRACE KV read path", "B", || {
         std::hint::black_box(blk.decode_full().unwrap());
         blk_bytes
     });
+
+    // §Zero-alloc gate: the scratch decode path. After warmup, a
+    // steady-state single-block decode must touch the heap exactly zero
+    // times — the counting global allocator makes this exact. The
+    // scratch's own growth counter must agree.
+    {
+        let mut scratch = BlockScratch::new();
+        let mut out = Vec::new();
+        for _ in 0..4 {
+            blk.decode_full_into(&mut scratch, &mut out).unwrap();
+        }
+        let grows_warm = scratch.growth_count();
+        let before = allocations();
+        let reps = 512usize;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            blk.decode_full_into(&mut scratch, &mut out).unwrap();
+            std::hint::black_box(&out);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let delta = allocations() - before;
+        println!(
+            "scratch decode (zero-alloc)  {:>10.1} MB/s   ({reps} iters, {delta} allocations)",
+            blk_bytes as f64 * reps as f64 / dt / 1e6
+        );
+        assert_eq!(delta, 0, "steady-state single-block decode must not allocate");
+        assert_eq!(
+            scratch.growth_count(),
+            grows_warm,
+            "scratch buffers must not grow in steady state"
+        );
+        let rate = blk_bytes as f64 * reps as f64 / dt;
+        report.record("scratch decode (zero-alloc)", rate, blk_bytes);
+        report.record_raw("scratch_decode_allocations", delta as f64);
+    }
 
     // DRAM simulator command rate
     let cfg = DramConfig::paper_default();
@@ -126,12 +308,12 @@ fn main() {
         .map(|loc| Request { loc, is_write: false, arrival_ns: 0.0 })
         .collect();
     let n = reqs.len();
-    let r = bench("DRAM sim (FR-FCFS)", "cmd", || {
+    let r = bench(&mut report, "DRAM sim (FR-FCFS)", "cmd", || {
         let mut sim = DramSim::new(cfg, EnergyParams::ddr5_4800());
         std::hint::black_box(sim.run_frfcfs(reqs.clone(), 16));
         n
     });
-    assert!(r > 5e6, "DRAM sim target 5M cmd/s, got {:.1}M", r / 1e6);
+    gate(r > 5e6, &format!("DRAM sim target 5M cmd/s, got {:.1}M", r / 1e6));
 
     // Engine decode-step cost vs context length, all-HBM. The gather path
     // must NOT copy HBM-resident KV per step (the old `s.kv.clone()` made
@@ -172,11 +354,42 @@ fn main() {
             late * 1e4,
             late / early
         );
-        assert!(
+        gate(
             late < 8.0 * early,
-            "gather must not copy HBM-resident KV per step: early {early:.6}s late {late:.6}s"
+            &format!(
+                "gather must not copy HBM-resident KV per step: early {early:.6}s late {late:.6}s"
+            ),
         );
         assert_eq!(e.metrics.pages_spilled, 0, "all-HBM run must not spill");
+        report.record_raw("engine_step_scaling_ratio", late / early);
+    }
+
+    // §Batch spill-decode gate: the PR-5 data path (4-way pool + decoded
+    // plane cache + scratch) vs the PR-4 baseline (serial, no cache) on
+    // the batched 4-shard spill-decode workload. Completions are
+    // bit-identical either way (tests/hotpath_equiv.rs); this gate is the
+    // wall-clock payoff.
+    {
+        let batches = if quick { 6 } else { 30 };
+        let base = spill_decode_workload(1, 0, batches);
+        let fast = spill_decode_workload(4, 1024, batches);
+        let speedup = base / fast;
+        println!(
+            "batch 4-shard spill decode    base {:>8.1} us/batch   pool+cache {:>8.1} us/batch   speedup {speedup:.2}x",
+            base * 1e6,
+            fast * 1e6
+        );
+        report.record_raw("batch_decode_base_us", base * 1e6);
+        report.record_raw("batch_decode_fast_us", fast * 1e6);
+        report.record_raw("batch_decode_speedup", speedup);
+        // relative, but still wall-clock: a shared CI runner can stall
+        // either side, so quick mode reports instead of asserting
+        gate(
+            speedup >= 2.0,
+            &format!(
+                "pool+cache+scratch must beat the serial cache-off path >=2x, got {speedup:.2}x"
+            ),
+        );
     }
 
     // Full device round trip through the transaction API. NOTE: unlike the
@@ -187,7 +400,7 @@ fn main() {
     // the transform+codec work.
     let mut dev = CxlDevice::new(Design::Trace, CodecPolicy::FastBest);
     let mut addr = 0u64;
-    bench("CxlDevice KV write+read (txn)", "B", || {
+    bench(&mut report, "CxlDevice KV write+read (txn)", "B", || {
         dev.submit_one(Transaction::WriteKv {
             block_addr: addr,
             words: kv_blk.clone(),
@@ -200,4 +413,6 @@ fn main() {
         addr += 0x10000;
         blk_bytes * 2
     });
+
+    report.write("BENCH_hotpaths.json");
 }

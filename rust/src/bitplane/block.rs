@@ -10,9 +10,10 @@ use crate::codec::{self, CodecKind, CodecPolicy};
 use crate::formats::Fmt;
 use crate::util::bytes;
 
-use super::kvtransform::{KvTransform, KvWindow};
-use super::layout::{plane_len, transpose_from_planes, transpose_to_planes};
+use super::kvtransform::{self, KvTransform, KvWindow};
+use super::layout::{plane_len, transpose_from_planes_into, transpose_to_planes_into};
 use super::planes::{PlaneMask, PrecisionView, reconstruct_bf16_view};
+use super::scratch::BlockScratch;
 
 /// Logical block size served at cache-line granularity by the host.
 pub const BLOCK_BYTES: usize = 4096;
@@ -81,21 +82,53 @@ impl PlaneIndexEntry {
 impl DeviceBlock {
     /// Encode a weight/generic block: direct bit-plane compression.
     pub fn encode_weights(words: &[u16], fmt: Fmt, policy: CodecPolicy) -> DeviceBlock {
-        Self::encode_words(words, fmt, Transform::None, policy)
+        Self::encode_weights_with(words, fmt, policy, &mut BlockScratch::new())
+    }
+
+    /// [`DeviceBlock::encode_weights`] staging the transpose through a
+    /// reusable [`BlockScratch`] (the batch encode path; the compressed
+    /// plane streams themselves are stored, so they still allocate).
+    pub fn encode_weights_with(
+        words: &[u16],
+        fmt: Fmt,
+        policy: CodecPolicy,
+        scratch: &mut BlockScratch,
+    ) -> DeviceBlock {
+        Self::encode_words(words, fmt, Transform::None, policy, scratch)
     }
 
     /// Encode a KV window: Mechanism I chain then plane compression.
     pub fn encode_kv(kv_token_major: &[u16], window: KvWindow, policy: CodecPolicy) -> DeviceBlock {
+        Self::encode_kv_with(kv_token_major, window, policy, &mut BlockScratch::new())
+    }
+
+    /// [`DeviceBlock::encode_kv`] staging through a reusable scratch.
+    pub fn encode_kv_with(
+        kv_token_major: &[u16],
+        window: KvWindow,
+        policy: CodecPolicy,
+        scratch: &mut BlockScratch,
+    ) -> DeviceBlock {
         let t = KvTransform::forward(kv_token_major, window);
-        let mut blk = Self::encode_words(&t.words, Fmt::Bf16, Transform::None, policy);
+        let mut blk = Self::encode_words(&t.words, Fmt::Bf16, Transform::None, policy, scratch);
         blk.transform = Transform::Kv { window, base_exp: t.base_exp };
         blk
     }
 
-    fn encode_words(words: &[u16], fmt: Fmt, transform: Transform, policy: CodecPolicy) -> DeviceBlock {
+    fn encode_words(
+        words: &[u16],
+        fmt: Fmt,
+        transform: Transform,
+        policy: CodecPolicy,
+        scratch: &mut BlockScratch,
+    ) -> DeviceBlock {
         let bits = fmt.bits();
-        let flat = transpose_to_planes(words, bits);
         let pl = plane_len(words.len());
+        if scratch.flat.capacity() < bits * pl {
+            scratch.note_grow();
+        }
+        transpose_to_planes_into(words, bits, &mut scratch.flat);
+        let flat = &scratch.flat;
         let mut planes = Vec::with_capacity(bits);
         // store by bit position: plane for bit i is row (bits-1-i)
         for i in 0..bits {
@@ -153,28 +186,62 @@ impl DeviceBlock {
         }
     }
 
-    /// Decompress the selected planes and reassemble words; unselected
-    /// planes are zero (𝒟 then the zero-padding part of ℛ, Eq. 7).
+    /// Decompress the selected planes and reassemble *stored-domain*
+    /// words; unselected planes are zero (𝒟 then the zero-padding part of
+    /// ℛ, Eq. 7). The inverse topology 𝒯⁻¹ is NOT applied.
     pub fn decode_words(&self, mask: PlaneMask) -> anyhow::Result<Vec<u16>> {
+        let mut out = Vec::new();
+        self.decode_words_into(mask, &mut BlockScratch::new(), &mut out)?;
+        Ok(out)
+    }
+
+    /// [`DeviceBlock::decode_words`] through a reusable scratch into a
+    /// caller-owned buffer: per-plane `decompress_into` straight into the
+    /// scratch transpose rows, then one transpose into `out`. With warm
+    /// buffers this touches the heap zero times.
+    pub fn decode_words_into(
+        &self,
+        mask: PlaneMask,
+        scratch: &mut BlockScratch,
+        out: &mut Vec<u16>,
+    ) -> anyhow::Result<()> {
         let bits = self.fmt.bits();
         let pl = plane_len(self.n_elem);
-        let mut flat = vec![0u8; bits * pl];
+        if out.capacity() < self.n_elem {
+            scratch.note_grow();
+        }
+        let flat = scratch.flat_mut(bits * pl);
         for i in 0..bits {
             if !mask.contains(i) {
                 continue;
             }
             let row = bits - 1 - i;
-            let dec = codec::decompress(self.planes[i].codec, &self.planes[i].data, pl)?;
-            flat[row * pl..(row + 1) * pl].copy_from_slice(&dec);
+            codec::decompress_into(
+                self.planes[i].codec,
+                &self.planes[i].data,
+                &mut flat[row * pl..(row + 1) * pl],
+            )?;
         }
-        Ok(transpose_from_planes(&flat, self.n_elem, bits, mask.0))
+        transpose_from_planes_into(flat, self.n_elem, bits, mask.0, out);
+        Ok(())
     }
 
     /// Full lossless read-back: 𝒯⁻¹ ∘ ℛ ∘ 𝒟 with all planes (Eq. 7–8).
     /// Returns the exact words the host originally wrote.
     pub fn decode_full(&self) -> anyhow::Result<Vec<u16>> {
-        let words = self.decode_words(PlaneMask::full(self.fmt))?;
-        Ok(self.apply_inverse_topology(words))
+        let mut out = Vec::new();
+        self.decode_full_into(&mut BlockScratch::new(), &mut out)?;
+        Ok(out)
+    }
+
+    /// [`DeviceBlock::decode_full`] through a reusable scratch — the
+    /// device hot path (zero allocations once scratch and `out` are warm).
+    pub fn decode_full_into(
+        &self,
+        scratch: &mut BlockScratch,
+        out: &mut Vec<u16>,
+    ) -> anyhow::Result<()> {
+        self.decode_planes_into(PlaneMask::full(self.fmt), scratch, out)
     }
 
     /// Plane-granular streaming read: decompress exactly the planes in
@@ -189,8 +256,21 @@ impl DeviceBlock {
     /// no guard rounding is applied, so the mask is free-form rather than
     /// a precision-view ladder entry.
     pub fn decode_planes(&self, mask: PlaneMask) -> anyhow::Result<Vec<u16>> {
-        let words = self.decode_words(mask)?;
-        Ok(self.apply_inverse_topology(words))
+        let mut out = Vec::new();
+        self.decode_planes_into(mask, &mut BlockScratch::new(), &mut out)?;
+        Ok(out)
+    }
+
+    /// [`DeviceBlock::decode_planes`] through a reusable scratch.
+    pub fn decode_planes_into(
+        &self,
+        mask: PlaneMask,
+        scratch: &mut BlockScratch,
+        out: &mut Vec<u16>,
+    ) -> anyhow::Result<()> {
+        self.decode_words_into(mask, scratch, out)?;
+        self.inverse_topology_in_place(scratch, out);
+        Ok(())
     }
 
     /// Reduced-precision read: fetch `view.mask()` planes, restore the
@@ -201,26 +281,38 @@ impl DeviceBlock {
     /// real exponents, hence ℛ after 𝒯⁻¹ for the exponent-transformed KV
     /// path (the controller holds β_j on-chip, §III-D).
     pub fn decode_view(&self, view: &PrecisionView) -> anyhow::Result<Vec<u16>> {
-        anyhow::ensure!(view.fmt == self.fmt, "view format mismatch");
-        let words = self.decode_words(view.mask())?;
-        let mut words = self.apply_inverse_topology(words);
-        if view.fmt == Fmt::Bf16 {
-            reconstruct_bf16_view(&mut words, view);
-        }
-        Ok(words)
+        let mut out = Vec::new();
+        self.decode_view_into(view, &mut BlockScratch::new(), &mut out)?;
+        Ok(out)
     }
 
-    fn apply_inverse_topology(&self, words: Vec<u16>) -> Vec<u16> {
-        match &self.transform {
-            Transform::None => words,
-            Transform::Kv { window, base_exp } => {
-                let t = KvTransform {
-                    window: *window,
-                    base_exp: base_exp.clone(),
-                    words: vec![],
-                };
-                t.inverse_words(&words)
+    /// [`DeviceBlock::decode_view`] through a reusable scratch.
+    pub fn decode_view_into(
+        &self,
+        view: &PrecisionView,
+        scratch: &mut BlockScratch,
+        out: &mut Vec<u16>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(view.fmt == self.fmt, "view format mismatch");
+        self.decode_words_into(view.mask(), scratch, out)?;
+        self.inverse_topology_in_place(scratch, out);
+        if view.fmt == Fmt::Bf16 {
+            reconstruct_bf16_view(out, view);
+        }
+        Ok(())
+    }
+
+    /// 𝒯⁻¹ over a decoded word buffer, in place: borrows the stored
+    /// `base_exp` (no clone, no throwaway [`KvTransform`]) and stages
+    /// through the scratch word buffer.
+    fn inverse_topology_in_place(&self, scratch: &mut BlockScratch, words: &mut [u16]) {
+        if let Transform::Kv { window, base_exp } = &self.transform {
+            let mut stage = scratch.take_words();
+            if stage.capacity() < words.len() {
+                scratch.note_grow();
             }
+            kvtransform::inverse_words_in_place(*window, base_exp, words, &mut stage);
+            scratch.put_words(stage);
         }
     }
 
@@ -336,6 +428,42 @@ mod tests {
         let t = blk.decode_view(&PrecisionView::bf16_mantissa(2, 0)).unwrap();
         let g = blk.decode_view(&PrecisionView::bf16_mantissa(2, 2)).unwrap();
         assert!(err(&g) <= err(&t), "guard={} trunc={}", err(&g), err(&t));
+    }
+
+    #[test]
+    fn scratch_path_matches_alloc_path_and_stops_growing() {
+        let mut r = Rng::new(119);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let blk = DeviceBlock::encode_kv(&kv, KvWindow::new(32, 64), CodecPolicy::AllBest);
+        let mut s = BlockScratch::new();
+        let mut out = Vec::new();
+        // full decode
+        blk.decode_full_into(&mut s, &mut out).unwrap();
+        assert_eq!(out, blk.decode_full().unwrap());
+        // plane-granular decode
+        let mask = PlaneMask(0xff80);
+        blk.decode_planes_into(mask, &mut s, &mut out).unwrap();
+        assert_eq!(out, blk.decode_planes(mask).unwrap());
+        // view decode
+        let view = PrecisionView::bf16_mantissa(3, 2);
+        blk.decode_view_into(&view, &mut s, &mut out).unwrap();
+        assert_eq!(out, blk.decode_view(&view).unwrap());
+        // steady state: warm scratch + warm out must never grow again
+        let warm = s.growth_count();
+        for _ in 0..5 {
+            blk.decode_full_into(&mut s, &mut out).unwrap();
+            blk.decode_view_into(&view, &mut s, &mut out).unwrap();
+            blk.decode_planes_into(mask, &mut s, &mut out).unwrap();
+        }
+        assert_eq!(s.growth_count(), warm, "steady-state decode must not grow scratch");
+        // scratch-staged encode is identical to the plain encode
+        let enc2 = DeviceBlock::encode_kv_with(
+            &kv,
+            KvWindow::new(32, 64),
+            CodecPolicy::AllBest,
+            &mut s,
+        );
+        assert_eq!(enc2, blk);
     }
 
     #[test]

@@ -136,19 +136,57 @@ impl KvTransform {
     /// layout restore + base-exponent re-add, applied to externally
     /// reconstructed words (used by the device read path for alias views).
     pub fn inverse_words(&self, words: &[u16]) -> Vec<u16> {
-        let (n, c) = (self.window.tokens, self.window.channels);
-        assert_eq!(words.len(), n * c, "window shape mismatch");
-        let mut out = vec![0u16; n * c];
-        for j in 0..c {
-            let beta = self.base_exp[j];
-            for t in 0..n {
-                let w = words[j * n + t];
-                let (s, z, m) = bf16_fields(w);
-                let e = unzigzag8(z as u8).wrapping_add(beta);
-                out[t * c + j] = bf16_assemble(s, e as u16, m);
-            }
+        inverse_words_with(self.window, &self.base_exp, words)
+    }
+
+    /// In-place form of [`KvTransform::inverse_words`]: see the
+    /// module-level `inverse_words_in_place` free function.
+    pub fn inverse_words_in_place(&self, words: &mut [u16], scratch: &mut Vec<u16>) {
+        inverse_words_in_place(self.window, &self.base_exp, words, scratch);
+    }
+}
+
+/// Borrow-based 𝒯⁻¹ over externally reconstructed words: no
+/// [`KvTransform`] construction and no `base_exp` clone — the device read
+/// path holds `(window, &base_exp)` straight out of the stored block
+/// header.
+pub fn inverse_words_with(window: KvWindow, base_exp: &[u8], words: &[u16]) -> Vec<u16> {
+    let (n, c) = (window.tokens, window.channels);
+    assert_eq!(words.len(), n * c, "window shape mismatch");
+    let mut out = vec![0u16; n * c];
+    inverse_words_core(n, c, base_exp, words, &mut out);
+    out
+}
+
+/// Allocation-free 𝒯⁻¹: rewrite `words` from the stored (channel-major,
+/// exponent-delta) domain to the host token-major domain, staging through
+/// `scratch` (grown once, then reused). This is the form the device's
+/// zero-allocation decode scratch threads through `ReadFull`/`ReadPlanes`.
+pub fn inverse_words_in_place(
+    window: KvWindow,
+    base_exp: &[u8],
+    words: &mut [u16],
+    scratch: &mut Vec<u16>,
+) {
+    let (n, c) = (window.tokens, window.channels);
+    assert_eq!(words.len(), n * c, "window shape mismatch");
+    scratch.clear();
+    scratch.extend_from_slice(words);
+    inverse_words_core(n, c, base_exp, scratch, words);
+}
+
+/// The shared inverse kernel: `src` is channel-major stored-domain, `dst`
+/// token-major host-domain. `src` and `dst` must not alias.
+fn inverse_words_core(n: usize, c: usize, base_exp: &[u8], src: &[u16], dst: &mut [u16]) {
+    assert_eq!(base_exp.len(), c, "base exponent per channel");
+    for j in 0..c {
+        let beta = base_exp[j];
+        for t in 0..n {
+            let w = src[j * n + t];
+            let (s, z, m) = bf16_fields(w);
+            let e = unzigzag8(z as u8).wrapping_add(beta);
+            dst[t * c + j] = bf16_assemble(s, e as u16, m);
         }
-        out
     }
 }
 
@@ -192,6 +230,18 @@ mod tests {
         let kv = smooth_kv(&mut r, 32, 16);
         let t = KvTransform::forward(&kv, KvWindow::new(32, 16));
         assert_eq!(t.inverse_words(&t.words), t.inverse());
+        // borrow-based and in-place forms agree
+        assert_eq!(inverse_words_with(t.window, &t.base_exp, &t.words), t.inverse());
+        let mut in_place = t.words.clone();
+        let mut scratch = Vec::new();
+        t.inverse_words_in_place(&mut in_place, &mut scratch);
+        assert_eq!(in_place, t.inverse());
+        // scratch is warm now: a second pass must not need to grow it
+        let cap = scratch.capacity();
+        let mut again = t.words.clone();
+        t.inverse_words_in_place(&mut again, &mut scratch);
+        assert_eq!(again, t.inverse());
+        assert_eq!(scratch.capacity(), cap);
     }
 
     #[test]

@@ -58,10 +58,21 @@ fn transpose8(x: u64) -> u64 {
 /// position `i`) occupies the slice starting at `(bits-1-i) * plane_len(m)`
 /// — i.e. MSB plane first.
 pub fn transpose_to_planes(words: &[u16], bits: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    transpose_to_planes_into(words, bits, &mut out);
+    out
+}
+
+/// [`transpose_to_planes`] into a caller-owned buffer: `out` is cleared and
+/// resized to `bits * plane_len(m)`. With a warm (sufficient-capacity)
+/// buffer this performs no heap allocation — the encode side of the
+/// device's zero-allocation scratch path.
+pub fn transpose_to_planes_into(words: &[u16], bits: usize, out: &mut Vec<u8>) {
     assert!(bits >= 1 && bits <= 16);
     let m = words.len();
     let pl = plane_len(m);
-    let mut out = vec![0u8; bits * pl];
+    out.clear();
+    out.resize(bits * pl, 0);
 
     // Process groups of 8 elements; each group contributes one byte to every
     // plane. Within a group, build two u64s: low byte lanes and high byte
@@ -107,7 +118,10 @@ pub fn transpose_to_planes(words: &[u16], bits: usize) -> Vec<u8> {
             }
         }
         // tail groups (groups not a multiple of 8) + tail elements
-        let mut rows: Vec<&mut [u8]> = out.chunks_exact_mut(pl).collect();
+        let mut rows: [&mut [u8]; 16] = Default::default();
+        for (r, row) in out.chunks_exact_mut(pl).enumerate() {
+            rows[r] = row;
+        }
         for g in tiles * 8..groups {
             let chunk = &words[g * 8..g * 8 + 8];
             let x = unsafe { (chunk.as_ptr() as *const u128).read_unaligned() }.to_le();
@@ -121,7 +135,11 @@ pub fn transpose_to_planes(words: &[u16], bits: usize) -> Vec<u8> {
         }
     } else {
         // one mutable slice per plane row so inner writes are check-free
-        let mut rows: Vec<&mut [u8]> = out.chunks_exact_mut(pl).collect();
+        // (fixed array: bits <= 16, keeps the encode path allocation-free)
+        let mut rows: [&mut [u8]; 16] = Default::default();
+        for (r, row) in out.chunks_exact_mut(pl).enumerate() {
+            rows[r] = row;
+        }
         for (g, chunk) in words.chunks_exact(8).enumerate() {
             // load the 8 words as one u128 and deinterleave low/high bytes
             // with a SWAR shuffle instead of 8 per-word extracts
@@ -152,7 +170,6 @@ pub fn transpose_to_planes(words: &[u16], bits: usize) -> Vec<u8> {
             }
         }
     }
-    out
 }
 
 /// Inverse of [`transpose_to_planes`]: reassemble `m` words from the flat
@@ -160,31 +177,60 @@ pub fn transpose_to_planes(words: &[u16], bits: usize) -> Vec<u8> {
 /// bit position `i`) are treated as zero — this is exactly what a
 /// plane-aligned reduced-precision fetch produces before ℛ's zero-padding.
 pub fn transpose_from_planes(planes: &[u8], m: usize, bits: usize, mask: u32) -> Vec<u16> {
+    let mut words = Vec::new();
+    transpose_from_planes_into(planes, m, bits, mask, &mut words);
+    words
+}
+
+/// [`transpose_from_planes`] into a caller-owned buffer: `words` is
+/// cleared and resized to `m`. With a warm buffer this performs no heap
+/// allocation — the decode side of the zero-allocation scratch path.
+pub fn transpose_from_planes_into(
+    planes: &[u8],
+    m: usize,
+    bits: usize,
+    mask: u32,
+    words: &mut Vec<u16>,
+) {
     assert!(bits >= 1 && bits <= 16);
     let pl = plane_len(m);
     assert!(planes.len() >= bits * pl, "plane buffer too short");
-    let mut words = vec![0u16; m];
+    words.clear();
+    words.resize(m, 0);
 
     let groups = m / 8;
     {
         // per-plane row slices + precomputed (row, shift) lists keep the
-        // hot loop free of bounds checks and mask tests (§Perf).
-        let rows: Vec<&[u8]> = planes[..bits * pl].chunks_exact(pl).collect();
-        let lo_sel: Vec<(usize, u32)> = (0..bits.min(8))
-            .filter(|i| mask >> i & 1 != 0)
-            .map(|i| (bits - 1 - i, 8 * i as u32))
-            .collect();
-        let hi_sel: Vec<(usize, u32)> = (8..bits)
-            .filter(|i| mask >> i & 1 != 0)
-            .map(|i| (bits - 1 - i, 8 * (i as u32 - 8)))
-            .collect();
+        // hot loop free of bounds checks and mask tests (§Perf); fixed
+        // arrays (bits <= 16 rows, <= 8 selections per half) keep the
+        // decode path allocation-free.
+        let mut rows: [&[u8]; 16] = [&[]; 16];
+        for (r, row) in planes[..bits * pl].chunks_exact(pl).enumerate() {
+            rows[r] = row;
+        }
+        let mut lo_sel = [(0usize, 0u32); 8];
+        let mut n_lo = 0usize;
+        for i in 0..bits.min(8) {
+            if mask >> i & 1 != 0 {
+                lo_sel[n_lo] = (bits - 1 - i, 8 * i as u32);
+                n_lo += 1;
+            }
+        }
+        let mut hi_sel = [(0usize, 0u32); 8];
+        let mut n_hi = 0usize;
+        for i in 8..bits {
+            if mask >> i & 1 != 0 {
+                hi_sel[n_hi] = (bits - 1 - i, 8 * (i as u32 - 8));
+                n_hi += 1;
+            }
+        }
         for (g, outw) in words.chunks_exact_mut(8).enumerate() {
             let mut lo: u64 = 0;
             let mut hi: u64 = 0;
-            for &(row, sh) in &lo_sel {
+            for &(row, sh) in &lo_sel[..n_lo] {
                 lo |= (rows[row][g] as u64) << sh;
             }
-            for &(row, sh) in &hi_sel {
+            for &(row, sh) in &hi_sel[..n_hi] {
                 hi |= (rows[row][g] as u64) << sh;
             }
             let lb = transpose8(lo).to_le_bytes();
@@ -208,7 +254,6 @@ pub fn transpose_from_planes(planes: &[u8], m: usize, bits: usize, mask: u32) ->
         }
         words[j] = w;
     }
-    words
 }
 
 /// View of a single plane (bit position `i`) within a flat plane buffer.
@@ -268,6 +313,26 @@ mod tests {
             for (w, b) in words.iter().zip(back.iter()) {
                 assert_eq!(*b, w & 0xff80);
             }
+        });
+    }
+
+    #[test]
+    fn into_variants_match_with_warm_buffers() {
+        props(44, 200, |r| {
+            let bits = [4usize, 8, 12, 16][r.below(4)];
+            let m = 1 + r.below(600);
+            let mask_all = if bits == 16 { 0xffff } else { (1u32 << bits) - 1 };
+            let words: Vec<u16> = (0..m)
+                .map(|_| (r.next_u32() as u16) & (mask_all as u16))
+                .collect();
+            // warm buffers carrying stale garbage from a previous shape
+            let mut planes = vec![0xAEu8; 7];
+            let mut back = vec![0x1234u16; 3];
+            transpose_to_planes_into(&words, bits, &mut planes);
+            assert_eq!(planes, transpose_to_planes(&words, bits));
+            let mask = r.next_u32() & mask_all;
+            transpose_from_planes_into(&planes, m, bits, mask, &mut back);
+            assert_eq!(back, transpose_from_planes(&planes, m, bits, mask));
         });
     }
 

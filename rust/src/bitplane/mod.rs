@@ -13,13 +13,20 @@
 //!   and the reconstruction pipeline 𝒯⁻¹ ∘ ℛ ∘ 𝒟 (Eq. 7–8).
 //! * [`block`] — the device-internal 4 KB block container: header, per-plane
 //!   codec selection, plane-index entry (64 B metadata per block).
+//! * [`scratch`] — reusable encode/decode staging ([`BlockScratch`]) so the
+//!   steady-state block hot path performs zero heap allocations.
 
 pub mod layout;
 pub mod kvtransform;
 pub mod planes;
 pub mod block;
+pub mod scratch;
 
 pub use block::{DeviceBlock, PlaneIndexEntry, BLOCK_BYTES};
 pub use kvtransform::{KvTransform, KvWindow};
-pub use layout::{transpose_to_planes, transpose_from_planes, plane_len};
+pub use layout::{
+    plane_len, transpose_from_planes, transpose_from_planes_into, transpose_to_planes,
+    transpose_to_planes_into,
+};
 pub use planes::{PlaneMask, PrecisionView, reconstruct_bf16_view};
+pub use scratch::BlockScratch;

@@ -243,7 +243,9 @@ mod tests {
     #[test]
     fn reconstruct_full_is_identity() {
         props(62, 300, |r| {
-            let mut ws = vec![r.next_u32() as u16; 8];
+            // NB: `vec![r.next_u32() as u16; 8]` would evaluate the RNG
+            // once and clone the value 8 times — generate per element
+            let mut ws: Vec<u16> = (0..8).map(|_| r.next_u32() as u16).collect();
             let orig = ws.clone();
             reconstruct_bf16_view(&mut ws, &PrecisionView::full(Fmt::Bf16));
             assert_eq!(ws, orig);

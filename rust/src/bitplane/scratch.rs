@@ -1,0 +1,120 @@
+//! Reusable decode/encode scratch for the device block hot path.
+//!
+//! The paper's controller does plane transposition and codec work at line
+//! rate in staging SRAM (§III-B, Eq. 4) — it never "allocates" anything
+//! per transaction. [`BlockScratch`] is the simulator-side equivalent: one
+//! struct owning the transpose buffer, the stored-domain word buffer the
+//! KV inverse stages through, and (implicitly, via
+//! [`crate::codec::decompress_into`] writing straight into transpose rows)
+//! the per-plane decompress slices. Threaded through
+//! [`crate::bitplane::DeviceBlock`]'s `*_into` decode entry points it
+//! makes a steady-state single-block decode perform **zero heap
+//! allocations** — the `perf_hotpaths` bench gates exactly that with a
+//! counting global allocator, and [`BlockScratch::growth_count`] exposes
+//! the same invariant as a cheap in-library counter (buffers grow while
+//! warming up, then never again for a fixed block shape).
+
+/// Reusable buffers for block encode/decode. Create once per worker (the
+/// device keeps one per pool thread plus one for the serial path) and pass
+/// to every `*_into` call; buffers grow to the largest block seen and are
+/// then reused allocation-free.
+#[derive(Debug, Default)]
+pub struct BlockScratch {
+    /// Flat plane buffer (`bits * plane_len` bytes): decompress target and
+    /// transpose source (decode), or transpose target (encode).
+    pub(crate) flat: Vec<u8>,
+    /// Stored-domain word staging for the KV inverse (`inverse_words_in_place`).
+    pub(crate) words: Vec<u16>,
+    /// How many times any buffer had to grow (allocate). Stable in steady
+    /// state — the scratch path's allocation counter.
+    grows: u64,
+}
+
+impl BlockScratch {
+    pub fn new() -> BlockScratch {
+        BlockScratch::default()
+    }
+
+    /// Number of buffer growths (allocations) so far. After warm-up on a
+    /// fixed block shape this must stop increasing; the perf gate asserts
+    /// it (and `debug_assert`s in the decode path lean on it being cheap).
+    pub fn growth_count(&self) -> u64 {
+        self.grows
+    }
+
+    /// The flat plane buffer, cleared and zero-filled to `n` bytes.
+    pub(crate) fn flat_mut(&mut self, n: usize) -> &mut [u8] {
+        if self.flat.capacity() < n {
+            self.grows += 1;
+        }
+        self.flat.clear();
+        self.flat.resize(n, 0);
+        &mut self.flat
+    }
+
+    /// Take the stored-domain word buffer (empty, capacity preserved);
+    /// return it with [`BlockScratch::put_words`] when done. Taking rather
+    /// than borrowing lets the KV decode hold the word buffer while the
+    /// flat buffer is still borrowed for the transpose.
+    pub(crate) fn take_words(&mut self) -> Vec<u16> {
+        let mut w = std::mem::take(&mut self.words);
+        w.clear();
+        w
+    }
+
+    pub(crate) fn put_words(&mut self, mut w: Vec<u16>) {
+        // keep the larger buffer so capacity ratchets up, never thrashes
+        if w.capacity() > self.words.capacity() {
+            w.clear();
+            self.words = w;
+        }
+    }
+
+    /// Note a growth of an external buffer that logically belongs to this
+    /// scratch (the taken word buffer).
+    pub(crate) fn note_grow(&mut self) {
+        self.grows += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn growth_stops_once_warm() {
+        let mut s = BlockScratch::new();
+        assert_eq!(s.growth_count(), 0);
+        s.flat_mut(4096);
+        assert_eq!(s.growth_count(), 1);
+        s.flat_mut(4096);
+        s.flat_mut(128); // smaller: no growth
+        assert_eq!(s.growth_count(), 1);
+        s.flat_mut(8192);
+        assert_eq!(s.growth_count(), 2);
+    }
+
+    #[test]
+    fn flat_is_zeroed_each_time() {
+        let mut s = BlockScratch::new();
+        s.flat_mut(64).fill(0xFF);
+        assert!(s.flat_mut(64).iter().all(|&b| b == 0));
+        assert!(s.flat_mut(32).iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn word_buffer_ratchets() {
+        let mut s = BlockScratch::new();
+        let mut w = s.take_words();
+        w.extend_from_slice(&[1, 2, 3]);
+        let cap = w.capacity();
+        s.put_words(w);
+        let w2 = s.take_words();
+        assert!(w2.is_empty());
+        assert_eq!(w2.capacity(), cap);
+        s.put_words(w2);
+        // a smaller buffer does not replace the ratcheted one
+        s.put_words(Vec::new());
+        assert_eq!(s.take_words().capacity(), cap);
+    }
+}

@@ -109,12 +109,23 @@ pub fn compress(src: &[u8]) -> Vec<u8> {
 
 /// Decompress an LZ4 block. `n` is the exact decompressed size.
 pub fn decompress(src: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
-    let mut out: Vec<u8> = Vec::with_capacity(n);
+    let mut out = vec![0u8; n];
+    decompress_into(src, &mut out)?;
+    Ok(out)
+}
+
+/// Allocation-free decode of an LZ4 block into `out` (whose length is the
+/// exact decompressed size, known from the plane-index metadata). Errors —
+/// truncation, bad offsets, size mismatch — match [`decompress`]; `out`
+/// contents are unspecified on error. Never reads outside `src`/`out`.
+pub fn decompress_into(src: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
+    let n = out.len();
+    let mut w = 0usize; // write cursor into out
     let mut i = 0usize;
     if n == 0 {
         // an empty block is encoded as a single zero token
         anyhow::ensure!(src.len() <= 1, "trailing bytes in empty block");
-        return Ok(out);
+        return Ok(());
     }
     loop {
         anyhow::ensure!(i < src.len(), "truncated block (token)");
@@ -134,8 +145,10 @@ pub fn decompress(src: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
             }
         }
         anyhow::ensure!(i + lit_len <= src.len(), "truncated literals");
-        out.extend_from_slice(&src[i..i + lit_len]);
+        anyhow::ensure!(w + lit_len <= n, "output overrun ({} > {n})", w + lit_len);
+        out[w..w + lit_len].copy_from_slice(&src[i..i + lit_len]);
         i += lit_len;
+        w += lit_len;
         if i == src.len() {
             break; // final sequence has no match part
         }
@@ -143,7 +156,7 @@ pub fn decompress(src: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
         anyhow::ensure!(i + 2 <= src.len(), "truncated offset");
         let offset = src[i] as usize | ((src[i + 1] as usize) << 8);
         i += 2;
-        anyhow::ensure!(offset > 0 && offset <= out.len(), "bad offset {offset} at {}", out.len());
+        anyhow::ensure!(offset > 0 && offset <= w, "bad offset {offset} at {w}");
         let mut ml = (token & 0x0f) as usize;
         if ml == 15 {
             loop {
@@ -157,20 +170,21 @@ pub fn decompress(src: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
             }
         }
         ml += MIN_MATCH;
+        anyhow::ensure!(w + ml <= n, "output overrun ({} > {n})", w + ml);
         // overlapping copy
-        let start = out.len() - offset;
+        let start = w - offset;
         if offset >= ml {
-            out.extend_from_within(start..start + ml);
+            out.copy_within(start..start + ml, w);
+            w += ml;
         } else {
             for k in 0..ml {
-                let b = out[start + k];
-                out.push(b);
+                out[w + k] = out[start + k];
             }
+            w += ml;
         }
-        anyhow::ensure!(out.len() <= n, "output overrun ({} > {n})", out.len());
     }
-    anyhow::ensure!(out.len() == n, "decompressed size {} != expected {n}", out.len());
-    Ok(out)
+    anyhow::ensure!(w == n, "decompressed size {w} != expected {n}");
+    Ok(())
 }
 
 #[cfg(test)]
@@ -250,6 +264,23 @@ mod tests {
         let enc = compress(&data);
         assert!(decompress(&enc, 99).is_err());
         assert!(decompress(&enc, 101).is_err());
+    }
+
+    #[test]
+    fn into_matches_alloc_path() {
+        props(83, 300, |r| {
+            let data = arb_bytes(r, 4096);
+            let enc = compress(&data);
+            let mut out = vec![0x55u8; data.len()];
+            decompress_into(&enc, &mut out).unwrap();
+            assert_eq!(out, data);
+            if data.len() > 1 {
+                let mut short = vec![0u8; data.len() - 1];
+                assert!(decompress_into(&enc, &mut short).is_err());
+                let mut long = vec![0u8; data.len() + 1];
+                assert!(decompress_into(&enc, &mut long).is_err());
+            }
+        });
     }
 
     #[test]

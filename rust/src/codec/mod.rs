@@ -72,14 +72,45 @@ pub fn compress(kind: CodecKind, data: &[u8]) -> Vec<u8> {
 
 /// Decompress; `n` is the known decompressed length (from metadata).
 pub fn decompress(kind: CodecKind, data: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
+    Ok(decompress_cow(kind, data, n)?.into_owned())
+}
+
+/// Decompress without copying on the bypass path: `Raw` streams are
+/// returned as a borrow of `data` (the stored bytes *are* the payload),
+/// every real codec as an owned buffer. Callers that only need to look at
+/// the bytes — or copy them into a caller-owned scratch — skip the
+/// `data.to_vec()` the old bypass path paid per read.
+pub fn decompress_cow<'a>(
+    kind: CodecKind,
+    data: &'a [u8],
+    n: usize,
+) -> anyhow::Result<std::borrow::Cow<'a, [u8]>> {
     match kind {
         CodecKind::Raw => {
             anyhow::ensure!(data.len() == n, "raw length mismatch");
-            Ok(data.to_vec())
+            Ok(std::borrow::Cow::Borrowed(data))
         }
-        CodecKind::Rle => rle::decompress(data, n),
-        CodecKind::Lz4 => lz4::decompress(data, n),
-        CodecKind::Zstd => zstdc::decompress(data, n),
+        CodecKind::Rle => rle::decompress(data, n).map(std::borrow::Cow::Owned),
+        CodecKind::Lz4 => lz4::decompress(data, n).map(std::borrow::Cow::Owned),
+        CodecKind::Zstd => zstdc::decompress(data, n).map(std::borrow::Cow::Owned),
+    }
+}
+
+/// Allocation-free decode into a caller-provided buffer whose length is
+/// the known decompressed size. This is the device hot path: the decode
+/// scratch ([`crate::bitplane::BlockScratch`]) hands each plane's row
+/// slice straight to the codec, so a steady-state block decode touches the
+/// heap zero times.
+pub fn decompress_into(kind: CodecKind, data: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
+    match kind {
+        CodecKind::Raw => {
+            anyhow::ensure!(data.len() == out.len(), "raw length mismatch");
+            out.copy_from_slice(data);
+            Ok(())
+        }
+        CodecKind::Rle => rle::decompress_into(data, out),
+        CodecKind::Lz4 => lz4::decompress_into(data, out),
+        CodecKind::Zstd => zstdc::decompress_into(data, out),
     }
 }
 
@@ -190,6 +221,28 @@ mod tests {
             let enc = compress(k, &[]);
             let dec = decompress(k, &enc, 0).unwrap();
             assert!(dec.is_empty());
+            let mut out = [0u8; 0];
+            decompress_into(k, &enc, &mut out).unwrap();
         }
+    }
+
+    #[test]
+    fn raw_cow_borrows_and_into_matches() {
+        props(74, 200, |r| {
+            let data = arb_bytes(r, 4096);
+            for k in [CodecKind::Raw, CodecKind::Rle, CodecKind::Lz4, CodecKind::Zstd] {
+                let enc = compress(k, &data);
+                let cow = decompress_cow(k, &enc, data.len()).unwrap();
+                assert_eq!(cow.as_ref(), &data[..], "{k:?}");
+                if k == CodecKind::Raw {
+                    // the bypass path must not copy
+                    assert!(matches!(cow, std::borrow::Cow::Borrowed(_)));
+                    assert_eq!(cow.as_ref().as_ptr(), enc.as_ptr());
+                }
+                let mut out = vec![0u8; data.len()];
+                decompress_into(k, &enc, &mut out).unwrap();
+                assert_eq!(out, data, "{k:?}");
+            }
+        });
     }
 }

@@ -45,7 +45,17 @@ pub fn compress(src: &[u8]) -> Vec<u8> {
 }
 
 pub fn decompress(src: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
-    let mut out = Vec::with_capacity(n);
+    let mut out = vec![0u8; n];
+    decompress_into(src, &mut out)?;
+    Ok(out)
+}
+
+/// Allocation-free decode: fills `out` exactly (its length is the known
+/// decompressed size). Errors — truncation, overrun, size mismatch — match
+/// [`decompress`]; `out` contents are unspecified on error.
+pub fn decompress_into(src: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
+    let n = out.len();
+    let mut w = 0usize; // write cursor into out
     let mut i = 0;
     while i < src.len() {
         let c = src[i];
@@ -54,17 +64,21 @@ pub fn decompress(src: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
             anyhow::ensure!(i < src.len(), "truncated run");
             let b = src[i];
             i += 1;
-            out.extend(std::iter::repeat(b).take(c as usize + 1));
+            let run = c as usize + 1;
+            anyhow::ensure!(w + run <= n, "overrun");
+            out[w..w + run].fill(b);
+            w += run;
         } else {
             let cnt = (c - 0x7f) as usize;
             anyhow::ensure!(i + cnt <= src.len(), "truncated literals");
-            out.extend_from_slice(&src[i..i + cnt]);
+            anyhow::ensure!(w + cnt <= n, "overrun");
+            out[w..w + cnt].copy_from_slice(&src[i..i + cnt]);
             i += cnt;
+            w += cnt;
         }
-        anyhow::ensure!(out.len() <= n, "overrun");
     }
-    anyhow::ensure!(out.len() == n, "size mismatch {} != {n}", out.len());
-    Ok(out)
+    anyhow::ensure!(w == n, "size mismatch {w} != {n}");
+    Ok(())
 }
 
 #[cfg(test)]
@@ -101,5 +115,25 @@ mod tests {
     fn errors_on_truncation() {
         let enc = compress(&[5u8; 100]);
         assert!(decompress(&enc[..enc.len() - 1], 100).is_err());
+        let mut out = vec![0u8; 100];
+        assert!(decompress_into(&enc[..enc.len() - 1], &mut out).is_err());
+    }
+
+    #[test]
+    fn into_matches_alloc_path() {
+        props(92, 300, |r| {
+            let data = arb_bytes(r, 2048);
+            let enc = compress(&data);
+            let mut out = vec![0xAAu8; data.len()];
+            decompress_into(&enc, &mut out).unwrap();
+            assert_eq!(out, data);
+            // wrong expected size errors both ways
+            if !data.is_empty() {
+                let mut short = vec![0u8; data.len() - 1];
+                assert!(decompress_into(&enc, &mut short).is_err());
+            }
+            let mut long = vec![0u8; data.len() + 1];
+            assert!(decompress_into(&enc, &mut long).is_err());
+        });
     }
 }

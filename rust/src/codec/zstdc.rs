@@ -16,6 +16,15 @@ pub fn decompress(src: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
     Ok(out)
 }
 
+/// Allocation-free decode: fills `out` exactly (its length is the known
+/// decompressed size from the plane-index metadata).
+pub fn decompress_into(src: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
+    let written = zstd::bulk::decompress_to_buffer(src, out)
+        .map_err(|e| anyhow::anyhow!("zstd decompress: {e}"))?;
+    anyhow::ensure!(written == out.len(), "zstd size mismatch {written} != {}", out.len());
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -42,5 +51,18 @@ mod tests {
     #[test]
     fn bad_data_errors() {
         assert!(decompress(&[1, 2, 3, 4], 100).is_err());
+        let mut out = [0u8; 100];
+        assert!(decompress_into(&[1, 2, 3, 4], &mut out).is_err());
+    }
+
+    #[test]
+    fn into_matches_alloc_path() {
+        props(103, 150, |r| {
+            let data = arb_bytes(r, 4096);
+            let enc = compress(&data);
+            let mut out = vec![0x11u8; data.len()];
+            decompress_into(&enc, &mut out).unwrap();
+            assert_eq!(out, data);
+        });
     }
 }

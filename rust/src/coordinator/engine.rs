@@ -121,6 +121,16 @@ pub struct EngineConfig {
     /// Ignored at `prefill_chunk_pages == 0`. Placeholder magnitude, like
     /// `compute_ns`.
     pub prefill_ns_per_token: f64,
+    /// Device batch worker threads: the pure codec/transpose work of one
+    /// step's batched spill fetches (and batched writes) fans out across
+    /// this many workers. Purely a host wall-clock knob — tokens, byte
+    /// traffic, and every completion field are bit-identical at any width
+    /// (`tests/hotpath_equiv.rs`). 1 = serial.
+    pub pool_threads: usize,
+    /// Decoded-plane cache entries per device shard (0 disables). Hot
+    /// spilled pages and weight chunks re-fetched every step skip codec
+    /// work entirely; also wall-clock only.
+    pub decode_cache_blocks: usize,
 }
 
 impl Default for EngineConfig {
@@ -137,6 +147,8 @@ impl Default for EngineConfig {
             sched: SchedKind::Fcfs,
             prefill_chunk_pages: 0,
             prefill_ns_per_token: 125.0,
+            pool_threads: 1,
+            decode_cache_blocks: crate::cxl::DEFAULT_DECODE_CACHE_BLOCKS,
         }
     }
 }
@@ -263,9 +275,15 @@ impl<B: ModelBackend> Engine<B> {
         let dims = backend.dims().clone();
         let slots = (0..dims.batch).map(|_| Slot::empty()).collect();
         let device: Box<dyn MemDevice> = if cfg.shards > 1 {
-            Box::new(ShardedDevice::new(cfg.shards, cfg.design, cfg.codec))
+            let mut d = ShardedDevice::new(cfg.shards, cfg.design, cfg.codec);
+            d.set_pool(cfg.pool_threads);
+            d.set_decode_cache(cfg.decode_cache_blocks);
+            Box::new(d)
         } else {
-            Box::new(CxlDevice::new(cfg.design, cfg.codec))
+            let mut d = CxlDevice::new(cfg.design, cfg.codec);
+            d.set_pool(cfg.pool_threads);
+            d.set_decode_cache(cfg.decode_cache_blocks);
+            Box::new(d)
         };
         let hbm = HbmPartition::new(cfg.hbm_kv_bytes, 0.0, 0);
         let pager = KvPageManager::with_shards(cfg.shards.max(1));

@@ -18,19 +18,35 @@
 //! All host I/O goes through [`MemDevice::execute`] / [`MemDevice::drain`];
 //! there are no free-form read/write methods. Each completion carries the
 //! transaction's byte-traffic delta and its controller-pipeline latency.
+//!
+//! ## Hot-path architecture (host wall-clock only — see `docs/PERF.md`)
+//!
+//! Draining a submission batch runs in three phases: a serial *plan*
+//! pre-pass decides per transaction whether its pure codec/transpose work
+//! runs serially, comes from the decoded-plane cache, or fans out as a
+//! pool job (`CxlDevice::plan_one`); the pure jobs run concurrently on a
+//! [`WorkerPool`] with per-worker [`BlockScratch`]es; then transactions
+//! *execute* strictly in submission order with the precomputed results
+//! threaded in (`CxlDevice::execute_prepped`). Accounting, latency
+//! modeling, and resource-timeline scheduling live exclusively in the
+//! execute phase, so tokens, byte traffic, and every completion field are
+//! bit-identical across pool widths and cache on/off
+//! (`tests/hotpath_equiv.rs`).
 
-use crate::bitplane::{DeviceBlock, KvWindow, PlaneMask, PrecisionView};
+use crate::bitplane::{BlockScratch, DeviceBlock, KvWindow, PlaneMask, PrecisionView};
 use crate::codec::{self, CodecKind, CodecPolicy};
 use crate::formats::Fmt;
 use crate::sim::ResourceTimeline;
 use crate::util::bytes::{bytes_to_u16s, u16s_to_bytes};
-use std::collections::HashMap;
+use crate::util::WorkerPool;
+use std::collections::{HashMap, HashSet};
 use std::ops::Range;
+use std::sync::Mutex;
 
 use super::controller::{free_latency, latency, write_latency, LatencyBreakdown, LatencyCase};
 use super::link::Link;
 use super::metadata::{IndexCache, PlaneIndex, ENTRY_BYTES};
-use super::txn::{Completion, MemDevice, Payload, Transaction, TxnId, TxnStats};
+use super::txn::{Completion, MemDevice, Payload, SubmissionQueue, Transaction, TxnId, TxnStats};
 
 /// Device design (paper Table III).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -52,13 +68,92 @@ impl Design {
 
 /// What one stored block looks like inside each design.
 #[derive(Debug, Clone)]
-enum Stored {
+pub(crate) enum Stored {
     /// Plain: raw little-endian words.
     Raw(Vec<u8>),
     /// GComp: whole-block codec output (or bypass), word-major.
     Compressed { codec: CodecKind, data: Vec<u8>, raw_len: usize },
     /// TRACE: plane-disaggregated block.
     Planes(DeviceBlock),
+}
+
+/// Cache key for a whole-block word decode (GComp): plane masks never
+/// exceed 16 bits, so this sentinel cannot collide with one.
+const CACHE_KEY_FULL_WORDS: u32 = u32::MAX;
+
+/// Decoded-plane LRU cache: `(block_addr, stored-domain plane mask)` →
+/// host-domain decoded words (post 𝒯⁻¹, pre view rounding / request
+/// masking — the most-shared intermediate). Weight chunks and
+/// tier-resident KV pages are re-fetched with the same mask every decode
+/// step, so hits skip the codec + transpose work entirely.
+///
+/// **Wall-clock only**: byte traffic, latency breakdowns, and ready-at
+/// scheduling never consult the cache, so completions are bit-identical
+/// with the cache on or off (`tests/hotpath_equiv.rs`). Writes and frees
+/// invalidate strictly.
+#[derive(Debug, Default)]
+pub(crate) struct DecodeCache {
+    /// Capacity in entries (blocks × masks); 0 disables.
+    cap: usize,
+    tick: u64,
+    map: HashMap<(u64, u32), (u64, Vec<u16>)>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl DecodeCache {
+    fn new(cap: usize) -> DecodeCache {
+        DecodeCache { cap, ..Default::default() }
+    }
+
+    fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    fn get(&mut self, key: (u64, u32)) -> Option<&Vec<u16>> {
+        if !self.enabled() {
+            return None;
+        }
+        self.tick += 1;
+        match self.map.get_mut(&key) {
+            Some((last, words)) => {
+                *last = self.tick;
+                self.hits += 1;
+                Some(&*words)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn insert(&mut self, key: (u64, u32), words: Vec<u16>) {
+        if !self.enabled() {
+            return;
+        }
+        if self.map.len() >= self.cap && !self.map.contains_key(&key) {
+            // evict the least-recently-used entry; an O(cap) scan is noise
+            // next to the codec work a single miss costs
+            if let Some(&victim) = self.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| k)
+            {
+                self.map.remove(&victim);
+            }
+        }
+        self.tick += 1;
+        self.map.insert(key, (self.tick, words));
+    }
+
+    /// Drop every cached decode of `block_addr` (any mask).
+    fn invalidate(&mut self, block_addr: u64) {
+        if !self.map.is_empty() {
+            self.map.retain(|k, _| k.0 != block_addr);
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
 }
 
 /// Cumulative device counters.
@@ -103,12 +198,42 @@ impl DeviceStats {
     }
 }
 
+/// The plane row-filter of a `ReadPlanes` bit-position range.
+fn range_mask(range: &Range<usize>, bits: usize) -> PlaneMask {
+    let lo = range.start.min(bits);
+    let hi = range.end.min(bits);
+    let mut m: u32 = 0;
+    for i in lo..hi {
+        m |= 1 << i;
+    }
+    PlaneMask(m)
+}
+
+/// Which planes a TRACE `ReadPlanes` request must physically fetch: the
+/// request itself, widened to the whole sign+exponent core on
+/// KV-transformed blocks (the exponent field is delta-coded as a unit).
+fn planes_fetch_mask(b: &DeviceBlock, req: PlaneMask) -> PlaneMask {
+    let bits = b.fmt.bits();
+    match &b.transform {
+        crate::bitplane::block::Transform::None => req,
+        crate::bitplane::block::Transform::Kv { .. } => {
+            let (_, _, m) = b.fmt.fields();
+            let core = (((1u64 << bits) - 1) as u32) & !((1u32 << m) - 1);
+            if req.0 & core != 0 {
+                PlaneMask(req.0 | core)
+            } else {
+                req
+            }
+        }
+    }
+}
+
 /// The single-device model. All I/O goes through the [`MemDevice`] trait.
 pub struct CxlDevice {
     pub design: Design,
     /// Codec candidate set for compressed designs.
     pub policy: CodecPolicy,
-    blocks: HashMap<u64, Stored>,
+    pub(crate) blocks: HashMap<u64, Stored>,
     pub index: PlaneIndex,
     pub index_cache: IndexCache,
     pub stats: DeviceStats,
@@ -127,7 +252,22 @@ pub struct CxlDevice {
     /// Link parameters for standalone scheduling; a sharded endpoint
     /// uses its own fleet-shared copy instead.
     pub link: Link,
+    /// Serial-path decode/encode staging (reused across transactions).
+    scratch: BlockScratch,
+    /// Batch worker pool: the blocks of one drained submission batch
+    /// encode/decode concurrently (1 = serial). Wall-clock only —
+    /// completions are ordered and valued exactly as the serial path.
+    pool: WorkerPool,
+    /// One scratch per pool worker.
+    pool_scratch: Vec<Mutex<BlockScratch>>,
+    /// Decoded-plane cache (wall-clock only; see [`DecodeCache`]).
+    cache: DecodeCache,
 }
+
+/// Default decoded-plane cache capacity: 256 entries ≈ 1 MB of decoded
+/// 4 KB blocks — covers the per-step refetch set of a large batch while
+/// staying negligible next to the stored blocks themselves.
+pub const DEFAULT_DECODE_CACHE_BLOCKS: usize = 256;
 
 impl CxlDevice {
     pub fn new(design: Design, policy: CodecPolicy) -> CxlDevice {
@@ -145,6 +285,71 @@ impl CxlDevice {
             // SystemConfig::paper_default().ddr_bw = 256 GB/s)
             ddr_gbps: 256.0,
             link: Link::paper_default(),
+            scratch: BlockScratch::new(),
+            pool: WorkerPool::new(1),
+            pool_scratch: vec![Mutex::new(BlockScratch::new())],
+            cache: DecodeCache::new(DEFAULT_DECODE_CACHE_BLOCKS),
+        }
+    }
+
+    /// Set the batch worker width (1 = serial). Purely a wall-clock knob:
+    /// completions, byte traffic, and model time are unchanged.
+    pub fn set_pool(&mut self, threads: usize) {
+        self.pool = WorkerPool::new(threads);
+        self.pool_scratch =
+            (0..self.pool.threads()).map(|_| Mutex::new(BlockScratch::new())).collect();
+    }
+
+    /// Worker width of the batch pool.
+    pub fn pool_threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Set the decoded-plane cache capacity in entries (0 disables and
+    /// drops current contents). Purely a wall-clock knob.
+    pub fn set_decode_cache(&mut self, blocks: usize) {
+        self.cache = DecodeCache::new(blocks);
+    }
+
+    /// `(hits, misses, live entries)` of the decoded-plane cache.
+    pub fn decode_cache_stats(&self) -> (u64, u64, usize) {
+        (self.cache.hits, self.cache.misses, self.cache.len())
+    }
+
+    /// Test hook: truncate the largest compressed stream of the block at
+    /// `addr` (a TRACE plane or a GComp block body), modeling in-DRAM
+    /// corruption so robustness tests can drive the decode error path
+    /// end-to-end. Returns false if no such block/stream exists. Not part
+    /// of the device model.
+    #[doc(hidden)]
+    pub fn test_corrupt_block(&mut self, addr: u64) -> bool {
+        self.cache.invalidate(addr);
+        match self.blocks.get_mut(&addr) {
+            Some(Stored::Planes(b)) => {
+                let Some(p) = b
+                    .planes
+                    .iter_mut()
+                    .filter(|p| p.codec != CodecKind::Raw)
+                    .max_by_key(|p| p.data.len())
+                else {
+                    return false;
+                };
+                if p.data.len() < 2 {
+                    return false;
+                }
+                let n = p.data.len();
+                p.data.truncate(n / 2);
+                true
+            }
+            Some(Stored::Compressed { codec, data, .. }) => {
+                if *codec == CodecKind::Raw || data.len() < 2 {
+                    return false;
+                }
+                let n = data.len();
+                data.truncate(n / 2);
+                true
+            }
+            _ => false,
         }
     }
 
@@ -176,53 +381,83 @@ impl CxlDevice {
             .sum()
     }
 
-    /// Write path for a generic/weight block; returns the achieved ratio.
-    fn do_write_weights(&mut self, block_addr: u64, words: &[u16], fmt: Fmt) -> f64 {
-        let raw = u16s_to_bytes(words);
-        let raw_len = raw.len();
+    /// Commit a stored block: byte/write accounting, (TRACE) plane-index
+    /// entry, strict decoded-plane cache invalidation. Returns the ratio.
+    fn commit_stored(&mut self, block_addr: u64, raw_len: usize, stored: Stored) -> f64 {
         self.stats.link_bytes_in += raw_len as u64;
         self.stats.writes += 1;
-        let stored = match self.design {
-            Design::Plain => Stored::Raw(raw),
-            Design::GComp => {
-                let (codec, data) = codec::compress_best(self.policy, &raw);
-                Stored::Compressed { codec, data, raw_len }
-            }
-            Design::Trace => {
-                let blk = DeviceBlock::encode_weights(words, fmt, self.policy);
-                self.index.insert(block_addr, blk.index_entry(block_addr));
-                Stored::Planes(blk)
-            }
-        };
+        if let Stored::Planes(blk) = &stored {
+            self.index.insert(block_addr, blk.index_entry(block_addr));
+        }
         let stored_len = Self::stored_bytes_of(&stored);
         self.stats.dram_bytes_written += stored_len as u64;
         self.blocks.insert(block_addr, stored);
+        self.cache.invalidate(block_addr);
         raw_len as f64 / stored_len.max(1) as f64
+    }
+
+    /// Write path for a generic/weight block; returns the achieved ratio.
+    /// `pre` is the block already encoded by the batch pool, if any.
+    fn do_write_weights(
+        &mut self,
+        block_addr: u64,
+        words: &[u16],
+        fmt: Fmt,
+        pre: Option<Stored>,
+    ) -> f64 {
+        let raw_len = words.len() * 2;
+        let stored = pre.unwrap_or_else(|| match self.design {
+            Design::Plain => Stored::Raw(u16s_to_bytes(words)),
+            Design::GComp => {
+                let raw = u16s_to_bytes(words);
+                let (codec, data) = codec::compress_best(self.policy, &raw);
+                Stored::Compressed { codec, data, raw_len }
+            }
+            Design::Trace => Stored::Planes(DeviceBlock::encode_weights_with(
+                words,
+                fmt,
+                self.policy,
+                &mut self.scratch,
+            )),
+        });
+        self.commit_stored(block_addr, raw_len, stored)
     }
 
     /// Write path for a KV window (token-major BF16); TRACE applies
     /// Mechanism I, the baselines store raw words. Returns the ratio.
-    fn do_write_kv(&mut self, block_addr: u64, kv_token_major: &[u16], window: KvWindow) -> f64 {
+    fn do_write_kv(
+        &mut self,
+        block_addr: u64,
+        kv_token_major: &[u16],
+        window: KvWindow,
+        pre: Option<Stored>,
+    ) -> f64 {
         match self.design {
             Design::Trace => {
                 let raw_len = kv_token_major.len() * 2;
-                self.stats.link_bytes_in += raw_len as u64;
-                self.stats.writes += 1;
-                let blk = DeviceBlock::encode_kv(kv_token_major, window, self.policy);
-                self.index.insert(block_addr, blk.index_entry(block_addr));
-                let stored = Stored::Planes(blk);
-                let stored_len = Self::stored_bytes_of(&stored);
-                self.stats.dram_bytes_written += stored_len as u64;
-                self.blocks.insert(block_addr, stored);
-                raw_len as f64 / stored_len.max(1) as f64
+                let stored = pre.unwrap_or_else(|| {
+                    Stored::Planes(DeviceBlock::encode_kv_with(
+                        kv_token_major,
+                        window,
+                        self.policy,
+                        &mut self.scratch,
+                    ))
+                });
+                self.commit_stored(block_addr, raw_len, stored)
             }
-            _ => self.do_write_weights(block_addr, kv_token_major, Fmt::Bf16),
+            _ => self.do_write_weights(block_addr, kv_token_major, Fmt::Bf16, pre),
         }
     }
 
     /// Full-precision read: returns the exact words the host wrote.
     /// Metadata charging happens in `execute`, once per transaction.
-    fn do_read_full(&mut self, block_addr: u64) -> anyhow::Result<Vec<u16>> {
+    /// `pre` is the already-decoded full word buffer (batch pool or
+    /// decoded-plane cache); accounting runs identically either way.
+    fn do_read_full(
+        &mut self,
+        block_addr: u64,
+        pre: Option<anyhow::Result<Vec<u16>>>,
+    ) -> anyhow::Result<Vec<u16>> {
         let stored = self
             .blocks
             .get(&block_addr)
@@ -231,15 +466,30 @@ impl CxlDevice {
         let words = match stored {
             Stored::Raw(d) => {
                 self.stats.dram_bytes_read += d.len() as u64;
-                bytes_to_u16s(d)
+                match pre {
+                    Some(r) => r?,
+                    None => bytes_to_u16s(d),
+                }
             }
             Stored::Compressed { codec, data, raw_len } => {
                 self.stats.dram_bytes_read += data.len() as u64;
-                bytes_to_u16s(&codec::decompress(*codec, data, *raw_len)?)
+                match pre {
+                    Some(r) => r?,
+                    // Cow: the Raw bypass borrows the stored bytes — no
+                    // residual `data.to_vec()` before the word repack
+                    None => bytes_to_u16s(&codec::decompress_cow(*codec, data, *raw_len)?),
+                }
             }
             Stored::Planes(b) => {
                 self.stats.dram_bytes_read += b.fetched_bytes(PlaneMask::full(b.fmt)) as u64;
-                b.decode_full()?
+                match pre {
+                    Some(r) => r?,
+                    None => {
+                        let mut out = Vec::with_capacity(b.n_elem);
+                        b.decode_full_into(&mut self.scratch, &mut out)?;
+                        out
+                    }
+                }
             }
         };
         self.stats.link_bytes_out += (words.len() * 2) as u64;
@@ -250,10 +500,15 @@ impl CxlDevice {
     /// device cannot skip anything: it serves full containers and the
     /// *host* truncates — the paper's "Issue 2". On TRACE only the view's
     /// planes are fetched from DRAM.
-    fn do_read_view(&mut self, block_addr: u64, view: &PrecisionView) -> anyhow::Result<Vec<u16>> {
+    fn do_read_view(
+        &mut self,
+        block_addr: u64,
+        view: &PrecisionView,
+        pre: Option<anyhow::Result<Vec<u16>>>,
+    ) -> anyhow::Result<Vec<u16>> {
         match self.design {
             Design::Plain | Design::GComp => {
-                let mut words = self.do_read_full(block_addr)?;
+                let mut words = self.do_read_full(block_addr, pre)?;
                 // host-side emulation of the view (bytes already moved)
                 if view.fmt == Fmt::Bf16 {
                     let keep = (view.mask().0 & 0xffff) as u16;
@@ -274,7 +529,20 @@ impl CxlDevice {
                     anyhow::bail!("TRACE device holds non-plane block");
                 };
                 self.stats.dram_bytes_read += b.fetched_bytes(view.mask()) as u64;
-                let words = b.decode_view(view)?;
+                // `pre` (pool/cache) carries the decode+𝒯⁻¹ intermediate;
+                // guard rounding ℛ stays here so both paths share it
+                let mut words = match pre {
+                    Some(r) => r?,
+                    None => {
+                        anyhow::ensure!(view.fmt == b.fmt, "view format mismatch");
+                        let mut out = Vec::with_capacity(b.n_elem);
+                        b.decode_planes_into(view.mask(), &mut self.scratch, &mut out)?;
+                        out
+                    }
+                };
+                if view.fmt == Fmt::Bf16 {
+                    crate::bitplane::reconstruct_bf16_view(&mut words, view);
+                }
                 self.stats.link_bytes_out +=
                     (words.len() * view.returned_bits()).div_ceil(8) as u64;
                 Ok(words)
@@ -291,19 +559,15 @@ impl CxlDevice {
     /// request touching any sign/exponent plane fetches the whole
     /// sign+exponent core to invert it exactly (mantissa planes still
     /// stream individually), and the output is masked back to the request.
-    fn do_read_planes(&mut self, block_addr: u64, range: Range<usize>) -> anyhow::Result<Vec<u16>> {
-        fn range_mask(range: &Range<usize>, bits: usize) -> PlaneMask {
-            let lo = range.start.min(bits);
-            let hi = range.end.min(bits);
-            let mut m: u32 = 0;
-            for i in lo..hi {
-                m |= 1 << i;
-            }
-            PlaneMask(m)
-        }
+    fn do_read_planes(
+        &mut self,
+        block_addr: u64,
+        range: Range<usize>,
+        pre: Option<anyhow::Result<Vec<u16>>>,
+    ) -> anyhow::Result<Vec<u16>> {
         match self.design {
             Design::Plain | Design::GComp => {
-                let mut words = self.do_read_full(block_addr)?;
+                let mut words = self.do_read_full(block_addr, pre)?;
                 let keep = (range_mask(&range, 16).0 & 0xffff) as u16;
                 for w in words.iter_mut() {
                     *w &= keep;
@@ -321,21 +585,16 @@ impl CxlDevice {
                 };
                 let bits = b.fmt.bits();
                 let req = range_mask(&range, bits);
-                let fetch = match &b.transform {
-                    crate::bitplane::block::Transform::None => req,
-                    crate::bitplane::block::Transform::Kv { .. } => {
-                        // sign+exponent core (delta-coded as a unit)
-                        let (_, _, m) = b.fmt.fields();
-                        let core = (((1u64 << bits) - 1) as u32) & !((1u32 << m) - 1);
-                        if req.0 & core != 0 {
-                            PlaneMask(req.0 | core)
-                        } else {
-                            req
-                        }
+                let fetch = planes_fetch_mask(b, req);
+                self.stats.dram_bytes_read += b.fetched_bytes(fetch) as u64;
+                let mut words = match pre {
+                    Some(r) => r?,
+                    None => {
+                        let mut out = Vec::with_capacity(b.n_elem);
+                        b.decode_planes_into(fetch, &mut self.scratch, &mut out)?;
+                        out
                     }
                 };
-                self.stats.dram_bytes_read += b.fetched_bytes(fetch) as u64;
-                let mut words = b.decode_planes(fetch)?;
                 // Mask back to the request: for KV blocks the inverse
                 // topology re-adds base exponents, so unrequested bits
                 // must be cleared to keep host-visible equivalence with
@@ -359,6 +618,7 @@ impl CxlDevice {
         if self.design == Design::Trace {
             self.index.remove(block_addr);
         }
+        self.cache.invalidate(block_addr);
         Ok(Payload::Written)
     }
 
@@ -401,37 +661,50 @@ impl CxlDevice {
         latency(case)
     }
 
-    /// Functional execution only: storage mutation, byte accounting, and
-    /// the pipeline-latency breakdown — no resource-timeline scheduling
-    /// (`issued_ns`/`ready_at_ns` left at 0). [`MemDevice::execute_at`]
-    /// wraps this with the device's own timelines; a
-    /// [`super::ShardedDevice`] calls it directly and schedules the
-    /// completion onto the owning shard's service timeline plus the
-    /// fleet-shared link instead.
-    pub(crate) fn execute_functional(&mut self, id: TxnId, txn: Transaction) -> Completion {
+    /// Functional execution with an optional precomputed pure result
+    /// (`pre`): the batch pool's decode/encode output or a decoded-plane
+    /// cache hit — no resource-timeline scheduling (`issued_ns`/
+    /// `ready_at_ns` left at 0; callers schedule). All accounting,
+    /// latency modeling, and storage mutation run identically with or
+    /// without `pre` — only the codec/transpose work is skipped — so
+    /// completions are bit-identical to the serial, cache-off path.
+    pub(crate) fn execute_prepped(
+        &mut self,
+        id: TxnId,
+        txn: Transaction,
+        pre: Option<Prep>,
+    ) -> Completion {
         let before = self.stats;
         let block_addr = txn.block_addr();
         let kind = txn.kind();
         let is_read = txn.is_read();
+        let (mut pre_words, pre_stored) = match pre {
+            Some(Prep::Words(w)) => (Some(w), None),
+            Some(Prep::Stored(s)) => (None, Some(s)),
+            None => (None, None),
+        };
         let (result, breakdown) = match txn {
             Transaction::WriteWeights { block_addr, words, fmt } => {
-                let ratio = self.do_write_weights(block_addr, &words, fmt);
+                let ratio = self.do_write_weights(block_addr, &words, fmt, pre_stored);
                 (Ok(Payload::Written), write_latency(self.design, ratio))
             }
             Transaction::WriteKv { block_addr, words, window } => {
-                let ratio = self.do_write_kv(block_addr, &words, window);
+                let ratio = self.do_write_kv(block_addr, &words, window, pre_stored);
                 (Ok(Payload::Written), write_latency(self.design, ratio))
             }
             Transaction::ReadFull { block_addr } => {
                 let hit = self.charge_metadata(block_addr);
                 let profile = self.block_profile(block_addr);
-                (self.do_read_full(block_addr).map(Payload::Words), self.read_latency(hit, profile))
+                (
+                    self.do_read_full(block_addr, pre_words.take()).map(Payload::Words),
+                    self.read_latency(hit, profile),
+                )
             }
             Transaction::ReadView { block_addr, view } => {
                 let hit = self.charge_metadata(block_addr);
                 let profile = self.block_profile(block_addr);
                 (
-                    self.do_read_view(block_addr, &view).map(Payload::Words),
+                    self.do_read_view(block_addr, &view, pre_words.take()).map(Payload::Words),
                     self.read_latency(hit, profile),
                 )
             }
@@ -439,7 +712,8 @@ impl CxlDevice {
                 let hit = self.charge_metadata(block_addr);
                 let profile = self.block_profile(block_addr);
                 (
-                    self.do_read_planes(block_addr, range).map(Payload::Words),
+                    self.do_read_planes(block_addr, range, pre_words.take())
+                        .map(Payload::Words),
                     self.read_latency(hit, profile),
                 )
             }
@@ -460,6 +734,340 @@ impl CxlDevice {
             ready_at_ns: 0.0,
         }
     }
+
+    /// Decide how one transaction of a batch executes: serially, from a
+    /// decoded-plane cache hit, deferred to an earlier identical decode
+    /// of the same batch, or as a pure pool job. `ctx.dirty` holds block
+    /// addresses written or freed by *earlier* transactions of the same
+    /// batch — reads of those must run serially (the pre-pass sees
+    /// pre-batch state only).
+    pub(crate) fn plan_one(&mut self, txn: &Transaction, ctx: &mut PlanCtx) -> Plan {
+        match txn {
+            Transaction::WriteWeights { block_addr, .. } => {
+                ctx.dirty.insert(*block_addr);
+                match self.design {
+                    Design::Plain => Plan::Serial,
+                    Design::GComp => Plan::job(JobSpec::EncodeGcomp, None),
+                    Design::Trace => Plan::job(JobSpec::EncodeWeights, None),
+                }
+            }
+            Transaction::WriteKv { block_addr, .. } => {
+                ctx.dirty.insert(*block_addr);
+                match self.design {
+                    Design::Plain => Plan::Serial,
+                    Design::GComp => Plan::job(JobSpec::EncodeGcomp, None),
+                    Design::Trace => Plan::job(JobSpec::EncodeKv, None),
+                }
+            }
+            Transaction::Free { block_addr } => {
+                ctx.dirty.insert(*block_addr);
+                Plan::Serial
+            }
+            Transaction::ReadFull { .. }
+            | Transaction::ReadView { .. }
+            | Transaction::ReadPlanes { .. } => self.plan_read(txn, ctx),
+        }
+    }
+
+    /// The read half of [`Self::plan_one`]: derive the stored-domain
+    /// decode mask, probe the decoded-plane cache, and fall back to a pool
+    /// job (or the serial path for cheap/raw/dirty/missing blocks).
+    fn plan_read(&mut self, txn: &Transaction, ctx: &mut PlanCtx) -> Plan {
+        let addr = txn.block_addr();
+        if ctx.dirty.contains(&addr) {
+            return Plan::Serial;
+        }
+        let spec_key = match self.blocks.get(&addr) {
+            None | Some(Stored::Raw(_)) => None,
+            Some(Stored::Compressed { codec, .. }) => {
+                // word-major whole-block decode; the Raw bypass is a copy,
+                // not worth a job or a cache entry
+                (*codec != CodecKind::Raw)
+                    .then_some((JobSpec::DecodeBlock, (addr, CACHE_KEY_FULL_WORDS)))
+            }
+            Some(Stored::Planes(b)) => {
+                let mask = match txn {
+                    Transaction::ReadFull { .. } => Some(PlaneMask::full(b.fmt)),
+                    Transaction::ReadView { view, .. } => {
+                        // a format-mismatched view errors on the serial path
+                        (view.fmt == b.fmt).then(|| view.mask())
+                    }
+                    Transaction::ReadPlanes { range, .. } => {
+                        let req = range_mask(range, b.fmt.bits());
+                        (req.0 != 0).then(|| planes_fetch_mask(b, req))
+                    }
+                    _ => None,
+                };
+                mask.map(|m| (JobSpec::DecodePlanes(m), (addr, m.0)))
+            }
+        };
+        let Some((spec, key)) = spec_key else {
+            return Plan::Serial;
+        };
+        // an earlier transaction of this batch already scheduled the same
+        // decode: defer to its (cache-inserted) result instead of running
+        // the codec work twice — the repeat-fetch shape the cache exists
+        // for, occurring even inside one batch
+        if self.cache.enabled() && ctx.planned.contains(&key) {
+            return Plan::Deferred { key };
+        }
+        if let Some(words) = self.cache.get(key) {
+            return Plan::Ready(Prep::Words(Ok(words.clone())));
+        }
+        if self.cache.enabled() {
+            ctx.planned.insert(key);
+        }
+        Plan::job(spec, Some(key))
+    }
+
+    /// Plan a whole batch in execution order.
+    pub(crate) fn plan_batch(&mut self, batch: &[(TxnId, Transaction)]) -> Vec<Plan> {
+        let mut ctx = PlanCtx::default();
+        batch.iter().map(|(_, txn)| self.plan_one(txn, &mut ctx)).collect()
+    }
+
+    /// Run every planned pool job of a batch, returning outputs aligned to
+    /// batch positions (`None` where no job was planned). Pure: borrows
+    /// the stored blocks immutably; per-worker scratches do the staging.
+    pub(crate) fn run_jobs(
+        &self,
+        batch: &[(TxnId, Transaction)],
+        plans: &[Plan],
+    ) -> Vec<Option<JobOut>> {
+        let mut positions = Vec::new();
+        let mut jobs = Vec::new();
+        for (pos, plan) in plans.iter().enumerate() {
+            if let Plan::Job { spec, .. } = plan {
+                positions.push(pos);
+                jobs.push(build_job(&self.blocks, self.policy, spec, &batch[pos].1));
+            }
+        }
+        let outs = self
+            .pool
+            .run(jobs, |w, _, job| job.run(&mut self.pool_scratch[w].lock().expect("scratch")));
+        let mut result: Vec<Option<JobOut>> = (0..plans.len()).map(|_| None).collect();
+        for (pos, out) in positions.into_iter().zip(outs) {
+            result[pos] = Some(out);
+        }
+        result
+    }
+
+    /// Fold a plan and its pool output into the `pre` handed to
+    /// [`Self::execute_prepped`], inserting fresh decodes into the
+    /// decoded-plane cache.
+    pub(crate) fn prep_from(&mut self, plan: Plan, out: Option<JobOut>) -> Option<Prep> {
+        match plan {
+            Plan::Serial => None,
+            Plan::Ready(p) => Some(p),
+            // the earlier identical decode has executed by now and (on
+            // success) populated the cache; on a miss — evicted, or the
+            // first decode failed — fall back to the serial path
+            Plan::Deferred { key } => {
+                self.cache.get(key).map(|w| Prep::Words(Ok(w.clone())))
+            }
+            Plan::Job { key, .. } => match out.expect("planned job ran") {
+                JobOut::Words(Ok(w)) => {
+                    if let Some(k) = key {
+                        self.cache.insert(k, w.clone());
+                    }
+                    Some(Prep::Words(Ok(w)))
+                }
+                JobOut::Words(Err(e)) => Some(Prep::Words(Err(e))),
+                JobOut::Stored(s) => Some(Prep::Stored(s)),
+            },
+        }
+    }
+
+    /// Plan and (inline) run a single transaction's pure work — the
+    /// single-`execute_at` path, so index reads through a sharded device
+    /// still hit the decoded-plane cache.
+    pub(crate) fn prep_single(&mut self, txn: &Transaction) -> Option<Prep> {
+        let mut ctx = PlanCtx::default();
+        let plan = self.plan_one(txn, &mut ctx);
+        let out = match &plan {
+            Plan::Job { spec, .. } => {
+                let job = build_job(&self.blocks, self.policy, spec, txn);
+                Some(job.run(&mut self.scratch))
+            }
+            _ => None,
+        };
+        self.prep_from(plan, out)
+    }
+
+    /// Drain one popped batch: pre-pass plan, pool fan-out of the pure
+    /// codec work, then in-order execution + resource-timeline scheduling.
+    /// Completions are ordered by submission exactly like the serial path.
+    pub(crate) fn drain_batch(
+        &mut self,
+        batch: Vec<(TxnId, Transaction)>,
+        now_ns: f64,
+    ) -> Vec<Completion> {
+        let plans = self.plan_batch(&batch);
+        let outs = self.run_jobs(&batch, &plans);
+        batch
+            .into_iter()
+            .zip(plans)
+            .zip(outs)
+            .map(|(((id, txn), plan), out)| {
+                let pre = self.prep_from(plan, out);
+                let mut c = self.execute_prepped(id, txn, pre);
+                c.schedule(
+                    now_ns,
+                    super::txn::SchedResources {
+                        service: &mut self.service_tl,
+                        link_in: &mut self.link_in_tl,
+                        link_out: &mut self.link_out_tl,
+                        ddr_gbps: self.ddr_gbps,
+                        link_gbps: self.link.gbps,
+                        link_prop_ns: self.link.latency_ns,
+                    },
+                );
+                c
+            })
+            .collect()
+    }
+}
+
+/// How a batch transaction's pure work executes on the pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum JobSpec {
+    /// TRACE plane decode (decompress + transpose + 𝒯⁻¹) under a mask.
+    DecodePlanes(PlaneMask),
+    /// GComp whole-block word decode.
+    DecodeBlock,
+    /// TRACE weight encode.
+    EncodeWeights,
+    /// TRACE KV encode (Mechanism I).
+    EncodeKv,
+    /// GComp whole-block encode.
+    EncodeGcomp,
+}
+
+/// Per-batch planning state.
+#[derive(Debug, Default)]
+pub(crate) struct PlanCtx {
+    /// Addresses written/freed earlier in the batch (reads go serial).
+    dirty: HashSet<u64>,
+    /// Cache keys already scheduled as jobs earlier in the batch
+    /// (duplicate reads defer to the first decode through the cache).
+    planned: HashSet<(u64, u32)>,
+}
+
+/// Batch pre-pass decision for one transaction.
+#[derive(Debug)]
+pub(crate) enum Plan {
+    /// Execute fully inside [`CxlDevice::execute_prepped`].
+    Serial,
+    /// Pure result already known (decoded-plane cache hit).
+    Ready(Prep),
+    /// Same decode as an earlier transaction of this batch: consume its
+    /// cache insertion at execute time (serial fallback on a miss).
+    Deferred { key: (u64, u32) },
+    /// Pure work scheduled on the pool; `key` = cache-insert key.
+    Job { spec: JobSpec, key: Option<(u64, u32)> },
+}
+
+impl Plan {
+    fn job(spec: JobSpec, key: Option<(u64, u32)>) -> Plan {
+        Plan::Job { spec, key }
+    }
+}
+
+/// A precomputed pure result handed to [`CxlDevice::execute_prepped`].
+#[derive(Debug)]
+pub(crate) enum Prep {
+    /// Decoded words in "cache form": post 𝒯⁻¹, pre view rounding /
+    /// request masking (those stay in the `do_read_*` accounting path).
+    Words(anyhow::Result<Vec<u16>>),
+    /// An encoded block ready to commit.
+    Stored(Stored),
+}
+
+/// One pure unit of pool work, borrowing the stored blocks (decodes) or
+/// the transaction payload (encodes).
+pub(crate) enum BatchJob<'a> {
+    DecodePlanes { blk: &'a DeviceBlock, mask: PlaneMask },
+    DecodeBlock { codec: CodecKind, data: &'a [u8], raw_len: usize },
+    EncodeWeights { words: &'a [u16], fmt: Fmt, policy: CodecPolicy },
+    EncodeKv { words: &'a [u16], window: KvWindow, policy: CodecPolicy },
+    EncodeGcomp { words: &'a [u16], policy: CodecPolicy },
+}
+
+/// Pool job output.
+pub(crate) enum JobOut {
+    Words(anyhow::Result<Vec<u16>>),
+    Stored(Stored),
+}
+
+/// Materialize a planned job against the (immutable) stored blocks. The
+/// plan guaranteed the referenced block exists and has the right shape —
+/// nothing executed between planning and here.
+pub(crate) fn build_job<'a>(
+    blocks: &'a HashMap<u64, Stored>,
+    policy: CodecPolicy,
+    spec: &JobSpec,
+    txn: &'a Transaction,
+) -> BatchJob<'a> {
+    match (spec, txn) {
+        (JobSpec::DecodePlanes(mask), _) => {
+            let Some(Stored::Planes(blk)) = blocks.get(&txn.block_addr()) else {
+                unreachable!("planned plane decode against a non-plane block");
+            };
+            BatchJob::DecodePlanes { blk, mask: *mask }
+        }
+        (JobSpec::DecodeBlock, _) => {
+            let Some(Stored::Compressed { codec, data, raw_len }) =
+                blocks.get(&txn.block_addr())
+            else {
+                unreachable!("planned block decode against a non-compressed block");
+            };
+            BatchJob::DecodeBlock { codec: *codec, data, raw_len: *raw_len }
+        }
+        (JobSpec::EncodeWeights, Transaction::WriteWeights { words, fmt, .. }) => {
+            BatchJob::EncodeWeights { words, fmt: *fmt, policy }
+        }
+        (JobSpec::EncodeKv, Transaction::WriteKv { words, window, .. }) => {
+            BatchJob::EncodeKv { words, window: *window, policy }
+        }
+        (JobSpec::EncodeGcomp, Transaction::WriteWeights { words, .. })
+        | (JobSpec::EncodeGcomp, Transaction::WriteKv { words, .. }) => {
+            BatchJob::EncodeGcomp { words, policy }
+        }
+        _ => unreachable!("job spec does not match its transaction"),
+    }
+}
+
+impl BatchJob<'_> {
+    /// Run the pure work with a worker-owned scratch. Output is exactly
+    /// what the serial path would have computed at the same point.
+    pub(crate) fn run(&self, scratch: &mut BlockScratch) -> JobOut {
+        match self {
+            BatchJob::DecodePlanes { blk, mask } => {
+                let mut out = Vec::with_capacity(blk.n_elem);
+                match blk.decode_planes_into(*mask, scratch, &mut out) {
+                    Ok(()) => JobOut::Words(Ok(out)),
+                    Err(e) => JobOut::Words(Err(e)),
+                }
+            }
+            BatchJob::DecodeBlock { codec, data, raw_len } => {
+                JobOut::Words(
+                    codec::decompress(*codec, data, *raw_len).map(|b| bytes_to_u16s(&b)),
+                )
+            }
+            BatchJob::EncodeWeights { words, fmt, policy } => JobOut::Stored(Stored::Planes(
+                DeviceBlock::encode_weights_with(words, *fmt, *policy, scratch),
+            )),
+            BatchJob::EncodeKv { words, window, policy } => JobOut::Stored(Stored::Planes(
+                DeviceBlock::encode_kv_with(words, *window, *policy, scratch),
+            )),
+            BatchJob::EncodeGcomp { words, policy } => {
+                let raw = u16s_to_bytes(words);
+                let raw_len = raw.len();
+                let (codec, data) = codec::compress_best(*policy, &raw);
+                JobOut::Stored(Stored::Compressed { codec, data, raw_len })
+            }
+        }
+    }
 }
 
 impl MemDevice for CxlDevice {
@@ -468,7 +1076,10 @@ impl MemDevice for CxlDevice {
     }
 
     fn execute_at(&mut self, id: TxnId, txn: Transaction, now_ns: f64) -> Completion {
-        let mut c = self.execute_functional(id, txn);
+        // route through the batch path so single reads also consult (and
+        // warm) the decoded-plane cache
+        let pre = self.prep_single(&txn);
+        let mut c = self.execute_prepped(id, txn, pre);
         c.schedule(
             now_ns,
             super::txn::SchedResources {
@@ -481,6 +1092,16 @@ impl MemDevice for CxlDevice {
             },
         );
         c
+    }
+
+    fn drain_at(&mut self, sq: &mut SubmissionQueue, now_ns: f64) -> Vec<Completion> {
+        // pop the whole batch up front: the pure codec/transpose work of
+        // its blocks runs on the worker pool, results ordered by txn
+        let mut batch = Vec::with_capacity(sq.len());
+        while let Some(x) = sq.pop() {
+            batch.push(x);
+        }
+        self.drain_batch(batch, now_ns)
     }
 
     fn stats(&self) -> DeviceStats {
@@ -716,6 +1337,130 @@ mod tests {
         d.submit_one(Transaction::ReadPlanes { block_addr: 0x0, range: 0..16 }).unwrap();
         let full = d.stats().dram_bytes_read;
         assert!(top < full, "top={top} full={full}");
+    }
+
+    #[test]
+    fn decode_cache_hits_and_invalidates() {
+        let mut r = Rng::new(212);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let mut d = CxlDevice::new(Design::Trace, CodecPolicy::AllBest);
+        write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
+        let first = read_full(&mut d, 0x0).unwrap();
+        let (h0, m0, _) = d.decode_cache_stats();
+        assert_eq!((h0, m0), (0, 1), "first read is a compulsory miss");
+        let second = read_full(&mut d, 0x0).unwrap();
+        assert_eq!(second, first);
+        let (h1, _, live) = d.decode_cache_stats();
+        assert_eq!(h1, 1, "repeat read hits");
+        assert_eq!(live, 1);
+        // a view read with a different mask is its own entry
+        read_view(&mut d, 0x0, &PrecisionView::bf16_mantissa(3, 0)).unwrap();
+        assert_eq!(d.decode_cache_stats().2, 2);
+        // overwrite invalidates every mask of the address
+        let kv2 = smooth_kv(&mut r, 32, 64);
+        write_kv(&mut d, 0x0, &kv2, KvWindow::new(32, 64));
+        assert_eq!(d.decode_cache_stats().2, 0, "write must invalidate");
+        assert_eq!(read_full(&mut d, 0x0).unwrap(), kv2, "post-write read sees new data");
+        // free invalidates too
+        d.submit_one(Transaction::Free { block_addr: 0x0 }).unwrap();
+        assert_eq!(d.decode_cache_stats().2, 0);
+    }
+
+    #[test]
+    fn duplicate_reads_in_one_batch_decode_once() {
+        let mut r = Rng::new(215);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let mut d = CxlDevice::new(Design::Trace, CodecPolicy::AllBest);
+        write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
+        let mut sq = super::super::txn::SubmissionQueue::new();
+        sq.submit(Transaction::ReadFull { block_addr: 0x0 });
+        sq.submit(Transaction::ReadFull { block_addr: 0x0 });
+        sq.submit(Transaction::ReadFull { block_addr: 0x0 });
+        let cs = d.drain_at(&mut sq, 0.0);
+        let payloads: Vec<Vec<u16>> =
+            cs.into_iter().map(|c| c.result.unwrap().into_words().unwrap()).collect();
+        assert!(payloads.iter().all(|p| *p == kv));
+        // one pool decode + two deferred cache consumptions: exactly one
+        // plan-time miss, and the deferred preps count as hits
+        let (hits, misses, _) = d.decode_cache_stats();
+        assert_eq!(misses, 1, "duplicates must not re-run the codec work");
+        assert_eq!(hits, 2);
+    }
+
+    #[test]
+    fn cache_capacity_evicts_lru() {
+        let mut r = Rng::new(213);
+        let mut d = CxlDevice::new(Design::Trace, CodecPolicy::FastBest);
+        d.set_decode_cache(2);
+        for b in 0..3u64 {
+            let kv = smooth_kv(&mut r, 32, 64);
+            write_kv(&mut d, b * 4096, &kv, KvWindow::new(32, 64));
+            read_full(&mut d, b * 4096).unwrap();
+        }
+        assert_eq!(d.decode_cache_stats().2, 2, "capacity bound holds");
+        // block 0 was least recently used → evicted → re-read misses
+        let (_, m_before, _) = d.decode_cache_stats();
+        read_full(&mut d, 0x0).unwrap();
+        assert_eq!(d.decode_cache_stats().1, m_before + 1);
+        // disabled cache stores nothing
+        d.set_decode_cache(0);
+        read_full(&mut d, 0x0).unwrap();
+        assert_eq!(d.decode_cache_stats(), (0, 0, 0));
+    }
+
+    #[test]
+    fn batch_drain_matches_serial_per_txn_across_pool_and_cache() {
+        // the equivalence core: identical Completion fields for
+        // {pool 1, pool 4} × {cache on, off}, including an error txn and
+        // a write-then-read-same-address hazard inside one batch
+        let mut r = Rng::new(214);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let kv2 = smooth_kv(&mut r, 32, 64);
+        let run = |pool: usize, cache: usize| {
+            let mut d = CxlDevice::new(Design::Trace, CodecPolicy::AllBest);
+            d.set_pool(pool);
+            d.set_decode_cache(cache);
+            write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
+            let mut sq = super::super::txn::SubmissionQueue::new();
+            sq.submit(Transaction::ReadFull { block_addr: 0x0 });
+            sq.submit(Transaction::ReadView {
+                block_addr: 0x0,
+                view: PrecisionView::bf16_mantissa(2, 1),
+            });
+            sq.submit(Transaction::ReadPlanes { block_addr: 0x0, range: 9..16 });
+            sq.submit(Transaction::WriteKv {
+                block_addr: 0x0,
+                words: kv2.clone(),
+                window: KvWindow::new(32, 64),
+            });
+            sq.submit(Transaction::ReadFull { block_addr: 0x0 }); // hazard read
+            sq.submit(Transaction::ReadFull { block_addr: 0xbad000 }); // error
+            sq.submit(Transaction::ReadFull { block_addr: 0x0 }); // repeat (cacheable)
+            let cs = d.drain_at(&mut sq, 5.0);
+            let stats = d.stats();
+            (cs, stats)
+        };
+        let (base, base_stats) = run(1, 0);
+        assert_eq!(base[4].result.as_ref().unwrap().clone().into_words().unwrap(), kv2);
+        assert!(base[5].result.is_err());
+        for (pool, cache) in [(1, 256), (4, 0), (4, 256)] {
+            let (cs, stats) = run(pool, cache);
+            assert_eq!(stats, base_stats, "pool={pool} cache={cache}");
+            assert_eq!(cs.len(), base.len());
+            for (c, b) in cs.iter().zip(base.iter()) {
+                assert_eq!(c.id, b.id);
+                assert_eq!(c.stats, b.stats, "pool={pool} cache={cache} txn={}", c.id);
+                assert_eq!(c.latency_ns(), b.latency_ns());
+                assert_eq!(c.issued_ns, b.issued_ns);
+                assert_eq!(c.ready_at_ns, b.ready_at_ns, "pool={pool} cache={cache}");
+                match (&c.result, &b.result) {
+                    (Ok(Payload::Words(x)), Ok(Payload::Words(y))) => assert_eq!(x, y),
+                    (Ok(Payload::Written), Ok(Payload::Written)) => {}
+                    (Err(_), Err(_)) => {}
+                    _ => panic!("result shape diverged"),
+                }
+            }
+        }
     }
 
     #[test]

@@ -47,7 +47,7 @@ pub mod scheduler;
 pub mod ppa;
 pub mod link;
 
-pub use device::{CxlDevice, Design, DeviceStats};
+pub use device::{CxlDevice, Design, DeviceStats, DEFAULT_DECODE_CACHE_BLOCKS};
 pub use metadata::{IndexCache, PlaneIndex};
 pub use alias::AliasSpace;
 pub use controller::{latency, write_latency, LatencyBreakdown, LatencyCase};

@@ -26,11 +26,14 @@
 //! just fleet-level busy sums.
 
 use std::collections::VecDeque;
+use std::sync::Mutex;
 
+use crate::bitplane::BlockScratch;
 use crate::codec::CodecPolicy;
 use crate::sim::ResourceTimeline;
+use crate::util::WorkerPool;
 
-use super::device::{CxlDevice, Design, DeviceStats};
+use super::device::{build_job, CxlDevice, Design, DeviceStats, JobOut, Plan, PlanCtx, Prep};
 use super::link::Link;
 use super::scheduler::round_robin_drain;
 use super::txn::{Completion, MemDevice, SubmissionQueue, Transaction, TxnId};
@@ -64,6 +67,12 @@ pub struct ShardedDevice {
     pub shard_ddr_gbps: f64,
     /// Shared host-link parameters.
     pub link: Link,
+    /// Fleet-level batch worker pool: one drained batch's pure
+    /// codec/transpose work fans out across shards *and* blocks (the
+    /// per-shard pools stay at 1 — nesting would oversubscribe).
+    pool: WorkerPool,
+    /// One scratch per fleet pool worker.
+    pool_scratch: Vec<Mutex<BlockScratch>>,
 }
 
 impl ShardedDevice {
@@ -92,11 +101,42 @@ impl ShardedDevice {
             link_out_tl: ResourceTimeline::new("fleet-link-out"),
             shard_ddr_gbps,
             link,
+            pool: WorkerPool::new(1),
+            pool_scratch: vec![Mutex::new(BlockScratch::new())],
         }
     }
 
     pub fn dispatch_policy(&self) -> DispatchPolicy {
         self.policy
+    }
+
+    /// Set the fleet batch worker width (1 = serial). Wall-clock only:
+    /// completions, byte traffic, and model time are unchanged.
+    pub fn set_pool(&mut self, threads: usize) {
+        self.pool = WorkerPool::new(threads);
+        self.pool_scratch =
+            (0..self.pool.threads()).map(|_| Mutex::new(BlockScratch::new())).collect();
+    }
+
+    /// Worker width of the fleet batch pool.
+    pub fn pool_threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Set every shard's decoded-plane cache capacity (entries; 0
+    /// disables). Wall-clock only.
+    pub fn set_decode_cache(&mut self, blocks: usize) {
+        for s in self.shards.iter_mut() {
+            s.set_decode_cache(blocks);
+        }
+    }
+
+    /// Aggregate `(hits, misses, live entries)` over all shard caches.
+    pub fn decode_cache_stats(&self) -> (u64, u64, usize) {
+        self.shards.iter().fold((0, 0, 0), |(h, m, l), s| {
+            let (sh, sm, sl) = s.decode_cache_stats();
+            (h + sh, m + sm, l + sl)
+        })
     }
 
     /// Which shard owns `block_addr`.
@@ -134,8 +174,18 @@ impl ShardedDevice {
         self.link_out_tl.reset();
     }
 
-    fn service(&mut self, idx: usize, id: TxnId, txn: Transaction, now_ns: f64) -> Completion {
-        let mut c = self.shards[idx].execute_functional(id, txn);
+    /// Execute one transaction on shard `idx` with an optional
+    /// precomputed pure result, then schedule it on the shard's service
+    /// timeline and the fleet-shared link.
+    fn service_prepped(
+        &mut self,
+        idx: usize,
+        id: TxnId,
+        txn: Transaction,
+        pre: Option<Prep>,
+        now_ns: f64,
+    ) -> Completion {
+        let mut c = self.shards[idx].execute_prepped(id, txn, pre);
         c.shard = idx;
         c.schedule(
             now_ns,
@@ -150,6 +200,49 @@ impl ShardedDevice {
         );
         c
     }
+
+    /// Plan each shard's slice of a batch (in that shard's FIFO order —
+    /// its execution order under both dispatch policies) and run every
+    /// pure job once on the fleet pool. Returns per-shard FIFOs of
+    /// `(plan, pool output)` consumed as the policy services transactions.
+    #[allow(clippy::type_complexity)]
+    fn precompute(
+        &mut self,
+        queues: &[VecDeque<(TxnId, Transaction)>],
+    ) -> Vec<VecDeque<(Plan, Option<JobOut>)>> {
+        // Phase A (serial, mutates shard caches): plan in per-shard order.
+        let mut plans: Vec<Vec<Plan>> = Vec::with_capacity(queues.len());
+        for (i, q) in queues.iter().enumerate() {
+            let mut ctx = PlanCtx::default();
+            plans.push(q.iter().map(|(_, t)| self.shards[i].plan_one(t, &mut ctx)).collect());
+        }
+        // Phase B (pure, parallel): every planned job across all shards
+        // fans out over one pool run; results route back by (shard, pos).
+        let mut keys = Vec::new();
+        let mut jobs = Vec::new();
+        for (i, shard_plans) in plans.iter().enumerate() {
+            for (pos, plan) in shard_plans.iter().enumerate() {
+                if let Plan::Job { spec, .. } = plan {
+                    keys.push((i, pos));
+                    let shard = &self.shards[i];
+                    jobs.push(build_job(&shard.blocks, shard.policy, spec, &queues[i][pos].1));
+                }
+            }
+        }
+        let results = self
+            .pool
+            .run(jobs, |w, _, job| job.run(&mut self.pool_scratch[w].lock().expect("scratch")));
+        let mut outs: Vec<Vec<Option<JobOut>>> =
+            plans.iter().map(|p| p.iter().map(|_| None).collect()).collect();
+        for ((i, pos), r) in keys.into_iter().zip(results) {
+            outs[i][pos] = Some(r);
+        }
+        plans
+            .into_iter()
+            .zip(outs)
+            .map(|(p, o)| p.into_iter().zip(o).collect())
+            .collect()
+    }
 }
 
 impl MemDevice for ShardedDevice {
@@ -159,7 +252,8 @@ impl MemDevice for ShardedDevice {
 
     fn execute_at(&mut self, id: TxnId, txn: Transaction, now_ns: f64) -> Completion {
         let idx = self.shard_of(txn.block_addr());
-        self.service(idx, id, txn, now_ns)
+        let pre = self.shards[idx].prep_single(&txn);
+        self.service_prepped(idx, id, txn, pre, now_ns)
     }
 
     fn drain_at(&mut self, sq: &mut SubmissionQueue, now_ns: f64) -> Vec<Completion> {
@@ -168,12 +262,18 @@ impl MemDevice for ShardedDevice {
         while let Some((id, txn)) = sq.pop() {
             queues[shard_of(txn.block_addr(), n)].push_back((id, txn));
         }
+        let mut preps = self.precompute(&queues);
+        let mut prep_for = |dev: &mut ShardedDevice, idx: usize| -> Option<Prep> {
+            let (plan, out) = preps[idx].pop_front().expect("one plan per queued txn");
+            dev.shards[idx].prep_from(plan, out)
+        };
         match self.policy {
             DispatchPolicy::RoundRobin => round_robin_drain(queues)
                 .into_iter()
                 .map(|(id, txn)| {
                     let idx = shard_of(txn.block_addr(), n);
-                    self.service(idx, id, txn, now_ns)
+                    let pre = prep_for(self, idx);
+                    self.service_prepped(idx, id, txn, pre, now_ns)
                 })
                 .collect(),
             DispatchPolicy::LeastLoaded => {
@@ -187,7 +287,8 @@ impl MemDevice for ShardedDevice {
                     });
                     let Some(i) = next else { break };
                     let (id, txn) = queues[i].pop_front().unwrap();
-                    out.push(self.service(i, id, txn, now_ns));
+                    let pre = prep_for(self, i);
+                    out.push(self.service_prepped(i, id, txn, pre, now_ns));
                 }
                 out
             }
@@ -364,6 +465,66 @@ mod tests {
         assert!(dev.busy_ns()[0] > 0.0);
         assert_eq!(dev.busy_ns()[1], 0.0);
         assert!((dev.elapsed_ns() - dev.total_busy_ns()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_pool_and_cache_keep_completions_identical() {
+        let mut r = Rng::new(307);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let drain_reads = |dev: &mut ShardedDevice| {
+            let mut sq = SubmissionQueue::new();
+            for b in 0..16u64 {
+                sq.submit(Transaction::ReadFull { block_addr: b * STRIPE_BYTES });
+                if b % 3 == 0 {
+                    sq.submit(Transaction::ReadPlanes {
+                        block_addr: b * STRIPE_BYTES,
+                        range: 9..16,
+                    });
+                }
+            }
+            dev.drain_at(&mut sq, 42.0)
+        };
+        let run = |pool: usize, cache: usize, policy: DispatchPolicy| {
+            let mut dev =
+                ShardedDevice::with_policy(4, Design::Trace, CodecPolicy::FastBest, policy);
+            dev.set_pool(pool);
+            dev.set_decode_cache(cache);
+            let mut sq = SubmissionQueue::new();
+            for b in 0..16u64 {
+                sq.submit(Transaction::WriteKv {
+                    block_addr: b * STRIPE_BYTES,
+                    words: kv.clone(),
+                    window: KvWindow::new(32, 64),
+                });
+            }
+            for c in dev.drain(&mut sq) {
+                c.result.unwrap();
+            }
+            dev.reset_time();
+            // two rounds: the second exercises cache hits when enabled
+            let mut all = drain_reads(&mut dev);
+            all.extend(drain_reads(&mut dev));
+            (all, dev.stats())
+        };
+        for policy in [DispatchPolicy::RoundRobin, DispatchPolicy::LeastLoaded] {
+            let (base, base_stats) = run(1, 0, policy);
+            for (pool, cache) in [(4, 0), (1, 64), (4, 64)] {
+                let (cs, stats) = run(pool, cache, policy);
+                assert_eq!(stats, base_stats, "{policy:?} pool={pool} cache={cache}");
+                assert_eq!(cs.len(), base.len());
+                for (c, b) in cs.iter().zip(base.iter()) {
+                    assert_eq!((c.id, c.shard), (b.id, b.shard));
+                    assert_eq!(c.stats, b.stats);
+                    assert_eq!(c.ready_at_ns, b.ready_at_ns);
+                    assert_eq!(
+                        c.result.as_ref().unwrap(),
+                        b.result.as_ref().unwrap(),
+                        "{policy:?} pool={pool} cache={cache} txn={}",
+                        c.id
+                    );
+                }
+            }
+        }
     }
 
     #[test]

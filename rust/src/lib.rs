@@ -53,6 +53,17 @@
 //! `docs/SIM_CLOCK.md` for the event model and `docs/DEVICE_API.md` for
 //! the transaction lifecycle and the ready-at-time contract.
 //!
+//! The device data path is built for host wall-clock speed without
+//! moving a single modeled number: block encode/decode stages through a
+//! reusable [`bitplane::BlockScratch`] (zero heap allocations in steady
+//! state), one submission batch's codec work fans out over a std-only
+//! [`util::WorkerPool`], and a per-device decoded-plane cache skips
+//! repeat decodes of hot weight chunks and tier-resident KV pages —
+//! tokens, byte traffic, and every completion field are bit-identical
+//! across pool widths and cache on/off (`tests/hotpath_equiv.rs`,
+//! gates in `benches/perf_hotpaths.rs`). See `docs/PERF.md` for the
+//! architecture and the wall-clock-vs-model-time invariant.
+//!
 //! Serving is **scheduler-driven**: a pluggable
 //! [`coordinator::SchedulerPolicy`] decides each step's admissions and
 //! preemptions over an open-loop arrival stream

@@ -3,7 +3,8 @@
 //! The build is fully offline against a fixed vendor set, so instead of
 //! `rand`/`serde`/`clap`/`proptest` we carry minimal equivalents here:
 //! a splitmix/xoshiro RNG, a JSON parser+emitter, a CLI argument parser,
-//! descriptive statistics, and a tiny property-testing harness.
+//! descriptive statistics, a tiny property-testing harness, and a scoped
+//! worker pool ([`pool`]) for batch-parallel device codec work.
 
 pub mod rng;
 pub mod json;
@@ -11,6 +12,8 @@ pub mod cli;
 pub mod stats;
 pub mod check;
 pub mod bytes;
+pub mod pool;
 
+pub use pool::WorkerPool;
 pub use rng::Rng;
 pub use stats::Summary;

@@ -1,0 +1,173 @@
+//! A minimal std-only worker pool for batch-parallel device work.
+//!
+//! The simulator's wall-clock hot path is the codec/transpose work of one
+//! [`crate::cxl::SubmissionQueue`] batch: the engine submits every spilled
+//! page fetch of a step as one batch, and each block's encode/decode is
+//! pure, so the blocks can run on independent worker threads — *results must still
+//! come back in submission order* so completions, byte accounting, and
+//! model-time reservations are bit-identical to the serial path.
+//!
+//! [`WorkerPool::run`] does exactly that: scoped threads
+//! (`std::thread::scope`, no detached lifetime, no extra dependencies)
+//! pull item indices from a shared atomic counter and write results into
+//! per-index slots, so the output `Vec` is ordered by input index no
+//! matter which worker ran which item. Worker identity is exposed to the
+//! closure so callers can hand each worker its own reusable scratch
+//! buffer (e.g. one [`crate::bitplane::BlockScratch`] per worker).
+//!
+//! A pool of `threads <= 1` (or a batch of one item) runs inline on the
+//! caller's thread — no spawn, no synchronization — which keeps the
+//! single-block path allocation-free.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A fixed-width scoped worker pool. Holds no threads between calls —
+/// workers live only for the duration of one [`WorkerPool::run`] — so the
+/// pool is cheap to embed in every device and trivially `Send`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool that fans work out over `threads` workers. `0` and `1` both
+    /// mean "run inline" (the serial reference path).
+    pub fn new(threads: usize) -> WorkerPool {
+        WorkerPool { threads: threads.max(1) }
+    }
+
+    /// Worker width (1 = serial).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Map `f` over `items`, returning results **in item order**.
+    ///
+    /// `f(worker, index, item)` — `worker` is a stable id in
+    /// `0..self.threads()` (workers never run the same index twice, and a
+    /// given worker runs one item at a time, so `worker` can index
+    /// per-worker mutable state behind a `Mutex` without contention);
+    /// `index` is the item's position in `items`.
+    ///
+    /// Work is distributed dynamically (shared atomic cursor), so skewed
+    /// per-item cost — one incompressible block among compressible ones —
+    /// does not idle workers the way static chunking would.
+    pub fn run<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, usize, T) -> R + Sync,
+    {
+        let n = items.len();
+        if self.threads <= 1 || n <= 1 {
+            return items.into_iter().enumerate().map(|(i, t)| f(0, i, t)).collect();
+        }
+        let work: Vec<Mutex<Option<T>>> =
+            items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let cursor = AtomicUsize::new(0);
+        let workers = self.threads.min(n);
+        std::thread::scope(|s| {
+            for w in 0..workers {
+                let work = &work;
+                let slots = &slots;
+                let cursor = &cursor;
+                let f = &f;
+                s.spawn(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let item = work[i]
+                        .lock()
+                        .expect("pool item lock")
+                        .take()
+                        .expect("each index is claimed exactly once");
+                    let r = f(w, i, item);
+                    *slots[i].lock().expect("pool slot lock") = Some(r);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .expect("worker panics propagate out of scope, not here")
+                    .expect("every index was processed")
+            })
+            .collect()
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        WorkerPool::new(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_keep_item_order() {
+        for threads in [1usize, 2, 4, 8] {
+            let pool = WorkerPool::new(threads);
+            let items: Vec<u64> = (0..97).collect();
+            let out = pool.run(items, |_, i, x| {
+                assert_eq!(i as u64, x);
+                x * 3 + 1
+            });
+            assert_eq!(out, (0..97).map(|x| x * 3 + 1).collect::<Vec<u64>>());
+        }
+    }
+
+    #[test]
+    fn worker_ids_are_in_range_and_exclusive_per_item() {
+        let pool = WorkerPool::new(4);
+        let out = pool.run((0..256).collect::<Vec<i32>>(), |w, _, x| (w, x));
+        for (w, _) in &out {
+            assert!(*w < 4);
+        }
+        // all items present exactly once, in order
+        let xs: Vec<i32> = out.iter().map(|&(_, x)| x).collect();
+        assert_eq!(xs, (0..256).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn zero_threads_means_inline() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        let out = pool.run(vec![5, 6], |w, i, x| {
+            assert_eq!(w, 0);
+            x + i
+        });
+        assert_eq!(out, vec![5, 7]);
+    }
+
+    #[test]
+    fn empty_and_single_item_batches() {
+        let pool = WorkerPool::new(4);
+        let out: Vec<i32> = pool.run(Vec::<i32>::new(), |_, _, x| x);
+        assert!(out.is_empty());
+        let out = pool.run(vec![9], |w, i, x| {
+            assert_eq!((w, i), (0, 0)); // single item runs inline
+            x
+        });
+        assert_eq!(out, vec![9]);
+    }
+
+    #[test]
+    fn per_worker_state_is_uncontended() {
+        let pool = WorkerPool::new(3);
+        let scratch: Vec<Mutex<Vec<u8>>> = (0..3).map(|_| Mutex::new(Vec::new())).collect();
+        let out = pool.run((0..64u8).collect::<Vec<u8>>(), |w, _, x| {
+            let mut s = scratch[w].try_lock().expect("worker-owned scratch is uncontended");
+            s.clear();
+            s.push(x);
+            s[0] as u32
+        });
+        assert_eq!(out, (0..64).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,141 @@
+//! Corrupted-stream robustness: truncated, bit-flipped, and pure-garbage
+//! codec streams must come back as `Err` (or, where the corruption happens
+//! to decode, as a well-formed buffer of exactly the expected length) —
+//! never a panic, never an out-of-bounds read — through both the
+//! allocating `decompress` and the scratch-path `decompress_into`.
+//!
+//! The device serves attacker-shaped bytes only from its own writes, but
+//! plane streams cross the (simulated) DRAM and metadata may desync; the
+//! decode path is the trust boundary, so it gets fuzz-style coverage.
+
+use trace_cxl::codec::{self, CodecKind, CodecPolicy};
+use trace_cxl::util::check::{arb_bytes, props};
+use trace_cxl::util::Rng;
+
+const KINDS: [CodecKind; 4] =
+    [CodecKind::Raw, CodecKind::Rle, CodecKind::Lz4, CodecKind::Zstd];
+
+/// Decode must either error or produce exactly `n` bytes; both entry
+/// points must agree on success/failure and on successful payloads.
+fn assert_decode_well_behaved(kind: CodecKind, stream: &[u8], n: usize) {
+    let alloc = codec::decompress(kind, stream, n);
+    let mut buf = vec![0u8; n];
+    let into = codec::decompress_into(kind, stream, &mut buf);
+    match (&alloc, &into) {
+        (Ok(v), Ok(())) => {
+            assert_eq!(v.len(), n, "{kind:?}: wrong decode length");
+            assert_eq!(v[..], buf[..], "{kind:?}: entry points disagree");
+        }
+        (Err(_), Err(_)) => {}
+        _ => panic!(
+            "{kind:?}: decompress ({}) and decompress_into ({}) disagree",
+            if alloc.is_ok() { "ok" } else { "err" },
+            if into.is_ok() { "ok" } else { "err" },
+        ),
+    }
+}
+
+#[test]
+fn truncated_streams_error_never_panic() {
+    props(0xAB1, 150, |r| {
+        let data = arb_bytes(r, 2048);
+        for kind in KINDS {
+            let enc = codec::compress(kind, &data);
+            // every truncation point, for small streams; sampled for large
+            let cuts: Vec<usize> = if enc.len() <= 64 {
+                (0..enc.len()).collect()
+            } else {
+                (0..64).map(|_| r.below(enc.len())).collect()
+            };
+            for cut in cuts {
+                assert_decode_well_behaved(kind, &enc[..cut], data.len());
+            }
+        }
+    });
+}
+
+#[test]
+fn bitflipped_streams_never_panic_or_overrun() {
+    props(0xAB2, 150, |r| {
+        let data = arb_bytes(r, 2048);
+        for kind in KINDS {
+            let mut enc = codec::compress(kind, &data);
+            if enc.is_empty() {
+                continue;
+            }
+            for _ in 0..8 {
+                let at = r.below(enc.len());
+                let bit = 1u8 << r.below(8);
+                enc[at] ^= bit;
+                assert_decode_well_behaved(kind, &enc, data.len());
+                enc[at] ^= bit; // restore for the next flip
+            }
+        }
+    });
+}
+
+#[test]
+fn pure_garbage_never_panics() {
+    props(0xAB3, 200, |r| {
+        let garbage = arb_bytes(r, 512);
+        let n = r.below(2049);
+        for kind in KINDS {
+            assert_decode_well_behaved(kind, &garbage, n);
+        }
+    });
+}
+
+#[test]
+fn wrong_expected_length_errors() {
+    props(0xAB4, 100, |r| {
+        let data = arb_bytes(r, 1024);
+        if data.is_empty() {
+            return;
+        }
+        for kind in KINDS {
+            let enc = codec::compress(kind, &data);
+            // shorter and longer than the true decoded size must error
+            // (never a silent truncation or over-read)
+            assert!(codec::decompress(kind, &enc, data.len() - 1).is_err(), "{kind:?} short");
+            assert!(codec::decompress(kind, &enc, data.len() + 1).is_err(), "{kind:?} long");
+            let mut short = vec![0u8; data.len() - 1];
+            assert!(codec::decompress_into(kind, &enc, &mut short).is_err(), "{kind:?}");
+            let mut long = vec![0u8; data.len() + 1];
+            assert!(codec::decompress_into(kind, &enc, &mut long).is_err(), "{kind:?}");
+        }
+    });
+}
+
+#[test]
+fn corrupted_plane_stream_surfaces_as_device_error() {
+    // end-to-end: a block whose compressed plane stream is corrupted mid
+    // flight must complete as Err through the transaction API (serial,
+    // pooled, and cached paths), not kill the process
+    use trace_cxl::bitplane::KvWindow;
+    use trace_cxl::cxl::{CxlDevice, Design, MemDevice, SubmissionQueue, Transaction};
+    use trace_cxl::util::check::smooth_kv;
+
+    let mut r = Rng::new(0xAB5);
+    let kv = smooth_kv(&mut r, 32, 64);
+    for (pool, cache) in [(1usize, 0usize), (4, 64)] {
+        let mut d = CxlDevice::new(Design::Trace, CodecPolicy::AllBest);
+        d.set_pool(pool);
+        d.set_decode_cache(cache);
+        d.submit_one(Transaction::WriteKv {
+            block_addr: 0x0,
+            words: kv.clone(),
+            window: KvWindow::new(32, 64),
+        })
+        .unwrap();
+        // corrupt the largest compressed plane stream in place
+        assert!(d.test_corrupt_block(0x0), "block 0x0 must exist with a corruptible stream");
+        let mut sq = SubmissionQueue::new();
+        sq.submit(Transaction::ReadFull { block_addr: 0x0 });
+        sq.submit(Transaction::ReadFull { block_addr: 0x0 });
+        let cs = d.drain_at(&mut sq, 0.0);
+        assert_eq!(cs.len(), 2);
+        for c in cs {
+            assert!(c.result.is_err(), "pool={pool} cache={cache}: corrupt stream must err");
+        }
+    }
+}

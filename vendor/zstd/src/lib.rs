@@ -83,6 +83,25 @@ pub mod bulk {
         }
     }
 
+    /// Decompress into a caller-provided buffer (the real crate's
+    /// `bulk::decompress_to_buffer` shape): writes the decoded payload to
+    /// the front of `dst` and returns the number of bytes written, erroring
+    /// if the payload would exceed `dst.len()`. Performs no allocation.
+    pub fn decompress_to_buffer(src: &[u8], dst: &mut [u8]) -> io::Result<usize> {
+        let (&mode, rest) = src.split_first().ok_or_else(|| bad("empty stream"))?;
+        match mode {
+            MODE_RAW => {
+                if rest.len() > dst.len() {
+                    return Err(bad("raw payload exceeds capacity"));
+                }
+                dst[..rest.len()].copy_from_slice(rest);
+                Ok(rest.len())
+            }
+            MODE_HUFF => huff_decompress_into(rest, dst),
+            _ => Err(bad("bad mode byte")),
+        }
+    }
+
     /// Huffman code lengths per symbol, or None when the input is empty or
     /// pathologically deep (caller falls back to the raw mode).
     fn code_lengths(freq: &[u64; 256]) -> Option<Vec<u32>> {
@@ -182,9 +201,25 @@ pub mod bulk {
     }
 
     fn huff_decompress(src: &[u8], capacity: usize) -> io::Result<Vec<u8>> {
-        let (n, varint_len) = get_varint(src).ok_or_else(|| bad("truncated length"))?;
+        let (n, _) = get_varint(src).ok_or_else(|| bad("truncated length"))?;
         let n = usize::try_from(n).map_err(|_| bad("length overflow"))?;
         if n > capacity {
+            return Err(bad("decoded length exceeds capacity"));
+        }
+        let mut out = vec![0u8; n];
+        let written = huff_decompress_into(src, &mut out)?;
+        debug_assert_eq!(written, n);
+        Ok(out)
+    }
+
+    /// Decode a MODE_HUFF payload into the front of `dst`; returns the
+    /// decoded length. The canonical table (fixed 49-slot arrays, symbols
+    /// ordered by `(len, symbol)` exactly as the encoder emitted them) is
+    /// rebuilt on the stack, so the function allocates nothing.
+    fn huff_decompress_into(src: &[u8], dst: &mut [u8]) -> io::Result<usize> {
+        let (n, varint_len) = get_varint(src).ok_or_else(|| bad("truncated length"))?;
+        let n = usize::try_from(n).map_err(|_| bad("length overflow"))?;
+        if n > dst.len() {
             return Err(bad("decoded length exceeds capacity"));
         }
         let rest = &src[varint_len..];
@@ -193,40 +228,59 @@ pub mod bulk {
         if rest.len() < 2 * k {
             return Err(bad("truncated symbol table"));
         }
-        let mut pairs: Vec<(u8, u32)> = Vec::with_capacity(k);
+        // Symbols sorted by (len, symbol) — the wire order IS that order,
+        // but a corrupt table may violate it; sort via fixed-size counting
+        // (lengths are <= MAX_CODE_LEN) to stay allocation-free.
+        const SLOTS: usize = MAX_CODE_LEN as usize + 1;
+        let mut count = [0usize; SLOTS]; // symbols per length
         for i in 0..k {
-            let sym = rest[2 * i];
             let len = rest[2 * i + 1] as u32;
             if len == 0 || len > MAX_CODE_LEN {
                 return Err(bad("bad code length"));
             }
-            pairs.push((sym, len));
+            count[len as usize] += 1;
+        }
+        // per-length symbol lists live in one flat [u8; 256] (k <= 256),
+        // sliced by prefix sums; within a length, insertion keeps symbol
+        // order only if the wire was sorted — sort each bucket after fill.
+        let mut start = [0usize; SLOTS + 1];
+        for l in 0..SLOTS {
+            start[l + 1] = start[l] + count[l];
+        }
+        let mut syms = [0u8; 256];
+        let mut fill = start; // next write slot per length
+        for i in 0..k {
+            let sym = rest[2 * i];
+            let len = rest[2 * i + 1] as usize;
+            syms[fill[len]] = sym;
+            fill[len] += 1;
+        }
+        for l in 1..SLOTS {
+            syms[start[l]..start[l + 1]].sort_unstable();
         }
         let bits = &rest[2 * k..];
-        pairs.sort_by_key(|&(s, l)| (l, s));
-        let max_len = pairs.last().map(|&(_, l)| l).unwrap_or(0) as usize;
-        // Rebuild canonical layout: per length, first code + symbol list.
-        let mut first = vec![0u64; max_len + 1];
-        let mut syms_at: Vec<Vec<u8>> = vec![Vec::new(); max_len + 1];
+        let max_len = (1..SLOTS).rev().find(|&l| count[l] > 0).unwrap_or(0);
+        // Canonical layout: first code value per length.
+        let mut first = [0u64; SLOTS];
         let mut code = 0u64;
         let mut prev_len = 0u32;
-        for &(s, l) in &pairs {
-            code <<= l - prev_len;
-            if syms_at[l as usize].is_empty() {
-                first[l as usize] = code;
+        for l in 1..=max_len {
+            if count[l] == 0 {
+                continue;
             }
-            syms_at[l as usize].push(s);
-            code += 1;
-            prev_len = l;
+            code <<= (l as u32) - prev_len;
+            first[l] = code;
+            code += count[l] as u64;
+            prev_len = l as u32;
             if code > (1u64 << l) {
                 return Err(bad("over-subscribed code table"));
             }
         }
-        let mut out = Vec::with_capacity(n);
+        let mut w = 0usize;
         let mut code = 0u64;
         let mut len = 0usize;
         'outer: for byte_idx in 0..=bits.len() {
-            if out.len() == n {
+            if w == n {
                 break;
             }
             if byte_idx == bits.len() {
@@ -239,23 +293,24 @@ pub mod bulk {
                 if len > max_len {
                     return Err(bad("invalid code"));
                 }
-                if !syms_at[len].is_empty() && code >= first[len] {
+                if count[len] > 0 && code >= first[len] {
                     let idx = (code - first[len]) as usize;
-                    if idx < syms_at[len].len() {
-                        out.push(syms_at[len][idx]);
+                    if idx < count[len] {
+                        dst[w] = syms[start[len] + idx];
+                        w += 1;
                         code = 0;
                         len = 0;
-                        if out.len() == n {
+                        if w == n {
                             break 'outer;
                         }
                     }
                 }
             }
         }
-        if out.len() != n {
+        if w != n {
             return Err(bad("truncated bitstream"));
         }
-        Ok(out)
+        Ok(n)
     }
 
     #[cfg(test)]
@@ -342,6 +397,43 @@ pub mod bulk {
         fn capacity_is_enforced() {
             let enc = compress(&[1, 2, 3, 4, 5], 3).unwrap();
             assert!(decompress(&enc, 2).is_err());
+        }
+
+        #[test]
+        fn to_buffer_matches_alloc_path() {
+            let mut x = X(0xC0FFEE);
+            for case in 0..100 {
+                let len = (x.next() % 3000) as usize;
+                let mut data = vec![0u8; len];
+                if case % 2 == 0 {
+                    for b in data.iter_mut() {
+                        *b = (x.next() % 7) as u8; // compressible
+                    }
+                } else {
+                    for b in data.iter_mut() {
+                        *b = x.next() as u8; // raw bypass
+                    }
+                }
+                let enc = compress(&data, 3).unwrap();
+                let mut dst = vec![0xEEu8; len + 8];
+                let n = decompress_to_buffer(&enc, &mut dst).unwrap();
+                assert_eq!(n, len);
+                assert_eq!(&dst[..n], &data[..]);
+                if len > 0 {
+                    let mut small = vec![0u8; len - 1];
+                    assert!(decompress_to_buffer(&enc, &mut small).is_err());
+                }
+            }
+        }
+
+        #[test]
+        fn to_buffer_rejects_garbage() {
+            let mut dst = [0u8; 64];
+            assert!(decompress_to_buffer(&[], &mut dst).is_err());
+            assert!(decompress_to_buffer(&[9, 9, 9], &mut dst).is_err());
+            assert!(decompress_to_buffer(&[1, 2, 3, 4], &mut dst).is_err());
+            let enc = compress(&[5u8; 100], 3).unwrap();
+            assert!(decompress_to_buffer(&enc[..enc.len() - 1], &mut dst).is_err());
         }
     }
 }
