@@ -8,7 +8,12 @@
 //! class with quarter-length decodes) through `Engine::submit_at`, and
 //! reports offered vs served load plus the per-class latency breakdown.
 //! Without `--rate` every request is submitted at model time 0, as the
-//! earlier revisions did.
+//! earlier revisions did. `--scenario NAME` instead draws the workload
+//! from the named scenario library (`gen::scenarios`; rag-fanout
+//! exercises refcounted shared-prefix KV pages), `--seed` controls every
+//! generator path, and `--trace-out FILE` captures the whole run as a
+//! compact binary trace replayable with `--example trace_tool`
+//! (docs/TRACE_FORMAT.md).
 //!
 //! With AOT artifacts present (`make artifacts`, requires the `pjrt`
 //! feature) the real ~100M-parameter compiled transformer serves the
@@ -22,9 +27,10 @@
 use trace_cxl::codec::CodecPolicy;
 use trace_cxl::coordinator::{Engine, EngineConfig, SchedKind, SlaClass};
 use trace_cxl::cxl::{Design, MemDevice};
-use trace_cxl::gen::{RequestGen, SynthCorpus};
+use trace_cxl::gen::{scenarios, RequestGen, SynthCorpus};
 use trace_cxl::runtime::{MockBackend, ModelBackend, PjrtEngine};
 use trace_cxl::tier::KvPolicy;
+use trace_cxl::trace::{CaptureMeta, TraceWriter};
 use trace_cxl::util::cli::Args;
 use trace_cxl::util::stats::human_bytes;
 use trace_cxl::util::Rng;
@@ -38,17 +44,17 @@ fn main() -> anyhow::Result<()> {
     match PjrtEngine::load(&dir) {
         Ok(backend) => {
             println!("compiled artifacts from {dir:?} in {:.1}s", t0.elapsed().as_secs_f64());
-            run(backend, &args)
+            run(backend, &args, "pjrt")
         }
         Err(e) => {
             println!("note: {e}");
             println!("falling back to the deterministic mock backend\n");
-            run(MockBackend::tiny(), &args)
+            run(MockBackend::tiny(), &args, "mock")
         }
     }
 }
 
-fn run<B: ModelBackend>(backend: B, args: &Args) -> anyhow::Result<()> {
+fn run<B: ModelBackend>(backend: B, args: &Args, backend_name: &str) -> anyhow::Result<()> {
     let dims = backend.dims().clone();
     let n_requests = args.get_usize("requests", 6);
     let max_new = args.get_usize("max-new", 64);
@@ -57,6 +63,9 @@ fn run<B: ModelBackend>(backend: B, args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown --policy (fcfs|sjf|priority)"))?;
     let rate = args.get_f64("rate", 0.0);
     let interactive_frac = args.get_f64("interactive-frac", 0.5);
+    let seed = args.get_u64("seed", 11);
+    let scenario = args.get("scenario").map(str::to_string);
+    let compute_ns = args.get_f64("compute-ns", 2000.0);
     println!(
         "model: {} layers, d_model {}, vocab {} (~{:.1}M params), batch {}, t_max {}",
         dims.layers,
@@ -81,18 +90,52 @@ fn run<B: ModelBackend>(backend: B, args: &Args) -> anyhow::Result<()> {
             greedy: true,
             shards,
             overlap,
-            compute_ns: args.get_f64("compute-ns", 2000.0),
+            compute_ns,
             sched,
             ..Default::default()
         },
     );
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    if trace_out.is_some() {
+        // MockBackend::tiny() is seeded 42; replay rebuilds it from here
+        let mut meta = CaptureMeta::mock(dims.clone(), 42);
+        meta.backend = backend_name.to_string();
+        meta.hbm_kv_bytes = hbm_kv;
+        meta.shards = shards;
+        meta.overlap = overlap;
+        meta.sched = sched;
+        meta.compute_ns = compute_ns;
+        meta.scenario = scenario.clone();
+        meta.gen_seed = seed;
+        engine.set_trace_sink(TraceWriter::new(&meta.to_json()));
+    }
 
     let cap = max_new.min(dims.t_max.saturating_sub(dims.t_prompt + 2)).max(1);
     let mut offered_span_ns = 0.0f64;
-    if rate > 0.0 {
+    if let Some(name) = &scenario {
+        let sc = scenarios::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown --scenario '{name}' (one of: {})", scenarios::names())
+        })?;
+        for r in sc.generate(seed, n_requests, dims.vocab as u32, dims.t_prompt, cap) {
+            offered_span_ns = offered_span_ns.max(r.arrival_ns);
+            match r.prefix {
+                Some(p) => engine.submit_shared_at(r.prompt, r.max_new, r.arrival_ns, r.sla, p),
+                None => engine.submit_at(r.prompt, r.max_new, r.arrival_ns, r.sla),
+            };
+        }
+        println!(
+            "submitted {n_requests} requests from scenario '{name}' (seed {seed}) over {:.1} us, \
+             policy {}, HBM-KV {}, {} shard(s), {} pipeline",
+            offered_span_ns / 1000.0,
+            sched.name(),
+            human_bytes(hbm_kv as f64),
+            shards,
+            if overlap { "overlapped" } else { "serial" }
+        );
+    } else if rate > 0.0 {
         // open-loop Poisson arrivals: the engine's clock must reach an
         // arrival before the scheduler may admit it
-        let mut rng = Rng::new(args.get_u64("seed", 11));
+        let mut rng = Rng::new(seed);
         let gen = RequestGen::new(rate, 2, dims.t_prompt, max_new, dims.vocab as u32);
         for r in gen.generate(&mut rng, n_requests) {
             let interactive = rng.chance(interactive_frac);
@@ -115,7 +158,7 @@ fn run<B: ModelBackend>(backend: B, args: &Args) -> anyhow::Result<()> {
             if overlap { "overlapped" } else { "serial" }
         );
     } else {
-        let mut corpus = SynthCorpus::new(dims.vocab as u32, 7);
+        let mut corpus = SynthCorpus::new(dims.vocab as u32, seed);
         let prompt_span = dims.t_prompt.saturating_sub(2).max(1);
         for i in 0..n_requests {
             let plen = (2 + (i * 5) % prompt_span).min(dims.t_prompt);
@@ -132,6 +175,17 @@ fn run<B: ModelBackend>(backend: B, args: &Args) -> anyhow::Result<()> {
     }
 
     engine.run_to_completion(200_000)?;
+    if let Some(path) = &trace_out {
+        let w = engine.take_trace_sink().expect("trace sink was installed above");
+        let records = w.records();
+        let bytes = w.finish();
+        std::fs::write(path, &bytes)?;
+        println!(
+            "trace: {records} records, {} -> {}",
+            human_bytes(bytes.len() as f64),
+            path.display()
+        );
+    }
     let responses = engine.take_responses();
 
     println!("\n-- results --");

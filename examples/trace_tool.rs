@@ -1,0 +1,171 @@
+//! Trace tooling CLI: record named scenarios, decode captures, replay
+//! them bit-identically, and diff two traces.
+//!
+//! Subcommands:
+//!
+//! * `record` — run a named scenario (`gen::scenarios`) through a mock
+//!   engine with a trace sink attached and write the capture.
+//! * `decode` — parse a trace, print the run summary and the first
+//!   records (validates the whole stream: truncation/corruption errors).
+//! * `replay` — rebuild the captured engine from the trace header
+//!   (`CaptureMeta`), re-drive the recorded submissions, and fail unless
+//!   the re-run matches the capture bit-for-bit.
+//! * `diff` — compare two traces (submissions, token streams,
+//!   TTFT/TPOT, device traffic) and fail on any divergence.
+//!
+//! Format: docs/TRACE_FORMAT.md. Capture semantics: docs/SERVING.md.
+//!
+//! Run: `cargo run --release --example trace_tool -- record --out run.trc --scenario rag-fanout`
+
+use anyhow::{anyhow, ensure, Result};
+use trace_cxl::coordinator::SchedKind;
+use trace_cxl::gen::scenarios;
+use trace_cxl::runtime::ModelDims;
+use trace_cxl::trace::{diff, resubmit, CaptureMeta, Trace, TraceWriter};
+use trace_cxl::util::cli::Args;
+use trace_cxl::util::stats::human_bytes;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("record") => record(&args),
+        Some("decode") => decode(&args),
+        Some("replay") => replay(&args),
+        Some("diff") => cmd_diff(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "trace_tool — binary serving-trace capture/replay/diff\n\
+         USAGE: cargo run --release --example trace_tool -- <record|decode|replay|diff> [--options]\n\
+         \n\
+         record  --out FILE [--scenario NAME] [--seed N] [--requests N] [--max-new N]\n\
+         \x20        [--shards N] [--policy fcfs|sjf|priority] [--overlap] [--hbm-kv BYTES]\n\
+         decode  --in FILE [--limit N]\n\
+         replay  --in FILE [--out FILE]\n\
+         diff    --a FILE --b FILE\n\
+         \n\
+         scenarios: {}",
+        scenarios::names()
+    );
+}
+
+fn in_file(args: &Args) -> Result<Vec<u8>> {
+    let path = args.get("in").ok_or_else(|| anyhow!("missing --in FILE"))?;
+    Ok(std::fs::read(path)?)
+}
+
+/// Recording dims: small enough to run in milliseconds, prompts long
+/// enough (vs `tier::PAGE_TOKENS`) that rag-fanout actually shares pages.
+fn record_dims() -> ModelDims {
+    ModelDims {
+        layers: 2,
+        batch: 4,
+        t_max: 256,
+        t_prompt: 112,
+        d_model: 16,
+        heads: 2,
+        head_dim: 4,
+        ffn: 32,
+        vocab: 64,
+    }
+}
+
+fn record(args: &Args) -> Result<()> {
+    let out = args.get("out").ok_or_else(|| anyhow!("record needs --out FILE"))?;
+    let name = args.get_or("scenario", "diurnal").to_string();
+    let sc = scenarios::by_name(&name).ok_or_else(|| {
+        anyhow!("unknown --scenario '{name}' (one of: {})", scenarios::names())
+    })?;
+    let seed = args.get_u64("seed", 11);
+    let n = args.get_usize("requests", 12);
+    let max_new = args.get_usize("max-new", 16);
+    let dims = record_dims();
+
+    let mut meta = CaptureMeta::mock(dims.clone(), 42);
+    // a ~2-page HBM KV budget forces the CXL spill path early
+    meta.hbm_kv_bytes = args.get_u64("hbm-kv", (dims.kv_entry_len() * 2 * 20) as u64);
+    meta.shards = args.get_usize("shards", 1).max(1);
+    meta.overlap = args.flag("overlap");
+    meta.sched = SchedKind::parse(args.get_or("policy", "fcfs"))
+        .ok_or_else(|| anyhow!("unknown --policy (fcfs|sjf|priority)"))?;
+    meta.scenario = Some(name.clone());
+    meta.gen_seed = seed;
+
+    let mut engine = meta.build_mock_engine()?;
+    engine.set_trace_sink(TraceWriter::new(&meta.to_json()));
+    let cap = max_new.min(dims.t_max.saturating_sub(dims.t_prompt + 2)).max(1);
+    for r in sc.generate(seed, n, dims.vocab as u32, dims.t_prompt, cap) {
+        match r.prefix {
+            Some(p) => engine.submit_shared_at(r.prompt, r.max_new, r.arrival_ns, r.sla, p),
+            None => engine.submit_at(r.prompt, r.max_new, r.arrival_ns, r.sla),
+        };
+    }
+    engine.run_to_completion(400_000)?;
+    ensure!(
+        engine.metrics.requests_finished as usize == n,
+        "recording must run the whole scenario to completion"
+    );
+    let w = engine.take_trace_sink().expect("sink installed above");
+    let records = w.records();
+    let bytes = w.finish();
+    std::fs::write(out, &bytes)?;
+    println!(
+        "recorded scenario '{name}' (seed {seed}, {n} requests): {records} records, {} -> {out}",
+        human_bytes(bytes.len() as f64)
+    );
+    Ok(())
+}
+
+fn decode(args: &Args) -> Result<()> {
+    let bytes = in_file(args)?;
+    let t = Trace::parse(&bytes)?;
+    println!("{}", t.summary());
+    let limit = args.get_usize("limit", 20);
+    for r in t.records.iter().take(limit) {
+        println!("  {r:?}");
+    }
+    if t.records.len() > limit {
+        println!("  ... {} more records (raise --limit to see them)", t.records.len() - limit);
+    }
+    Ok(())
+}
+
+fn replay(args: &Args) -> Result<()> {
+    let bytes = in_file(args)?;
+    let captured = Trace::parse(&bytes)?;
+    let meta = CaptureMeta::from_json(&captured.meta)?;
+    let mut engine = meta.build_mock_engine()?;
+    engine.set_trace_sink(TraceWriter::new(&captured.meta));
+    let n = resubmit(&mut engine, &captured);
+    engine.run_to_completion(400_000)?;
+    let w = engine.take_trace_sink().expect("sink installed above");
+    let replayed_bytes = w.finish();
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &replayed_bytes)?;
+    }
+    let replayed = Trace::parse(&replayed_bytes)?;
+    let d = diff(&captured, &replayed);
+    ensure!(d.is_empty(), "replay diverged from the capture:\n{}", d.report());
+    println!(
+        "replay OK: {n} submissions re-driven, {} records match the capture bit-for-bit",
+        replayed.records.len()
+    );
+    Ok(())
+}
+
+fn cmd_diff(args: &Args) -> Result<()> {
+    let pa = args.get("a").ok_or_else(|| anyhow!("diff needs --a FILE"))?;
+    let pb = args.get("b").ok_or_else(|| anyhow!("diff needs --b FILE"))?;
+    let a = Trace::parse(&std::fs::read(pa)?)?;
+    let b = Trace::parse(&std::fs::read(pb)?)?;
+    let d = diff(&a, &b);
+    println!("{}", d.report());
+    ensure!(d.is_empty(), "traces differ ({} line(s) above)", d.lines.len());
+    Ok(())
+}

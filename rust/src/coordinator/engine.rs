@@ -72,7 +72,8 @@
 
 use super::metrics::Metrics;
 use super::request::{
-    AdmissionQueue, EngineEvent, Request, RequestState, Response, ResumeState, SlaClass,
+    AdmissionQueue, EngineEvent, PrefixShare, Request, RequestState, Response, ResumeState,
+    SlaClass,
 };
 use super::sched::{QueuedView, SchedKind, SchedView, SchedulerPolicy, SlotView};
 use crate::codec::CodecPolicy;
@@ -83,6 +84,7 @@ use crate::formats::{bf16_from_f32, bf16_to_f32};
 use crate::runtime::ModelBackend;
 use crate::sim::{EventQueue, ResourceTimeline, SimClock};
 use crate::tier::{HbmPartition, KvPageManager, KvPolicy, PageTier, PAGE_TOKENS};
+use crate::trace::TraceWriter;
 use anyhow::Result;
 use std::collections::{HashMap, HashSet};
 use std::time::Instant;
@@ -251,6 +253,12 @@ pub struct Engine<B: ModelBackend> {
     next_seq: u64,
     /// Streaming lifecycle log drained by [`Engine::poll_events`].
     events: Vec<EngineEvent>,
+    /// Retention cap of `events` (default [`MAX_EVENT_LOG`]; test hook:
+    /// [`Engine::set_event_log_cap`]).
+    event_log_cap: usize,
+    /// Optional capture sink: receives every event inline (no retention
+    /// cap) plus per-step traffic summaries. [`Engine::set_trace_sink`].
+    sink: Option<TraceWriter>,
     /// Ready-at fence of this step's preemption restores (consumed by the
     /// next compute start).
     restore_ready_ns: f64,
@@ -303,6 +311,8 @@ impl<B: ModelBackend> Engine<B> {
             slots,
             next_seq: 0,
             events: Vec::new(),
+            event_log_cap: MAX_EVENT_LOG,
+            sink: None,
             restore_ready_ns: 0.0,
             metrics: Metrics::new(),
             responses: Vec::new(),
@@ -338,9 +348,45 @@ impl<B: ModelBackend> Engine<B> {
         arrival_ns: f64,
         sla: SlaClass,
     ) -> u64 {
+        self.submit_request(prompt, max_new, arrival_ns, sla, None)
+    }
+
+    /// [`Engine::submit_at`] with a shared-prefix declaration: the first
+    /// `prefix.tokens` prompt tokens (rounded down to whole
+    /// [`PAGE_TOKENS`] pages; clamped to the prompt length) alias one
+    /// refcounted set of device-resident KV pages keyed by `prefix.key`.
+    /// The first sharer to commit each prefix page writes it; later
+    /// sharers attach and read the shared content back, so N RAG fan-out
+    /// requests hold one device copy of the context instead of N.
+    pub fn submit_shared_at(
+        &mut self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        arrival_ns: f64,
+        sla: SlaClass,
+        prefix: PrefixShare,
+    ) -> u64 {
+        self.submit_request(prompt, max_new, arrival_ns, sla, Some(prefix))
+    }
+
+    fn submit_request(
+        &mut self,
+        prompt: Vec<u32>,
+        max_new: usize,
+        arrival_ns: f64,
+        sla: SlaClass,
+        prefix: Option<PrefixShare>,
+    ) -> u64 {
         let id = self.next_seq;
         self.next_seq += 1;
-        let req = Request::arriving(id, prompt, max_new, arrival_ns.max(0.0), sla);
+        let mut req = Request::arriving(id, prompt, max_new, arrival_ns.max(0.0), sla);
+        req.prefix = prefix.map(|p| PrefixShare {
+            key: p.key,
+            tokens: p.tokens.min(req.prompt.len()),
+        });
+        if let Some(w) = self.sink.as_mut() {
+            w.record_submit(id, req.arrival_ns, sla, max_new, req.prefix, &req.prompt);
+        }
         // keep `future` sorted by (arrival, id); submissions usually come
         // in arrival order, making this an append
         let at = self
@@ -348,6 +394,27 @@ impl<B: ModelBackend> Engine<B> {
             .partition_point(|r| (r.arrival_ns, r.id) <= (req.arrival_ns, req.id));
         self.future.insert(at, req);
         id
+    }
+
+    /// Attach a capture sink. From now on every lifecycle event is
+    /// encoded into it inline — submissions, admission/token/preempt/
+    /// resume/finish events, poll-log gap markers, and one traffic
+    /// summary per decode step — with no retention cap, unlike the
+    /// [`Engine::poll_events`] log. Replaces any previous sink.
+    pub fn set_trace_sink(&mut self, sink: TraceWriter) {
+        self.sink = Some(sink);
+    }
+
+    /// Detach and return the capture sink (call `finish()` on it to get
+    /// the trace bytes).
+    pub fn take_trace_sink(&mut self) -> Option<TraceWriter> {
+        self.sink.take()
+    }
+
+    /// Override the poll-log retention cap (min 2). A test hook: shedding
+    /// at the default 64Ki cap needs tens of thousands of events.
+    pub fn set_event_log_cap(&mut self, cap: usize) {
+        self.event_log_cap = cap.max(2);
     }
 
     /// Drain completed-request summaries (the finished-only view of the
@@ -366,11 +433,25 @@ impl<B: ModelBackend> Engine<B> {
         std::mem::take(&mut self.events)
     }
 
-    /// Append to the event log, shedding the oldest half at the cap.
+    /// Append to the event log, shedding the oldest half at the cap. A
+    /// shed leaves a synthetic [`EngineEvent::EventsDropped`] marker at
+    /// the head of the surviving log (and in the capture sink), so
+    /// consumers see the gap explicitly instead of inferring it from
+    /// `Metrics::events_dropped`.
     fn push_event(&mut self, ev: EngineEvent) {
-        if self.events.len() >= MAX_EVENT_LOG {
-            self.events.drain(..MAX_EVENT_LOG / 2);
-            self.metrics.events_dropped += (MAX_EVENT_LOG / 2) as u64;
+        if self.events.len() >= self.event_log_cap {
+            let shed = (self.event_log_cap / 2).max(1);
+            let gap_end = self.events[shed - 1].at_ns();
+            self.events.drain(..shed);
+            self.metrics.events_dropped += shed as u64;
+            let marker = EngineEvent::EventsDropped { at_ns: gap_end, count: shed as u64 };
+            if let Some(w) = self.sink.as_mut() {
+                w.record_event(&marker);
+            }
+            self.events.insert(0, marker);
+        }
+        if let Some(w) = self.sink.as_mut() {
+            w.record_event(&ev);
         }
         self.events.push(ev);
     }
@@ -814,7 +895,13 @@ impl<B: ModelBackend> Engine<B> {
     /// interleaves consecutive spilled pages across shards.
     fn commit_page(&mut self, slot: usize, page: usize, now_ns: f64) -> Result<()> {
         let pb = self.page_bytes();
-        let seq = self.slots[slot].req.as_ref().expect("page commit on an empty slot").id;
+        let req = self.slots[slot].req.as_ref().expect("page commit on an empty slot");
+        let seq = req.id;
+        if let Some(pfx) = req.prefix {
+            if (page + 1) * PAGE_TOKENS <= pfx.tokens {
+                return self.commit_shared_page(slot, seq, page, pfx.key, now_ns);
+            }
+        }
         if self.hbm.try_alloc_kv(pb) {
             self.metrics.pages_hbm += 1;
             self.pager.add_page(seq, page, true);
@@ -840,6 +927,55 @@ impl<B: ModelBackend> Engine<B> {
         Ok(())
     }
 
+    /// Commit one whole page of a shared prefix. The first sharer writes
+    /// the block to the device (counted as a spill, like any CXL-resident
+    /// page); later sharers attach to the refcounted block and read the
+    /// authoritative content back into their own KV history — mock-backend
+    /// prefill KV depends on backend RNG state, not just the prompt, so
+    /// the share is define-on-first-write. Shared pages live on the device
+    /// for their whole life (they never occupy per-request HBM budget and
+    /// are skipped by promotion), which is what makes the dedup a real
+    /// footprint win.
+    fn commit_shared_page(
+        &mut self,
+        slot: usize,
+        seq: u64,
+        page: usize,
+        key: u64,
+        now_ns: f64,
+    ) -> Result<()> {
+        let el = self.kv_entry_len;
+        let (addr, created) = self.pager.add_shared_page(seq, page, key);
+        if created {
+            self.metrics.pages_spilled += 1;
+            let words = self.page_words(slot, page);
+            self.device.submit_one_at(
+                Transaction::WriteKv {
+                    block_addr: addr,
+                    words,
+                    window: crate::bitplane::KvWindow::new(PAGE_TOKENS, el),
+                },
+                now_ns,
+            )?;
+            return Ok(());
+        }
+        // attach: adopt the first writer's content as this page's history
+        self.metrics.pages_shared += 1;
+        let words =
+            self.device.submit_one_at(Transaction::ReadFull { block_addr: addr }, now_ns)?;
+        let words = words.into_words()?;
+        let start = page * PAGE_TOKENS * el;
+        let s = &mut self.slots[slot];
+        let n = words.len().min(s.kv.len().saturating_sub(start));
+        for (j, &w) in words[..n].iter().enumerate() {
+            let v = bf16_to_f32(w);
+            s.kv[start + j] = v;
+            s.work[start + j] = v;
+        }
+        s.viewed.remove(&page);
+        Ok(())
+    }
+
     /// Migrate a spilled page of `seq` back into HBM. Fails (false) if
     /// the page is not CXL-resident or the KV partition has no headroom —
     /// callers modeling a capacity resize grow it explicitly first
@@ -854,7 +990,7 @@ impl<B: ModelBackend> Engine<B> {
             .pager
             .seq_pages(seq)
             .iter()
-            .find(|p| p.index == page)
+            .find(|p| p.index == page && p.shared_key.is_none())
             .and_then(|p| p.cxl_addr);
         let Some(addr) = addr else { return false };
         if !self.hbm.try_alloc_kv(self.page_bytes()) {
@@ -1219,6 +1355,18 @@ impl<B: ModelBackend> Engine<B> {
         self.metrics.step_model_ns.push(compute_done - t0);
         self.clock.advance_to(compute_done);
         self.metrics.model_ns = self.clock.now();
+        // per-step traffic summary for the trace sink (deltas of the
+        // cumulative counters; steps that return early above emit no Step
+        // record, so their traffic folds into the next recorded step)
+        if self.sink.is_some() {
+            let dev = self.device.stats();
+            let steps = self.metrics.engine_steps;
+            let recalled = self.pager.recalled_pages;
+            let recall_bytes = self.metrics.kv_recall_bytes;
+            if let Some(w) = self.sink.as_mut() {
+                w.record_step(compute_done, steps, generated as u64, recalled, recall_bytes, &dev);
+            }
+        }
         Ok(generated)
     }
 

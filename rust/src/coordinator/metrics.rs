@@ -76,6 +76,10 @@ pub struct Metrics {
     pub pages_hbm: u64,
     pub pages_spilled: u64,
     pub pages_promoted: u64,
+    /// Pages that attached to an existing shared-prefix device block
+    /// instead of writing a new one (RAG fan-out). The creating sharer's
+    /// write counts under `pages_spilled`; attaches land here.
+    pub pages_shared: u64,
     /// Raw KV bytes recalled from the CXL tier by decode-step fetches.
     pub kv_recall_bytes: u64,
     /// Raw KV bytes read back by preemption restores (kept apart from
@@ -113,6 +117,7 @@ impl Default for Metrics {
             pages_hbm: 0,
             pages_spilled: 0,
             pages_promoted: 0,
+            pages_shared: 0,
             kv_recall_bytes: 0,
             restore_bytes: 0,
             prefetch_issued: 0,
@@ -273,6 +278,7 @@ impl Metrics {
         pages.insert("hbm".to_string(), num(self.pages_hbm as f64));
         pages.insert("spilled".to_string(), num(self.pages_spilled as f64));
         pages.insert("promoted".to_string(), num(self.pages_promoted as f64));
+        pages.insert("shared".to_string(), num(self.pages_shared as f64));
         let mut prefetch = BTreeMap::new();
         prefetch.insert("issued".to_string(), num(self.prefetch_issued as f64));
         prefetch.insert("hits".to_string(), num(self.prefetch_hits as f64));
@@ -327,6 +333,9 @@ impl Metrics {
         o.insert("ttft_model_ns".to_string(), summary(&self.ttft()));
         o.insert("tpot_model_ns".to_string(), summary(&self.tpot()));
         o.insert("kv_recall_bytes".to_string(), num(self.kv_recall_bytes as f64));
+        // also surfaced at top level (not only under `sched`) so capture
+        // tooling can spot poll-log gaps without digging
+        o.insert("events_dropped".to_string(), num(self.events_dropped as f64));
         o.insert("pages".to_string(), Json::Obj(pages));
         o.insert("prefetch".to_string(), Json::Obj(prefetch));
         o.insert("sched".to_string(), Json::Obj(sched));
@@ -416,6 +425,8 @@ mod tests {
         m.queue_delay_ns = vec![800.0, 2500.0];
         m.preemptions = 2;
         m.prefetch_issued = 4;
+        m.events_dropped = 5;
+        m.pages_shared = 3;
         let dev = DeviceStats { dram_bytes_read: 4096, ..Default::default() };
         let j = m.to_json(&dev);
         let parsed = Json::parse(&j.to_string()).unwrap();
@@ -435,6 +446,13 @@ mod tests {
         );
         let sched = parsed.get("sched").unwrap();
         assert_eq!(sched.get("preemptions").unwrap().as_usize().unwrap(), 2);
+        // events_dropped shows up both under sched and at top level
+        assert_eq!(sched.get("events_dropped").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(parsed.get("events_dropped").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(
+            parsed.get("pages").unwrap().get("shared").unwrap().as_usize().unwrap(),
+            3
+        );
         let hist = sched.get("queue_delay_hist").unwrap().as_arr().unwrap();
         assert_eq!(hist.len(), QUEUE_DELAY_BUCKETS + 1);
         let counted: f64 = hist

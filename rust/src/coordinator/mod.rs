@@ -45,7 +45,9 @@ pub mod metrics;
 
 pub use engine::{Engine, EngineConfig};
 pub use metrics::Metrics;
-pub use request::{EngineEvent, Request, RequestState, Response, ResumeState, SlaClass};
+pub use request::{
+    EngineEvent, PrefixShare, Request, RequestState, Response, ResumeState, SlaClass,
+};
 pub use sched::{
     Fcfs, PriorityClass, QueuedView, SchedKind, SchedPlan, SchedView, SchedulerPolicy,
     ShortestJobFirst, SlotView,

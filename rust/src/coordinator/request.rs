@@ -36,6 +36,20 @@ impl SlaClass {
     pub const ALL: [SlaClass; 2] = [SlaClass::Interactive, SlaClass::Batch];
 }
 
+/// Declares that the first `tokens` prompt tokens of a request are a
+/// shared prefix identified by `key` (RAG fan-out / shared system
+/// prompt). Requests submitted with the same key alias one refcounted
+/// set of device-resident KV pages ([`crate::tier::KvPageManager`]);
+/// only whole pages ([`crate::tier::PAGE_TOKENS`]) are shared, so
+/// `tokens` is effectively rounded down to a page boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixShare {
+    /// Content identity of the prefix — equal keys assert equal tokens.
+    pub key: u64,
+    /// Prefix length in tokens (clamped to the prompt length at submit).
+    pub tokens: usize,
+}
+
 /// Lifecycle state of a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RequestState {
@@ -89,6 +103,8 @@ pub struct Request {
     pub admitted_ns: Option<f64>,
     pub first_token_ns: Option<f64>,
     pub finished_ns: Option<f64>,
+    /// Shared-prefix declaration, if the request rides a prefix-KV share.
+    pub prefix: Option<PrefixShare>,
 }
 
 impl Request {
@@ -108,6 +124,7 @@ impl Request {
             admitted_ns: None,
             first_token_ns: None,
             finished_ns: None,
+            prefix: None,
         }
     }
 
@@ -159,10 +176,16 @@ pub enum EngineEvent {
     /// The request completed; the summary mirrors
     /// [`super::Engine::take_responses`].
     Finished { seq: u64, at_ns: f64, response: Response },
+    /// The poll-log retention cap shed `count` older events; a gap marker
+    /// so consumers (and trace captures of the poll log) see the loss
+    /// explicitly instead of inferring it. `at_ns` is the timestamp of the
+    /// newest shed event. Not request-scoped.
+    EventsDropped { at_ns: f64, count: u64 },
 }
 
 impl EngineEvent {
-    /// The request this event concerns.
+    /// The request this event concerns; [`u64::MAX`] for engine-scoped
+    /// events ([`EngineEvent::EventsDropped`]).
     pub fn seq(&self) -> u64 {
         match self {
             EngineEvent::Admitted { seq, .. }
@@ -170,6 +193,7 @@ impl EngineEvent {
             | EngineEvent::Preempted { seq, .. }
             | EngineEvent::Resumed { seq, .. }
             | EngineEvent::Finished { seq, .. } => *seq,
+            EngineEvent::EventsDropped { .. } => u64::MAX,
         }
     }
 
@@ -180,7 +204,8 @@ impl EngineEvent {
             | EngineEvent::Token { at_ns, .. }
             | EngineEvent::Preempted { at_ns, .. }
             | EngineEvent::Resumed { at_ns, .. }
-            | EngineEvent::Finished { at_ns, .. } => *at_ns,
+            | EngineEvent::Finished { at_ns, .. }
+            | EngineEvent::EventsDropped { at_ns, .. } => *at_ns,
         }
     }
 }
@@ -292,5 +317,16 @@ mod tests {
         assert_eq!(e.at_ns(), 2.5);
         let p = EngineEvent::Preempted { seq: 1, at_ns: 7.0, pages_saved: 3 };
         assert_eq!((p.seq(), p.at_ns()), (1, 7.0));
+        // the gap marker is engine-scoped, not tied to any request
+        let d = EngineEvent::EventsDropped { at_ns: 9.0, count: 32 };
+        assert_eq!((d.seq(), d.at_ns()), (u64::MAX, 9.0));
+    }
+
+    #[test]
+    fn requests_carry_optional_prefix_share() {
+        let mut r = Request::new(1, vec![1, 2, 3], 4);
+        assert!(r.prefix.is_none());
+        r.prefix = Some(PrefixShare { key: 42, tokens: 2 });
+        assert_eq!(r.prefix.unwrap().key, 42);
     }
 }

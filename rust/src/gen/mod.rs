@@ -11,11 +11,18 @@
 //!    KV that is smooth along channels but not tokens (Fig. 2), weights
 //!    with clustered exponents and outlier channels, and MoDE-style
 //!    long-tailed precision mixes (Fig. 17).
+//!
+//! [`scenarios`] builds on these: a library of named serving workload
+//! shapes (diurnal, flash-crowd, noisy-neighbor, rag-fanout, agentic)
+//! that expand deterministically into submittable request lists for the
+//! coordinator benches and the trace capture tooling.
 
 pub mod tensors;
 pub mod precision;
 pub mod workload;
+pub mod scenarios;
 
 pub use precision::{PrecisionMix, mode_mix};
+pub use scenarios::{Scenario, ScenarioRequest};
 pub use tensors::{KvGen, WeightGen};
 pub use workload::{RequestGen, SynthCorpus};

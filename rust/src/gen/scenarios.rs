@@ -1,0 +1,438 @@
+//! Named serving scenarios — a library of reusable workload shapes.
+//!
+//! Each [`Scenario`] deterministically expands `(seed, n)` into a list of
+//! [`ScenarioRequest`]s (arrival time, prompt, decode budget, SLA class,
+//! optional shared-prefix declaration) ready to feed
+//! `Engine::submit_at` / `Engine::submit_shared_at`. The shapes cover the
+//! serving regimes the TRACE paper's capacity argument cares about:
+//!
+//! * `diurnal` — sinusoidally modulated Poisson arrivals (day/night load
+//!   swing), sampled by Lewis thinning so the rate envelope is exact.
+//! * `flash-crowd` — steady baseline plus a burst of interactive traffic
+//!   landing in one narrow window (a link goes viral).
+//! * `noisy-neighbor` — short interactive requests sharing the engine
+//!   with periodic volleys of long batch jobs that flood the KV tiers.
+//! * `rag-fanout` — retrieval fan-out: groups of requests that share one
+//!   long document prefix (declared via [`PrefixShare`]) and differ only
+//!   in a short question suffix. Exercises refcounted KV page sharing.
+//! * `agentic` — multi-turn tool loops: sessions of consecutive calls
+//!   whose context grows every turn until it hits the model window.
+//!
+//! Everything is derived from the caller's seed through [`Rng`] streams,
+//! so a scenario is a pure function — the same `(name, seed, n, dims)`
+//! always yields byte-identical requests, which is what lets the trace
+//! tooling treat "scenario + seed" as a workload identifier.
+
+use crate::coordinator::{PrefixShare, SlaClass};
+use crate::tier::PAGE_TOKENS;
+use crate::util::Rng;
+
+use super::workload::SynthCorpus;
+
+/// One scheduled request, ready for submission.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioRequest {
+    /// Model-time arrival (ns), nondecreasing within a scenario.
+    pub arrival_ns: f64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub sla: SlaClass,
+    /// Shared-prefix declaration (RAG fan-out), if any.
+    pub prefix: Option<PrefixShare>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Diurnal,
+    FlashCrowd,
+    NoisyNeighbor,
+    RagFanout,
+    Agentic,
+}
+
+/// A named workload shape. See the module docs for the catalogue.
+#[derive(Debug, Clone, Copy)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub description: &'static str,
+    kind: Kind,
+}
+
+/// The scenario catalogue, in documentation order.
+const CATALOGUE: [Scenario; 5] = [
+    Scenario {
+        name: "diurnal",
+        description: "sinusoidal day/night Poisson arrivals (Lewis thinning)",
+        kind: Kind::Diurnal,
+    },
+    Scenario {
+        name: "flash-crowd",
+        description: "steady baseline plus a burst of interactive traffic",
+        kind: Kind::FlashCrowd,
+    },
+    Scenario {
+        name: "noisy-neighbor",
+        description: "short interactive requests vs periodic long batch volleys",
+        kind: Kind::NoisyNeighbor,
+    },
+    Scenario {
+        name: "rag-fanout",
+        description: "groups of 4 sharing one document prefix (refcounted KV)",
+        kind: Kind::RagFanout,
+    },
+    Scenario {
+        name: "agentic",
+        description: "multi-turn tool loops with per-turn context growth",
+        kind: Kind::Agentic,
+    },
+];
+
+/// All scenarios, in catalogue order.
+pub fn all() -> &'static [Scenario] {
+    &CATALOGUE
+}
+
+/// Look a scenario up by its CLI name.
+pub fn by_name(name: &str) -> Option<&'static Scenario> {
+    CATALOGUE.iter().find(|s| s.name == name)
+}
+
+/// Comma-separated scenario names, for CLI help text.
+pub fn names() -> String {
+    CATALOGUE.iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
+}
+
+/// Mean inter-arrival gap (ns) used by every scenario's base load: keeps
+/// the scenarios comparable to each other and fast to simulate.
+const BASE_GAP_NS: f64 = 40_000.0;
+
+impl Scenario {
+    /// Expand the scenario into exactly `n` requests. Deterministic in
+    /// all arguments; arrivals are nondecreasing; prompts fit
+    /// `t_prompt`; decode budgets fit `max_new_cap` (min 1).
+    pub fn generate(
+        &self,
+        seed: u64,
+        n: usize,
+        vocab: u32,
+        t_prompt: usize,
+        max_new_cap: usize,
+    ) -> Vec<ScenarioRequest> {
+        let mut rng = Rng::new(seed ^ 0xA5C3_9D1B_7E24_F068);
+        let cap = max_new_cap.max(1);
+        let mut out = match self.kind {
+            Kind::Diurnal => diurnal(&mut rng, n, vocab, t_prompt, cap),
+            Kind::FlashCrowd => flash_crowd(&mut rng, n, vocab, t_prompt, cap),
+            Kind::NoisyNeighbor => noisy_neighbor(&mut rng, n, vocab, t_prompt, cap),
+            Kind::RagFanout => rag_fanout(seed, &mut rng, n, vocab, t_prompt, cap),
+            Kind::Agentic => agentic(&mut rng, n, vocab, t_prompt, cap),
+        };
+        // scenarios emit in arrival order by construction; enforce the
+        // contract anyway so downstream submission never needs a sort
+        out.sort_by(|a, b| a.arrival_ns.partial_cmp(&b.arrival_ns).unwrap());
+        debug_assert_eq!(out.len(), n);
+        out
+    }
+}
+
+/// Prompt length: log-uniform over `[lo, hi]`, like `RequestGen`.
+fn prompt_len(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    let lo = lo.max(1);
+    let hi = hi.max(lo);
+    let span = (hi as f64 / lo as f64).ln();
+    ((lo as f64 * (rng.f64() * span).exp()) as usize).clamp(lo, hi)
+}
+
+/// Geometric-ish decode budget with mean `mean`, clamped to `[1, cap]`.
+fn decode_len(rng: &mut Rng, mean: usize, cap: usize) -> usize {
+    (1 + rng.exponential(1.0 / mean.max(1) as f64) as usize).min(cap)
+}
+
+fn diurnal(
+    rng: &mut Rng,
+    n: usize,
+    vocab: u32,
+    t_prompt: usize,
+    cap: usize,
+) -> Vec<ScenarioRequest> {
+    // Lewis thinning: sample a homogeneous Poisson process at the peak
+    // rate, keep each point with probability lambda(t)/lambda_max. The
+    // "day" period spans the whole run so load visibly swells and ebbs.
+    let period = n as f64 * BASE_GAP_NS;
+    let lambda0 = 1.0 / BASE_GAP_NS;
+    let lambda_max = lambda0 * 1.8;
+    let mut corpus = SynthCorpus::new(vocab, rng.next_u64());
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        t += rng.exponential(lambda_max);
+        let phase = 2.0 * std::f64::consts::PI * t / period;
+        let lambda = lambda0 * (1.0 + 0.8 * phase.sin());
+        if rng.f64() * lambda_max > lambda {
+            continue; // thinned
+        }
+        let len = prompt_len(rng, t_prompt / 4, t_prompt);
+        let sla = if rng.chance(0.5) { SlaClass::Interactive } else { SlaClass::Batch };
+        out.push(ScenarioRequest {
+            arrival_ns: t,
+            prompt: corpus.take(len),
+            max_new: decode_len(rng, cap / 2, cap),
+            sla,
+            prefix: None,
+        });
+    }
+    out
+}
+
+fn flash_crowd(
+    rng: &mut Rng,
+    n: usize,
+    vocab: u32,
+    t_prompt: usize,
+    cap: usize,
+) -> Vec<ScenarioRequest> {
+    // a steady batch baseline, then n/3 interactive requests land inside
+    // a window 50x denser than the baseline, centered at 40% of the run
+    let burst = n / 3;
+    let base = n - burst;
+    let mut corpus = SynthCorpus::new(vocab, rng.next_u64());
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0;
+    for _ in 0..base {
+        t += rng.exponential(1.0 / BASE_GAP_NS);
+        let len = prompt_len(rng, t_prompt / 4, t_prompt);
+        out.push(ScenarioRequest {
+            arrival_ns: t,
+            prompt: corpus.take(len),
+            max_new: decode_len(rng, cap / 2, cap),
+            sla: SlaClass::Batch,
+            prefix: None,
+        });
+    }
+    let span = t.max(1.0);
+    let mut bt = 0.4 * span;
+    for _ in 0..burst {
+        bt += rng.exponential(50.0 / BASE_GAP_NS);
+        let len = prompt_len(rng, t_prompt / 8, t_prompt / 2);
+        out.push(ScenarioRequest {
+            arrival_ns: bt,
+            prompt: corpus.take(len.max(1)),
+            max_new: decode_len(rng, (cap / 4).max(1), cap),
+            sla: SlaClass::Interactive,
+            prefix: None,
+        });
+    }
+    out
+}
+
+fn noisy_neighbor(
+    rng: &mut Rng,
+    n: usize,
+    vocab: u32,
+    t_prompt: usize,
+    cap: usize,
+) -> Vec<ScenarioRequest> {
+    // interactive foreground traffic, with every 8th slot replaced by a
+    // volley of maximum-context batch jobs that blow through HBM and
+    // force the tiering/preemption machinery to work
+    let mut corpus = SynthCorpus::new(vocab, rng.next_u64());
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0;
+    let mut i = 0usize;
+    while out.len() < n {
+        t += rng.exponential(1.0 / BASE_GAP_NS);
+        let noisy = i % 8 == 7;
+        i += 1;
+        if noisy {
+            let len = t_prompt.max(1);
+            out.push(ScenarioRequest {
+                arrival_ns: t,
+                prompt: corpus.take(len),
+                max_new: cap,
+                sla: SlaClass::Batch,
+                prefix: None,
+            });
+        } else {
+            let len = prompt_len(rng, (t_prompt / 8).max(1), (t_prompt / 2).max(1));
+            out.push(ScenarioRequest {
+                arrival_ns: t,
+                prompt: corpus.take(len),
+                max_new: decode_len(rng, (cap / 4).max(1), cap),
+                sla: SlaClass::Interactive,
+                prefix: None,
+            });
+        }
+    }
+    out
+}
+
+fn rag_fanout(
+    seed: u64,
+    rng: &mut Rng,
+    n: usize,
+    vocab: u32,
+    t_prompt: usize,
+    cap: usize,
+) -> Vec<ScenarioRequest> {
+    // retrieval fan-out: requests arrive in groups of 4 sharing one long
+    // document prefix (page-aligned so whole KV pages alias), plus a
+    // short per-request question suffix
+    const FAN: usize = 4;
+    let prefix_tokens = (3 * t_prompt / 4) / PAGE_TOKENS * PAGE_TOKENS;
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0;
+    let mut group = 0u64;
+    while out.len() < n {
+        // one shared document per group, regenerated from a group-keyed
+        // corpus so every member sees identical prefix tokens
+        let doc_seed = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(group);
+        let doc = SynthCorpus::new(vocab, doc_seed).take(prefix_tokens);
+        let key = doc_seed;
+        let fan = FAN.min(n - out.len());
+        for _ in 0..fan {
+            t += rng.exponential(4.0 / BASE_GAP_NS);
+            let suffix_len = 8 + rng.below(9);
+            let mut prompt = doc.clone();
+            let mut q = SynthCorpus::new(vocab, rng.next_u64());
+            prompt.extend(q.take(suffix_len));
+            prompt.truncate(t_prompt.max(1));
+            let shared = prefix_tokens.min(prompt.len());
+            out.push(ScenarioRequest {
+                arrival_ns: t,
+                prompt,
+                max_new: decode_len(rng, cap / 2, cap),
+                sla: SlaClass::Interactive,
+                prefix: (shared >= PAGE_TOKENS).then_some(PrefixShare { key, tokens: shared }),
+            });
+        }
+        group += 1;
+        t += rng.exponential(0.25 / BASE_GAP_NS); // gap between groups
+    }
+    out
+}
+
+fn agentic(
+    rng: &mut Rng,
+    n: usize,
+    vocab: u32,
+    t_prompt: usize,
+    cap: usize,
+) -> Vec<ScenarioRequest> {
+    // tool-use sessions: each session is a run of turns whose prompt is
+    // the (synthetic) accumulated transcript — context grows every turn
+    // until it saturates the window
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0;
+    while out.len() < n {
+        let turns = (2 + rng.below(5)).min(n - out.len());
+        let mut session = SynthCorpus::new(vocab, rng.next_u64());
+        let mut ctx: Vec<u32> = session.take((t_prompt / 8).max(1));
+        for _ in 0..turns {
+            t += rng.exponential(2.0 / BASE_GAP_NS);
+            out.push(ScenarioRequest {
+                arrival_ns: t,
+                prompt: ctx.clone(),
+                max_new: decode_len(rng, (cap / 4).max(1), cap),
+                sla: SlaClass::Interactive,
+                prefix: None,
+            });
+            // the turn's output and tool results grow the next context
+            ctx.extend(session.take((t_prompt / 6).max(1)));
+            ctx.truncate(t_prompt.max(1));
+        }
+        t += rng.exponential(0.5 / BASE_GAP_NS); // think time between sessions
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const VOCAB: u32 = 256;
+    const T_PROMPT: usize = 96;
+    const CAP: usize = 24;
+
+    #[test]
+    fn catalogue_lookup() {
+        assert_eq!(all().len(), 5);
+        for s in all() {
+            assert!(by_name(s.name).is_some());
+            assert!(names().contains(s.name));
+        }
+        assert!(by_name("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn every_scenario_is_deterministic_and_bounded() {
+        for s in all() {
+            let a = s.generate(99, 40, VOCAB, T_PROMPT, CAP);
+            let b = s.generate(99, 40, VOCAB, T_PROMPT, CAP);
+            assert_eq!(a, b, "{} not deterministic", s.name);
+            let c = s.generate(100, 40, VOCAB, T_PROMPT, CAP);
+            assert_ne!(a, c, "{} ignores its seed", s.name);
+            assert_eq!(a.len(), 40, "{} wrong count", s.name);
+            for w in a.windows(2) {
+                assert!(w[1].arrival_ns >= w[0].arrival_ns, "{} arrivals decrease", s.name);
+            }
+            for r in &a {
+                assert!(!r.prompt.is_empty() && r.prompt.len() <= T_PROMPT, "{}", s.name);
+                assert!(r.prompt.iter().all(|&tok| tok < VOCAB), "{}", s.name);
+                assert!(r.max_new >= 1 && r.max_new <= CAP, "{}", s.name);
+                if let Some(p) = r.prefix {
+                    assert!(p.tokens <= r.prompt.len(), "{} prefix too long", s.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rag_groups_share_identical_prefix_and_key() {
+        let reqs = by_name("rag-fanout").unwrap().generate(7, 16, VOCAB, T_PROMPT, CAP);
+        let mut groups: std::collections::BTreeMap<u64, Vec<&ScenarioRequest>> = Default::default();
+        for r in &reqs {
+            let p = r.prefix.expect("rag requests declare a shared prefix");
+            assert_eq!(p.tokens % PAGE_TOKENS, 0, "prefix not page-aligned");
+            assert!(p.tokens >= PAGE_TOKENS);
+            groups.entry(p.key).or_default().push(r);
+        }
+        assert!(groups.len() >= 3, "expected several fan-out groups");
+        for members in groups.values() {
+            let first = &members[0];
+            let tokens = first.prefix.unwrap().tokens;
+            for m in members {
+                assert_eq!(m.prefix.unwrap().tokens, tokens);
+                assert_eq!(m.prompt[..tokens], first.prompt[..tokens], "prefix tokens differ");
+            }
+        }
+    }
+
+    #[test]
+    fn flash_crowd_has_an_interactive_burst() {
+        let reqs = by_name("flash-crowd").unwrap().generate(3, 60, VOCAB, T_PROMPT, CAP);
+        let n_int = reqs.iter().filter(|r| r.sla == SlaClass::Interactive).count();
+        assert_eq!(n_int, 20);
+        // the burst is dense: its interarrival spread is far tighter than
+        // the run as a whole
+        let ints: Vec<f64> =
+            reqs.iter().filter(|r| r.sla == SlaClass::Interactive).map(|r| r.arrival_ns).collect();
+        let burst_span = ints.last().unwrap() - ints.first().unwrap();
+        let total_span = reqs.last().unwrap().arrival_ns - reqs[0].arrival_ns;
+        assert!(burst_span < total_span / 4.0, "burst {burst_span} vs run {total_span}");
+    }
+
+    #[test]
+    fn agentic_context_grows_within_a_session() {
+        let reqs = by_name("agentic").unwrap().generate(11, 30, VOCAB, T_PROMPT, CAP);
+        // consecutive turns of one session share a prompt prefix and the
+        // later turn is never shorter (until the window cap)
+        let mut grew = 0;
+        for w in reqs.windows(2) {
+            let (a, b) = (&w[0].prompt, &w[1].prompt);
+            if b.len() > a.len() && b[..a.len()] == a[..] {
+                grew += 1;
+            }
+        }
+        assert!(grew >= 10, "only {grew} growing turns");
+    }
+}

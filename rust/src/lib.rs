@@ -75,6 +75,16 @@
 //! (`tests/sched_equiv.rs`); `benches/fig_sched_qos.rs` gates the
 //! QoS-vs-throughput tradeoff under overload. See `docs/SERVING.md`.
 //!
+//! Every serving run can be captured as a compact binary trace and
+//! replayed bit-identically: [`trace`] defines the varint/delta record
+//! format (`docs/TRACE_FORMAT.md`), the engine-side sink
+//! ([`coordinator::Engine::set_trace_sink`], see `docs/SERVING.md`
+//! § Trace sink vs poll_events), deterministic replay and trace diffing
+//! (`examples/trace_tool.rs`), and [`gen::scenarios`] names the workload
+//! shapes (diurnal, flash-crowd, noisy-neighbor, rag-fanout with
+//! refcounted shared-prefix KV, agentic) that drive
+//! `benches/fig_scenarios.rs` and `tests/trace_replay.rs`.
+//!
 //! ## Crate layout
 //!
 //! Host/runtime side:
@@ -110,7 +120,9 @@
 //! * [`formats`] — element formats (BF16/FP16/FP8/INT8/INT4/MXFP4) and
 //!   field splits.
 //! * [`gen`] — calibrated synthetic tensors, precision-mix and request
-//!   generators.
+//!   generators, and the named scenario library ([`gen::scenarios`]).
+//! * [`trace`] — compact binary trace capture ([`trace::TraceWriter`]),
+//!   decoding ([`trace::Trace`]), deterministic replay, and diffing.
 //! * [`util`] — RNG, mini-JSON, CLI parsing, statistics, property-test
 //!   harness (the build is offline; no `rand`/`serde`/`clap`/`proptest`).
 
@@ -126,3 +138,4 @@ pub mod sysmodel;
 pub mod gen;
 pub mod coordinator;
 pub mod runtime;
+pub mod trace;

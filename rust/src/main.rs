@@ -47,7 +47,10 @@ fn print_help() {
          USAGE: trace-cxl <serve|throughput|compress|latency|ppa|info> [--options]\n\
          \n\
          serve      --artifacts DIR --requests N --max-new N --hbm-kv BYTES --design plain|gcomp|trace --shards N\n\
-         \x20          [--policy fcfs|sjf|priority] [--rate REQ_PER_S] [--interactive-frac F] [--overlap]\n\
+         \x20          [--policy fcfs|sjf|priority] [--rate REQ_PER_S] [--interactive-frac F] [--overlap] [--seed N]\n\
+         \x20          (scenario workloads + trace capture/replay: see --example serve_e2e\n\
+         \x20           [--seed N] [--scenario diurnal|flash-crowd|noisy-neighbor|rag-fanout|agentic]\n\
+         \x20           [--trace-out FILE] and --example trace_tool record|decode|replay|diff)\n\
          throughput --model mxfp4|bf16 --ctx N [--alpha F] [--elastic F] [--shards N]\n\
          compress   --kind kv|weights [--blocks N]\n\
          latency    (controller pipeline breakdowns, Figs 22-23)\n\

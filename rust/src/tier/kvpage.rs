@@ -16,6 +16,8 @@
 //! alias its tier prescribes — which is exactly the demand Mechanism II
 //! converts into proportional DRAM traffic.
 
+use std::collections::BTreeMap;
+
 use crate::bitplane::PrecisionView;
 use crate::cxl::{shard_of, STRIPE_BYTES};
 
@@ -155,6 +157,19 @@ pub struct PageMeta {
     /// Which device shard serves the spilled page (0 when in HBM or when
     /// the tier runs a single device).
     pub shard: usize,
+    /// When `Some(key)`, this page aliases a refcounted shared prefix
+    /// block (RAG fan-out): it is always device-resident, never promoted
+    /// to HBM, and its device copy is freed only when the last sharer
+    /// releases it.
+    pub shared_key: Option<u64>,
+}
+
+/// Refcount record for one shared prefix page (keyed by
+/// `(prefix_key, page_index)`).
+#[derive(Debug, Clone, Copy)]
+struct SharedEntry {
+    addr: u64,
+    refs: u32,
 }
 
 /// The page manager for one serving engine. Spill addresses are handed out
@@ -169,6 +184,9 @@ pub struct KvPageManager {
     shards: usize,
     pub spilled_pages: u64,
     pub recalled_pages: u64,
+    /// Live shared-prefix blocks: `(prefix_key, page_index)` → device
+    /// address + sharer refcount.
+    shared: BTreeMap<(u64, usize), SharedEntry>,
 }
 
 impl Default for KvPageManager {
@@ -190,6 +208,7 @@ impl KvPageManager {
             shards: shards.max(1),
             spilled_pages: 0,
             recalled_pages: 0,
+            shared: BTreeMap::new(),
         }
     }
 
@@ -217,8 +236,49 @@ impl KvPageManager {
             importance: 1.0,
             cxl_addr,
             shard,
+            shared_key: None,
         });
         self.pages.last().unwrap()
+    }
+
+    /// Register page `index` of `seq` as an alias of shared prefix block
+    /// `(key, index)`. Returns the device address of the shared block and
+    /// whether this call created it (`true`: the caller must write the
+    /// page's data there; `false`: a prior sharer already did and the
+    /// caller should read the authoritative content back). Shared pages
+    /// live on the device unconditionally — they never occupy HBM, so one
+    /// resident copy serves every sharer.
+    pub fn add_shared_page(&mut self, seq: u64, index: usize, key: u64) -> (u64, bool) {
+        let (addr, created) = match self.shared.get_mut(&(key, index)) {
+            Some(e) => {
+                e.refs += 1;
+                (e.addr, false)
+            }
+            None => {
+                let a = self.next_cxl_addr;
+                self.next_cxl_addr += STRIPE_BYTES;
+                self.spilled_pages += 1;
+                self.shared.insert((key, index), SharedEntry { addr: a, refs: 1 });
+                (a, true)
+            }
+        };
+        self.pages.push(PageMeta {
+            seq,
+            index,
+            tier: PageTier::Bf16,
+            home: PageHome::Cxl,
+            importance: 1.0,
+            cxl_addr: Some(addr),
+            shard: shard_of(addr, self.shards),
+            shared_key: Some(key),
+        });
+        (addr, created)
+    }
+
+    /// Current sharer count of shared block `(key, index)` (0 if freed or
+    /// never created).
+    pub fn shared_refs(&self, key: u64, index: usize) -> u32 {
+        self.shared.get(&(key, index)).map(|e| e.refs).unwrap_or(0)
     }
 
     /// Spilled-page count per shard (placement balance diagnostic).
@@ -241,13 +301,15 @@ impl KvPageManager {
 
     /// Promote a spilled page of `seq` back to HBM residency: clears the
     /// device address so subsequent fetch plans skip it. Returns false if
-    /// the page does not exist or is already HBM-resident. Residency
-    /// changes like this are exactly what the engine's prefetch fence
-    /// guards against — an in-flight prefetch of the old address is
-    /// discarded, never consumed.
+    /// the page does not exist, is already HBM-resident, or aliases a
+    /// shared prefix block (shared pages are pinned to the device — one
+    /// copy serves every sharer). Residency changes like this are exactly
+    /// what the engine's prefetch fence guards against — an in-flight
+    /// prefetch of the old address is discarded, never consumed.
     pub fn promote(&mut self, seq: u64, index: usize) -> bool {
         for p in self.pages.iter_mut() {
-            if p.seq == seq && p.index == index && p.home == PageHome::Cxl {
+            if p.seq == seq && p.index == index && p.home == PageHome::Cxl && p.shared_key.is_none()
+            {
                 p.home = PageHome::Hbm;
                 p.cxl_addr = None;
                 p.shard = 0;
@@ -300,15 +362,28 @@ impl KvPageManager {
 
     /// Drop all pages of a finished sequence. Returns how many were
     /// HBM-resident (so the caller can return that capacity) and the
-    /// device addresses of the CXL-resident ones (so the caller can
-    /// `Free` them — device footprint tracks live residency).
+    /// device addresses whose blocks are now dead (so the caller can
+    /// `Free` them — device footprint tracks live residency). A shared
+    /// prefix page only contributes its address once its refcount drops
+    /// to zero; earlier sharers release without freeing.
     pub fn release_seq(&mut self, seq: u64) -> (usize, Vec<u64>) {
         let mut in_hbm = 0usize;
         let mut spilled = Vec::new();
         for p in self.pages.iter().filter(|p| p.seq == seq) {
-            match p.cxl_addr {
-                Some(addr) => spilled.push(addr),
-                None => in_hbm += 1,
+            match (p.cxl_addr, p.shared_key) {
+                (Some(addr), Some(key)) => {
+                    let e = self
+                        .shared
+                        .get_mut(&(key, p.index))
+                        .expect("shared page has a live refcount entry");
+                    e.refs -= 1;
+                    if e.refs == 0 {
+                        self.shared.remove(&(key, p.index));
+                        spilled.push(addr);
+                    }
+                }
+                (Some(addr), None) => spilled.push(addr),
+                (None, _) => in_hbm += 1,
             }
         }
         self.pages.retain(|p| p.seq != seq);
@@ -450,6 +525,64 @@ mod tests {
         assert!(m.remove_page(1, 0).is_none(), "already removed");
         // the cumulative spill counter is history, not live state
         assert_eq!(m.spilled_pages, 1);
+    }
+
+    #[test]
+    fn shared_pages_refcount_and_free_once() {
+        let mut m = KvPageManager::with_shards(2);
+        let key = 0xfeed;
+        // first sharer creates both prefix blocks
+        let (a0, c0) = m.add_shared_page(1, 0, key);
+        let (a1, c1) = m.add_shared_page(1, 1, key);
+        assert!(c0 && c1);
+        assert_ne!(a0, a1);
+        assert_eq!(m.spilled_pages, 2);
+        // later sharers attach to the same addresses without new spills
+        let (b0, c0b) = m.add_shared_page(2, 0, key);
+        let (b1, c1b) = m.add_shared_page(2, 1, key);
+        assert!(!c0b && !c1b);
+        assert_eq!((a0, a1), (b0, b1));
+        assert_eq!(m.spilled_pages, 2, "attach is not a spill");
+        assert_eq!(m.shared_refs(key, 0), 2);
+        // a different prefix key gets its own block
+        let (other, created) = m.add_shared_page(3, 0, key + 1);
+        assert!(created);
+        assert_ne!(other, a0);
+        // shared pages are pinned: promote refuses them
+        assert!(!m.promote(1, 0), "shared page never promotes to HBM");
+        // first release decrements; block stays live
+        let (hbm, freed) = m.release_seq(1);
+        assert_eq!(hbm, 0);
+        assert!(freed.is_empty(), "seq 2 still shares the blocks");
+        assert_eq!(m.shared_refs(key, 0), 1);
+        // last release frees both blocks exactly once
+        let (_, freed) = m.release_seq(2);
+        let mut freed = freed;
+        freed.sort_unstable();
+        let mut want = vec![a0, a1];
+        want.sort_unstable();
+        assert_eq!(freed, want);
+        assert_eq!(m.shared_refs(key, 0), 0);
+        // re-sharing after a full release allocates a fresh block
+        let (fresh, created) = m.add_shared_page(9, 0, key);
+        assert!(created);
+        assert_ne!(fresh, a0, "addresses are never reused");
+    }
+
+    #[test]
+    fn shared_and_private_pages_coexist_per_sequence() {
+        let mut m = KvPageManager::new();
+        m.add_shared_page(1, 0, 7);
+        m.add_page(1, 1, true);
+        m.add_page(1, 2, false);
+        let pages = m.seq_pages(1);
+        assert_eq!(pages.len(), 3);
+        assert_eq!(pages[0].shared_key, Some(7));
+        assert!(pages[1].shared_key.is_none() && pages[2].shared_key.is_none());
+        // sole sharer: release frees the shared block and the private spill
+        let (hbm, freed) = m.release_seq(1);
+        assert_eq!(hbm, 1);
+        assert_eq!(freed.len(), 2);
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! Trace comparison for regression hunting.
+//!
+//! [`diff`] compares two parsed traces along the axes that matter for
+//! PR-over-PR behavior: the replay inputs (submissions), the per-request
+//! token streams, completion records, TTFT/TPOT, run-level device
+//! traffic, and capture-gap markers. Timestamps are compared at the
+//! format's ns quantization; submission arrivals are compared by exact
+//! f64 bits (they are replay inputs, stored bit-exact).
+
+use super::reader::Trace;
+
+/// Cap on per-category detail lines so a totally divergent pair of
+/// traces reports a readable summary, not a megabyte of noise.
+const MAX_LINES_PER_AXIS: usize = 8;
+
+/// Outcome of a trace comparison.
+#[derive(Debug, Default)]
+pub struct TraceDiff {
+    /// Human-readable divergence descriptions; empty = identical.
+    pub lines: Vec<String>,
+}
+
+impl TraceDiff {
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+
+    /// Multi-line report (`"traces match"` when empty).
+    pub fn report(&self) -> String {
+        if self.is_empty() {
+            "traces match".to_string()
+        } else {
+            self.lines.join("\n")
+        }
+    }
+}
+
+/// Per-axis comparator that truncates its output past
+/// [`MAX_LINES_PER_AXIS`].
+struct Axis<'a> {
+    out: &'a mut Vec<String>,
+    emitted: usize,
+    suppressed: usize,
+    name: &'static str,
+}
+
+impl<'a> Axis<'a> {
+    fn new(out: &'a mut Vec<String>, name: &'static str) -> Axis<'a> {
+        Axis { out, emitted: 0, suppressed: 0, name }
+    }
+
+    fn push(&mut self, line: String) {
+        if self.emitted < MAX_LINES_PER_AXIS {
+            self.out.push(format!("{}: {line}", self.name));
+            self.emitted += 1;
+        } else {
+            self.suppressed += 1;
+        }
+    }
+
+    fn close(self) {
+        if self.suppressed > 0 {
+            self.out.push(format!("{}: ... and {} more differences", self.name, self.suppressed));
+        }
+    }
+}
+
+/// Compare two traces; `a` is the reference, `b` the candidate.
+pub fn diff(a: &Trace, b: &Trace) -> TraceDiff {
+    let mut d = TraceDiff::default();
+
+    // submissions — the replay inputs
+    let (sa, sb) = (a.submits(), b.submits());
+    let mut ax = Axis::new(&mut d.lines, "submit");
+    if sa.len() != sb.len() {
+        ax.push(format!("count {} vs {}", sa.len(), sb.len()));
+    }
+    for (ra, rb) in sa.iter().zip(sb.iter()) {
+        if ra.seq != rb.seq {
+            ax.push(format!("order: seq {} vs {}", ra.seq, rb.seq));
+            continue;
+        }
+        if ra.arrival_ns.to_bits() != rb.arrival_ns.to_bits() {
+            ax.push(format!("seq {}: arrival {} vs {}", ra.seq, ra.arrival_ns, rb.arrival_ns));
+        }
+        if ra.sla != rb.sla {
+            ax.push(format!("seq {}: sla {} vs {}", ra.seq, ra.sla.name(), rb.sla.name()));
+        }
+        if ra.max_new != rb.max_new {
+            ax.push(format!("seq {}: max_new {} vs {}", ra.seq, ra.max_new, rb.max_new));
+        }
+        if ra.prefix != rb.prefix {
+            ax.push(format!("seq {}: prefix {:?} vs {:?}", ra.seq, ra.prefix, rb.prefix));
+        }
+        if ra.prompt != rb.prompt {
+            let (la, lb) = (ra.prompt.len(), rb.prompt.len());
+            ax.push(format!("seq {}: prompt differs (len {la} vs {lb})", ra.seq));
+        }
+    }
+    ax.close();
+
+    // token streams
+    let (ta, tb) = (a.tokens_by_seq(), b.tokens_by_seq());
+    let mut ax = Axis::new(&mut d.lines, "tokens");
+    for (seq, va) in &ta {
+        match tb.get(seq) {
+            None => ax.push(format!("seq {seq}: {} tokens vs none", va.len())),
+            Some(vb) if va != vb => {
+                let at = va.iter().zip(vb.iter()).position(|(x, y)| x != y);
+                match at {
+                    Some(i) => ax.push(format!(
+                        "seq {seq}: diverge at index {i} ({} vs {})",
+                        va[i], vb[i]
+                    )),
+                    None => ax.push(format!("seq {seq}: length {} vs {}", va.len(), vb.len())),
+                }
+            }
+            _ => {}
+        }
+    }
+    for seq in tb.keys().filter(|s| !ta.contains_key(s)) {
+        ax.push(format!("seq {seq}: tokens only in candidate"));
+    }
+    ax.close();
+
+    // completions
+    let (fa, fb) = (a.finished_by_seq(), b.finished_by_seq());
+    let mut ax = Axis::new(&mut d.lines, "finished");
+    if fa.len() != fb.len() {
+        ax.push(format!("count {} vs {}", fa.len(), fb.len()));
+    }
+    for (seq, ra) in &fa {
+        match fb.get(seq) {
+            None => ax.push(format!("seq {seq}: missing in candidate")),
+            Some(rb) if ra != rb => ax.push(format!("seq {seq}: {ra:?} vs {rb:?}")),
+            _ => {}
+        }
+    }
+    ax.close();
+
+    // latency summaries (ns-quantized model time: exact comparison)
+    let mut ax = Axis::new(&mut d.lines, "ttft");
+    for (seq, va) in a.ttft_by_seq() {
+        if let Some(vb) = b.ttft_by_seq().get(&seq) {
+            if va.to_bits() != vb.to_bits() {
+                ax.push(format!("seq {seq}: {va} vs {vb}"));
+            }
+        }
+    }
+    ax.close();
+    let mut ax = Axis::new(&mut d.lines, "tpot");
+    for (seq, va) in a.tpot_by_seq() {
+        if let Some(vb) = b.tpot_by_seq().get(&seq) {
+            if va.to_bits() != vb.to_bits() {
+                ax.push(format!("seq {seq}: {va} vs {vb}"));
+            }
+        }
+    }
+    ax.close();
+
+    // run-level traffic + capture gaps
+    let (wa, wb) = (a.traffic(), b.traffic());
+    if wa != wb {
+        d.lines.push(format!("traffic: {wa:?} vs {wb:?}"));
+    }
+    if a.events_dropped() != b.events_dropped() {
+        d.lines.push(format!(
+            "events_dropped: {} vs {}",
+            a.events_dropped(),
+            b.events_dropped()
+        ));
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reader::Trace;
+    use super::super::writer::TraceWriter;
+    use super::*;
+    use crate::coordinator::{EngineEvent, SlaClass};
+    use crate::util::json::Json;
+
+    fn trace_with_tokens(tokens: &[u32]) -> Trace {
+        let mut w = TraceWriter::new(&Json::Null);
+        w.record_submit(0, 5.0, SlaClass::Batch, tokens.len(), None, &[1, 2]);
+        for (i, &t) in tokens.iter().enumerate() {
+            let at_ns = 1000.0 * (i as f64 + 1.0);
+            w.record_event(&EngineEvent::Token { seq: 0, token: t, index: i, at_ns });
+        }
+        Trace::parse(&w.finish()).unwrap()
+    }
+
+    #[test]
+    fn identical_traces_match() {
+        let a = trace_with_tokens(&[3, 4, 5]);
+        let b = trace_with_tokens(&[3, 4, 5]);
+        let d = diff(&a, &b);
+        assert!(d.is_empty(), "{}", d.report());
+        assert_eq!(d.report(), "traces match");
+    }
+
+    #[test]
+    fn token_divergence_is_located() {
+        let a = trace_with_tokens(&[3, 4, 5]);
+        let b = trace_with_tokens(&[3, 9, 5]);
+        let d = diff(&a, &b);
+        assert!(!d.is_empty());
+        assert!(d.report().contains("diverge at index 1"), "{}", d.report());
+    }
+
+    #[test]
+    fn divergence_report_is_capped() {
+        let many = |max_new: usize| {
+            let mut w = TraceWriter::new(&Json::Null);
+            for seq in 0..100 {
+                w.record_submit(seq, 5.0, SlaClass::Batch, max_new, None, &[1]);
+            }
+            Trace::parse(&w.finish()).unwrap()
+        };
+        // every one of the 100 submissions differs in max_new: the submit
+        // axis truncates to the cap plus one summary line
+        let d = diff(&many(1), &many(2));
+        let submit_lines = d.lines.iter().filter(|l| l.starts_with("submit")).count();
+        assert_eq!(submit_lines, MAX_LINES_PER_AXIS + 1, "{}", d.report());
+        assert!(d.report().contains("more differences"));
+    }
+}

@@ -1,0 +1,131 @@
+//! Binary layout constants and the bounded decode cursor.
+//!
+//! The grammar is specified in `docs/TRACE_FORMAT.md`; this module pins
+//! the numbers. A trace is:
+//!
+//! ```text
+//! "TRCX" version:u8 flags:u8 meta_len:varint meta:[u8; meta_len]
+//! record* end_record
+//! ```
+//!
+//! All records start with a one-byte opcode. [`OP_SUBMIT`] carries the
+//! replay inputs (exact arrival f64 bits — replay must resubmit the same
+//! value, so it is never quantized). Every other record is observational
+//! and opens with a zigzag-varint delta from the previous observational
+//! record's nanosecond-rounded timestamp. [`OP_END`] closes the stream
+//! with the record count, so truncation — even at a record boundary — is
+//! a decode error, not a silently shorter trace.
+
+/// File magic.
+pub const MAGIC: [u8; 4] = *b"TRCX";
+
+/// Current format version. Readers reject other versions; additive
+/// evolution bumps this (see `docs/TRACE_FORMAT.md` § Versioning).
+pub const VERSION: u8 = 1;
+
+/// A request submission (replay input; not part of the delta chain).
+pub const OP_SUBMIT: u8 = 0x01;
+/// First admission into a batch slot.
+pub const OP_ADMITTED: u8 = 0x02;
+/// One generated token.
+pub const OP_TOKEN: u8 = 0x03;
+/// Scheduler eviction.
+pub const OP_PREEMPTED: u8 = 0x04;
+/// Re-admission after preemption.
+pub const OP_RESUMED: u8 = 0x05;
+/// Request completion.
+pub const OP_FINISHED: u8 = 0x06;
+/// Per-engine-step fetch/traffic summary (cumulative-counter deltas).
+pub const OP_STEP: u8 = 0x07;
+/// Poll-log retention gap marker.
+pub const OP_EVENTS_DROPPED: u8 = 0x08;
+/// Stream terminator: varint count of preceding records.
+pub const OP_END: u8 = 0xFF;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::varint::{get_varint, unzigzag};
+
+/// Bounded reader over a trace byte slice. Every accessor checks the
+/// remaining length, so corrupt input yields `Err`, never a panic or
+/// over-read.
+pub(crate) struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn done(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        ensure!(self.remaining() >= 1, "trace truncated at byte {}", self.pos);
+        let b = self.buf[self.pos];
+        self.pos += 1;
+        Ok(b)
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.remaining() >= n,
+            "trace truncated at byte {} (need {n} more)",
+            self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn varint(&mut self) -> Result<u64> {
+        match get_varint(&self.buf[self.pos..]) {
+            Some((v, n)) => {
+                self.pos += n;
+                Ok(v)
+            }
+            None => bail!("bad varint at byte {}", self.pos),
+        }
+    }
+
+    pub fn varint_i64(&mut self) -> Result<i64> {
+        Ok(unzigzag(self.varint()?))
+    }
+
+    pub fn f64_le(&mut self) -> Result<f64> {
+        let b = self.bytes(8)?;
+        Ok(f64::from_le_bytes(b.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cursor_is_bounded() {
+        let mut c = Cursor::new(&[7, 0x80]);
+        assert_eq!(c.u8().unwrap(), 7);
+        assert!(c.varint().is_err(), "unterminated varint");
+        let mut c = Cursor::new(&[1, 2, 3]);
+        assert!(c.bytes(4).is_err());
+        assert!(c.f64_le().is_err());
+        assert_eq!(c.bytes(3).unwrap(), &[1, 2, 3]);
+        assert!(c.done());
+        assert!(c.u8().is_err());
+    }
+
+    #[test]
+    fn f64_roundtrips_bits() {
+        let v = -1234.5678e9_f64;
+        let mut c = Cursor::new(&v.to_le_bytes()[..]);
+        assert_eq!(c.f64_le().unwrap().to_bits(), v.to_bits());
+    }
+}

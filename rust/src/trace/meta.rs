@@ -1,0 +1,253 @@
+//! Capture metadata: enough engine/backend configuration in the trace
+//! header to rebuild an equivalent engine for replay.
+//!
+//! Only model-time-relevant knobs are recorded. Host-side tuning
+//! (`pool_threads`, `decode_cache_blocks`) is bit-identical by
+//! construction (`tests/hotpath_equiv.rs`) and replays at defaults.
+//! Numeric fields ride the mini-JSON `f64` representation, so integer
+//! values must stay below 2^53 — true for every seed and byte budget the
+//! CLIs accept.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::codec::CodecPolicy;
+use crate::coordinator::{Engine, EngineConfig, SchedKind};
+use crate::cxl::Design;
+use crate::runtime::{MockBackend, ModelDims};
+use crate::util::json::Json;
+
+fn design_name(d: Design) -> &'static str {
+    match d {
+        Design::Plain => "plain",
+        Design::GComp => "gcomp",
+        Design::Trace => "trace",
+    }
+}
+
+fn design_parse(s: &str) -> Result<Design> {
+    match s {
+        "plain" => Ok(Design::Plain),
+        "gcomp" => Ok(Design::GComp),
+        "trace" => Ok(Design::Trace),
+        _ => bail!("unknown design '{s}'"),
+    }
+}
+
+fn codec_name(c: CodecPolicy) -> &'static str {
+    match c {
+        CodecPolicy::Lz4Only => "lz4",
+        CodecPolicy::ZstdOnly => "zstd",
+        CodecPolicy::FastBest => "fast-best",
+        CodecPolicy::AllBest => "all-best",
+    }
+}
+
+fn codec_parse(s: &str) -> Result<CodecPolicy> {
+    match s {
+        "lz4" => Ok(CodecPolicy::Lz4Only),
+        "zstd" => Ok(CodecPolicy::ZstdOnly),
+        "fast-best" => Ok(CodecPolicy::FastBest),
+        "all-best" => Ok(CodecPolicy::AllBest),
+        _ => bail!("unknown codec policy '{s}'"),
+    }
+}
+
+/// The capture-time configuration stored in the trace header.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaptureMeta {
+    /// Backend kind: `"mock"` (replayable offline) or `"pjrt"`.
+    pub backend: String,
+    /// Mock backend RNG seed (ignored for other backends).
+    pub backend_seed: u64,
+    pub dims: ModelDims,
+    pub design: Design,
+    pub codec: CodecPolicy,
+    pub hbm_kv_bytes: u64,
+    pub shards: usize,
+    pub overlap: bool,
+    pub sched: SchedKind,
+    pub compute_ns: f64,
+    pub prefill_chunk_pages: usize,
+    pub prefill_ns_per_token: f64,
+    /// Named scenario that generated the workload, if any.
+    pub scenario: Option<String>,
+    /// Workload generator seed (informational; Submit records are the
+    /// authoritative replay inputs).
+    pub gen_seed: u64,
+}
+
+impl CaptureMeta {
+    /// Defaults matching `MockBackend::tiny()` + `EngineConfig::default()`.
+    pub fn mock(dims: ModelDims, backend_seed: u64) -> CaptureMeta {
+        let cfg = EngineConfig::default();
+        CaptureMeta {
+            backend: "mock".to_string(),
+            backend_seed,
+            dims,
+            design: cfg.design,
+            codec: cfg.codec,
+            hbm_kv_bytes: cfg.hbm_kv_bytes,
+            shards: cfg.shards,
+            overlap: cfg.overlap,
+            sched: cfg.sched,
+            compute_ns: cfg.compute_ns,
+            prefill_chunk_pages: cfg.prefill_chunk_pages,
+            prefill_ns_per_token: cfg.prefill_ns_per_token,
+            scenario: None,
+            gen_seed: 0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        fn num(x: f64) -> Json {
+            Json::Num(x)
+        }
+        let d = &self.dims;
+        let mut dims = BTreeMap::new();
+        for (k, v) in [
+            ("layers", d.layers),
+            ("batch", d.batch),
+            ("t_max", d.t_max),
+            ("t_prompt", d.t_prompt),
+            ("d_model", d.d_model),
+            ("heads", d.heads),
+            ("head_dim", d.head_dim),
+            ("ffn", d.ffn),
+            ("vocab", d.vocab),
+        ] {
+            dims.insert(k.to_string(), num(v as f64));
+        }
+        let mut o = BTreeMap::new();
+        o.insert("backend".to_string(), Json::Str(self.backend.clone()));
+        o.insert("backend_seed".to_string(), num(self.backend_seed as f64));
+        o.insert("dims".to_string(), Json::Obj(dims));
+        o.insert("design".to_string(), Json::Str(design_name(self.design).to_string()));
+        o.insert("codec".to_string(), Json::Str(codec_name(self.codec).to_string()));
+        o.insert("hbm_kv_bytes".to_string(), num(self.hbm_kv_bytes as f64));
+        o.insert("shards".to_string(), num(self.shards as f64));
+        o.insert("overlap".to_string(), Json::Bool(self.overlap));
+        o.insert("sched".to_string(), Json::Str(self.sched.name().to_string()));
+        o.insert("compute_ns".to_string(), num(self.compute_ns));
+        o.insert("prefill_chunk_pages".to_string(), num(self.prefill_chunk_pages as f64));
+        o.insert("prefill_ns_per_token".to_string(), num(self.prefill_ns_per_token));
+        match &self.scenario {
+            Some(s) => o.insert("scenario".to_string(), Json::Str(s.clone())),
+            None => o.insert("scenario".to_string(), Json::Null),
+        };
+        o.insert("gen_seed".to_string(), num(self.gen_seed as f64));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<CaptureMeta> {
+        let req_f64 = |j: &Json, k: &str| -> Result<f64> {
+            j.get(k).and_then(|v| v.as_f64()).ok_or_else(|| anyhow!("meta: missing field '{k}'"))
+        };
+        let d = j.get("dims").ok_or_else(|| anyhow!("meta: missing dims"))?;
+        let dims = ModelDims {
+            layers: d.req_usize("layers")?,
+            batch: d.req_usize("batch")?,
+            t_max: d.req_usize("t_max")?,
+            t_prompt: d.req_usize("t_prompt")?,
+            d_model: d.req_usize("d_model")?,
+            heads: d.req_usize("heads")?,
+            head_dim: d.req_usize("head_dim")?,
+            ffn: d.req_usize("ffn")?,
+            vocab: d.req_usize("vocab")?,
+        };
+        let scenario = match j.get("scenario") {
+            None | Some(Json::Null) => None,
+            Some(Json::Str(s)) => Some(s.clone()),
+            Some(other) => bail!("meta: scenario must be a string, got {other}"),
+        };
+        Ok(CaptureMeta {
+            backend: j.req_str("backend")?.to_string(),
+            backend_seed: req_f64(j, "backend_seed")? as u64,
+            dims,
+            design: design_parse(j.req_str("design")?)?,
+            codec: codec_parse(j.req_str("codec")?)?,
+            hbm_kv_bytes: req_f64(j, "hbm_kv_bytes")? as u64,
+            shards: j.req_usize("shards")?,
+            overlap: matches!(j.get("overlap"), Some(Json::Bool(true))),
+            sched: SchedKind::parse(j.req_str("sched")?)
+                .ok_or_else(|| anyhow!("meta: unknown sched"))?,
+            compute_ns: req_f64(j, "compute_ns")?,
+            prefill_chunk_pages: j.req_usize("prefill_chunk_pages")?,
+            prefill_ns_per_token: req_f64(j, "prefill_ns_per_token")?,
+            scenario,
+            gen_seed: req_f64(j, "gen_seed")? as u64,
+        })
+    }
+
+    /// The engine configuration this capture ran under.
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig {
+            design: self.design,
+            codec: self.codec,
+            hbm_kv_bytes: self.hbm_kv_bytes,
+            shards: self.shards,
+            overlap: self.overlap,
+            sched: self.sched,
+            compute_ns: self.compute_ns,
+            prefill_chunk_pages: self.prefill_chunk_pages,
+            prefill_ns_per_token: self.prefill_ns_per_token,
+            ..EngineConfig::default()
+        }
+    }
+
+    /// Rebuild a fresh mock-backend engine matching this capture (the
+    /// replay target). Captures taken against a real accelerator backend
+    /// carry its name here and cannot be replayed offline.
+    pub fn build_mock_engine(&self) -> Result<Engine<MockBackend>> {
+        if self.backend != "mock" {
+            bail!(
+                "trace was captured against backend '{}'; offline replay needs 'mock'",
+                self.backend
+            );
+        }
+        let backend = MockBackend::new(self.dims.clone(), self.backend_seed);
+        Ok(Engine::new(backend, self.engine_config()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_preserves_every_field() {
+        let mut m = CaptureMeta::mock(crate::runtime::MockBackend::tiny().dims().clone(), 42);
+        m.shards = 4;
+        m.overlap = true;
+        m.sched = SchedKind::Priority;
+        m.design = Design::GComp;
+        m.codec = CodecPolicy::AllBest;
+        m.hbm_kv_bytes = 12345;
+        m.scenario = Some("rag-fanout".to_string());
+        m.gen_seed = 7;
+        let j = m.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let m2 = CaptureMeta::from_json(&parsed).unwrap();
+        assert_eq!(m, m2);
+        // scenario None also survives
+        let m3 = CaptureMeta::mock(m.dims.clone(), 1);
+        let m4 = CaptureMeta::from_json(&Json::parse(&m3.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(m3, m4);
+    }
+
+    #[test]
+    fn engine_config_mirrors_meta() {
+        let mut m = CaptureMeta::mock(crate::runtime::MockBackend::tiny().dims().clone(), 42);
+        m.compute_ns = 777.0;
+        m.sched = SchedKind::Sjf;
+        let cfg = m.engine_config();
+        assert_eq!(cfg.compute_ns, 777.0);
+        assert_eq!(cfg.sched, SchedKind::Sjf);
+        let engine = m.build_mock_engine().unwrap();
+        assert_eq!(engine.cfg.compute_ns, 777.0);
+        // non-mock backends refuse offline replay
+        m.backend = "pjrt".to_string();
+        assert!(m.build_mock_engine().is_err());
+    }
+}

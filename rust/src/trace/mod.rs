@@ -1,0 +1,43 @@
+//! Compact binary trace capture, replay, and diff (the scenario engine's
+//! regression substrate).
+//!
+//! Every serving run can be captured as a lean, delta-timestamped binary
+//! trace — the L-trace idea: record *every* lifecycle event, keep the
+//! format small enough that doing so is free. The pieces:
+//!
+//! * [`TraceWriter`] — streaming encoder. Hand one to
+//!   [`crate::coordinator::Engine::set_trace_sink`] and the engine feeds
+//!   it every [`crate::coordinator::EngineEvent`] plus a per-step
+//!   fetch/traffic summary, with no retention cap (unlike the 64Ki
+//!   `poll_events` log, whose shedding is itself recorded as
+//!   `EventsDropped` markers).
+//! * [`Trace`] / [`TraceRecord`] — decoder and per-request /
+//!   run-level views. Parsing validates the whole stream: magic, version,
+//!   every record, and the end record, so truncation and corruption are
+//!   decode errors (`tests/trace_replay.rs` fuzzes this).
+//! * [`replay::resubmit`] — re-drives a captured trace's submissions
+//!   (exact arrival bits, SLA, prompt, prefix shares) into a fresh
+//!   engine; the model-time core makes the re-run bit-identical.
+//! * [`diff`] — compares two traces (submissions, token streams,
+//!   completions, TTFT/TPOT, device traffic) for PR-over-PR regression
+//!   hunting.
+//! * [`CaptureMeta`] — the engine/backend configuration stored in the
+//!   trace header, enough to rebuild the replay engine.
+//!
+//! Record grammar and versioning rules: `docs/TRACE_FORMAT.md`. The
+//! capture-vs-poll semantics: `docs/SERVING.md` § Trace sink vs
+//! poll_events. The CLI: `examples/trace_tool.rs`
+//! (record/decode/replay/diff).
+
+pub mod format;
+pub mod writer;
+pub mod reader;
+pub mod replay;
+pub mod diff;
+pub mod meta;
+
+pub use diff::{diff, TraceDiff};
+pub use meta::CaptureMeta;
+pub use reader::{SubmitRec, Trace, TraceRecord, TrafficTotals};
+pub use replay::resubmit;
+pub use writer::TraceWriter;

@@ -1,0 +1,451 @@
+//! Trace decoder and summary queries.
+//!
+//! [`Trace::parse`] validates the full stream up front — header, every
+//! record, and the end record — so a parsed trace is known-complete. The
+//! accessors reconstruct the per-request views (`tokens_by_seq`, latency
+//! summaries) and the run-level totals ([`Trace::traffic`]) that
+//! [`super::diff`] compares.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::SlaClass;
+use crate::util::json::Json;
+
+use super::format::*;
+
+/// Decoded submission record — everything replay needs to re-drive the
+/// request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitRec {
+    pub seq: u64,
+    /// Exact arrival value (bit-preserved f64).
+    pub arrival_ns: f64,
+    pub sla: SlaClass,
+    pub max_new: usize,
+    /// `(prefix_key, prefix_tokens)` when the request shares prefix KV.
+    pub prefix: Option<(u64, usize)>,
+    pub prompt: Vec<u32>,
+}
+
+/// One decoded trace record. Observational variants carry the absolute
+/// model time reconstructed from the delta chain (ns-quantized).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceRecord {
+    Submit(SubmitRec),
+    Admitted { seq: u64, at_ns: f64, queue_delay_ns: u64 },
+    Token { seq: u64, token: u32, index: usize, at_ns: f64 },
+    Preempted { seq: u64, at_ns: f64, pages_saved: u64 },
+    Resumed { seq: u64, at_ns: f64, pages_restored: u64 },
+    Finished { seq: u64, at_ns: f64, prompt_len: usize, n_tokens: usize },
+    Step {
+        at_ns: f64,
+        step: u64,
+        tokens: u64,
+        recalled_pages: u64,
+        kv_recall_bytes: u64,
+        dram_rd: u64,
+        dram_wr: u64,
+        link_in: u64,
+        link_out: u64,
+    },
+    EventsDropped { at_ns: f64, count: u64 },
+}
+
+/// Run-level traffic totals accumulated over all Step records.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TrafficTotals {
+    pub steps: u64,
+    pub tokens: u64,
+    pub recalled_pages: u64,
+    pub kv_recall_bytes: u64,
+    pub dram_rd: u64,
+    pub dram_wr: u64,
+    pub link_in: u64,
+    pub link_out: u64,
+}
+
+/// A fully decoded trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub version: u8,
+    pub meta: Json,
+    pub records: Vec<TraceRecord>,
+}
+
+impl Trace {
+    /// Decode and validate a complete trace image. Any truncation,
+    /// trailing garbage, unknown opcode, or malformed field is an error;
+    /// this function never panics on hostile input
+    /// (`tests/trace_replay.rs` fuzzes it the way `codec_robustness.rs`
+    /// fuzzes the device codecs).
+    pub fn parse(bytes: &[u8]) -> Result<Trace> {
+        let mut c = Cursor::new(bytes);
+        let magic = c.bytes(4).context("trace header")?;
+        ensure!(magic == MAGIC, "bad magic {magic:02x?}");
+        let version = c.u8()?;
+        ensure!(version == VERSION, "unsupported trace version {version} (reader is v{VERSION})");
+        let flags = c.u8()?;
+        ensure!(flags == 0, "unknown flags {flags:#x}");
+        let meta_len = c.varint()? as usize;
+        ensure!(meta_len <= c.remaining(), "meta length {meta_len} exceeds trace");
+        let meta_str =
+            std::str::from_utf8(c.bytes(meta_len)?).context("meta is not valid UTF-8")?;
+        let meta = Json::parse(meta_str).context("meta is not valid JSON")?;
+
+        let mut records = Vec::new();
+        let mut prev_ns: i64 = 0;
+        let mut abs = |c: &mut Cursor| -> Result<f64> {
+            let dt = c.varint_i64()?;
+            prev_ns += dt;
+            Ok(prev_ns as f64)
+        };
+        loop {
+            let op = c.u8().context("record stream ends without an end record")?;
+            match op {
+                OP_SUBMIT => {
+                    let seq = c.varint()?;
+                    let arrival_ns = c.f64_le()?;
+                    ensure!(arrival_ns.is_finite(), "non-finite arrival");
+                    let sla_idx = c.u8()? as usize;
+                    ensure!(sla_idx < SlaClass::ALL.len(), "bad sla index {sla_idx}");
+                    let sla = SlaClass::ALL[sla_idx];
+                    let max_new = c.varint()? as usize;
+                    let prefix = match c.u8()? {
+                        0 => None,
+                        1 => {
+                            let key = c.varint()?;
+                            let tokens = c.varint()? as usize;
+                            Some((key, tokens))
+                        }
+                        b => bail!("bad prefix tag {b:#x}"),
+                    };
+                    let n = c.varint()? as usize;
+                    // a token is ≥1 byte: reject inflated lengths before
+                    // allocating
+                    ensure!(n <= c.remaining(), "prompt length {n} exceeds trace");
+                    let mut prompt = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let t = c.varint()?;
+                        ensure!(t <= u32::MAX as u64, "prompt token {t:#x} exceeds u32");
+                        prompt.push(t as u32);
+                    }
+                    records.push(TraceRecord::Submit(SubmitRec {
+                        seq,
+                        arrival_ns,
+                        sla,
+                        max_new,
+                        prefix,
+                        prompt,
+                    }));
+                }
+                OP_ADMITTED => {
+                    let at_ns = abs(&mut c)?;
+                    records.push(TraceRecord::Admitted {
+                        seq: c.varint()?,
+                        at_ns,
+                        queue_delay_ns: c.varint()?,
+                    });
+                }
+                OP_TOKEN => {
+                    let at_ns = abs(&mut c)?;
+                    let seq = c.varint()?;
+                    let token = c.varint()?;
+                    ensure!(token <= u32::MAX as u64, "token {token:#x} exceeds u32");
+                    let index = c.varint()? as usize;
+                    records.push(TraceRecord::Token { seq, token: token as u32, index, at_ns });
+                }
+                OP_PREEMPTED => {
+                    let at_ns = abs(&mut c)?;
+                    records.push(TraceRecord::Preempted {
+                        seq: c.varint()?,
+                        at_ns,
+                        pages_saved: c.varint()?,
+                    });
+                }
+                OP_RESUMED => {
+                    let at_ns = abs(&mut c)?;
+                    records.push(TraceRecord::Resumed {
+                        seq: c.varint()?,
+                        at_ns,
+                        pages_restored: c.varint()?,
+                    });
+                }
+                OP_FINISHED => {
+                    let at_ns = abs(&mut c)?;
+                    records.push(TraceRecord::Finished {
+                        seq: c.varint()?,
+                        at_ns,
+                        prompt_len: c.varint()? as usize,
+                        n_tokens: c.varint()? as usize,
+                    });
+                }
+                OP_STEP => {
+                    let at_ns = abs(&mut c)?;
+                    records.push(TraceRecord::Step {
+                        at_ns,
+                        step: c.varint()?,
+                        tokens: c.varint()?,
+                        recalled_pages: c.varint()?,
+                        kv_recall_bytes: c.varint()?,
+                        dram_rd: c.varint()?,
+                        dram_wr: c.varint()?,
+                        link_in: c.varint()?,
+                        link_out: c.varint()?,
+                    });
+                }
+                OP_EVENTS_DROPPED => {
+                    let at_ns = abs(&mut c)?;
+                    records.push(TraceRecord::EventsDropped { at_ns, count: c.varint()? });
+                }
+                OP_END => {
+                    let n = c.varint()?;
+                    ensure!(
+                        n == records.len() as u64,
+                        "end record claims {n} records, decoded {}",
+                        records.len()
+                    );
+                    ensure!(c.done(), "{} trailing bytes after end record", c.remaining());
+                    return Ok(Trace { version, meta, records });
+                }
+                op => bail!("unknown opcode {op:#04x}"),
+            }
+        }
+    }
+
+    /// All submissions, in file (= submission) order.
+    pub fn submits(&self) -> Vec<&SubmitRec> {
+        self.records
+            .iter()
+            .filter_map(|r| match r {
+                TraceRecord::Submit(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Generated token stream per request, in emission order.
+    pub fn tokens_by_seq(&self) -> BTreeMap<u64, Vec<u32>> {
+        let mut out: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+        for r in &self.records {
+            if let TraceRecord::Token { seq, token, .. } = r {
+                out.entry(*seq).or_default().push(*token);
+            }
+        }
+        out
+    }
+
+    /// `(prompt_len, n_tokens, at_ns)` per finished request.
+    pub fn finished_by_seq(&self) -> BTreeMap<u64, (usize, usize, f64)> {
+        let mut out = BTreeMap::new();
+        for r in &self.records {
+            if let TraceRecord::Finished { seq, at_ns, prompt_len, n_tokens } = r {
+                out.insert(*seq, (*prompt_len, *n_tokens, *at_ns));
+            }
+        }
+        out
+    }
+
+    /// Model-time TTFT per request: arrival (from the Submit record) →
+    /// first Token record. ns-quantized like all observational times.
+    pub fn ttft_by_seq(&self) -> BTreeMap<u64, f64> {
+        let mut arrival: BTreeMap<u64, f64> = BTreeMap::new();
+        for s in self.submits() {
+            arrival.insert(s.seq, s.arrival_ns);
+        }
+        let mut out = BTreeMap::new();
+        for r in &self.records {
+            if let TraceRecord::Token { seq, index: 0, at_ns, .. } = r {
+                if let Some(a) = arrival.get(seq) {
+                    out.entry(*seq).or_insert(*at_ns - *a);
+                }
+            }
+        }
+        out
+    }
+
+    /// Model-time TPOT per request with ≥2 tokens: mean inter-token gap
+    /// after the first token.
+    pub fn tpot_by_seq(&self) -> BTreeMap<u64, f64> {
+        let mut span: BTreeMap<u64, (f64, f64, usize)> = BTreeMap::new();
+        for r in &self.records {
+            if let TraceRecord::Token { seq, at_ns, .. } = r {
+                let e = span.entry(*seq).or_insert((*at_ns, *at_ns, 0));
+                e.1 = *at_ns;
+                e.2 += 1;
+            }
+        }
+        span.into_iter()
+            .filter(|&(_, (_, _, n))| n >= 2)
+            .map(|(seq, (first, last, n))| (seq, (last - first) / (n - 1) as f64))
+            .collect()
+    }
+
+    /// Traffic totals over all Step records.
+    pub fn traffic(&self) -> TrafficTotals {
+        let mut t = TrafficTotals::default();
+        for r in &self.records {
+            if let TraceRecord::Step {
+                tokens,
+                recalled_pages,
+                kv_recall_bytes,
+                dram_rd,
+                dram_wr,
+                link_in,
+                link_out,
+                ..
+            } = r
+            {
+                t.steps += 1;
+                t.tokens += tokens;
+                t.recalled_pages += recalled_pages;
+                t.kv_recall_bytes += kv_recall_bytes;
+                t.dram_rd += dram_rd;
+                t.dram_wr += dram_wr;
+                t.link_in += link_in;
+                t.link_out += link_out;
+            }
+        }
+        t
+    }
+
+    /// Total events shed by the engine's poll log during the capture
+    /// (the sink itself never sheds; these markers mirror the log's loss).
+    pub fn events_dropped(&self) -> u64 {
+        self.records
+            .iter()
+            .map(|r| match r {
+                TraceRecord::EventsDropped { count, .. } => *count,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// One-line human summary (the `trace_tool decode` header).
+    pub fn summary(&self) -> String {
+        let t = self.traffic();
+        format!(
+            "records={} submits={} tokens={} steps={} finished={} dropped={} \
+             traffic[kv_recall={} dram_rd={} dram_wr={} link_out={}]",
+            self.records.len(),
+            self.submits().len(),
+            self.tokens_by_seq().values().map(|v| v.len()).sum::<usize>(),
+            t.steps,
+            self.finished_by_seq().len(),
+            self.events_dropped(),
+            t.kv_recall_bytes,
+            t.dram_rd,
+            t.dram_wr,
+            t.link_out,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::writer::TraceWriter;
+    use super::*;
+    use crate::coordinator::{EngineEvent, PrefixShare, Response};
+    use crate::cxl::DeviceStats;
+
+    fn sample_trace() -> Vec<u8> {
+        let mut w = TraceWriter::new(&Json::Str("unit".into()));
+        w.record_submit(0, 100.5, SlaClass::Interactive, 4, None, &[1, 2, 3]);
+        w.record_submit(
+            1,
+            250.25,
+            SlaClass::Batch,
+            2,
+            Some(PrefixShare { key: 9, tokens: 2 }),
+            &[1, 2, 9],
+        );
+        w.record_event(&EngineEvent::Admitted { seq: 0, at_ns: 2000.0, queue_delay_ns: 1899.5 });
+        w.record_event(&EngineEvent::Token { seq: 0, token: 7, index: 0, at_ns: 2000.0 });
+        w.record_event(&EngineEvent::Token { seq: 0, token: 8, index: 1, at_ns: 4000.0 });
+        let dev = DeviceStats {
+            dram_bytes_read: 10,
+            dram_bytes_written: 20,
+            link_bytes_in: 30,
+            link_bytes_out: 40,
+            ..Default::default()
+        };
+        w.record_step(4000.0, 1, 2, 3, 4096, &dev);
+        w.record_event(&EngineEvent::Preempted { seq: 1, at_ns: 4000.0, pages_saved: 2 });
+        w.record_event(&EngineEvent::Resumed { seq: 1, at_ns: 6000.0, pages_restored: 5 });
+        w.record_event(&EngineEvent::EventsDropped { at_ns: 6000.0, count: 12 });
+        w.record_event(&EngineEvent::Finished {
+            seq: 0,
+            at_ns: 6000.0,
+            response: Response { id: 0, tokens: vec![7, 8], prompt_len: 3, steps_in_flight: 2 },
+        });
+        w.finish()
+    }
+
+    #[test]
+    fn roundtrip_every_record_kind() {
+        let t = Trace::parse(&sample_trace()).unwrap();
+        assert_eq!(t.version, VERSION);
+        assert_eq!(t.meta, Json::Str("unit".into()));
+        assert_eq!(t.records.len(), 10);
+        let subs = t.submits();
+        assert_eq!(subs.len(), 2);
+        assert_eq!(subs[0].arrival_ns.to_bits(), 100.5f64.to_bits(), "exact arrival bits");
+        assert_eq!(subs[0].sla, SlaClass::Interactive);
+        assert_eq!(subs[0].prompt, vec![1, 2, 3]);
+        assert_eq!(subs[1].prefix, Some((9, 2)));
+        let toks = t.tokens_by_seq();
+        assert_eq!(toks[&0], vec![7, 8]);
+        // queue_delay rounds to whole ns
+        assert!(matches!(t.records[2], TraceRecord::Admitted { queue_delay_ns: 1900, .. }));
+        // delta chain reconstructs the absolute times
+        assert!(matches!(t.records[3], TraceRecord::Token { at_ns, .. } if at_ns == 2000.0));
+        assert!(matches!(t.records[4], TraceRecord::Token { at_ns, .. } if at_ns == 4000.0));
+        let traffic = t.traffic();
+        assert_eq!(traffic.steps, 1);
+        assert_eq!(traffic.kv_recall_bytes, 4096);
+        assert_eq!(traffic.dram_rd, 10);
+        assert_eq!(t.events_dropped(), 12);
+        assert_eq!(t.finished_by_seq()[&0], (3, 2, 6000.0));
+        // latency views
+        let ttft = t.ttft_by_seq();
+        assert!((ttft[&0] - (2000.0 - 100.5)).abs() < 1e-9);
+        let tpot = t.tpot_by_seq();
+        assert!((tpot[&0] - 2000.0).abs() < 1e-9);
+        assert!(t.summary().contains("submits=2"));
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(Trace::parse(b"").is_err());
+        assert!(Trace::parse(b"NOPE\x01\x00\x04null\xff\x00").is_err());
+        // wrong version
+        let mut v = sample_trace();
+        v[4] = 99;
+        assert!(Trace::parse(&v).is_err());
+        // unknown flags
+        let mut f = sample_trace();
+        f[5] = 1;
+        assert!(Trace::parse(&f).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_at_every_cut() {
+        let bytes = sample_trace();
+        for cut in 0..bytes.len() {
+            assert!(Trace::parse(&bytes[..cut]).is_err(), "cut at {cut} must not parse");
+        }
+        assert!(Trace::parse(&bytes).is_ok());
+    }
+
+    #[test]
+    fn rejects_trailing_bytes_and_bad_count() {
+        let mut bytes = sample_trace();
+        bytes.push(0);
+        assert!(Trace::parse(&bytes).is_err(), "trailing byte");
+        let mut bytes = sample_trace();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0x01; // corrupt the end-record count
+        assert!(Trace::parse(&bytes).is_err(), "wrong record count");
+    }
+}

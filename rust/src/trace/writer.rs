@@ -1,0 +1,253 @@
+//! The capture sink: encodes engine events into the binary trace format.
+//!
+//! A `TraceWriter` is handed to [`crate::coordinator::Engine::set_trace_sink`]
+//! and from then on receives *every* lifecycle event inline — unlike the
+//! `poll_events` log it has no retention cap, so a capture is complete
+//! even when nobody drains the log. The engine also calls
+//! [`TraceWriter::record_step`] once per decode step with the cumulative
+//! fetch/traffic counters; the writer stores deltas, which varint-encode
+//! short.
+
+use crate::coordinator::{EngineEvent, PrefixShare, SlaClass};
+use crate::cxl::DeviceStats;
+use crate::util::json::Json;
+use crate::util::varint::{put_varint, zigzag};
+
+use super::format::*;
+
+/// Snapshot of the cumulative counters a Step record differences against.
+#[derive(Debug, Default, Clone, Copy)]
+struct StepBase {
+    recalled_pages: u64,
+    kv_recall_bytes: u64,
+    dram_rd: u64,
+    dram_wr: u64,
+    link_in: u64,
+    link_out: u64,
+}
+
+/// Streaming trace encoder. Build with the capture metadata, feed it
+/// records, then [`TraceWriter::finish`] to get the final byte image.
+#[derive(Debug)]
+pub struct TraceWriter {
+    buf: Vec<u8>,
+    n_records: u64,
+    /// Previous observational timestamp (ns, rounded); the delta base.
+    prev_ns: i64,
+    base: StepBase,
+}
+
+impl TraceWriter {
+    /// Start a trace. `meta` is an arbitrary JSON object describing the
+    /// capture (see [`super::CaptureMeta`]); it is stored verbatim in the
+    /// header and returned by the reader.
+    pub fn new(meta: &Json) -> TraceWriter {
+        let mut buf = Vec::with_capacity(4096);
+        buf.extend_from_slice(&MAGIC);
+        buf.push(VERSION);
+        buf.push(0); // flags
+        let meta_bytes = meta.to_string().into_bytes();
+        put_varint(&mut buf, meta_bytes.len() as u64);
+        buf.extend_from_slice(&meta_bytes);
+        TraceWriter { buf, n_records: 0, prev_ns: 0, base: StepBase::default() }
+    }
+
+    /// Encoded size so far (header + records, without the end record).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_records == 0
+    }
+
+    /// Records written so far.
+    pub fn records(&self) -> u64 {
+        self.n_records
+    }
+
+    fn delta(&mut self, at_ns: f64) -> i64 {
+        let now = at_ns.round() as i64;
+        let dt = now - self.prev_ns;
+        self.prev_ns = now;
+        dt
+    }
+
+    /// A request submission — the replay input. `arrival_ns` is stored as
+    /// exact f64 bits (not delta-quantized) so replay resubmits the same
+    /// value the original run saw.
+    pub fn record_submit(
+        &mut self,
+        seq: u64,
+        arrival_ns: f64,
+        sla: SlaClass,
+        max_new: usize,
+        prefix: Option<PrefixShare>,
+        prompt: &[u32],
+    ) {
+        self.buf.push(OP_SUBMIT);
+        put_varint(&mut self.buf, seq);
+        self.buf.extend_from_slice(&arrival_ns.to_le_bytes());
+        self.buf.push(sla.index() as u8);
+        put_varint(&mut self.buf, max_new as u64);
+        match prefix {
+            Some(p) => {
+                self.buf.push(1);
+                put_varint(&mut self.buf, p.key);
+                put_varint(&mut self.buf, p.tokens as u64);
+            }
+            None => self.buf.push(0),
+        }
+        put_varint(&mut self.buf, prompt.len() as u64);
+        for &t in prompt {
+            put_varint(&mut self.buf, t as u64);
+        }
+        self.n_records += 1;
+    }
+
+    /// One engine lifecycle event.
+    pub fn record_event(&mut self, ev: &EngineEvent) {
+        let dt = zigzag(self.delta(ev.at_ns()));
+        match ev {
+            EngineEvent::Admitted { seq, queue_delay_ns, .. } => {
+                self.buf.push(OP_ADMITTED);
+                put_varint(&mut self.buf, dt);
+                put_varint(&mut self.buf, *seq);
+                put_varint(&mut self.buf, queue_delay_ns.round() as u64);
+            }
+            EngineEvent::Token { seq, token, index, .. } => {
+                self.buf.push(OP_TOKEN);
+                put_varint(&mut self.buf, dt);
+                put_varint(&mut self.buf, *seq);
+                put_varint(&mut self.buf, *token as u64);
+                put_varint(&mut self.buf, *index as u64);
+            }
+            EngineEvent::Preempted { seq, pages_saved, .. } => {
+                self.buf.push(OP_PREEMPTED);
+                put_varint(&mut self.buf, dt);
+                put_varint(&mut self.buf, *seq);
+                put_varint(&mut self.buf, *pages_saved as u64);
+            }
+            EngineEvent::Resumed { seq, pages_restored, .. } => {
+                self.buf.push(OP_RESUMED);
+                put_varint(&mut self.buf, dt);
+                put_varint(&mut self.buf, *seq);
+                put_varint(&mut self.buf, *pages_restored as u64);
+            }
+            EngineEvent::Finished { seq, response, .. } => {
+                self.buf.push(OP_FINISHED);
+                put_varint(&mut self.buf, dt);
+                put_varint(&mut self.buf, *seq);
+                put_varint(&mut self.buf, response.prompt_len as u64);
+                put_varint(&mut self.buf, response.tokens.len() as u64);
+            }
+            EngineEvent::EventsDropped { count, .. } => {
+                self.buf.push(OP_EVENTS_DROPPED);
+                put_varint(&mut self.buf, dt);
+                put_varint(&mut self.buf, *count);
+            }
+        }
+        self.n_records += 1;
+    }
+
+    /// Per-step fetch/traffic summary. Callers pass the *cumulative*
+    /// counters; the writer stores the per-step deltas.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_step(
+        &mut self,
+        at_ns: f64,
+        step: u64,
+        tokens: u64,
+        recalled_pages: u64,
+        kv_recall_bytes: u64,
+        dev: &DeviceStats,
+    ) {
+        let dt = zigzag(self.delta(at_ns));
+        let cur = StepBase {
+            recalled_pages,
+            kv_recall_bytes,
+            dram_rd: dev.dram_bytes_read,
+            dram_wr: dev.dram_bytes_written,
+            link_in: dev.link_bytes_in,
+            link_out: dev.link_bytes_out,
+        };
+        self.buf.push(OP_STEP);
+        put_varint(&mut self.buf, dt);
+        put_varint(&mut self.buf, step);
+        put_varint(&mut self.buf, tokens);
+        for (now, before) in [
+            (cur.recalled_pages, self.base.recalled_pages),
+            (cur.kv_recall_bytes, self.base.kv_recall_bytes),
+            (cur.dram_rd, self.base.dram_rd),
+            (cur.dram_wr, self.base.dram_wr),
+            (cur.link_in, self.base.link_in),
+            (cur.link_out, self.base.link_out),
+        ] {
+            put_varint(&mut self.buf, now.saturating_sub(before));
+        }
+        self.base = cur;
+        self.n_records += 1;
+    }
+
+    /// Terminate the stream and return the complete trace image.
+    pub fn finish(mut self) -> Vec<u8> {
+        self.buf.push(OP_END);
+        put_varint(&mut self.buf, self.n_records);
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Response;
+
+    #[test]
+    fn header_and_end_framing() {
+        let w = TraceWriter::new(&Json::Null);
+        assert!(w.is_empty());
+        let bytes = w.finish();
+        assert_eq!(&bytes[..4], &MAGIC);
+        assert_eq!(bytes[4], VERSION);
+        assert_eq!(bytes[5], 0);
+        // meta "null" (4 bytes), then immediately the end record
+        assert_eq!(bytes[6], 4);
+        assert_eq!(&bytes[7..11], b"null");
+        assert_eq!(bytes[11], OP_END);
+        assert_eq!(bytes[12], 0);
+        assert_eq!(bytes.len(), 13);
+    }
+
+    #[test]
+    fn small_deltas_encode_small() {
+        let mut w = TraceWriter::new(&Json::Null);
+        let base = w.len();
+        w.record_event(&EngineEvent::Token { seq: 1, token: 5, index: 0, at_ns: 1000.0 });
+        let first = w.len() - base;
+        w.record_event(&EngineEvent::Token { seq: 1, token: 6, index: 1, at_ns: 1010.0 });
+        let second = w.len() - first - base;
+        // first token pays varint(2000) for the delta from 0; the second
+        // rides a 10ns delta: op + 1-byte dt + seq + token + index = 5
+        assert_eq!(second, 5);
+        assert!(first > second);
+        assert_eq!(w.records(), 2);
+    }
+
+    #[test]
+    fn step_records_store_deltas_of_cumulative_counters() {
+        let mut w = TraceWriter::new(&Json::Null);
+        let d1 = DeviceStats { dram_bytes_read: 100, ..Default::default() };
+        w.record_step(10.0, 1, 4, 2, 50, &d1);
+        let before = w.len();
+        // counters unchanged: every delta is zero → 6 single-byte zeros
+        w.record_step(20.0, 2, 4, 2, 50, &d1);
+        assert_eq!(w.len() - before, 1 + 1 + 1 + 1 + 6);
+        let mut f = TraceWriter::new(&Json::Null);
+        f.record_event(&EngineEvent::Finished {
+            seq: 3,
+            at_ns: 5.0,
+            response: Response { id: 3, tokens: vec![1, 2], prompt_len: 7, steps_in_flight: 2 },
+        });
+        assert_eq!(f.records(), 1);
+    }
+}

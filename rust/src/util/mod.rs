@@ -12,6 +12,7 @@ pub mod cli;
 pub mod stats;
 pub mod check;
 pub mod bytes;
+pub mod varint;
 pub mod pool;
 
 pub use pool::WorkerPool;

@@ -1,0 +1,166 @@
+//! LEB128 varints and zigzag signed encoding — the integer substrate of
+//! the binary trace format ([`crate::trace`]).
+//!
+//! Unsigned values are encoded 7 bits per byte, low group first, with the
+//! high bit as a continuation flag. Signed values go through the zigzag
+//! map first (`0, -1, 1, -2, 2, ...` → `0, 1, 2, 3, 4, ...`), so small
+//! magnitudes of either sign stay short — the property delta-encoded
+//! timestamps rely on. Decoding is canonical-agnostic but bounded: at
+//! most [`MAX_VARINT_LEN`] bytes are consumed and overlong encodings past
+//! 64 bits are rejected, so a corrupt stream can never over-read.
+
+/// Maximum encoded length of a u64 varint (`ceil(64 / 7)` groups).
+pub const MAX_VARINT_LEN: usize = 10;
+
+/// Varint (LEB128) encode a u64.
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Varint decode; returns (value, bytes consumed) or None on truncation
+/// or an encoding running past 64 bits.
+pub fn get_varint(b: &[u8]) -> Option<(u64, usize)> {
+    let mut v: u64 = 0;
+    let mut shift = 0;
+    for (i, &byte) in b.iter().enumerate() {
+        if shift >= 64 {
+            return None;
+        }
+        v |= ((byte & 0x7f) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Some((v, i + 1));
+        }
+        shift += 7;
+    }
+    None
+}
+
+/// Zigzag-map a signed value so small magnitudes of either sign encode
+/// short: `0 → 0, -1 → 1, 1 → 2, -2 → 3, ...`.
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// Varint-encode a signed value via zigzag.
+pub fn put_varint_i64(out: &mut Vec<u8>, v: i64) {
+    put_varint(out, zigzag(v));
+}
+
+/// Decode a zigzag varint; same contract as [`get_varint`].
+pub fn get_varint_i64(b: &[u8]) -> Option<(i64, usize)> {
+    get_varint(b).map(|(v, n)| (unzigzag(v), n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::props;
+
+    fn roundtrip(v: u64) -> usize {
+        let mut buf = Vec::new();
+        put_varint(&mut buf, v);
+        assert!(buf.len() <= MAX_VARINT_LEN);
+        let (v2, n) = get_varint(&buf).unwrap();
+        assert_eq!(v, v2, "value {v:#x}");
+        assert_eq!(n, buf.len(), "consumed length for {v:#x}");
+        n
+    }
+
+    #[test]
+    fn boundary_values_and_length_breakpoints() {
+        // 0, 1, and u64::MAX pin the extremes
+        assert_eq!(roundtrip(0), 1);
+        assert_eq!(roundtrip(1), 1);
+        assert_eq!(roundtrip(u64::MAX), MAX_VARINT_LEN);
+        // every 7-bit length breakpoint: 2^(7k)-1 encodes in k bytes,
+        // 2^(7k) needs k+1
+        for k in 1..=9usize {
+            let edge = 1u64 << (7 * k);
+            assert_eq!(roundtrip(edge - 1), k, "2^(7*{k})-1");
+            assert_eq!(roundtrip(edge), k + 1, "2^(7*{k})");
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_u64() {
+        props(11, 500, |r| {
+            let v = r.next_u64() >> (r.below(64) as u32);
+            roundtrip(v);
+        });
+    }
+
+    #[test]
+    fn streams_concatenate() {
+        // decoding consumes exactly one value, leaving the rest intact
+        let mut buf = Vec::new();
+        let vals = [0u64, 127, 128, 300, u64::MAX, 5];
+        for &v in &vals {
+            put_varint(&mut buf, v);
+        }
+        let mut at = 0;
+        for &v in &vals {
+            let (got, n) = get_varint(&buf[at..]).unwrap();
+            assert_eq!(got, v);
+            at += n;
+        }
+        assert_eq!(at, buf.len());
+    }
+
+    #[test]
+    fn truncated_and_overlong_inputs_error() {
+        assert!(get_varint(&[]).is_none());
+        assert!(get_varint(&[0x80]).is_none());
+        assert!(get_varint(&[0x80; 9]).is_none(), "all-continuation prefix");
+        // 11 continuation groups run past 64 bits: rejected, not wrapped
+        assert!(get_varint(&[0xff; 11]).is_none());
+        // a truncation at every cut point of a max-length encoding
+        let mut buf = Vec::new();
+        put_varint(&mut buf, u64::MAX);
+        for cut in 0..buf.len() {
+            assert!(get_varint(&buf[..cut]).is_none(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn zigzag_maps_small_magnitudes_small() {
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+        assert_eq!(zigzag(-2), 3);
+        assert_eq!(zigzag(i64::MAX), u64::MAX - 1);
+        assert_eq!(zigzag(i64::MIN), u64::MAX);
+        for v in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn signed_roundtrip_random() {
+        props(13, 500, |r| {
+            let mag = r.next_u64() >> (r.below(64) as u32);
+            let v = if r.chance(0.5) { mag as i64 } else { (mag as i64).wrapping_neg() };
+            let mut buf = Vec::new();
+            put_varint_i64(&mut buf, v);
+            let (v2, n) = get_varint_i64(&buf).unwrap();
+            assert_eq!(v, v2);
+            assert_eq!(n, buf.len());
+            // small deltas (the timestamp case) stay single-byte
+            if (-64..64).contains(&v) {
+                assert_eq!(buf.len(), 1, "small delta {v} must be 1 byte");
+            }
+        });
+    }
+}

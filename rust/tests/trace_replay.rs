@@ -1,0 +1,248 @@
+//! Trace capture → replay equivalence, plus decode robustness on
+//! corrupted trace files (mirroring `codec_robustness.rs` for the trace
+//! format's trust boundary).
+//!
+//! * Capture→replay must be **bit-identical**: rebuilding the engine
+//!   from the trace header (`CaptureMeta`) and re-driving the recorded
+//!   submissions yields the same tokens, the same device traffic, the
+//!   same latency vectors — and therefore byte-identical trace files —
+//!   across schedulers, serial/overlapped pipelines, and shard counts.
+//! * Shared-prefix workloads (rag-fanout) replay identically too, with
+//!   page sharing re-established from the recorded `PrefixShare`s.
+//! * Truncation at *every* byte boundary, bit flips, and garbage must
+//!   come back as `Err` (or a well-formed parse) — never a panic.
+//! * Shedding at the poll-log cap leaves an `EventsDropped` marker in
+//!   the log and the metrics, while the trace sink retains every event.
+
+use trace_cxl::coordinator::{EngineEvent, SchedKind, SlaClass};
+use trace_cxl::cxl::{DeviceStats, MemDevice};
+use trace_cxl::gen::{scenarios, SynthCorpus};
+use trace_cxl::runtime::{MockBackend, ModelDims};
+use trace_cxl::trace::{diff, resubmit, CaptureMeta, Trace, TraceWriter};
+use trace_cxl::util::Rng;
+
+/// Everything observable about a finished run, f64s compared by bits.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    tokens: Vec<(u64, Vec<u32>)>,
+    stats: DeviceStats,
+    model_ns: u64,
+    ttft: Vec<u64>,
+    tpot: Vec<u64>,
+    pages_hbm: u64,
+    pages_spilled: u64,
+    pages_shared: u64,
+    preemptions: u64,
+    tokens_generated: u64,
+}
+
+fn fingerprint(e: &mut trace_cxl::coordinator::Engine<MockBackend>) -> Fingerprint {
+    let mut rs = e.take_responses();
+    rs.sort_by_key(|r| r.id);
+    Fingerprint {
+        tokens: rs.into_iter().map(|r| (r.id, r.tokens)).collect(),
+        stats: e.device.stats(),
+        model_ns: e.metrics.model_ns.to_bits(),
+        ttft: e.metrics.ttft_model_ns.iter().map(|x| x.to_bits()).collect(),
+        tpot: e.metrics.tpot_model_ns.iter().map(|x| x.to_bits()).collect(),
+        pages_hbm: e.metrics.pages_hbm,
+        pages_spilled: e.metrics.pages_spilled,
+        pages_shared: e.metrics.pages_shared,
+        preemptions: e.metrics.preemptions,
+        tokens_generated: e.metrics.tokens_generated,
+    }
+}
+
+/// A bursty mixed-QoS workload: overloads the tiny engine so Priority
+/// runs preempt, and every request still finishes.
+fn submit_workload(e: &mut trace_cxl::coordinator::Engine<MockBackend>, t_prompt: usize) {
+    let mut corpus = SynthCorpus::new(64, 3);
+    for i in 0..10u64 {
+        let plen = 2 + (i as usize * 3) % t_prompt.max(3);
+        let prompt = corpus.take(plen.min(t_prompt));
+        let (sla, max_new) =
+            if i % 3 == 0 { (SlaClass::Interactive, 6) } else { (SlaClass::Batch, 24) };
+        // arrivals bunch up in two waves to force queueing
+        let arrival = if i < 5 { i as f64 * 500.0 } else { 40_000.0 + i as f64 * 500.0 };
+        e.submit_at(prompt, max_new, arrival, sla);
+    }
+}
+
+/// Capture the workload under `meta`'s config; return the trace bytes
+/// and the run fingerprint.
+fn capture(meta: &CaptureMeta) -> (Vec<u8>, Fingerprint) {
+    let mut e = meta.build_mock_engine().unwrap();
+    e.set_trace_sink(TraceWriter::new(&meta.to_json()));
+    submit_workload(&mut e, meta.dims.t_prompt);
+    e.run_to_completion(100_000).unwrap();
+    assert_eq!(e.metrics.requests_finished, 10, "capture run must finish");
+    let bytes = e.take_trace_sink().unwrap().finish();
+    (bytes, fingerprint(&mut e))
+}
+
+/// Replay a parsed trace into a fresh engine rebuilt from its header;
+/// return the replayed trace bytes and fingerprint.
+fn replay(trace: &Trace) -> (Vec<u8>, Fingerprint) {
+    let meta = CaptureMeta::from_json(&trace.meta).unwrap();
+    let mut e = meta.build_mock_engine().unwrap();
+    e.set_trace_sink(TraceWriter::new(&trace.meta));
+    let n = resubmit(&mut e, trace);
+    assert_eq!(n, trace.submits().len());
+    e.run_to_completion(100_000).unwrap();
+    let bytes = e.take_trace_sink().unwrap().finish();
+    (bytes, fingerprint(&mut e))
+}
+
+fn tiny_meta() -> CaptureMeta {
+    let mut meta = CaptureMeta::mock(MockBackend::tiny().dims().clone(), 42);
+    meta.hbm_kv_bytes = 4096; // ~2 pages: long decodes must spill
+    meta
+}
+
+#[test]
+fn replay_is_bit_identical_across_sched_overlap_shards() {
+    for sched in [SchedKind::Fcfs, SchedKind::Priority] {
+        for overlap in [false, true] {
+            for shards in [1usize, 4] {
+                let tag = format!("{} overlap={overlap} shards={shards}", sched.name());
+                let mut meta = tiny_meta();
+                meta.sched = sched;
+                meta.overlap = overlap;
+                meta.shards = shards;
+
+                let (bytes, fp) = capture(&meta);
+                let trace = Trace::parse(&bytes).unwrap();
+                assert_eq!(trace.submits().len(), 10, "{tag}");
+                if sched == SchedKind::Priority {
+                    assert!(fp.preemptions > 0, "{tag}: overload must preempt");
+                }
+
+                let (bytes2, fp2) = replay(&trace);
+                assert_eq!(fp, fp2, "{tag}: replay fingerprint diverged");
+                assert_eq!(bytes, bytes2, "{tag}: trace files must be byte-identical");
+                let d = diff(&trace, &Trace::parse(&bytes2).unwrap());
+                assert!(d.is_empty(), "{tag}: {}", d.report());
+            }
+        }
+    }
+}
+
+#[test]
+fn shared_prefix_workload_replays_identically() {
+    let dims = ModelDims {
+        layers: 2,
+        batch: 4,
+        t_max: 256,
+        t_prompt: 112,
+        d_model: 16,
+        heads: 2,
+        head_dim: 4,
+        ffn: 32,
+        vocab: 64,
+    };
+    let mut meta = CaptureMeta::mock(dims.clone(), 42);
+    meta.hbm_kv_bytes = 0; // every page (shared or not) lives on the device
+    meta.scenario = Some("rag-fanout".to_string());
+    meta.gen_seed = 5;
+
+    let sc = scenarios::by_name("rag-fanout").unwrap();
+    let mut e = meta.build_mock_engine().unwrap();
+    e.set_trace_sink(TraceWriter::new(&meta.to_json()));
+    for r in sc.generate(5, 12, dims.vocab as u32, dims.t_prompt, 8) {
+        match r.prefix {
+            Some(p) => e.submit_shared_at(r.prompt, r.max_new, r.arrival_ns, r.sla, p),
+            None => e.submit_at(r.prompt, r.max_new, r.arrival_ns, r.sla),
+        };
+    }
+    e.run_to_completion(100_000).unwrap();
+    assert_eq!(e.metrics.requests_finished, 12);
+    assert!(e.metrics.pages_shared > 0, "rag-fanout must attach to shared pages");
+    assert_eq!(e.device.len(), 0, "refcounted shared pages must free exactly once");
+    let bytes = e.take_trace_sink().unwrap().finish();
+    let fp = fingerprint(&mut e);
+
+    let trace = Trace::parse(&bytes).unwrap();
+    let shared_submits = trace.submits().iter().filter(|s| s.prefix.is_some()).count();
+    assert_eq!(shared_submits, 12, "every rag submission records its PrefixShare");
+
+    let (bytes2, fp2) = replay(&trace);
+    assert_eq!(fp, fp2, "shared-prefix replay diverged");
+    assert_eq!(bytes, bytes2);
+    assert_eq!(fp2.pages_shared, fp.pages_shared);
+}
+
+#[test]
+fn truncation_at_every_byte_is_a_decode_error() {
+    let (bytes, _) = capture(&tiny_meta());
+    assert!(Trace::parse(&bytes).is_ok());
+    // every prefix of a real capture must fail to parse — the end record
+    // makes "trace ended early" indistinguishable from corruption
+    let cuts: Vec<usize> = if bytes.len() <= 4096 {
+        (0..bytes.len()).collect()
+    } else {
+        let mut r = Rng::new(0xC0FFEE);
+        let mut v: Vec<usize> = (0..64).map(|_| r.below(bytes.len())).collect();
+        v.extend(0..512); // always cover the header densely
+        v.push(bytes.len() - 1);
+        v
+    };
+    for cut in cuts {
+        assert!(Trace::parse(&bytes[..cut]).is_err(), "cut at {cut} must not parse");
+    }
+}
+
+#[test]
+fn bitflips_and_garbage_never_panic() {
+    let (mut bytes, _) = capture(&tiny_meta());
+    let mut r = Rng::new(0xF1A6);
+    for _ in 0..400 {
+        let i = r.below(bytes.len());
+        let bit = 1u8 << r.below(8);
+        bytes[i] ^= bit;
+        let _ = Trace::parse(&bytes); // Err or a well-formed parse; no panic
+        bytes[i] ^= bit; // restore
+    }
+    assert!(Trace::parse(&bytes).is_ok(), "restore must round-trip");
+
+    // pure garbage: wrong magic is an immediate error
+    let mut garbage = vec![0u8; 512];
+    r.fill_bytes(&mut garbage);
+    garbage[..4].copy_from_slice(b"NOPE");
+    assert!(Trace::parse(&garbage).is_err());
+    // right magic, garbage body: still an error, still no panic
+    garbage[..4].copy_from_slice(b"TRCX");
+    assert!(Trace::parse(&garbage).is_err());
+    assert!(Trace::parse(&[]).is_err());
+}
+
+#[test]
+fn poll_log_shedding_leaves_markers_but_the_sink_keeps_everything() {
+    let meta = tiny_meta();
+    let mut e = meta.build_mock_engine().unwrap();
+    e.set_trace_sink(TraceWriter::new(&meta.to_json()));
+    e.set_event_log_cap(8); // force shedding with a small workload
+    submit_workload(&mut e, meta.dims.t_prompt);
+    e.run_to_completion(100_000).unwrap();
+
+    assert!(e.metrics.events_dropped > 0, "tiny cap must shed");
+    let events = e.poll_events();
+    assert!(events.len() <= 8 + 1, "log stays near its cap");
+    let dropped_in_log: u64 = events
+        .iter()
+        .filter_map(|ev| match ev {
+            EngineEvent::EventsDropped { count, .. } => Some(*count),
+            _ => None,
+        })
+        .sum();
+    assert!(dropped_in_log > 0, "the log must carry an EventsDropped marker");
+
+    // metrics surface the same counter at the top level of the JSON dump
+    let json = e.metrics.to_json(&e.device.stats()).to_string();
+    assert!(json.contains("\"events_dropped\""), "{json}");
+
+    // the sink saw every token even though the poll log shed most of them
+    let trace = Trace::parse(&e.take_trace_sink().unwrap().finish()).unwrap();
+    let trace_tokens: usize = trace.tokens_by_seq().values().map(Vec::len).sum();
+    assert_eq!(trace_tokens as u64, e.metrics.tokens_generated);
+    assert!(trace.events_dropped() > 0, "shed markers are recorded in the trace too");
+}
