@@ -6,9 +6,12 @@
 //! bundle base pointer, per-plane compressed lengths, and codec/bypass
 //! flags so one metadata read locates any subset of planes.
 
+use std::sync::Mutex;
+
 use crate::codec::{self, CodecKind, CodecPolicy};
 use crate::formats::Fmt;
 use crate::util::bytes;
+use crate::util::LanePool;
 
 use super::kvtransform::{self, KvTransform, KvWindow};
 use super::layout::{plane_len, transpose_from_planes_into, transpose_to_planes_into};
@@ -17,6 +20,16 @@ use super::scratch::BlockScratch;
 
 /// Logical block size served at cache-line granularity by the host.
 pub const BLOCK_BYTES: usize = 4096;
+
+/// Upper bound on planes per block that the intra-block lane fan-out
+/// supports with fixed-size stack slots (BF16 = 16 planes; wider formats
+/// would fall back to the serial loop).
+const MAX_PLANES: usize = 16;
+
+/// Shared base pointer for handing disjoint scratch rows to codec lanes.
+/// Safety of the accesses it enables is argued at each use site.
+struct RowBase(*mut u8);
+unsafe impl Sync for RowBase {}
 
 /// How the block's content was transformed before plane packing.
 #[derive(Debug, Clone, PartialEq)]
@@ -94,7 +107,21 @@ impl DeviceBlock {
         policy: CodecPolicy,
         scratch: &mut BlockScratch,
     ) -> DeviceBlock {
-        Self::encode_words(words, fmt, Transform::None, policy, scratch)
+        Self::encode_weights_with_lanes(words, fmt, policy, scratch, &LanePool::inline())
+    }
+
+    /// [`DeviceBlock::encode_weights_with`] fanning the per-plane
+    /// `compress_best` calls across a codec [`LanePool`]. Plane streams
+    /// are assembled in bit-position order regardless of lane completion
+    /// order, so the encoded block is bit-identical to the serial path.
+    pub fn encode_weights_with_lanes(
+        words: &[u16],
+        fmt: Fmt,
+        policy: CodecPolicy,
+        scratch: &mut BlockScratch,
+        lanes: &LanePool,
+    ) -> DeviceBlock {
+        Self::encode_words(words, fmt, Transform::None, policy, scratch, lanes)
     }
 
     /// Encode a KV window: Mechanism I chain then plane compression.
@@ -109,8 +136,20 @@ impl DeviceBlock {
         policy: CodecPolicy,
         scratch: &mut BlockScratch,
     ) -> DeviceBlock {
+        Self::encode_kv_with_lanes(kv_token_major, window, policy, scratch, &LanePool::inline())
+    }
+
+    /// [`DeviceBlock::encode_kv_with`] with lane-parallel plane encoding.
+    pub fn encode_kv_with_lanes(
+        kv_token_major: &[u16],
+        window: KvWindow,
+        policy: CodecPolicy,
+        scratch: &mut BlockScratch,
+        lanes: &LanePool,
+    ) -> DeviceBlock {
         let t = KvTransform::forward(kv_token_major, window);
-        let mut blk = Self::encode_words(&t.words, Fmt::Bf16, Transform::None, policy, scratch);
+        let mut blk =
+            Self::encode_words(&t.words, Fmt::Bf16, Transform::None, policy, scratch, lanes);
         blk.transform = Transform::Kv { window, base_exp: t.base_exp };
         blk
     }
@@ -121,6 +160,7 @@ impl DeviceBlock {
         transform: Transform,
         policy: CodecPolicy,
         scratch: &mut BlockScratch,
+        lanes: &LanePool,
     ) -> DeviceBlock {
         let bits = fmt.bits();
         let pl = plane_len(words.len());
@@ -131,11 +171,34 @@ impl DeviceBlock {
         let flat = &scratch.flat;
         let mut planes = Vec::with_capacity(bits);
         // store by bit position: plane for bit i is row (bits-1-i)
-        for i in 0..bits {
-            let row = bits - 1 - i;
-            let stream = &flat[row * pl..(row + 1) * pl];
-            let (kind, data) = codec::compress_best(policy, stream);
-            planes.push(PlaneStream { codec: kind, data });
+        if lanes.lanes() > 1 && bits > 1 && bits <= MAX_PLANES {
+            // Lane fan-out: each plane compresses independently from a
+            // shared read-only view of the transpose rows into its own
+            // slot; slots are drained in plane order below so the stream
+            // layout matches the serial loop exactly.
+            let slots: [Mutex<Option<(CodecKind, Vec<u8>)>>; MAX_PLANES] =
+                std::array::from_fn(|_| Mutex::new(None));
+            lanes.run(bits, &|i| {
+                let row = bits - 1 - i;
+                let stream = &flat[row * pl..(row + 1) * pl];
+                let (kind, data) = codec::compress_best(policy, stream);
+                *slots[i].lock().expect("lane encode slot") = Some((kind, data));
+            });
+            for slot in slots.iter().take(bits) {
+                let (kind, data) = slot
+                    .lock()
+                    .expect("lane encode slot")
+                    .take()
+                    .expect("lane pool ran every plane");
+                planes.push(PlaneStream { codec: kind, data });
+            }
+        } else {
+            for i in 0..bits {
+                let row = bits - 1 - i;
+                let stream = &flat[row * pl..(row + 1) * pl];
+                let (kind, data) = codec::compress_best(policy, stream);
+                planes.push(PlaneStream { codec: kind, data });
+            }
         }
         DeviceBlock { fmt, n_elem: words.len(), transform, planes }
     }
@@ -205,22 +268,73 @@ impl DeviceBlock {
         scratch: &mut BlockScratch,
         out: &mut Vec<u16>,
     ) -> anyhow::Result<()> {
+        self.decode_words_into_lanes(mask, scratch, out, &LanePool::inline())
+    }
+
+    /// [`DeviceBlock::decode_words_into`] fanning the per-plane
+    /// `decompress_into` calls across a codec [`LanePool`]. Each selected
+    /// plane decompresses into its own disjoint transpose row, so lanes
+    /// never share bytes; errors are surfaced in plane order, matching
+    /// the serial loop's first-failure semantics bit for bit. Runs are
+    /// allocation-free once scratch and `out` are warm, lanes or not.
+    pub fn decode_words_into_lanes(
+        &self,
+        mask: PlaneMask,
+        scratch: &mut BlockScratch,
+        out: &mut Vec<u16>,
+        lanes: &LanePool,
+    ) -> anyhow::Result<()> {
         let bits = self.fmt.bits();
         let pl = plane_len(self.n_elem);
         if out.capacity() < self.n_elem {
             scratch.note_grow();
         }
         let flat = scratch.flat_mut(bits * pl);
-        for i in 0..bits {
-            if !mask.contains(i) {
-                continue;
+        let mut sel = [0usize; MAX_PLANES];
+        let mut n_sel = 0usize;
+        if lanes.lanes() > 1 && bits <= MAX_PLANES && self.planes.len() >= bits {
+            for i in 0..bits {
+                if mask.contains(i) {
+                    sel[n_sel] = i;
+                    n_sel += 1;
+                }
             }
-            let row = bits - 1 - i;
-            codec::decompress_into(
-                self.planes[i].codec,
-                &self.planes[i].data,
-                &mut flat[row * pl..(row + 1) * pl],
-            )?;
+        }
+        if n_sel > 1 {
+            let base = RowBase(flat.as_mut_ptr());
+            let planes = &self.planes;
+            let errs: [Mutex<Option<anyhow::Error>>; MAX_PLANES] =
+                std::array::from_fn(|_| Mutex::new(None));
+            lanes.run(n_sel, &|j| {
+                let i = sel[j];
+                let row = bits - 1 - i;
+                // SAFETY: `sel[..n_sel]` holds distinct plane indices in
+                // 0..bits, so each lane item touches a distinct row slice
+                // of `flat` (rows are disjoint `pl`-byte spans of a buffer
+                // that is `bits * pl` long) and the parent `&mut flat`
+                // borrow is not read or written until `run` returns.
+                let dst = unsafe { std::slice::from_raw_parts_mut(base.0.add(row * pl), pl) };
+                if let Err(e) = codec::decompress_into(planes[i].codec, &planes[i].data, dst) {
+                    *errs[j].lock().expect("lane error slot") = Some(e);
+                }
+            });
+            for slot in errs.iter().take(n_sel) {
+                if let Some(e) = slot.lock().expect("lane error slot").take() {
+                    return Err(e);
+                }
+            }
+        } else {
+            for i in 0..bits {
+                if !mask.contains(i) {
+                    continue;
+                }
+                let row = bits - 1 - i;
+                codec::decompress_into(
+                    self.planes[i].codec,
+                    &self.planes[i].data,
+                    &mut flat[row * pl..(row + 1) * pl],
+                )?;
+            }
         }
         transpose_from_planes_into(flat, self.n_elem, bits, mask.0, out);
         Ok(())
@@ -242,6 +356,16 @@ impl DeviceBlock {
         out: &mut Vec<u16>,
     ) -> anyhow::Result<()> {
         self.decode_planes_into(PlaneMask::full(self.fmt), scratch, out)
+    }
+
+    /// [`DeviceBlock::decode_full_into`] with lane-parallel plane decode.
+    pub fn decode_full_into_lanes(
+        &self,
+        scratch: &mut BlockScratch,
+        out: &mut Vec<u16>,
+        lanes: &LanePool,
+    ) -> anyhow::Result<()> {
+        self.decode_planes_into_lanes(PlaneMask::full(self.fmt), scratch, out, lanes)
     }
 
     /// Plane-granular streaming read: decompress exactly the planes in
@@ -268,7 +392,18 @@ impl DeviceBlock {
         scratch: &mut BlockScratch,
         out: &mut Vec<u16>,
     ) -> anyhow::Result<()> {
-        self.decode_words_into(mask, scratch, out)?;
+        self.decode_planes_into_lanes(mask, scratch, out, &LanePool::inline())
+    }
+
+    /// [`DeviceBlock::decode_planes_into`] with lane-parallel plane decode.
+    pub fn decode_planes_into_lanes(
+        &self,
+        mask: PlaneMask,
+        scratch: &mut BlockScratch,
+        out: &mut Vec<u16>,
+        lanes: &LanePool,
+    ) -> anyhow::Result<()> {
+        self.decode_words_into_lanes(mask, scratch, out, lanes)?;
         self.inverse_topology_in_place(scratch, out);
         Ok(())
     }
@@ -293,8 +428,19 @@ impl DeviceBlock {
         scratch: &mut BlockScratch,
         out: &mut Vec<u16>,
     ) -> anyhow::Result<()> {
+        self.decode_view_into_lanes(view, scratch, out, &LanePool::inline())
+    }
+
+    /// [`DeviceBlock::decode_view_into`] with lane-parallel plane decode.
+    pub fn decode_view_into_lanes(
+        &self,
+        view: &PrecisionView,
+        scratch: &mut BlockScratch,
+        out: &mut Vec<u16>,
+        lanes: &LanePool,
+    ) -> anyhow::Result<()> {
         anyhow::ensure!(view.fmt == self.fmt, "view format mismatch");
-        self.decode_words_into(view.mask(), scratch, out)?;
+        self.decode_words_into_lanes(view.mask(), scratch, out, lanes)?;
         self.inverse_topology_in_place(scratch, out);
         if view.fmt == Fmt::Bf16 {
             reconstruct_bf16_view(out, view);
@@ -464,6 +610,70 @@ mod tests {
             &mut s,
         );
         assert_eq!(enc2, blk);
+    }
+
+    #[test]
+    fn lane_encode_and_decode_match_serial_bit_for_bit() {
+        let pool = LanePool::new(4);
+        props(127, if cfg!(miri) { 4 } else { 40 }, |r| {
+            let n = 1 + r.below(2048);
+            let words: Vec<u16> = (0..n).map(|_| r.next_u32() as u16).collect();
+            let mut s = BlockScratch::new();
+            for policy in [CodecPolicy::FastBest, CodecPolicy::AllBest] {
+                let serial = DeviceBlock::encode_weights(&words, Fmt::Bf16, policy);
+                let laned = DeviceBlock::encode_weights_with_lanes(
+                    &words,
+                    Fmt::Bf16,
+                    policy,
+                    &mut s,
+                    &pool,
+                );
+                assert_eq!(serial, laned, "lane encode must be bit-identical");
+                let mask = PlaneMask(0x0001 | (r.next_u32() & 0xfffe));
+                let mut a = Vec::new();
+                let mut b = Vec::new();
+                serial.decode_planes_into(mask, &mut s, &mut a).unwrap();
+                serial.decode_planes_into_lanes(mask, &mut s, &mut b, &pool).unwrap();
+                assert_eq!(a, b, "lane decode must be bit-identical");
+            }
+        });
+    }
+
+    #[test]
+    fn lane_decode_surfaces_same_error_as_serial() {
+        let mut r = Rng::new(128);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let pool = LanePool::new(4);
+        let mut blk = DeviceBlock::encode_kv(&kv, KvWindow::new(32, 64), CodecPolicy::AllBest);
+        // corrupt the first compressed (non-Raw) plane stream
+        let victim = blk
+            .planes
+            .iter()
+            .position(|p| p.codec != CodecKind::Raw && !p.data.is_empty())
+            .expect("smooth kv compresses at least one plane");
+        blk.planes[victim].data.truncate(blk.planes[victim].data.len() / 2);
+        let mut s = BlockScratch::new();
+        let mut out = Vec::new();
+        let serial = blk.decode_full_into(&mut s, &mut out).unwrap_err();
+        let laned = blk.decode_full_into_lanes(&mut s, &mut out, &pool).unwrap_err();
+        assert_eq!(format!("{serial:#}"), format!("{laned:#}"));
+    }
+
+    #[test]
+    fn lane_decode_stops_growing_scratch() {
+        let mut r = Rng::new(129);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let pool = LanePool::new(4);
+        let blk = DeviceBlock::encode_kv(&kv, KvWindow::new(32, 64), CodecPolicy::AllBest);
+        let mut s = BlockScratch::new();
+        let mut out = Vec::new();
+        blk.decode_full_into_lanes(&mut s, &mut out, &pool).unwrap();
+        let warm = s.growth_count();
+        for _ in 0..5 {
+            blk.decode_full_into_lanes(&mut s, &mut out, &pool).unwrap();
+        }
+        assert_eq!(s.growth_count(), warm, "warm lane decode must not grow scratch");
+        assert_eq!(out, blk.decode_full().unwrap());
     }
 
     #[test]

@@ -158,7 +158,6 @@ pub fn transpose_to_planes_into(words: &[u16], bits: usize, out: &mut Vec<u8>) {
             }
         }
     }
-    let _ = groups;
 
     // Tail elements (m % 8 != 0): bit-by-bit.
     for j in groups * 8..m {
@@ -239,7 +238,6 @@ pub fn transpose_from_planes_into(
                 outw[j] = lb[j] as u16 | ((hb[j] as u16) << 8);
             }
         }
-        let _ = groups;
     }
 
     for j in groups * 8..m {

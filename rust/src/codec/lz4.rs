@@ -114,10 +114,40 @@ pub fn decompress(src: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
     Ok(out)
 }
 
+/// Width of one wild store, in bytes.
+const WILD: usize = 8;
+
+/// Copy `len` bytes forward in unconditional 8-byte steps; may write (and
+/// read) up to 7 bytes past `len`.
+///
+/// # Safety
+/// Caller must guarantee `len + 7` readable bytes at `src` and `len + 7`
+/// writable bytes at `dst`. Overlap is allowed only when `dst` is at least
+/// 8 bytes past `src` (each 8-byte load then completes before its bytes are
+/// overwritten, because the copy walks forward in 8-byte steps).
+#[inline]
+unsafe fn wild_copy(mut src: *const u8, mut dst: *mut u8, len: usize) {
+    let end = dst.add(len);
+    while dst < end {
+        (dst as *mut u64).write_unaligned((src as *const u64).read_unaligned());
+        src = src.add(WILD);
+        dst = dst.add(WILD);
+    }
+}
+
 /// Allocation-free decode of an LZ4 block into `out` (whose length is the
 /// exact decompressed size, known from the plane-index metadata). Errors —
 /// truncation, bad offsets, size mismatch — match [`decompress`]; `out`
 /// contents are unspecified on error. Never reads outside `src`/`out`.
+///
+/// Literals and matches copy 8 bytes per step when the sequence has ≥ 8
+/// bytes of slack before the end of `out` (wild-store bytes past a segment
+/// are overwritten by the next segment, or the decode errors out before
+/// returning); overlapping matches with offsets 1/2/4 splat a u64 pattern
+/// (the all-zero-plane case is a single offset-1 match covering the whole
+/// plane). Sequences near the buffer end take the exact-width scalar path.
+/// Error classification matches [`decompress_into_scalar`]: every bound is
+/// checked before any write.
 pub fn decompress_into(src: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
     let n = out.len();
     let mut w = 0usize; // write cursor into out
@@ -146,7 +176,13 @@ pub fn decompress_into(src: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
         }
         anyhow::ensure!(i + lit_len <= src.len(), "truncated literals");
         anyhow::ensure!(w + lit_len <= n, "output overrun ({} > {n})", w + lit_len);
-        out[w..w + lit_len].copy_from_slice(&src[i..i + lit_len]);
+        if w + lit_len + WILD <= n && i + lit_len + WILD <= src.len() {
+            // SAFETY: slack on both buffers just checked; src and out are
+            // distinct allocations, so no overlap.
+            unsafe { wild_copy(src.as_ptr().add(i), out.as_mut_ptr().add(w), lit_len) };
+        } else {
+            out[w..w + lit_len].copy_from_slice(&src[i..i + lit_len]);
+        }
         i += lit_len;
         w += lit_len;
         if i == src.len() {
@@ -171,7 +207,108 @@ pub fn decompress_into(src: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
         }
         ml += MIN_MATCH;
         anyhow::ensure!(w + ml <= n, "output overrun ({} > {n})", w + ml);
-        // overlapping copy
+        let start = w - offset;
+        if w + ml + WILD <= n && (offset >= WILD || WILD % offset == 0) {
+            let pattern = match offset {
+                // period divides 8: splat one u64 of the repeating pattern
+                1 => Some(u64::from_le_bytes([out[start]; WILD])),
+                2 => {
+                    let p: [u8; 2] = [out[start], out[start + 1]];
+                    Some(u64::from_le_bytes([p[0], p[1], p[0], p[1], p[0], p[1], p[0], p[1]]))
+                }
+                4 => {
+                    let p: [u8; 4] = out[start..start + 4].try_into().expect("4-byte pattern");
+                    Some(u64::from_le_bytes([p[0], p[1], p[2], p[3], p[0], p[1], p[2], p[3]]))
+                }
+                _ => None,
+            };
+            if let Some(pat) = pattern {
+                // SAFETY: the last byte touched is < w + ml + WILD <= n.
+                unsafe {
+                    let mut p = out.as_mut_ptr().add(w);
+                    let end = p.add(ml);
+                    while p < end {
+                        (p as *mut u64).write_unaligned(pat);
+                        p = p.add(WILD);
+                    }
+                }
+            } else {
+                // SAFETY: offset >= 8 (pattern is None only then, given the
+                // branch guard), so each 8-byte load sits entirely behind
+                // the forward-walking store; slack checked above.
+                unsafe {
+                    wild_copy(out.as_ptr().add(start), out.as_mut_ptr().add(w), ml);
+                }
+            }
+            w += ml;
+        } else if offset >= ml {
+            out.copy_within(start..start + ml, w);
+            w += ml;
+        } else {
+            for k in 0..ml {
+                out[w + k] = out[start + k];
+            }
+            w += ml;
+        }
+    }
+    anyhow::ensure!(w == n, "decompressed size {w} != expected {n}");
+    Ok(())
+}
+
+/// Byte/`copy_within` predecessor of [`decompress_into`]. Reference for
+/// differential tests and the `perf_hotpaths` speedup gates; not a
+/// production path.
+#[doc(hidden)]
+pub fn decompress_into_scalar(src: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
+    let n = out.len();
+    let mut w = 0usize;
+    let mut i = 0usize;
+    if n == 0 {
+        anyhow::ensure!(src.len() <= 1, "trailing bytes in empty block");
+        return Ok(());
+    }
+    loop {
+        anyhow::ensure!(i < src.len(), "truncated block (token)");
+        let token = src[i];
+        i += 1;
+        let mut lit_len = (token >> 4) as usize;
+        if lit_len == 15 {
+            loop {
+                anyhow::ensure!(i < src.len(), "truncated literal length");
+                let b = src[i];
+                i += 1;
+                lit_len += b as usize;
+                if b != 255 {
+                    break;
+                }
+            }
+        }
+        anyhow::ensure!(i + lit_len <= src.len(), "truncated literals");
+        anyhow::ensure!(w + lit_len <= n, "output overrun ({} > {n})", w + lit_len);
+        out[w..w + lit_len].copy_from_slice(&src[i..i + lit_len]);
+        i += lit_len;
+        w += lit_len;
+        if i == src.len() {
+            break;
+        }
+        anyhow::ensure!(i + 2 <= src.len(), "truncated offset");
+        let offset = src[i] as usize | ((src[i + 1] as usize) << 8);
+        i += 2;
+        anyhow::ensure!(offset > 0 && offset <= w, "bad offset {offset} at {w}");
+        let mut ml = (token & 0x0f) as usize;
+        if ml == 15 {
+            loop {
+                anyhow::ensure!(i < src.len(), "truncated match length");
+                let b = src[i];
+                i += 1;
+                ml += b as usize;
+                if b != 255 {
+                    break;
+                }
+            }
+        }
+        ml += MIN_MATCH;
+        anyhow::ensure!(w + ml <= n, "output overrun ({} > {n})", w + ml);
         let start = w - offset;
         if offset >= ml {
             out.copy_within(start..start + ml, w);
@@ -281,6 +418,33 @@ mod tests {
                 assert!(decompress_into(&enc, &mut long).is_err());
             }
         });
+    }
+
+    #[test]
+    fn vector_decompress_matches_scalar() {
+        props(84, 300, |r| {
+            let data = arb_bytes(r, 4096);
+            let enc = compress(&data);
+            let mut a = vec![0xEEu8; data.len()];
+            let mut b = vec![0x11u8; data.len()];
+            decompress_into(&enc, &mut a).unwrap();
+            decompress_into_scalar(&enc, &mut b).unwrap();
+            assert_eq!(a, b);
+        });
+        // small-offset overlapping matches (periods 1..8) with every tail
+        // length mod 8 — exercises the pattern-splat and safe-tail paths
+        for period in 1..=8usize {
+            for tail in 0..=8usize {
+                let body: Vec<u8> = (0..256 + tail).map(|i| (i % period) as u8 + 1).collect();
+                let enc = compress(&body);
+                let mut a = vec![0u8; body.len()];
+                let mut b = vec![0u8; body.len()];
+                decompress_into(&enc, &mut a).unwrap();
+                decompress_into_scalar(&enc, &mut b).unwrap();
+                assert_eq!(a, b, "period={period} tail={tail}");
+                assert_eq!(a, body);
+            }
+        }
     }
 
     #[test]

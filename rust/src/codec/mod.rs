@@ -138,13 +138,50 @@ impl CodecPolicy {
     }
 }
 
+/// SWAR all-zero probe: true iff every byte of `data` is zero. Scans a u64
+/// word per step and bails on the first nonzero word, so mixed planes pay
+/// at most one word of work.
+#[inline]
+fn all_zero(data: &[u8]) -> bool {
+    let chunks = data.chunks_exact(8);
+    let rem = chunks.remainder();
+    for c in chunks {
+        if u64::from_le_bytes(c.try_into().expect("8-byte chunk")) != 0 {
+            return false;
+        }
+    }
+    rem.iter().all(|&b| b == 0)
+}
+
 /// Compress `data` under `policy`, returning the winning codec and bytes;
 /// falls back to `Raw` (bypass) if no candidate actually shrinks the data.
 ///
 /// The raw copy is only materialized on the bypass path: while candidates
 /// are competing, only their (already-allocated) outputs are kept, so a
 /// winning codec never pays an extra `data.len()` memcpy.
+///
+/// All-zero planes — the common case for Mechanism I's high-order delta
+/// planes — skip the full candidate evaluation: for a zero plane the winner
+/// and its encoded bytes depend only on `(policy, len)`, so a per-thread
+/// single-entry memo replays the last full evaluation's result verbatim.
+/// The memo is populated *by* a full evaluation, so the fast path is
+/// bit-identical to the slow path by construction.
 pub fn compress_best(policy: CodecPolicy, data: &[u8]) -> (CodecKind, Vec<u8>) {
+    thread_local! {
+        static ZERO_MEMO: std::cell::RefCell<Option<(CodecPolicy, usize, CodecKind, Vec<u8>)>> =
+            const { std::cell::RefCell::new(None) };
+    }
+    let zero = all_zero(data);
+    if zero {
+        let hit = ZERO_MEMO.with(|m| {
+            m.borrow().as_ref().and_then(|(p, n, k, enc)| {
+                (*p == policy && *n == data.len()).then(|| (*k, enc.clone()))
+            })
+        });
+        if let Some(hit) = hit {
+            return hit;
+        }
+    }
     let mut best: Option<(CodecKind, Vec<u8>)> = None;
     for &k in policy.candidates() {
         let bar = best.as_ref().map_or(data.len(), |(_, b)| b.len());
@@ -153,7 +190,11 @@ pub fn compress_best(policy: CodecPolicy, data: &[u8]) -> (CodecKind, Vec<u8>) {
             best = Some((k, c));
         }
     }
-    best.unwrap_or_else(|| (CodecKind::Raw, data.to_vec()))
+    let (kind, enc) = best.unwrap_or_else(|| (CodecKind::Raw, data.to_vec()));
+    if zero {
+        ZERO_MEMO.with(|m| *m.borrow_mut() = Some((policy, data.len(), kind, enc.clone())));
+    }
+    (kind, enc)
 }
 
 #[cfg(test)]
@@ -205,6 +246,39 @@ mod tests {
         let (kind, enc) = compress_best(CodecPolicy::FastBest, &noise);
         assert_eq!(kind, CodecKind::Raw);
         assert_eq!(enc, noise);
+    }
+
+    #[test]
+    fn zero_plane_fast_path_is_bit_identical() {
+        // interleave zero planes of several lengths and policies with
+        // nonzero data, and pin every memo hit against a direct per-codec
+        // evaluation of the same (policy, len)
+        let policies =
+            [CodecPolicy::Lz4Only, CodecPolicy::ZstdOnly, CodecPolicy::FastBest, CodecPolicy::AllBest];
+        for _ in 0..3 {
+            for &policy in &policies {
+                for len in [0usize, 7, 256, 512, 4096] {
+                    let zeros = vec![0u8; len];
+                    let (kind, enc) = compress_best(policy, &zeros);
+                    // reference: evaluate candidates directly, no memo
+                    let mut best: Option<(CodecKind, Vec<u8>)> = None;
+                    for &k in policy.candidates() {
+                        let bar = best.as_ref().map_or(len, |(_, b)| b.len());
+                        let c = compress(k, &zeros);
+                        if c.len() < bar {
+                            best = Some((k, c));
+                        }
+                    }
+                    let (rk, renc) = best.unwrap_or((CodecKind::Raw, zeros.clone()));
+                    assert_eq!(kind, rk, "policy={policy:?} len={len}");
+                    assert_eq!(enc, renc, "policy={policy:?} len={len}");
+                    // poison the memo key with a nonzero plane of same len
+                    let mut mixed = vec![0u8; len.max(1)];
+                    mixed[0] = 1;
+                    let _ = compress_best(policy, &mixed);
+                }
+            }
+        }
     }
 
     #[test]

@@ -5,6 +5,44 @@
 //! for runs, with a literal-escape for mixed content:
 //! control byte `c`: `c < 0x80` ⇒ run of length `c+1` of the next byte;
 //! `c >= 0x80` ⇒ `c-0x7f` literal bytes follow.
+//!
+//! The inner loops are SWAR-vectorized: the run scan compares 8 bytes per
+//! step (u64 XOR against a splatted run byte, first mismatch via
+//! `trailing_zeros`), and decode fills runs / copies literals with wild
+//! 8-byte stores when there is overwrite slack, falling back to the exact
+//! scalar tail near segment and buffer ends. The scalar predecessors are
+//! kept as [`compress_scalar`] / [`decompress_into_scalar`]: the
+//! differential property tests pin the vector kernels against them, and
+//! `perf_hotpaths` measures the speedup ratio at runtime (which is why they
+//! are `#[doc(hidden)] pub` rather than `#[cfg(test)]`).
+
+/// Width of one SWAR step / wild store, in bytes.
+const WILD: usize = 8;
+
+/// Length of the run starting at `src[i]`, capped at `cap`.
+///
+/// SWAR scan: XOR a u64 window against the splatted run byte; the first
+/// nonzero byte of the XOR is the first mismatch (`from_le_bytes` keeps byte
+/// k of memory in bits `8k..8k+8`, so `trailing_zeros/8` indexes it).
+#[inline]
+fn run_len_from(src: &[u8], i: usize, cap: usize) -> usize {
+    let b = src[i];
+    let max = (src.len() - i).min(cap);
+    let splat = u64::from_le_bytes([b; WILD]);
+    let mut k = 1usize;
+    while k + WILD <= max {
+        let w = u64::from_le_bytes(src[i + k..i + k + WILD].try_into().expect("8-byte window"));
+        let x = w ^ splat;
+        if x != 0 {
+            return k + (x.trailing_zeros() / 8) as usize;
+        }
+        k += WILD;
+    }
+    while k < max && src[i + k] == b {
+        k += 1;
+    }
+    k
+}
 
 pub fn compress(src: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(src.len() / 4 + 8);
@@ -23,7 +61,123 @@ pub fn compress(src: &[u8]) -> Vec<u8> {
     };
 
     while i < n {
-        // measure run at i
+        // measure run at i (SWAR; bit-identical to the byte-at-a-time scan)
+        let run = run_len_from(src, i, 128);
+        if run >= 3 {
+            flush_literals(&mut out, lit_start, i, src);
+            out.push((run - 1) as u8);
+            out.push(src[i]);
+            i += run;
+            lit_start = i;
+        } else {
+            i += run;
+        }
+    }
+    flush_literals(&mut out, lit_start, n, src);
+    out
+}
+
+pub fn decompress(src: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
+    let mut out = vec![0u8; n];
+    decompress_into(src, &mut out)?;
+    Ok(out)
+}
+
+/// Copy `len` bytes in unconditional 8-byte steps; may write (and read) up to
+/// 7 bytes past `len`.
+///
+/// # Safety
+/// Caller must guarantee `len + 7` readable bytes at `src` and `len + 7`
+/// writable bytes at `dst`, and that the regions do not overlap.
+#[inline]
+unsafe fn wild_copy(mut src: *const u8, mut dst: *mut u8, len: usize) {
+    let end = dst.add(len);
+    while dst < end {
+        (dst as *mut u64).write_unaligned((src as *const u64).read_unaligned());
+        src = src.add(WILD);
+        dst = dst.add(WILD);
+    }
+}
+
+/// Allocation-free decode: fills `out` exactly (its length is the known
+/// decompressed size). Errors — truncation, overrun, size mismatch — match
+/// [`decompress`]; `out` contents are unspecified on error.
+///
+/// Runs are filled with splatted u64 wild stores and literals copied in
+/// 8-byte steps whenever the segment has ≥ 8 bytes of slack before the end
+/// of `out` (and of `src`, for reads); the slack bytes are garbage only
+/// until the next segment overwrites them, and decode always errors before
+/// returning a partially-written buffer. Segments near the end use the
+/// exact-width scalar path. Error classification is identical to
+/// [`decompress_into_scalar`]: every bound is checked before any write.
+pub fn decompress_into(src: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
+    let n = out.len();
+    let mut w = 0usize; // write cursor into out
+    let mut i = 0;
+    while i < src.len() {
+        let c = src[i];
+        i += 1;
+        if c < 0x80 {
+            anyhow::ensure!(i < src.len(), "truncated run");
+            let b = src[i];
+            i += 1;
+            let run = c as usize + 1;
+            anyhow::ensure!(w + run <= n, "overrun");
+            if w + run + WILD <= n {
+                let splat = u64::from_le_bytes([b; WILD]);
+                // SAFETY: stores cover [w, w+run) rounded up to 8, the last
+                // byte touched is < w + run + WILD <= n; `out` is exclusive.
+                unsafe {
+                    let mut p = out.as_mut_ptr().add(w);
+                    let end = p.add(run);
+                    while p < end {
+                        (p as *mut u64).write_unaligned(splat);
+                        p = p.add(WILD);
+                    }
+                }
+            } else {
+                out[w..w + run].fill(b);
+            }
+            w += run;
+        } else {
+            let cnt = (c - 0x7f) as usize;
+            anyhow::ensure!(i + cnt <= src.len(), "truncated literals");
+            anyhow::ensure!(w + cnt <= n, "overrun");
+            if w + cnt + WILD <= n && i + cnt + WILD <= src.len() {
+                // SAFETY: both slack guards just checked; regions are in
+                // distinct buffers so they cannot overlap.
+                unsafe { wild_copy(src.as_ptr().add(i), out.as_mut_ptr().add(w), cnt) };
+            } else {
+                out[w..w + cnt].copy_from_slice(&src[i..i + cnt]);
+            }
+            i += cnt;
+            w += cnt;
+        }
+    }
+    anyhow::ensure!(w == n, "size mismatch {w} != {n}");
+    Ok(())
+}
+
+/// Byte-at-a-time predecessor of [`compress`]. Reference for differential
+/// tests and the `perf_hotpaths` speedup gates; not a production path.
+#[doc(hidden)]
+pub fn compress_scalar(src: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(src.len() / 4 + 8);
+    let n = src.len();
+    let mut i = 0;
+    let mut lit_start = 0usize;
+
+    let flush_literals = |out: &mut Vec<u8>, from: usize, to: usize, src: &[u8]| {
+        let mut s = from;
+        while s < to {
+            let chunk = (to - s).min(0x80);
+            out.push(0x7f + chunk as u8);
+            out.extend_from_slice(&src[s..s + chunk]);
+            s += chunk;
+        }
+    };
+
+    while i < n {
         let b = src[i];
         let mut j = i + 1;
         while j < n && src[j] == b && j - i < 128 {
@@ -44,18 +198,12 @@ pub fn compress(src: &[u8]) -> Vec<u8> {
     out
 }
 
-pub fn decompress(src: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
-    let mut out = vec![0u8; n];
-    decompress_into(src, &mut out)?;
-    Ok(out)
-}
-
-/// Allocation-free decode: fills `out` exactly (its length is the known
-/// decompressed size). Errors — truncation, overrun, size mismatch — match
-/// [`decompress`]; `out` contents are unspecified on error.
-pub fn decompress_into(src: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
+/// Byte-at-a-time predecessor of [`decompress_into`]. Reference for
+/// differential tests and the `perf_hotpaths` speedup gates.
+#[doc(hidden)]
+pub fn decompress_into_scalar(src: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
     let n = out.len();
-    let mut w = 0usize; // write cursor into out
+    let mut w = 0usize;
     let mut i = 0;
     while i < src.len() {
         let c = src[i];
@@ -135,5 +283,40 @@ mod tests {
             let mut long = vec![0u8; data.len() + 1];
             assert!(decompress_into(&enc, &mut long).is_err());
         });
+    }
+
+    #[test]
+    fn vector_compress_matches_scalar() {
+        props(93, 400, |r| {
+            let data = arb_bytes(r, 4096);
+            assert_eq!(compress(&data), compress_scalar(&data));
+        });
+        // runs straddling the 128 cap and the 8-byte SWAR window
+        for n in 120..=140 {
+            let data = vec![9u8; n];
+            assert_eq!(compress(&data), compress_scalar(&data), "n={n}");
+        }
+    }
+
+    #[test]
+    fn vector_decompress_matches_scalar_on_tails() {
+        // every tail length mod 8, with run + literal endings
+        for tail in 0..=16usize {
+            for ending in 0..2 {
+                let mut data: Vec<u8> = (0..256).map(|i| (i / 9) as u8).collect();
+                if ending == 0 {
+                    data.resize(data.len() + tail, 3u8); // run tail
+                } else {
+                    data.extend((0..tail).map(|i| (i * 17 + 1) as u8)); // literal tail
+                }
+                let enc = compress(&data);
+                let mut a = vec![0xEEu8; data.len()];
+                let mut b = vec![0x11u8; data.len()];
+                decompress_into(&enc, &mut a).unwrap();
+                decompress_into_scalar(&enc, &mut b).unwrap();
+                assert_eq!(a, b, "tail={tail} ending={ending}");
+                assert_eq!(a, data);
+            }
+        }
     }
 }

@@ -133,6 +133,10 @@ pub struct EngineConfig {
     /// spilled pages and weight chunks re-fetched every step skip codec
     /// work entirely; also wall-clock only.
     pub decode_cache_blocks: usize,
+    /// Intra-block codec lanes: the planes of a single block encode/decode
+    /// concurrently when the batch pool is not already fanning blocks out.
+    /// Wall-clock only, like `pool_threads`. 1 = serial.
+    pub codec_lanes: usize,
 }
 
 impl Default for EngineConfig {
@@ -151,6 +155,7 @@ impl Default for EngineConfig {
             prefill_ns_per_token: 125.0,
             pool_threads: 1,
             decode_cache_blocks: crate::cxl::DEFAULT_DECODE_CACHE_BLOCKS,
+            codec_lanes: 1,
         }
     }
 }
@@ -286,11 +291,17 @@ impl<B: ModelBackend> Engine<B> {
             let mut d = ShardedDevice::new(cfg.shards, cfg.design, cfg.codec);
             d.set_pool(cfg.pool_threads);
             d.set_decode_cache(cfg.decode_cache_blocks);
+            if cfg.codec_lanes > 1 {
+                d.set_codec_lanes(cfg.codec_lanes);
+            }
             Box::new(d)
         } else {
             let mut d = CxlDevice::new(cfg.design, cfg.codec);
             d.set_pool(cfg.pool_threads);
             d.set_decode_cache(cfg.decode_cache_blocks);
+            if cfg.codec_lanes > 1 {
+                d.set_codec_lanes(cfg.codec_lanes);
+            }
             Box::new(d)
         };
         let hbm = HbmPartition::new(cfg.hbm_kv_bytes, 0.0, 0);

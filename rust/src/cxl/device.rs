@@ -38,10 +38,10 @@ use crate::codec::{self, CodecKind, CodecPolicy};
 use crate::formats::Fmt;
 use crate::sim::ResourceTimeline;
 use crate::util::bytes::{bytes_to_u16s, u16s_to_bytes};
-use crate::util::WorkerPool;
+use crate::util::{LanePool, WorkerPool};
 use std::collections::{HashMap, HashSet};
 use std::ops::Range;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::controller::{free_latency, latency, write_latency, LatencyBreakdown, LatencyCase};
 use super::link::Link;
@@ -260,6 +260,12 @@ pub struct CxlDevice {
     pool: WorkerPool,
     /// One scratch per pool worker.
     pool_scratch: Vec<Mutex<BlockScratch>>,
+    /// Intra-block codec lane pool: the planes of ONE block encode/decode
+    /// concurrently (1 = serial). Engaged only when the batch pool is not
+    /// already fanning blocks out, so the two parallel axes never nest.
+    /// Wall-clock only — every modeled number is unchanged. `Arc` so a
+    /// sharded fleet shares one set of lane threads.
+    lanes: Arc<LanePool>,
     /// Decoded-plane cache (wall-clock only; see [`DecodeCache`]).
     cache: DecodeCache,
 }
@@ -288,6 +294,7 @@ impl CxlDevice {
             scratch: BlockScratch::new(),
             pool: WorkerPool::new(1),
             pool_scratch: vec![Mutex::new(BlockScratch::new())],
+            lanes: Arc::new(LanePool::inline()),
             cache: DecodeCache::new(DEFAULT_DECODE_CACHE_BLOCKS),
         }
     }
@@ -303,6 +310,24 @@ impl CxlDevice {
     /// Worker width of the batch pool.
     pub fn pool_threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// Set the intra-block codec lane width (1 = serial). Purely a
+    /// wall-clock knob: completions, byte traffic, and model time are
+    /// unchanged (`tests/hotpath_equiv.rs`).
+    pub fn set_codec_lanes(&mut self, lanes: usize) {
+        self.lanes = Arc::new(LanePool::new(lanes));
+    }
+
+    /// Share an existing lane pool (sharded fleets pass one `Arc` to
+    /// every shard so the fleet owns a single set of lane threads).
+    pub fn set_codec_lane_pool(&mut self, lanes: Arc<LanePool>) {
+        self.lanes = lanes;
+    }
+
+    /// Lane width of the intra-block codec pool.
+    pub fn codec_lanes(&self) -> usize {
+        self.lanes.lanes()
     }
 
     /// Set the decoded-plane cache capacity in entries (0 disables and
@@ -413,11 +438,12 @@ impl CxlDevice {
                 let (codec, data) = codec::compress_best(self.policy, &raw);
                 Stored::Compressed { codec, data, raw_len }
             }
-            Design::Trace => Stored::Planes(DeviceBlock::encode_weights_with(
+            Design::Trace => Stored::Planes(DeviceBlock::encode_weights_with_lanes(
                 words,
                 fmt,
                 self.policy,
                 &mut self.scratch,
+                &self.lanes,
             )),
         });
         self.commit_stored(block_addr, raw_len, stored)
@@ -436,11 +462,12 @@ impl CxlDevice {
             Design::Trace => {
                 let raw_len = kv_token_major.len() * 2;
                 let stored = pre.unwrap_or_else(|| {
-                    Stored::Planes(DeviceBlock::encode_kv_with(
+                    Stored::Planes(DeviceBlock::encode_kv_with_lanes(
                         kv_token_major,
                         window,
                         self.policy,
                         &mut self.scratch,
+                        &self.lanes,
                     ))
                 });
                 self.commit_stored(block_addr, raw_len, stored)
@@ -486,7 +513,7 @@ impl CxlDevice {
                     Some(r) => r?,
                     None => {
                         let mut out = Vec::with_capacity(b.n_elem);
-                        b.decode_full_into(&mut self.scratch, &mut out)?;
+                        b.decode_full_into_lanes(&mut self.scratch, &mut out, &self.lanes)?;
                         out
                     }
                 }
@@ -536,7 +563,12 @@ impl CxlDevice {
                     None => {
                         anyhow::ensure!(view.fmt == b.fmt, "view format mismatch");
                         let mut out = Vec::with_capacity(b.n_elem);
-                        b.decode_planes_into(view.mask(), &mut self.scratch, &mut out)?;
+                        b.decode_planes_into_lanes(
+                            view.mask(),
+                            &mut self.scratch,
+                            &mut out,
+                            &self.lanes,
+                        )?;
                         out
                     }
                 };
@@ -591,7 +623,7 @@ impl CxlDevice {
                     Some(r) => r?,
                     None => {
                         let mut out = Vec::with_capacity(b.n_elem);
-                        b.decode_planes_into(fetch, &mut self.scratch, &mut out)?;
+                        b.decode_planes_into_lanes(fetch, &mut self.scratch, &mut out, &self.lanes)?;
                         out
                     }
                 };
@@ -842,9 +874,15 @@ impl CxlDevice {
                 jobs.push(build_job(&self.blocks, self.policy, spec, &batch[pos].1));
             }
         }
-        let outs = self
-            .pool
-            .run(jobs, |w, _, job| job.run(&mut self.pool_scratch[w].lock().expect("scratch")));
+        // Nesting guard: lanes engage only when the batch pool isn't
+        // already fanning blocks across workers, so a 4-wide pool and
+        // 4-wide lanes never multiply into 16 runnable threads.
+        let inline = LanePool::inline();
+        let lanes: &LanePool =
+            if jobs.len() <= 1 || self.pool.threads() <= 1 { &self.lanes } else { &inline };
+        let outs = self.pool.run(jobs, |w, _, job| {
+            job.run(&mut self.pool_scratch[w].lock().expect("scratch"), lanes)
+        });
         let mut result: Vec<Option<JobOut>> = (0..plans.len()).map(|_| None).collect();
         for (pos, out) in positions.into_iter().zip(outs) {
             result[pos] = Some(out);
@@ -887,7 +925,7 @@ impl CxlDevice {
         let out = match &plan {
             Plan::Job { spec, .. } => {
                 let job = build_job(&self.blocks, self.policy, spec, txn);
-                Some(job.run(&mut self.scratch))
+                Some(job.run(&mut self.scratch, &self.lanes))
             }
             _ => None,
         };
@@ -1038,13 +1076,14 @@ pub(crate) fn build_job<'a>(
 }
 
 impl BatchJob<'_> {
-    /// Run the pure work with a worker-owned scratch. Output is exactly
-    /// what the serial path would have computed at the same point.
-    pub(crate) fn run(&self, scratch: &mut BlockScratch) -> JobOut {
+    /// Run the pure work with a worker-owned scratch, fanning per-plane
+    /// codec work across `lanes`. Output is exactly what the serial path
+    /// would have computed at the same point.
+    pub(crate) fn run(&self, scratch: &mut BlockScratch, lanes: &LanePool) -> JobOut {
         match self {
             BatchJob::DecodePlanes { blk, mask } => {
                 let mut out = Vec::with_capacity(blk.n_elem);
-                match blk.decode_planes_into(*mask, scratch, &mut out) {
+                match blk.decode_planes_into_lanes(*mask, scratch, &mut out, lanes) {
                     Ok(()) => JobOut::Words(Ok(out)),
                     Err(e) => JobOut::Words(Err(e)),
                 }
@@ -1055,10 +1094,10 @@ impl BatchJob<'_> {
                 )
             }
             BatchJob::EncodeWeights { words, fmt, policy } => JobOut::Stored(Stored::Planes(
-                DeviceBlock::encode_weights_with(words, *fmt, *policy, scratch),
+                DeviceBlock::encode_weights_with_lanes(words, *fmt, *policy, scratch, lanes),
             )),
             BatchJob::EncodeKv { words, window, policy } => JobOut::Stored(Stored::Planes(
-                DeviceBlock::encode_kv_with(words, *window, *policy, scratch),
+                DeviceBlock::encode_kv_with_lanes(words, *window, *policy, scratch, lanes),
             )),
             BatchJob::EncodeGcomp { words, policy } => {
                 let raw = u16s_to_bytes(words);
@@ -1411,15 +1450,16 @@ mod tests {
     #[test]
     fn batch_drain_matches_serial_per_txn_across_pool_and_cache() {
         // the equivalence core: identical Completion fields for
-        // {pool 1, pool 4} × {cache on, off}, including an error txn and
-        // a write-then-read-same-address hazard inside one batch
+        // {pool 1, pool 4} × {cache on, off} × {lanes 1, 4}, including an
+        // error txn and a write-then-read-same-address hazard in one batch
         let mut r = Rng::new(214);
         let kv = smooth_kv(&mut r, 32, 64);
         let kv2 = smooth_kv(&mut r, 32, 64);
-        let run = |pool: usize, cache: usize| {
+        let run = |pool: usize, cache: usize, lanes: usize| {
             let mut d = CxlDevice::new(Design::Trace, CodecPolicy::AllBest);
             d.set_pool(pool);
             d.set_decode_cache(cache);
+            d.set_codec_lanes(lanes);
             write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
             let mut sq = super::super::txn::SubmissionQueue::new();
             sq.submit(Transaction::ReadFull { block_addr: 0x0 });
@@ -1440,19 +1480,21 @@ mod tests {
             let stats = d.stats();
             (cs, stats)
         };
-        let (base, base_stats) = run(1, 0);
+        let (base, base_stats) = run(1, 0, 1);
         assert_eq!(base[4].result.as_ref().unwrap().clone().into_words().unwrap(), kv2);
         assert!(base[5].result.is_err());
-        for (pool, cache) in [(1, 256), (4, 0), (4, 256)] {
-            let (cs, stats) = run(pool, cache);
-            assert_eq!(stats, base_stats, "pool={pool} cache={cache}");
+        for (pool, cache, lanes) in
+            [(1, 256, 1), (4, 0, 1), (4, 256, 1), (1, 0, 4), (1, 256, 4), (4, 256, 4)]
+        {
+            let (cs, stats) = run(pool, cache, lanes);
+            assert_eq!(stats, base_stats, "pool={pool} cache={cache} lanes={lanes}");
             assert_eq!(cs.len(), base.len());
             for (c, b) in cs.iter().zip(base.iter()) {
                 assert_eq!(c.id, b.id);
-                assert_eq!(c.stats, b.stats, "pool={pool} cache={cache} txn={}", c.id);
+                assert_eq!(c.stats, b.stats, "pool={pool} cache={cache} lanes={lanes} txn={}", c.id);
                 assert_eq!(c.latency_ns(), b.latency_ns());
                 assert_eq!(c.issued_ns, b.issued_ns);
-                assert_eq!(c.ready_at_ns, b.ready_at_ns, "pool={pool} cache={cache}");
+                assert_eq!(c.ready_at_ns, b.ready_at_ns, "pool={pool} cache={cache} lanes={lanes}");
                 match (&c.result, &b.result) {
                     (Ok(Payload::Words(x)), Ok(Payload::Words(y))) => assert_eq!(x, y),
                     (Ok(Payload::Written), Ok(Payload::Written)) => {}

@@ -26,12 +26,12 @@
 //! just fleet-level busy sums.
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::bitplane::BlockScratch;
 use crate::codec::CodecPolicy;
 use crate::sim::ResourceTimeline;
-use crate::util::WorkerPool;
+use crate::util::{LanePool, WorkerPool};
 
 use super::device::{build_job, CxlDevice, Design, DeviceStats, JobOut, Plan, PlanCtx, Prep};
 use super::link::Link;
@@ -73,6 +73,10 @@ pub struct ShardedDevice {
     pool: WorkerPool,
     /// One scratch per fleet pool worker.
     pool_scratch: Vec<Mutex<BlockScratch>>,
+    /// Fleet-shared intra-block codec lane pool: one set of lane threads
+    /// serves every shard (runs are serialized inside [`LanePool`]), used
+    /// only when the fleet batch pool is not already fanning out.
+    lanes: Arc<LanePool>,
 }
 
 impl ShardedDevice {
@@ -103,6 +107,7 @@ impl ShardedDevice {
             link,
             pool: WorkerPool::new(1),
             pool_scratch: vec![Mutex::new(BlockScratch::new())],
+            lanes: Arc::new(LanePool::inline()),
         }
     }
 
@@ -121,6 +126,21 @@ impl ShardedDevice {
     /// Worker width of the fleet batch pool.
     pub fn pool_threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// Set the intra-block codec lane width (1 = serial): one shared lane
+    /// pool is handed to every shard so the fleet owns a single set of
+    /// lane threads. Wall-clock only.
+    pub fn set_codec_lanes(&mut self, lanes: usize) {
+        self.lanes = Arc::new(LanePool::new(lanes));
+        for s in self.shards.iter_mut() {
+            s.set_codec_lane_pool(Arc::clone(&self.lanes));
+        }
+    }
+
+    /// Lane width of the fleet codec lane pool.
+    pub fn codec_lanes(&self) -> usize {
+        self.lanes.lanes()
     }
 
     /// Set every shard's decoded-plane cache capacity (entries; 0
@@ -229,9 +249,14 @@ impl ShardedDevice {
                 }
             }
         }
-        let results = self
-            .pool
-            .run(jobs, |w, _, job| job.run(&mut self.pool_scratch[w].lock().expect("scratch")));
+        // same nesting guard as the single device: lanes only when the
+        // fleet pool is not already running blocks concurrently
+        let inline = LanePool::inline();
+        let lanes: &LanePool =
+            if jobs.len() <= 1 || self.pool.threads() <= 1 { &self.lanes } else { &inline };
+        let results = self.pool.run(jobs, |w, _, job| {
+            job.run(&mut self.pool_scratch[w].lock().expect("scratch"), lanes)
+        });
         let mut outs: Vec<Vec<Option<JobOut>>> =
             plans.iter().map(|p| p.iter().map(|_| None).collect()).collect();
         for ((i, pos), r) in keys.into_iter().zip(results) {
@@ -484,11 +509,12 @@ mod tests {
             }
             dev.drain_at(&mut sq, 42.0)
         };
-        let run = |pool: usize, cache: usize, policy: DispatchPolicy| {
+        let run = |pool: usize, cache: usize, lanes: usize, policy: DispatchPolicy| {
             let mut dev =
                 ShardedDevice::with_policy(4, Design::Trace, CodecPolicy::FastBest, policy);
             dev.set_pool(pool);
             dev.set_decode_cache(cache);
+            dev.set_codec_lanes(lanes);
             let mut sq = SubmissionQueue::new();
             for b in 0..16u64 {
                 sq.submit(Transaction::WriteKv {
@@ -507,10 +533,11 @@ mod tests {
             (all, dev.stats())
         };
         for policy in [DispatchPolicy::RoundRobin, DispatchPolicy::LeastLoaded] {
-            let (base, base_stats) = run(1, 0, policy);
-            for (pool, cache) in [(4, 0), (1, 64), (4, 64)] {
-                let (cs, stats) = run(pool, cache, policy);
-                assert_eq!(stats, base_stats, "{policy:?} pool={pool} cache={cache}");
+            let (base, base_stats) = run(1, 0, 1, policy);
+            for (pool, cache, lanes) in [(4, 0, 1), (1, 64, 1), (4, 64, 1), (1, 0, 4), (4, 64, 4)]
+            {
+                let (cs, stats) = run(pool, cache, lanes, policy);
+                assert_eq!(stats, base_stats, "{policy:?} pool={pool} cache={cache} lanes={lanes}");
                 assert_eq!(cs.len(), base.len());
                 for (c, b) in cs.iter().zip(base.iter()) {
                     assert_eq!((c.id, c.shard), (b.id, b.shard));
@@ -519,7 +546,7 @@ mod tests {
                     assert_eq!(
                         c.result.as_ref().unwrap(),
                         b.result.as_ref().unwrap(),
-                        "{policy:?} pool={pool} cache={cache} txn={}",
+                        "{policy:?} pool={pool} cache={cache} lanes={lanes} txn={}",
                         c.id
                     );
                 }

@@ -4,7 +4,8 @@
 //! `rand`/`serde`/`clap`/`proptest` we carry minimal equivalents here:
 //! a splitmix/xoshiro RNG, a JSON parser+emitter, a CLI argument parser,
 //! descriptive statistics, a tiny property-testing harness, and a scoped
-//! worker pool ([`pool`]) for batch-parallel device codec work.
+//! worker pool plus persistent codec lane pool ([`pool`]) for
+//! batch-parallel and intra-block-parallel device codec work.
 
 pub mod rng;
 pub mod json;
@@ -15,6 +16,6 @@ pub mod bytes;
 pub mod varint;
 pub mod pool;
 
-pub use pool::WorkerPool;
+pub use pool::{LanePool, WorkerPool};
 pub use rng::Rng;
 pub use stats::Summary;

@@ -19,8 +19,8 @@
 //! caller's thread — no spawn, no synchronization — which keeps the
 //! single-block path allocation-free.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// A fixed-width scoped worker pool. Holds no threads between calls —
 /// workers live only for the duration of one [`WorkerPool::run`] — so the
@@ -106,6 +106,248 @@ impl Default for WorkerPool {
     }
 }
 
+/// Bounded busy-wait before a lane parks on its condvar (and before the
+/// caller parks waiting for lanes). A single-block lane run is a few µs of
+/// codec work; a futex round-trip per run would eat most of the win, so
+/// idle lanes spin briefly first. Shrunk under miri, whose interpreter
+/// makes spinning itself the bottleneck.
+const LANE_SPIN: u32 = if cfg!(miri) { 32 } else { 1 << 14 };
+
+struct LaneCtrl {
+    /// Erased-lifetime borrow of the caller's closure; `Some` only between
+    /// an epoch publish and the end of that [`LanePool::run`] call.
+    job: Option<&'static (dyn Fn(usize) + Sync)>,
+    n_items: usize,
+    shutdown: bool,
+}
+
+struct LaneShared {
+    ctrl: Mutex<LaneCtrl>,
+    /// Parked lanes wait here for an epoch bump (or shutdown).
+    work: Condvar,
+    /// The publishing caller waits here for `active` to reach zero.
+    done: Condvar,
+    /// Run counter; bumped (under `ctrl`) once per published job.
+    epoch: AtomicU64,
+    /// Next item index to claim; shared by the caller and all lanes.
+    cursor: AtomicUsize,
+    /// Worker lanes still inside the current epoch.
+    active: AtomicUsize,
+    /// A lane's closure invocation panicked during the current epoch.
+    panicked: AtomicBool,
+}
+
+/// A persistent intra-block codec lane pool.
+///
+/// [`WorkerPool`] fans a *batch* of blocks across scoped threads spawned
+/// per call — fine when a run is hundreds of µs of work, useless for the
+/// planes of a single block, where thread spawn (~10 µs each) costs more
+/// than the ~5 µs of codec work being split. `LanePool` therefore keeps
+/// `lanes - 1` worker threads alive between calls: a run publishes an
+/// epoch, the caller participates as lane 0, and workers spin-then-park
+/// between epochs. Per-plane work items are claimed from a shared atomic
+/// cursor exactly like `WorkerPool`.
+///
+/// A run allocates nothing (job publication is a pointer store, results
+/// land in caller-owned slots), so block decode stays zero-alloc with
+/// lanes enabled. Lanes are wall-clock only: they never touch modeled
+/// time, traffic, or completion accounting.
+///
+/// `new(1)` (or `inline()`) holds no threads and runs every item on the
+/// caller's thread — the serial reference path.
+pub struct LanePool {
+    shared: Option<Arc<LaneShared>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Serializes concurrent `run` calls on a shared pool.
+    gate: Mutex<()>,
+    lanes: usize,
+}
+
+impl std::fmt::Debug for LanePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LanePool").field("lanes", &self.lanes).finish()
+    }
+}
+
+fn lane_worker(shared: &LaneShared) {
+    let mut seen = 0u64;
+    loop {
+        // fast path: spin for the next epoch, then park
+        let mut spins = 0u32;
+        while shared.epoch.load(Ordering::Acquire) == seen && spins < LANE_SPIN {
+            std::hint::spin_loop();
+            spins += 1;
+        }
+        let (job, n) = {
+            let mut c = shared.ctrl.lock().expect("lane ctrl");
+            loop {
+                if c.shutdown {
+                    return;
+                }
+                if shared.epoch.load(Ordering::Acquire) != seen {
+                    break;
+                }
+                c = shared.work.wait(c).expect("lane park");
+            }
+            (c.job, c.n_items)
+        };
+        seen = shared.epoch.load(Ordering::Acquire);
+        if let Some(f) = job {
+            loop {
+                let i = shared.cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // keep the protocol alive if the closure panics: record it,
+                // finish the epoch, and let the caller re-panic
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_err() {
+                    shared.panicked.store(true, Ordering::Release);
+                    break;
+                }
+            }
+        }
+        if shared.active.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // last lane out: wake the caller (lock closes the race with its
+            // check-then-wait)
+            let _c = shared.ctrl.lock().expect("lane ctrl");
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Waits out the current epoch on drop, so the erased borrow of the
+/// caller's closure can never outlive the real borrow — even if the
+/// caller's own lane panics mid-run.
+struct EpochGuard<'a>(&'a LaneShared);
+
+impl Drop for EpochGuard<'_> {
+    fn drop(&mut self) {
+        let shared = self.0;
+        let mut spins = 0u32;
+        while shared.active.load(Ordering::Acquire) != 0 {
+            if spins < LANE_SPIN {
+                std::hint::spin_loop();
+                spins += 1;
+                continue;
+            }
+            let mut c = shared.ctrl.lock().expect("lane ctrl");
+            while shared.active.load(Ordering::Acquire) != 0 {
+                c = shared.done.wait(c).expect("lane done");
+            }
+            break;
+        }
+        // the borrow ends here; never leave a dangling reference parked
+        shared.ctrl.lock().expect("lane ctrl").job = None;
+    }
+}
+
+impl LanePool {
+    /// A pool of `lanes` codec lanes (the caller counts as one). `0` and
+    /// `1` both mean "run inline": no threads are spawned.
+    pub fn new(lanes: usize) -> LanePool {
+        let lanes = lanes.max(1);
+        if lanes == 1 {
+            return LanePool::inline();
+        }
+        let shared = Arc::new(LaneShared {
+            ctrl: Mutex::new(LaneCtrl { job: None, n_items: 0, shutdown: false }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            epoch: AtomicU64::new(0),
+            cursor: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        let handles = (1..lanes)
+            .map(|k| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("codec-lane-{k}"))
+                    .spawn(move || lane_worker(&sh))
+                    .expect("spawn codec lane")
+            })
+            .collect();
+        LanePool { shared: Some(shared), handles, gate: Mutex::new(()), lanes }
+    }
+
+    /// The thread-free serial pool: every [`LanePool::run`] executes inline.
+    pub fn inline() -> LanePool {
+        LanePool { shared: None, handles: Vec::new(), gate: Mutex::new(()), lanes: 1 }
+    }
+
+    /// Lane width (1 = inline).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Execute `f(0), f(1), …, f(n-1)` across the lanes; returns when every
+    /// call has finished. Indices are claimed dynamically, each exactly
+    /// once, by the caller's thread and the worker lanes together. `f` must
+    /// tolerate concurrent invocation on distinct indices (disjoint output
+    /// rows, `Mutex`-guarded slots, …). Concurrent `run` calls on a shared
+    /// pool are serialized. Allocation-free.
+    pub fn run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        let shared = match &self.shared {
+            Some(s) if n > 1 => s,
+            _ => {
+                for i in 0..n {
+                    f(i);
+                }
+                return;
+            }
+        };
+        let _gate = self.gate.lock().expect("lane gate");
+        // SAFETY: lifetime erasure only. Workers dereference the stored
+        // reference strictly between the epoch publish below and the
+        // active==0 wait in EpochGuard::drop, which also clears it — the
+        // erased reference never outlives the real borrow of `f`.
+        let job: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        {
+            let mut c = shared.ctrl.lock().expect("lane ctrl");
+            c.job = Some(job);
+            c.n_items = n;
+            shared.panicked.store(false, Ordering::Relaxed);
+            shared.cursor.store(0, Ordering::Relaxed);
+            shared.active.store(self.handles.len(), Ordering::Release);
+            shared.epoch.fetch_add(1, Ordering::Release);
+            shared.work.notify_all();
+        }
+        let guard = EpochGuard(shared);
+        // the caller is lane 0
+        loop {
+            let i = shared.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            f(i);
+        }
+        drop(guard); // wait for worker lanes, release the borrow
+        if shared.panicked.load(Ordering::Acquire) {
+            panic!("codec lane panicked");
+        }
+    }
+}
+
+impl Drop for LanePool {
+    fn drop(&mut self) {
+        if let Some(shared) = &self.shared {
+            {
+                let mut c = shared.ctrl.lock().expect("lane ctrl");
+                c.shutdown = true;
+                // kick spinners out of the fast path; they check `shutdown`
+                // before interpreting the bump as a job
+                shared.epoch.fetch_add(1, Ordering::Release);
+                shared.work.notify_all();
+            }
+            for h in self.handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +411,96 @@ mod tests {
             s[0] as u32
         });
         assert_eq!(out, (0..64).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn lane_pool_runs_every_index_exactly_once() {
+        for lanes in [1usize, 2, 4] {
+            let pool = LanePool::new(lanes);
+            assert_eq!(pool.lanes(), lanes.max(1));
+            for n in [0usize, 1, 3, 16, 100] {
+                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                pool.run(n, &|i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "lanes={lanes} n={n} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_pool_is_reusable_across_many_epochs() {
+        let pool = LanePool::new(4);
+        let total = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.run(16, &|i| {
+                total.fetch_add(i + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 200 * (16 * 17) / 2);
+    }
+
+    #[test]
+    fn lane_pool_writes_disjoint_rows_concurrently() {
+        // the block-decode usage pattern: each index owns one row of a
+        // shared flat buffer, handed out as a raw base pointer
+        struct Base(*mut u8);
+        unsafe impl Sync for Base {}
+        let pool = LanePool::new(3);
+        let rows = 16usize;
+        let pl = 257usize; // deliberately unaligned row length
+        let mut flat = vec![0u8; rows * pl];
+        let base = Base(flat.as_mut_ptr());
+        pool.run(rows, &|i| {
+            // SAFETY: each index touches only its own disjoint row
+            let row = unsafe { std::slice::from_raw_parts_mut(base.0.add(i * pl), pl) };
+            row.fill(i as u8 + 1);
+        });
+        for i in 0..rows {
+            assert!(flat[i * pl..(i + 1) * pl].iter().all(|&b| b == i as u8 + 1), "row {i}");
+        }
+    }
+
+    #[test]
+    fn lane_pool_shared_across_threads_serializes_runs() {
+        let pool = std::sync::Arc::new(LanePool::new(2));
+        let total = std::sync::Arc::new(AtomicUsize::new(0));
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let p = std::sync::Arc::clone(&pool);
+            let t = std::sync::Arc::clone(&total);
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    p.run(8, &|i| {
+                        t.fetch_add(i, Ordering::Relaxed);
+                    });
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 28);
+    }
+
+    #[test]
+    fn lane_pool_propagates_worker_panics() {
+        let pool = LanePool::new(4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(16, &|i| {
+                if i == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // and the pool still works afterwards
+        let total = AtomicUsize::new(0);
+        pool.run(16, &|i| {
+            total.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 120);
     }
 }

@@ -7,6 +7,12 @@
 //! The device serves attacker-shaped bytes only from its own writes, but
 //! plane streams cross the (simulated) DRAM and metadata may desync; the
 //! decode path is the trust boundary, so it gets fuzz-style coverage.
+//!
+//! PR-7 adds the *differential* layer: the vectorized decode kernels (SWAR
+//! RLE, wild-copy LZ4, table-driven Huffman) are pinned byte-for-byte —
+//! and Ok/Err-for-Ok/Err on corrupt input — against the scalar
+//! predecessors they replaced, which stay in-tree as `*_scalar`
+//! references. Every corpus shape above runs through both.
 
 use trace_cxl::codec::{self, CodecKind, CodecPolicy};
 use trace_cxl::util::check::{arb_bytes, props};
@@ -14,6 +20,45 @@ use trace_cxl::util::Rng;
 
 const KINDS: [CodecKind; 4] =
     [CodecKind::Raw, CodecKind::Rle, CodecKind::Lz4, CodecKind::Zstd];
+
+/// The vectorized decoder and its scalar predecessor must agree exactly:
+/// same Ok/Err classification on any byte stream (valid or corrupt), and
+/// identical output bytes on Ok. `Raw` has no vector/scalar split.
+fn assert_vector_matches_scalar(kind: CodecKind, stream: &[u8], n: usize) {
+    let mut v = vec![0xAAu8; n];
+    let mut s = vec![0x55u8; n];
+    let (rv, rs) = match kind {
+        CodecKind::Raw => return,
+        CodecKind::Rle => (
+            codec::rle::decompress_into(stream, &mut v).is_ok(),
+            codec::rle::decompress_into_scalar(stream, &mut s).is_ok(),
+        ),
+        CodecKind::Lz4 => (
+            codec::lz4::decompress_into(stream, &mut v).is_ok(),
+            codec::lz4::decompress_into_scalar(stream, &mut s).is_ok(),
+        ),
+        CodecKind::Zstd => {
+            // the bulk API reports bytes written (it may succeed with
+            // fewer than `n`), so compare counts + the written prefix
+            let rv = zstd::bulk::decompress_to_buffer(stream, &mut v);
+            let rs = zstd::bulk::decompress_to_buffer_scalar(stream, &mut s);
+            assert_eq!(
+                rv.is_ok(),
+                rs.is_ok(),
+                "Zstd: table/bit-loop Ok-Err classification diverged (n={n})"
+            );
+            if let (Ok(wv), Ok(ws)) = (rv, rs) {
+                assert_eq!(wv, ws, "Zstd: written counts diverged (n={n})");
+                assert_eq!(v[..wv], s[..ws], "Zstd: payload diverged (n={n})");
+            }
+            return;
+        }
+    };
+    assert_eq!(rv, rs, "{kind:?}: vector/scalar Ok-Err classification diverged (n={n})");
+    if rv {
+        assert_eq!(v, s, "{kind:?}: vector/scalar payload diverged (n={n})");
+    }
+}
 
 /// Decode must either error or produce exactly `n` bytes; both entry
 /// points must agree on success/failure and on successful payloads.
@@ -33,6 +78,10 @@ fn assert_decode_well_behaved(kind: CodecKind, stream: &[u8], n: usize) {
             if into.is_ok() { "ok" } else { "err" },
         ),
     }
+    // and the vectorized kernel must track its scalar reference on the
+    // same (possibly corrupt) stream — this threads the entire fuzz
+    // corpus (truncations, bitflips, garbage) through the differential
+    assert_vector_matches_scalar(kind, stream, n);
 }
 
 #[test]
@@ -104,6 +153,38 @@ fn wrong_expected_length_errors() {
             assert!(codec::decompress_into(kind, &enc, &mut long).is_err(), "{kind:?}");
         }
     });
+}
+
+#[test]
+fn vector_kernels_match_scalar_on_valid_streams() {
+    // random corpus shapes (incompressible, runs, periodic, text, sparse)
+    props(0xAB6, 120, |r| {
+        let data = arb_bytes(r, 4096);
+        for kind in [CodecKind::Rle, CodecKind::Lz4, CodecKind::Zstd] {
+            let enc = codec::compress(kind, &data);
+            assert_vector_matches_scalar(kind, &enc, data.len());
+        }
+    });
+    // run-heavy planes with every tail residue mod 8 — the wild-copy
+    // kernels' boundary cases (the safe-tail switchover)
+    for tail in 0..8usize {
+        let n = 4096 + tail;
+        let mut runs = vec![0u8; n];
+        let mut r = Rng::new(0xAB7 + tail as u64);
+        let mut i = 0;
+        while i < n {
+            let run = 1 + r.below(24.min(n - i));
+            let b = r.next_u32() as u8;
+            for x in &mut runs[i..i + run] {
+                *x = b;
+            }
+            i += run;
+        }
+        for kind in [CodecKind::Rle, CodecKind::Lz4, CodecKind::Zstd] {
+            let enc = codec::compress(kind, &runs);
+            assert_vector_matches_scalar(kind, &enc, n);
+        }
+    }
 }
 
 #[test]

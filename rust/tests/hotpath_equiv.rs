@@ -1,14 +1,17 @@
-//! Zero-allocation / pool / decoded-plane-cache equivalence matrix.
+//! Zero-allocation / pool / decoded-plane-cache / codec-lane equivalence
+//! matrix.
 //!
 //! The PR-5 data-path rebuild (`BlockScratch`, batch worker pool, decoded
-//! plane cache) is a pure *host wall-clock* optimization. These tests are
-//! the gate that no modeled number moved:
+//! plane cache) and the PR-7 intra-block codec lanes are pure *host
+//! wall-clock* optimizations. These tests are the gate that no modeled
+//! number moved:
 //!
 //! * **Device level** — per-transaction [`Completion`] fields (payload
 //!   words, byte-traffic deltas, pipeline latency, `issued_ns`,
 //!   `ready_at_ns`, serving shard) are bit-identical across
-//!   `{pool 1, 4} × {cache on, off}` for every design
-//!   `{Plain, GComp, Trace}`, on batched and one-at-a-time submission.
+//!   `{pool 1, 4} × {cache on, off} × {codec lanes 1, 4}` for every
+//!   design `{Plain, GComp, Trace}`, on batched and one-at-a-time
+//!   submission.
 //! * **Engine level** — tokens and aggregate device traffic are
 //!   bit-identical across the same matrix on both the serial and the
 //!   overlapped-prefetch engines (the mock backend decodes from KV
@@ -26,9 +29,13 @@ use trace_cxl::runtime::MockBackend;
 use trace_cxl::util::check::smooth_kv;
 use trace_cxl::util::Rng;
 
-/// The pool/cache configurations under test; index 0 is the reference
-/// (serial, cache off — the PR-4 behavior).
-const CONFIGS: [(usize, usize); 4] = [(1, 0), (4, 0), (1, 128), (4, 128)];
+/// The (pool, cache, codec-lane) configurations under test; index 0 is the
+/// reference (serial, cache off, one lane — the PR-4 behavior). The last
+/// entry stacks every mechanism at once: across-block pool fan-out AND the
+/// cache AND intra-block lanes (where the nesting guard keeps lanes inline
+/// on pooled batches).
+const CONFIGS: [(usize, usize, usize); 6] =
+    [(1, 0, 1), (4, 0, 1), (1, 128, 1), (4, 128, 1), (1, 0, 4), (4, 128, 4)];
 
 fn assert_completions_identical(tag: &str, base: &[Completion], got: &[Completion]) {
     assert_eq!(base.len(), got.len(), "{tag}: completion count");
@@ -104,25 +111,37 @@ fn device_workload(dev: &mut dyn MemDevice, kv: &[u16], kv2: &[u16]) -> Vec<Comp
     all
 }
 
-fn run_single(design: Design, pool: usize, cache: usize) -> (Vec<Completion>, DeviceStats) {
+fn run_single(
+    design: Design,
+    pool: usize,
+    cache: usize,
+    lanes: usize,
+) -> (Vec<Completion>, DeviceStats) {
     let mut r = Rng::new(0x5EED);
     let kv = smooth_kv(&mut r, 32, 64);
     let kv2 = smooth_kv(&mut r, 32, 64);
     let mut d = CxlDevice::new(design, CodecPolicy::AllBest);
     d.set_pool(pool);
     d.set_decode_cache(cache);
+    d.set_codec_lanes(lanes);
     let cs = device_workload(&mut d, &kv, &kv2);
     let stats = d.stats();
     (cs, stats)
 }
 
-fn run_sharded(design: Design, pool: usize, cache: usize) -> (Vec<Completion>, DeviceStats) {
+fn run_sharded(
+    design: Design,
+    pool: usize,
+    cache: usize,
+    lanes: usize,
+) -> (Vec<Completion>, DeviceStats) {
     let mut r = Rng::new(0x5EED);
     let kv = smooth_kv(&mut r, 32, 64);
     let kv2 = smooth_kv(&mut r, 32, 64);
     let mut d = ShardedDevice::new(4, design, CodecPolicy::AllBest);
     d.set_pool(pool);
     d.set_decode_cache(cache);
+    d.set_codec_lanes(lanes);
     let cs = device_workload(&mut d, &kv, &kv2);
     let stats = d.stats();
     (cs, stats)
@@ -131,10 +150,11 @@ fn run_sharded(design: Design, pool: usize, cache: usize) -> (Vec<Completion>, D
 #[test]
 fn per_txn_completions_identical_single_device() {
     for design in [Design::Plain, Design::GComp, Design::Trace] {
-        let (base, base_stats) = run_single(design, CONFIGS[0].0, CONFIGS[0].1);
-        for &(pool, cache) in &CONFIGS[1..] {
-            let tag = format!("{design:?} pool={pool} cache={cache}");
-            let (cs, stats) = run_single(design, pool, cache);
+        let (p0, c0, l0) = CONFIGS[0];
+        let (base, base_stats) = run_single(design, p0, c0, l0);
+        for &(pool, cache, lanes) in &CONFIGS[1..] {
+            let tag = format!("{design:?} pool={pool} cache={cache} lanes={lanes}");
+            let (cs, stats) = run_single(design, pool, cache, lanes);
             assert_eq!(stats, base_stats, "{tag}: cumulative device counters");
             assert_completions_identical(&tag, &base, &cs);
         }
@@ -144,10 +164,11 @@ fn per_txn_completions_identical_single_device() {
 #[test]
 fn per_txn_completions_identical_sharded() {
     for design in [Design::Plain, Design::GComp, Design::Trace] {
-        let (base, base_stats) = run_sharded(design, CONFIGS[0].0, CONFIGS[0].1);
-        for &(pool, cache) in &CONFIGS[1..] {
-            let tag = format!("sharded {design:?} pool={pool} cache={cache}");
-            let (cs, stats) = run_sharded(design, pool, cache);
+        let (p0, c0, l0) = CONFIGS[0];
+        let (base, base_stats) = run_sharded(design, p0, c0, l0);
+        for &(pool, cache, lanes) in &CONFIGS[1..] {
+            let tag = format!("sharded {design:?} pool={pool} cache={cache} lanes={lanes}");
+            let (cs, stats) = run_sharded(design, pool, cache, lanes);
             assert_eq!(stats, base_stats, "{tag}: cumulative device counters");
             assert_completions_identical(&tag, &base, &cs);
         }
@@ -185,6 +206,7 @@ fn run_engine(
     shards: usize,
     pool: usize,
     cache: usize,
+    lanes: usize,
 ) -> EngineOut {
     let mut e = Engine::new(
         MockBackend::tiny(),
@@ -195,6 +217,7 @@ fn run_engine(
             overlap,
             pool_threads: pool,
             decode_cache_blocks: cache,
+            codec_lanes: lanes,
             ..Default::default()
         },
     );
@@ -218,13 +241,14 @@ fn engine_tokens_and_traffic_identical_across_matrix() {
     let shards = 4usize;
     for design in [Design::Plain, Design::GComp, Design::Trace] {
         for overlap in [false, true] {
-            let base = run_engine(design, overlap, shards, CONFIGS[0].0, CONFIGS[0].1);
+            let (p0, c0, l0) = CONFIGS[0];
+            let base = run_engine(design, overlap, shards, p0, c0, l0);
             assert!(base.spilled > 0, "{design:?}: workload must spill");
-            for &(pool, cache) in &CONFIGS[1..] {
+            for &(pool, cache, lanes) in &CONFIGS[1..] {
                 let tag = format!(
-                    "{design:?} overlap={overlap} shards={shards} pool={pool} cache={cache}"
+                    "{design:?} overlap={overlap} shards={shards} pool={pool} cache={cache} lanes={lanes}"
                 );
-                let got = run_engine(design, overlap, shards, pool, cache);
+                let got = run_engine(design, overlap, shards, pool, cache, lanes);
                 assert_eq!(got.tokens, base.tokens, "{tag}: tokens");
                 assert_eq!(got.stats, base.stats, "{tag}: aggregate device traffic");
                 assert_eq!(got.model_ns, base.model_ns, "{tag}: model time");
@@ -240,10 +264,11 @@ fn weights_roundtrip_identical_across_matrix() {
     let words: Vec<u16> = (0..2048).map(|_| r.next_u32() as u16).collect();
     for design in [Design::Plain, Design::GComp, Design::Trace] {
         let mut outs = Vec::new();
-        for &(pool, cache) in &CONFIGS {
+        for &(pool, cache, lanes) in &CONFIGS {
             let mut d = CxlDevice::new(design, CodecPolicy::FastBest);
             d.set_pool(pool);
             d.set_decode_cache(cache);
+            d.set_codec_lanes(lanes);
             let mut sq = SubmissionQueue::new();
             sq.submit(Transaction::WriteWeights {
                 block_addr: 0x40_0000,

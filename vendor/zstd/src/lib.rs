@@ -212,14 +212,36 @@ pub mod bulk {
         Ok(out)
     }
 
-    /// Decode a MODE_HUFF payload into the front of `dst`; returns the
-    /// decoded length. The canonical table (fixed 49-slot arrays, symbols
-    /// ordered by `(len, symbol)` exactly as the encoder emitted them) is
-    /// rebuilt on the stack, so the function allocates nothing.
-    fn huff_decompress_into(src: &[u8], dst: &mut [u8]) -> io::Result<usize> {
+    const SLOTS: usize = MAX_CODE_LEN as usize + 1;
+    /// Width of the table-driven decoder's primary lookup, in bits. Codes
+    /// longer than this fall back to a canonical first/count walk; typical
+    /// plane data stays well under 11 bits, so nearly every symbol is one
+    /// table probe.
+    const TABLE_BITS: usize = 11;
+
+    /// Canonical-table view of a MODE_HUFF header, rebuilt on the stack
+    /// (fixed 49-slot arrays; symbols ordered by `(len, symbol)` exactly as
+    /// the encoder emitted them). Shared between the table-driven decoder
+    /// and the bit-at-a-time reference so the two cannot diverge on header
+    /// validation.
+    struct HuffTable {
+        count: [usize; SLOTS],        // symbols per code length
+        start: [usize; SLOTS + 1],    // prefix sums into `syms`
+        syms: [u8; 256],              // symbols grouped by length
+        first: [u64; SLOTS],          // first canonical code value per length
+        max_len: usize,
+    }
+
+    /// Parse `[varint n][k-1][k pairs]`, validate it against `capacity`,
+    /// and rebuild the canonical table; returns the decoded length, the
+    /// table, and the bitstream slice. Allocates nothing.
+    fn parse_huff_header<'a>(
+        src: &'a [u8],
+        capacity: usize,
+    ) -> io::Result<(usize, HuffTable, &'a [u8])> {
         let (n, varint_len) = get_varint(src).ok_or_else(|| bad("truncated length"))?;
         let n = usize::try_from(n).map_err(|_| bad("length overflow"))?;
-        if n > dst.len() {
+        if n > capacity {
             return Err(bad("decoded length exceeds capacity"));
         }
         let rest = &src[varint_len..];
@@ -231,8 +253,7 @@ pub mod bulk {
         // Symbols sorted by (len, symbol) — the wire order IS that order,
         // but a corrupt table may violate it; sort via fixed-size counting
         // (lengths are <= MAX_CODE_LEN) to stay allocation-free.
-        const SLOTS: usize = MAX_CODE_LEN as usize + 1;
-        let mut count = [0usize; SLOTS]; // symbols per length
+        let mut count = [0usize; SLOTS];
         for i in 0..k {
             let len = rest[2 * i + 1] as u32;
             if len == 0 || len > MAX_CODE_LEN {
@@ -276,6 +297,90 @@ pub mod bulk {
                 return Err(bad("over-subscribed code table"));
             }
         }
+        let table = HuffTable { count, start, syms, first, max_len };
+        Ok((n, table, bits))
+    }
+
+    /// Decode a MODE_HUFF payload into the front of `dst`; returns the
+    /// decoded length. Allocates nothing: the canonical table and a
+    /// `2^TABLE_BITS`-entry primary lookup table both live on the stack.
+    ///
+    /// The decoder keeps a 64-bit MSB-aligned bit buffer and resolves one
+    /// symbol per table probe (entry = `sym << 6 | len`, 0 = not a short
+    /// code); codes longer than `TABLE_BITS` walk the canonical
+    /// `first`/`count` arrays exactly like the reference. Error
+    /// classification matches [`huff_decompress_into_scalar`] bit for bit:
+    /// a code that would need bits past the end of the stream is
+    /// "truncated bitstream", a prefix no code matches after `max_len`
+    /// real bits is "invalid code".
+    fn huff_decompress_into(src: &[u8], dst: &mut [u8]) -> io::Result<usize> {
+        let (n, t, bits) = parse_huff_header(src, dst.len())?;
+        let tb = t.max_len.min(TABLE_BITS);
+        // Primary table over the top `tb` bits; 0 is the long-code/invalid
+        // sentinel (impossible for a real entry: len >= 1).
+        let mut table = [0u16; 1 << TABLE_BITS];
+        for l in 1..=tb {
+            for j in 0..t.count[l] {
+                let sym = t.syms[t.start[l] + j];
+                let entry = ((sym as u16) << 6) | l as u16;
+                let base = ((t.first[l] + j as u64) as usize) << (tb - l);
+                table[base..base + (1usize << (tb - l))].fill(entry);
+            }
+        }
+        let mut acc: u64 = 0; // top `nbits` bits are real stream bits
+        let mut nbits: u32 = 0;
+        let mut pos = 0usize;
+        let mut w = 0usize;
+        while w < n {
+            // refill: after this, either nbits > 56 (>= any code length,
+            // since MAX_CODE_LEN = 48) or the stream is fully buffered
+            while nbits <= 56 && pos < bits.len() {
+                acc |= (bits[pos] as u64) << (56 - nbits);
+                pos += 1;
+                nbits += 8;
+            }
+            let e = table[(acc >> (64 - tb)) as usize];
+            let (sym, l) = if e != 0 {
+                ((e >> 6) as u8, (e & 0x3f) as usize)
+            } else {
+                let mut hit = None;
+                for l in (tb + 1)..=t.max_len {
+                    if t.count[l] == 0 {
+                        continue;
+                    }
+                    let code = acc >> (64 - l);
+                    if code >= t.first[l] && ((code - t.first[l]) as usize) < t.count[l] {
+                        hit = Some((t.syms[t.start[l] + (code - t.first[l]) as usize], l));
+                        break;
+                    }
+                }
+                match hit {
+                    Some(x) => x,
+                    // No code matches this prefix. The bit-at-a-time
+                    // reference consumes real bits one by one: it reaches
+                    // "invalid code" only if max_len+1 real bits exist,
+                    // otherwise it runs out first.
+                    None if (nbits as usize) > t.max_len => return Err(bad("invalid code")),
+                    None => return Err(bad("truncated bitstream")),
+                }
+            };
+            if l as u32 > nbits {
+                // the match used zero padding past the real stream
+                return Err(bad("truncated bitstream"));
+            }
+            dst[w] = sym;
+            w += 1;
+            acc <<= l;
+            nbits -= l as u32;
+        }
+        Ok(n)
+    }
+
+    /// Bit-at-a-time predecessor of [`huff_decompress_into`]. Reference for
+    /// differential tests and the `perf_hotpaths` speedup gates; not a
+    /// production path.
+    fn huff_decompress_into_scalar(src: &[u8], dst: &mut [u8]) -> io::Result<usize> {
+        let (n, t, bits) = parse_huff_header(src, dst.len())?;
         let mut w = 0usize;
         let mut code = 0u64;
         let mut len = 0usize;
@@ -290,13 +395,13 @@ pub mod bulk {
             for bit_pos in (0..8).rev() {
                 code = (code << 1) | ((byte >> bit_pos) & 1) as u64;
                 len += 1;
-                if len > max_len {
+                if len > t.max_len {
                     return Err(bad("invalid code"));
                 }
-                if count[len] > 0 && code >= first[len] {
-                    let idx = (code - first[len]) as usize;
-                    if idx < count[len] {
-                        dst[w] = syms[start[len] + idx];
+                if t.count[len] > 0 && code >= t.first[len] {
+                    let idx = (code - t.first[len]) as usize;
+                    if idx < t.count[len] {
+                        dst[w] = t.syms[t.start[len] + idx];
                         w += 1;
                         code = 0;
                         len = 0;
@@ -311,6 +416,26 @@ pub mod bulk {
             return Err(bad("truncated bitstream"));
         }
         Ok(n)
+    }
+
+    /// [`decompress_to_buffer`] routed through the bit-at-a-time reference
+    /// decoder. Exists so differential tests and `perf_hotpaths` can
+    /// measure the table-driven decoder against its predecessor on the
+    /// full framed path.
+    #[doc(hidden)]
+    pub fn decompress_to_buffer_scalar(src: &[u8], dst: &mut [u8]) -> io::Result<usize> {
+        let (&mode, rest) = src.split_first().ok_or_else(|| bad("empty stream"))?;
+        match mode {
+            MODE_RAW => {
+                if rest.len() > dst.len() {
+                    return Err(bad("raw payload exceeds capacity"));
+                }
+                dst[..rest.len()].copy_from_slice(rest);
+                Ok(rest.len())
+            }
+            MODE_HUFF => huff_decompress_into_scalar(rest, dst),
+            _ => Err(bad("bad mode byte")),
+        }
     }
 
     #[cfg(test)]
@@ -334,10 +459,19 @@ pub mod bulk {
             assert_eq!(dec, data);
         }
 
+        /// Keep interpreter-bound runs (`cargo miri test`) tractable.
+        fn cases(full: usize) -> usize {
+            if cfg!(miri) {
+                full.min(8)
+            } else {
+                full
+            }
+        }
+
         #[test]
         fn roundtrips_all_shapes() {
             let mut x = X(0xDEADBEEF);
-            for case in 0..200 {
+            for case in 0..cases(200) {
                 let len = (x.next() % 5000) as usize;
                 let mut data = vec![0u8; len];
                 match case % 5 {
@@ -402,7 +536,7 @@ pub mod bulk {
         #[test]
         fn to_buffer_matches_alloc_path() {
             let mut x = X(0xC0FFEE);
-            for case in 0..100 {
+            for case in 0..cases(100) {
                 let len = (x.next() % 3000) as usize;
                 let mut data = vec![0u8; len];
                 if case % 2 == 0 {
@@ -424,6 +558,93 @@ pub mod bulk {
                     assert!(decompress_to_buffer(&enc, &mut small).is_err());
                 }
             }
+        }
+
+        #[test]
+        fn table_decoder_matches_bit_reference() {
+            let mut x = X(0xFEED5EED);
+            for case in 0..cases(200) {
+                let len = (x.next() % 4000) as usize;
+                let mut data = vec![0u8; len];
+                match case % 4 {
+                    0 => {
+                        for b in data.iter_mut() {
+                            *b = b'a' + (x.next() % 20) as u8;
+                        }
+                    }
+                    1 => {
+                        for b in data.iter_mut() {
+                            *b = (x.next() % 3) as u8; // very short codes
+                        }
+                    }
+                    2 => {
+                        for b in data.iter_mut() {
+                            *b = x.next() as u8; // ~8-bit codes / raw bypass
+                        }
+                    }
+                    _ => { /* all zeros: single 1-bit code */ }
+                }
+                let enc = compress(&data, 3).unwrap();
+                let mut a = vec![0xAAu8; len + 4];
+                let mut b = vec![0x55u8; len + 4];
+                let ra = decompress_to_buffer(&enc, &mut a).unwrap();
+                let rb = decompress_to_buffer_scalar(&enc, &mut b).unwrap();
+                assert_eq!(ra, rb);
+                assert_eq!(&a[..ra], &b[..rb]);
+                assert_eq!(&a[..ra], &data[..]);
+                // truncations and bit flips must classify identically
+                if enc.len() > 2 {
+                    let cut = &enc[..enc.len() - 1];
+                    let mut ta = vec![0u8; len + 4];
+                    let mut tbuf = vec![0u8; len + 4];
+                    let ea = decompress_to_buffer(cut, &mut ta);
+                    let eb = decompress_to_buffer_scalar(cut, &mut tbuf);
+                    assert_eq!(ea.is_err(), eb.is_err());
+                    if let (Err(ea), Err(eb)) = (ea, eb) {
+                        assert_eq!(ea.to_string(), eb.to_string());
+                    }
+                    let mut flipped = enc.clone();
+                    let pos = (x.next() as usize) % flipped.len();
+                    flipped[pos] ^= 1 << (x.next() % 8);
+                    let mut fa = vec![0u8; len + 4];
+                    let mut fb = vec![0u8; len + 4];
+                    let ea = decompress_to_buffer(&flipped, &mut fa);
+                    let eb = decompress_to_buffer_scalar(&flipped, &mut fb);
+                    match (ea, eb) {
+                        (Ok(na), Ok(nb)) => {
+                            assert_eq!(na, nb);
+                            assert_eq!(&fa[..na], &fb[..nb]);
+                        }
+                        (Err(ea), Err(eb)) => assert_eq!(ea.to_string(), eb.to_string()),
+                        (a, b) => panic!("decoder divergence: {a:?} vs {b:?}"),
+                    }
+                }
+            }
+        }
+
+        #[test]
+        fn long_code_slow_path() {
+            // A skewed distribution (freq ~ Fibonacci) forces code lengths
+            // past TABLE_BITS so the slow-path walk actually runs.
+            let mut data = Vec::new();
+            let mut a = 1u64;
+            let mut b = 1u64;
+            let cap: u64 = if cfg!(miri) { 300 } else { 30_000 };
+            for sym in 0..24u8 {
+                data.resize(data.len() + a.min(cap) as usize, sym);
+                let c = a + b;
+                a = b;
+                b = c;
+            }
+            let enc = compress(&data, 3).unwrap();
+            let mut fast = vec![0u8; data.len()];
+            let mut slow = vec![0u8; data.len()];
+            assert_eq!(
+                decompress_to_buffer(&enc, &mut fast).unwrap(),
+                decompress_to_buffer_scalar(&enc, &mut slow).unwrap()
+            );
+            assert_eq!(fast, slow);
+            assert_eq!(fast, data);
         }
 
         #[test]
