@@ -15,6 +15,12 @@
 //! compact binary trace replayable with `--example trace_tool`
 //! (docs/TRACE_FORMAT.md).
 //!
+//! `--nmc` turns on the near-memory fetch planner: spilled full-precision
+//! page reads may be offloaded to device-side `ReduceKv` transactions
+//! (top-k rows travel the link instead of the whole page). Tokens are
+//! bit-identical either way; the flag is recorded in the capture meta so
+//! `--trace-out` traces replay with the same planner state.
+//!
 //! With AOT artifacts present (`make artifacts`, requires the `pjrt`
 //! feature) the real ~100M-parameter compiled transformer serves the
 //! requests; otherwise the deterministic mock backend runs the identical
@@ -80,6 +86,7 @@ fn run<B: ModelBackend>(backend: B, args: &Args, backend_name: &str) -> anyhow::
     // tier early and the decode loop recalls pages through the device.
     let hbm_kv = args.get_u64("hbm-kv", (dims.kv_entry_len() * 2 * 20) as u64);
     let overlap = args.flag("overlap");
+    let nmc = args.flag("nmc");
     let mut engine = Engine::new(
         backend,
         EngineConfig {
@@ -92,6 +99,7 @@ fn run<B: ModelBackend>(backend: B, args: &Args, backend_name: &str) -> anyhow::
             overlap,
             compute_ns,
             sched,
+            nmc,
             ..Default::default()
         },
     );
@@ -107,6 +115,7 @@ fn run<B: ModelBackend>(backend: B, args: &Args, backend_name: &str) -> anyhow::
         meta.compute_ns = compute_ns;
         meta.scenario = scenario.clone();
         meta.gen_seed = seed;
+        meta.nmc = nmc;
         engine.set_trace_sink(TraceWriter::new(&meta.to_json()));
     }
 
@@ -261,6 +270,18 @@ fn run<B: ModelBackend>(backend: B, args: &Args, backend_name: &str) -> anyhow::
         println!(
             "prefetch pipeline: {} issued, {} consumed, {} stale-discarded",
             m.prefetch_issued, m.prefetch_hits, m.prefetch_stale
+        );
+    }
+    if nmc {
+        let d = engine.device.stats();
+        println!(
+            "near-memory offload: {} fetches ({} interactive / {} batch), \
+             link reads saved {}, device scan {}",
+            m.nmc_offloads,
+            m.nmc_offloads_class[SlaClass::Interactive.index()],
+            m.nmc_offloads_class[SlaClass::Batch.index()],
+            human_bytes(m.link_bytes_saved as f64),
+            human_bytes(d.nmc_bytes_scanned as f64)
         );
     }
     if args.flag("json") {

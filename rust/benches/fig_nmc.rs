@@ -1,0 +1,192 @@
+//! §NMC — near-memory gather/reduce offload at long context, model-time
+//! tok/s and host-link read traffic.
+//!
+//! Runs the full engine (mock backend, TRACE device, 24 shards) twice at
+//! a 128k-token spilled context — fetch planner off and on — and reports
+//! decode throughput plus link traffic. Gates (ISSUE 8 acceptance):
+//!
+//! * tokens are bit-identical offload-on vs. offload-off;
+//! * with spill active and per-page selectivity < 25%, offload-on
+//!   model-time tok/s is ≥ 2× offload-off;
+//! * host-link read bytes shrink at least in proportion to the
+//!   selectivity ratio (within a 15% payload-overhead allowance for the
+//!   row indices and query upload).
+//!
+//! `prefill_ns_per_token` is zeroed so model time is decode-dominated:
+//! the planner only acts on decode-step fetches, and a fixed multi-ms
+//! prefill charge would mask the decode speedup this figure measures.
+//!
+//! Run: `cargo bench --bench fig_nmc`
+
+use std::collections::BTreeMap;
+
+use trace_cxl::coordinator::{Engine, EngineConfig};
+use trace_cxl::cxl::{DeviceStats, MemDevice};
+use trace_cxl::runtime::{MockBackend, ModelDims};
+use trace_cxl::tier::PAGE_TOKENS;
+use trace_cxl::util::json::Json;
+
+/// 128k-token context: 8192 spilled pages of 4 KB (el = 128 → one page
+/// is exactly one 4 KB device block).
+const CTX: usize = 131072;
+const DECODE: usize = 24;
+
+fn dims() -> ModelDims {
+    ModelDims {
+        layers: 4,
+        batch: 1,
+        t_max: CTX + DECODE + 8,
+        t_prompt: CTX,
+        d_model: 16,
+        heads: 4,
+        head_dim: 4,
+        ffn: 32,
+        vocab: 64,
+    }
+}
+
+struct Run {
+    tokens: Vec<Vec<u32>>,
+    stats: DeviceStats,
+    model_ns: f64,
+    generated: u64,
+    spilled: u64,
+    offloads: u64,
+    saved: u64,
+}
+
+fn run(nmc: bool) -> Run {
+    let mut e = Engine::new(
+        MockBackend::new(dims(), 42),
+        EngineConfig {
+            hbm_kv_bytes: 0, // the whole context spills to the device
+            shards: 24,
+            decode_cache_blocks: 16384, // hold every page (wall-clock only)
+            prefill_ns_per_token: 0.0,
+            nmc,
+            ..Default::default()
+        },
+    );
+    let prompt: Vec<u32> = (0..CTX).map(|i| (i % 63) as u32 + 1).collect();
+    e.submit(prompt, DECODE);
+    e.run_to_completion(200).unwrap();
+    let mut rs = e.take_responses();
+    rs.sort_by_key(|r| r.id);
+    Run {
+        tokens: rs.into_iter().map(|r| r.tokens).collect(),
+        stats: e.device.stats(),
+        model_ns: e.metrics.model_ns,
+        generated: e.metrics.tokens_generated,
+        spilled: e.metrics.pages_spilled,
+        offloads: e.metrics.nmc_offloads,
+        saved: e.metrics.link_bytes_saved,
+    }
+}
+
+fn main() {
+    let cfg = EngineConfig::default();
+    let sel = (cfg.nmc_topk_frac * PAGE_TOKENS as f64).ceil() / PAGE_TOKENS as f64;
+    println!("# fig_nmc — near-memory gather/reduce offload, 128k-token spilled context");
+    println!(
+        "# mock backend, TRACE device, 24 shards, top-k frac {} (selectivity {:.3})\n",
+        cfg.nmc_topk_frac, sel
+    );
+    assert!(sel < 0.25, "gate regime requires selectivity < 25%");
+
+    let off = run(false);
+    let on = run(true);
+
+    assert_eq!(off.tokens, on.tokens, "offload must not change tokens");
+    assert!(off.spilled > 0, "gate regime requires spill to be active");
+    assert_eq!(off.offloads, 0);
+    assert!(on.offloads > 0, "planner must offload at this context length");
+
+    let tok_s = |r: &Run| r.generated as f64 / (r.model_ns * 1e-9);
+    println!(
+        "{:<10} {:>12} {:>12} {:>14} {:>10} {:>12}",
+        "planner", "model µs", "tok/s", "link rd MB", "offloads", "saved MB"
+    );
+    for (label, r) in [("off", &off), ("on", &on)] {
+        println!(
+            "{:<10} {:>12.1} {:>12.0} {:>14.2} {:>10} {:>12.2}",
+            label,
+            r.model_ns * 1e-3,
+            tok_s(r),
+            r.stats.link_bytes_out as f64 / 1e6,
+            r.offloads,
+            r.saved as f64 / 1e6,
+        );
+    }
+
+    let speedup = tok_s(&on) / tok_s(&off);
+    let link_ratio = on.stats.link_bytes_out as f64 / off.stats.link_bytes_out as f64;
+    println!("\nspeedup {speedup:.2}x, link-read ratio {link_ratio:.3} (selectivity {sel:.3})");
+
+    assert!(
+        speedup >= 2.0,
+        "offload-on decode must be ≥ 2x offload-off in model time (got {speedup:.2}x)"
+    );
+    assert!(
+        link_ratio <= sel * 1.15,
+        "host-link reads must shrink at least with selectivity \
+         (ratio {link_ratio:.3} vs budget {:.3})",
+        sel * 1.15
+    );
+    assert!(on.stats.nmc_bytes_scanned > 0, "device-side scans must be accounted");
+    assert!(
+        on.saved >= off.stats.link_bytes_out.saturating_sub(on.stats.link_bytes_out),
+        "banked savings must cover the observed link delta"
+    );
+
+    append_history(&off, &on, speedup, link_ratio);
+    println!("OK: near-memory offload is bit-identical, ≥2x faster, and link-lean");
+}
+
+/// Append this run's tok/s + GB/s numbers to the shared per-SHA perf
+/// history (`BENCH_hotpaths.json`, same append-only array
+/// `perf_hotpaths` maintains), so the offload trajectory is diffable
+/// across PRs alongside the hot-path kernels.
+fn append_history(off: &Run, on: &Run, speedup: f64, link_ratio: f64) {
+    let path = "BENCH_hotpaths.json";
+    let mut hist = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Arr(entries)) => entries,
+            _ => Vec::new(),
+        },
+        Err(_) => Vec::new(),
+    };
+    let tok_s = |r: &Run| r.generated as f64 / (r.model_ns * 1e-9);
+    let mut sections = BTreeMap::new();
+    sections.insert("nmc_tok_s_off".to_string(), Json::Num(tok_s(off)));
+    sections.insert("nmc_tok_s_on".to_string(), Json::Num(tok_s(on)));
+    sections.insert("nmc_speedup".to_string(), Json::Num(speedup));
+    sections.insert("nmc_link_ratio".to_string(), Json::Num(link_ratio));
+    sections.insert(
+        "nmc_scan_gbps".to_string(),
+        Json::Num(on.stats.nmc_bytes_scanned as f64 / on.model_ns),
+    );
+    let mut entry = BTreeMap::new();
+    entry.insert("sha".to_string(), Json::Str(git_sha()));
+    entry.insert("bench".to_string(), Json::Str("fig_nmc".to_string()));
+    entry.insert("sections".to_string(), Json::Obj(sections));
+    hist.push(Json::Obj(entry));
+    let n = hist.len();
+    std::fs::write(path, format!("{}\n", Json::Arr(hist))).expect("write bench json");
+    println!("wrote {path} ({n} history entries)");
+}
+
+/// History key: CI's commit SHA when present, else local git HEAD.
+fn git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        return sha;
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}

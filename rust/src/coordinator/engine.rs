@@ -69,6 +69,27 @@
 //! (`tests/overlap_equiv.rs`). The page a step commits mid-flight cannot
 //! be prefetched (it is not written until after compute) and is
 //! demand-fetched next step.
+//!
+//! ## Near-memory offload (`EngineConfig::nmc`)
+//!
+//! With `nmc: true` a per-page cost model decides each step whether a
+//! full-precision spilled-page fetch ships the whole page over the link
+//! (`ReadFull`) or runs as a device-side [`Transaction::ReduceKv`]: the
+//! device scores the decoded KV window against a recency query on its
+//! per-shard NMC unit and returns only the top-k rows plus their
+//! indices, so the link carries a fraction of the page. Every returned
+//! row is the lossless BF16 image of the host's authoritative KV and
+//! unreturned rows already mirror it in the slot's work buffer, so
+//! tokens are bit-identical offload-on vs. off unconditionally
+//! (`tests/nmc_equiv.rs`) — the win is link bytes
+//! (`Metrics::link_bytes_saved`) and model time. The planner's inputs
+//! (fixed device rates, the decoded-plane cache hit rate, an observed
+//! selectivity EMA) are folded exactly once per step, at the end of the
+//! gather, so prefetch issue and the next step's demand plan decide
+//! identically and the overlap fence stays exact. One documented
+//! consequence: with nmc on, *modeled traffic* (never tokens) can vary
+//! with the decode-cache capacity, because the hit rate feeds the
+//! planner.
 
 use super::metrics::Metrics;
 use super::request::{
@@ -78,7 +99,7 @@ use super::request::{
 use super::sched::{QueuedView, SchedKind, SchedView, SchedulerPolicy, SlotView};
 use crate::codec::CodecPolicy;
 use crate::cxl::{
-    CxlDevice, Design, MemDevice, ShardedDevice, SubmissionQueue, Transaction, TxnId,
+    CxlDevice, Design, MemDevice, Payload, ShardedDevice, SubmissionQueue, Transaction, TxnId,
 };
 use crate::formats::{bf16_from_f32, bf16_to_f32};
 use crate::runtime::ModelBackend;
@@ -137,6 +158,18 @@ pub struct EngineConfig {
     /// concurrently when the batch pool is not already fanning blocks out.
     /// Wall-clock only, like `pool_threads`. 1 = serial.
     pub codec_lanes: usize,
+    /// Near-memory compute offload: serve full-precision spilled-page
+    /// fetches as device-side [`Transaction::ReduceKv`] top-k reads when
+    /// the per-page cost model says the reduced link payload wins. Only
+    /// the *selection* of rows crossing the link changes — every returned
+    /// row is the lossless BF16 image of the host's authoritative KV, and
+    /// unreturned rows already mirror it in the slot's work buffer — so
+    /// tokens are bit-identical to `nmc: false` unconditionally
+    /// (`tests/nmc_equiv.rs`).
+    pub nmc: bool,
+    /// Fraction of a page's [`PAGE_TOKENS`] rows an offloaded fetch asks
+    /// the device to return (rounded up, clamped to `1..=PAGE_TOKENS`).
+    pub nmc_topk_frac: f64,
 }
 
 impl Default for EngineConfig {
@@ -156,6 +189,8 @@ impl Default for EngineConfig {
             pool_threads: 1,
             decode_cache_blocks: crate::cxl::DEFAULT_DECODE_CACHE_BLOCKS,
             codec_lanes: 1,
+            nmc: false,
+            nmc_topk_frac: 0.125,
         }
     }
 }
@@ -171,21 +206,31 @@ type PageList = Vec<(usize, Option<u64>)>;
 const MAX_EVENT_LOG: usize = 1 << 16;
 
 /// One spilled-page fetch the current step must perform: which page,
-/// where it lives on the device, and through which precision tier.
+/// where it lives on the device, through which precision tier, and — when
+/// the cost model chose near-memory offload — the device-side top-k row
+/// count. The offload decision is part of the op so the prefetch fence
+/// (`Prefetched.op == demand op`) keeps the overlapped pipeline exact.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 struct FetchOp {
     page: usize,
     addr: u64,
     tier: PageTier,
+    /// Fetch as a device-side [`Transaction::ReduceKv`] instead of a
+    /// full-page read. Set only for full-precision tiers.
+    nmc: bool,
+    /// Rows the device returns when `nmc` (0 otherwise).
+    k: u16,
 }
 
 /// A prefetched page waiting (in the engine's event queue) for the step
-/// that will consume it.
+/// that will consume it. `rows` carries the token indices of a row-sparse
+/// NMC payload (`None` = dense full-page words).
 struct Prefetched {
     slot: usize,
     seq: u64,
     op: FetchOp,
     words: Vec<u16>,
+    rows: Option<Vec<u32>>,
     ready_ns: f64,
 }
 
@@ -267,6 +312,22 @@ pub struct Engine<B: ModelBackend> {
     /// Ready-at fence of this step's preemption restores (consumed by the
     /// next compute start).
     restore_ready_ns: f64,
+    /// Device rates `(ddr, link, nmc)` in GB/s, snapshotted once for the
+    /// NMC cost model (they are fixed for a device's lifetime).
+    nmc_rates: (f64, f64, f64),
+    /// Shard count feeding the cost model: NMC scan capacity is per-shard
+    /// and parallel while the host link is fleet-shared.
+    nmc_shards: usize,
+    /// Observed-selectivity EMA (returned rows / page rows) feeding the
+    /// cost model. Folded only at the end of [`Self::gather_kvs`] so a
+    /// step's prefetch issue and the next step's demand plan run the
+    /// planner on identical state — the prefetch fence compares whole
+    /// [`FetchOp`]s, offload decision included.
+    nmc_sel_ema: f64,
+    /// Decoded-plane cache hit rate snapshot, same fold discipline.
+    nmc_hit_rate: f64,
+    /// Selectivity observations (sum, count) accumulated since the fold.
+    nmc_pending_sel: (f64, u64),
     pub metrics: Metrics,
     responses: Vec<Response>,
     kv_entry_len: usize,
@@ -306,6 +367,9 @@ impl<B: ModelBackend> Engine<B> {
         };
         let hbm = HbmPartition::new(cfg.hbm_kv_bytes, 0.0, 0);
         let pager = KvPageManager::with_shards(cfg.shards.max(1));
+        let nmc_rates = device.data_rates();
+        let nmc_shards = device.shards();
+        let nmc_sel_ema = cfg.nmc_topk_frac.max(1.0 / PAGE_TOKENS as f64).min(1.0);
         Engine {
             kv_entry_len: dims.kv_entry_len(),
             cfg,
@@ -325,6 +389,11 @@ impl<B: ModelBackend> Engine<B> {
             event_log_cap: MAX_EVENT_LOG,
             sink: None,
             restore_ready_ns: 0.0,
+            nmc_rates,
+            nmc_shards,
+            nmc_sel_ema,
+            nmc_hit_rate: 0.0,
+            nmc_pending_sel: (0.0, 0),
             metrics: Metrics::new(),
             responses: Vec::new(),
         }
@@ -1036,6 +1105,7 @@ impl<B: ModelBackend> Engine<B> {
         let imp: Vec<f64> = (0..total_pages).map(|k| (k + 1) as f64).collect();
         let tiers = self.cfg.policy.assign(&imp);
         let mut plan = Vec::new();
+        let offload_k = if self.cfg.nmc { self.plan_offload() } else { None };
         for (k, (page, cxl_addr)) in pages.iter().enumerate() {
             let Some(addr) = cxl_addr else {
                 continue; // HBM-resident: already in the slot's work buffer
@@ -1044,13 +1114,79 @@ impl<B: ModelBackend> Engine<B> {
             if tier.view().is_none() {
                 continue; // dropped page: served from the work buffer
             }
-            plan.push(FetchOp { page: *page, addr: *addr, tier });
+            // offload only full-precision fetches: a ReduceKv row is the
+            // lossless BF16 image of the host's copy, so substituting it
+            // cannot change tokens; reduced tiers deliberately truncate
+            // and must keep their alias-view read path
+            let nmc = offload_k.is_some() && tier.view().is_some_and(|v| v.is_full());
+            plan.push(FetchOp {
+                page: *page,
+                addr: *addr,
+                tier,
+                nmc,
+                k: if nmc { offload_k.unwrap() } else { 0 },
+            });
         }
         plan
     }
 
-    /// The device transaction implementing one fetch op.
-    fn txn_of(op: &FetchOp) -> Transaction {
+    /// The per-page cost model behind [`EngineConfig::nmc`]: offload a
+    /// full-precision spilled-page fetch when the estimated offloaded
+    /// chain beats shipping the whole page over the host link.
+    ///
+    /// * full fetch — the page crosses the fleet-shared link:
+    ///   `page_bytes / link_gbps`.
+    /// * offload — the device scans the decoded window on the per-shard
+    ///   NMC unit (aggregate capacity `nmc_gbps × shards`, it runs in
+    ///   parallel across shards while the link serializes), then only the
+    ///   reduced payload crosses the link. A decoded-plane cache hit
+    ///   skips the codec work that otherwise feeds the scan, so the
+    ///   observed hit rate discounts the scan term; the reduced payload
+    ///   is estimated from the observed selectivity EMA plus the index
+    ///   sidecar and the query upload.
+    ///
+    /// Returns the top-k row count when offload wins. Inputs are the
+    /// snapshots folded at the end of [`Self::gather_kvs`], so the
+    /// decision is identical at prefetch-issue and demand time.
+    fn plan_offload(&self) -> Option<u16> {
+        let el = self.kv_entry_len;
+        let page_bytes = (PAGE_TOKENS * el * 2) as f64;
+        let (_, link_gbps, nmc_gbps) = self.nmc_rates;
+        let k = ((self.cfg.nmc_topk_frac * PAGE_TOKENS as f64).ceil() as usize)
+            .clamp(1, PAGE_TOKENS);
+        let rows = (self.nmc_sel_ema * PAGE_TOKENS as f64).ceil().max(1.0);
+        let reduced = rows * (el * 2 + 4) as f64 + (el * 2) as f64;
+        let t_full = page_bytes / link_gbps;
+        let t_off = page_bytes / (nmc_gbps * self.nmc_shards as f64)
+            * (1.0 - self.nmc_hit_rate)
+            + reduced / link_gbps;
+        (t_off < t_full).then_some(k as u16)
+    }
+
+    /// The device-side scoring query for a slot's offloaded fetches: the
+    /// BF16 image of the newest KV entry (a recency proxy for attention
+    /// relevance). Only row *selection* depends on it — every returned
+    /// row is bit-equal to the host's authoritative copy regardless — so
+    /// a prefetch issued one token earlier than its consuming step is
+    /// still exact.
+    fn nmc_query(&self, slot: usize) -> Vec<u16> {
+        let el = self.kv_entry_len;
+        let kv = &self.slots[slot].kv;
+        let start = kv.len().saturating_sub(el);
+        let mut q: Vec<u16> = kv[start..].iter().map(|&x| bf16_from_f32(x)).collect();
+        q.resize(el, 0);
+        q
+    }
+
+    /// The device transaction implementing one fetch op of `slot`.
+    fn txn_of(&self, slot: usize, op: &FetchOp) -> Transaction {
+        if op.nmc {
+            return Transaction::ReduceKv {
+                block_addr: op.addr,
+                query: self.nmc_query(slot),
+                top_k: op.k as usize,
+            };
+        }
         let view = op.tier.view().expect("planned fetch has a view");
         if view.is_full() {
             Transaction::ReadFull { block_addr: op.addr }
@@ -1060,13 +1196,47 @@ impl<B: ModelBackend> Engine<B> {
     }
 
     /// Scatter one fetched page into a slot's attention buffer and keep
-    /// the recall accounting + viewed-page bookkeeping.
-    fn scatter(&mut self, buf: &mut [f32], slot: usize, op: &FetchOp, words: &[u16]) {
+    /// the recall accounting + viewed-page bookkeeping. `rows` carries
+    /// the token indices of a row-sparse NMC payload (`None` = dense).
+    fn scatter(
+        &mut self,
+        buf: &mut [f32],
+        slot: usize,
+        op: &FetchOp,
+        words: &[u16],
+        rows: Option<&[u32]>,
+    ) {
+        let el = self.kv_entry_len;
         self.pager.recalled_pages += 1;
         self.metrics.kv_recall_bytes += (words.len() * 2) as u64;
-        let start = op.page * PAGE_TOKENS * self.kv_entry_len;
-        for (j, &w) in words.iter().enumerate() {
-            buf[start + j] = bf16_to_f32(w);
+        let start = op.page * PAGE_TOKENS * el;
+        match rows {
+            None => {
+                for (j, &w) in words.iter().enumerate() {
+                    buf[start + j] = bf16_to_f32(w);
+                }
+            }
+            Some(idx) => {
+                // row-sparse NMC payload: rows the device kept back
+                // already mirror the authoritative kv in `work` (offload
+                // substitutes full-precision fetches only), so writing
+                // just the returned rows keeps the page bit-exact
+                for (r, &row) in idx.iter().enumerate() {
+                    let dst = start + row as usize * el;
+                    for c in 0..el {
+                        buf[dst + c] = bf16_to_f32(words[r * el + c]);
+                    }
+                }
+                let page_bytes = (PAGE_TOKENS * el * 2) as u64;
+                let returned = (words.len() * 2 + idx.len() * 4) as u64;
+                self.metrics.nmc_offloads += 1;
+                self.metrics.link_bytes_saved += page_bytes.saturating_sub(returned);
+                if let Some(sla) = self.slots[slot].req.as_ref().map(|r| r.sla) {
+                    self.metrics.nmc_offloads_class[sla.index()] += 1;
+                }
+                self.nmc_pending_sel.0 += idx.len() as f64 / PAGE_TOKENS as f64;
+                self.nmc_pending_sel.1 += 1;
+            }
         }
         let full = op.tier.view().map(|v| v.is_full()).unwrap_or(false);
         if full {
@@ -1132,13 +1302,13 @@ impl<B: ModelBackend> Engine<B> {
                 if let Some(p) = prefetched.remove(&(i, op.page)) {
                     if p.seq == seq && p.op == op {
                         fetch_ready = fetch_ready.max(p.ready_ns);
-                        self.scatter(&mut kvs[i], i, &op, &p.words);
+                        self.scatter(&mut kvs[i], i, &op, &p.words, p.rows.as_deref());
                         self.metrics.prefetch_hits += 1;
                         continue;
                     }
                     self.metrics.prefetch_stale += 1;
                 }
-                routes.insert(sq.submit(Self::txn_of(&op)), (i, op));
+                routes.insert(sq.submit(self.txn_of(i, &op)), (i, op));
             }
         }
         // anything left in the buffer was invalidated before use
@@ -1148,16 +1318,40 @@ impl<B: ModelBackend> Engine<B> {
             for c in self.device.drain_at(&mut sq, now) {
                 let (slot, op) = routes[&c.id];
                 fetch_ready = fetch_ready.max(c.ready_at_ns);
-                match c.words() {
-                    Ok(words) => self.scatter(&mut kvs[slot], slot, &op, &words),
-                    Err(e) => {
-                        // hand the taken buffers back before surfacing the
-                        // device error, or the next step would see empty
-                        // attention buffers and panic
-                        self.restore_work(kvs);
-                        return Err(e);
+                let scattered = c.result.and_then(|p| match p {
+                    Payload::Rows { indices, words } => {
+                        self.scatter(&mut kvs[slot], slot, &op, &words, Some(&indices));
+                        Ok(())
                     }
+                    p => {
+                        self.scatter(&mut kvs[slot], slot, &op, &p.into_words()?, None);
+                        Ok(())
+                    }
+                });
+                if let Err(e) = scattered {
+                    // hand the taken buffers back before surfacing the
+                    // device error, or the next step would see empty
+                    // attention buffers and panic
+                    self.restore_work(kvs);
+                    return Err(e);
                 }
+            }
+        }
+        // fold the NMC planner inputs only now — after every demand drain
+        // and prefetch consume of this step — so this step's prefetch
+        // issue and the next step's demand plan run the cost model on
+        // identical state and the fence stays exact
+        if self.cfg.nmc {
+            let (hits, misses, _) = self.device.decode_cache_stats();
+            self.nmc_hit_rate = if hits + misses > 0 {
+                hits as f64 / (hits + misses) as f64
+            } else {
+                0.0
+            };
+            let (sum, n) = std::mem::take(&mut self.nmc_pending_sel);
+            if n > 0 {
+                const ALPHA: f64 = 0.25;
+                self.nmc_sel_ema = (1.0 - ALPHA) * self.nmc_sel_ema + ALPHA * sum / n as f64;
             }
         }
         Ok((kvs, fetch_ready, page_lists))
@@ -1210,7 +1404,7 @@ impl<B: ModelBackend> Engine<B> {
             let pages = &page_lists[&i];
             let n_pages = pages.len() + usize::from(commits_page);
             for op in self.fetch_plan(pages, n_pages) {
-                routes.insert(sq.submit(Self::txn_of(&op)), (i, seq, op));
+                routes.insert(sq.submit(self.txn_of(i, &op)), (i, seq, op));
             }
         }
         if sq.is_empty() {
@@ -1219,9 +1413,12 @@ impl<B: ModelBackend> Engine<B> {
         for c in self.device.drain_at(&mut sq, issue_ns) {
             let (slot, seq, op) = routes[&c.id];
             let ready_ns = c.ready_at_ns;
-            let words = c.words()?;
+            let (rows, words) = match c.result? {
+                Payload::Rows { indices, words } => (Some(indices), words),
+                p => (None, p.into_words()?),
+            };
             self.metrics.prefetch_issued += 1;
-            self.inflight.push(ready_ns, Prefetched { slot, seq, op, words, ready_ns });
+            self.inflight.push(ready_ns, Prefetched { slot, seq, op, words, rows, ready_ns });
         }
         Ok(())
     }
@@ -1366,6 +1563,12 @@ impl<B: ModelBackend> Engine<B> {
         self.metrics.step_model_ns.push(compute_done - t0);
         self.clock.advance_to(compute_done);
         self.metrics.model_ns = self.clock.now();
+        // mirror the device's decoded-plane cache counters (wall-clock
+        // telemetry; kept out of DeviceStats so traffic equality across
+        // cache configurations stays byte-exact)
+        let (cache_hits, cache_misses, _) = self.device.decode_cache_stats();
+        self.metrics.decode_cache_hits = cache_hits;
+        self.metrics.decode_cache_misses = cache_misses;
         // per-step traffic summary for the trace sink (deltas of the
         // cumulative counters; steps that return early above emit no Step
         // record, so their traffic folds into the next recorded step)
@@ -1374,8 +1577,10 @@ impl<B: ModelBackend> Engine<B> {
             let steps = self.metrics.engine_steps;
             let recalled = self.pager.recalled_pages;
             let recall_bytes = self.metrics.kv_recall_bytes;
+            let (offloads, saved) = (self.metrics.nmc_offloads, self.metrics.link_bytes_saved);
             if let Some(w) = self.sink.as_mut() {
                 w.record_step(compute_done, steps, generated as u64, recalled, recall_bytes, &dev);
+                w.record_nmc(compute_done, offloads, dev.nmc_bytes_scanned, saved);
             }
         }
         Ok(generated)
@@ -1508,6 +1713,72 @@ mod tests {
         let full = traffic(KvPolicy::FullKv);
         let tiered = traffic(KvPolicy::DynamicQuant { bf16: 2, fp8: 2, fp4: 30 });
         assert!(tiered < full, "tiered={tiered} full={full}");
+    }
+
+    #[test]
+    fn nmc_offload_keeps_tokens_and_shrinks_link_reads() {
+        // the cost model starts offloading once the decoded-plane cache
+        // warms (TRACE caches full-mask decodes; ReduceKv shares the
+        // entry), so a spilling run must: offload some fetches, save
+        // link bytes, and still produce bit-identical tokens
+        let run = |nmc: bool| {
+            let mut e = Engine::new(
+                MockBackend::tiny(),
+                EngineConfig { hbm_kv_bytes: 0, shards: 4, nmc, ..Default::default() },
+            );
+            e.submit(vec![1, 2, 3, 4, 5, 6, 7, 8], 80);
+            e.run_to_completion(300).unwrap();
+            let tokens: Vec<Vec<u32>> =
+                e.take_responses().into_iter().map(|r| r.tokens).collect();
+            (tokens, e.device.stats(), e.metrics)
+        };
+        let (t_off, s_off, m_off) = run(false);
+        let (t_on, s_on, m_on) = run(true);
+        assert_eq!(t_off, t_on, "offload must not change tokens");
+        assert_eq!(m_off.nmc_offloads, 0);
+        assert_eq!(s_off.nmc_bytes_scanned, 0);
+        assert!(m_on.nmc_offloads > 0, "warm cache must trigger offloads");
+        assert!(m_on.link_bytes_saved > 0);
+        assert_eq!(m_on.nmc_offloads_class[SlaClass::Batch.index()], m_on.nmc_offloads);
+        assert!(s_on.nmc_bytes_scanned > 0);
+        assert!(
+            s_on.link_bytes_out < s_off.link_bytes_out,
+            "reduced payloads must shrink host-link reads: on={} off={}",
+            s_on.link_bytes_out,
+            s_off.link_bytes_out
+        );
+        // the decode-cache mirror is live telemetry in both runs
+        assert!(m_on.decode_cache_hits > 0 && m_off.decode_cache_hits > 0);
+    }
+
+    #[test]
+    fn nmc_overlap_prefetch_fence_stays_exact() {
+        // the planner folds its inputs once per step, so the offload
+        // decision at prefetch-issue matches next step's demand plan and
+        // no prefetch goes stale in steady state
+        let run = |overlap: bool| {
+            let mut e = Engine::new(
+                MockBackend::tiny(),
+                EngineConfig {
+                    hbm_kv_bytes: 0,
+                    shards: 4,
+                    overlap,
+                    nmc: true,
+                    ..Default::default()
+                },
+            );
+            e.submit(vec![1, 2, 3, 4, 5, 6, 7, 8], 80);
+            e.run_to_completion(300).unwrap();
+            let tokens: Vec<Vec<u32>> =
+                e.take_responses().into_iter().map(|r| r.tokens).collect();
+            (tokens, e.metrics)
+        };
+        let (t_serial, m_serial) = run(false);
+        let (t_overlap, m_overlap) = run(true);
+        assert_eq!(t_serial, t_overlap);
+        assert!(m_overlap.prefetch_hits > 0);
+        assert_eq!(m_overlap.prefetch_stale, 0, "offload decision must prefetch exactly");
+        assert_eq!(m_serial.nmc_offloads, m_overlap.nmc_offloads);
     }
 
     #[test]

@@ -91,6 +91,22 @@ pub struct Metrics {
     pub prefetch_issued: u64,
     pub prefetch_hits: u64,
     pub prefetch_stale: u64,
+    /// Spilled-page fetches served as device-side near-memory
+    /// `ReduceKv` transactions instead of full-page link transfers
+    /// ([`EngineConfig::nmc`](super::engine::EngineConfig)).
+    pub nmc_offloads: u64,
+    /// `nmc_offloads` broken down by QoS class (index =
+    /// [`SlaClass::index`]).
+    pub nmc_offloads_class: [u64; 2],
+    /// Host-link read bytes the offloaded fetches avoided: full page
+    /// bytes minus the reduced row+index payload actually transferred.
+    pub link_bytes_saved: u64,
+    /// Mirror of the device's decoded-plane cache counters (wall-clock
+    /// telemetry; deliberately not part of
+    /// [`DeviceStats`] so traffic equality across cache configurations
+    /// stays byte-exact).
+    pub decode_cache_hits: u64,
+    pub decode_cache_misses: u64,
 }
 
 impl Default for Metrics {
@@ -123,6 +139,11 @@ impl Default for Metrics {
             prefetch_issued: 0,
             prefetch_hits: 0,
             prefetch_stale: 0,
+            nmc_offloads: 0,
+            nmc_offloads_class: [0, 0],
+            link_bytes_saved: 0,
+            decode_cache_hits: 0,
+            decode_cache_misses: 0,
         }
     }
 }
@@ -319,6 +340,19 @@ impl Metrics {
         device.insert("link_bytes_in".to_string(), num(dev.link_bytes_in as f64));
         device.insert("link_bytes_out".to_string(), num(dev.link_bytes_out as f64));
         device.insert("metadata_dram_reads".to_string(), num(dev.metadata_dram_reads as f64));
+        device.insert("nmc_bytes_scanned".to_string(), num(dev.nmc_bytes_scanned as f64));
+        let mut nmc = BTreeMap::new();
+        nmc.insert("offloads".to_string(), num(self.nmc_offloads as f64));
+        for class in SlaClass::ALL {
+            nmc.insert(
+                format!("offloads_{}", class.name()),
+                num(self.nmc_offloads_class[class.index()] as f64),
+            );
+        }
+        nmc.insert("link_bytes_saved".to_string(), num(self.link_bytes_saved as f64));
+        let mut decode_cache = BTreeMap::new();
+        decode_cache.insert("hits".to_string(), num(self.decode_cache_hits as f64));
+        decode_cache.insert("misses".to_string(), num(self.decode_cache_misses as f64));
         let mut o = BTreeMap::new();
         o.insert("engine_steps".to_string(), num(self.engine_steps as f64));
         o.insert("prefills".to_string(), num(self.prefills as f64));
@@ -341,6 +375,8 @@ impl Metrics {
         o.insert("sched".to_string(), Json::Obj(sched));
         o.insert("sla".to_string(), Json::Obj(sla));
         o.insert("device".to_string(), Json::Obj(device));
+        o.insert("nmc".to_string(), Json::Obj(nmc));
+        o.insert("decode_cache".to_string(), Json::Obj(decode_cache));
         Json::Obj(o)
     }
 }
@@ -427,7 +463,17 @@ mod tests {
         m.prefetch_issued = 4;
         m.events_dropped = 5;
         m.pages_shared = 3;
-        let dev = DeviceStats { dram_bytes_read: 4096, ..Default::default() };
+        m.nmc_offloads = 9;
+        m.nmc_offloads_class[SlaClass::Interactive.index()] = 6;
+        m.nmc_offloads_class[SlaClass::Batch.index()] = 3;
+        m.link_bytes_saved = 7000;
+        m.decode_cache_hits = 11;
+        m.decode_cache_misses = 4;
+        let dev = DeviceStats {
+            dram_bytes_read: 4096,
+            nmc_bytes_scanned: 2048,
+            ..Default::default()
+        };
         let j = m.to_json(&dev);
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("engine_steps").unwrap().as_usize().unwrap(), 7);
@@ -444,6 +490,18 @@ mod tests {
             parsed.get("device").unwrap().get("dram_bytes_read").unwrap().as_usize().unwrap(),
             4096
         );
+        assert_eq!(
+            parsed.get("device").unwrap().get("nmc_bytes_scanned").unwrap().as_usize().unwrap(),
+            2048
+        );
+        let nmc = parsed.get("nmc").unwrap();
+        assert_eq!(nmc.get("offloads").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(nmc.get("offloads_interactive").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(nmc.get("offloads_batch").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(nmc.get("link_bytes_saved").unwrap().as_usize().unwrap(), 7000);
+        let dc = parsed.get("decode_cache").unwrap();
+        assert_eq!(dc.get("hits").unwrap().as_usize().unwrap(), 11);
+        assert_eq!(dc.get("misses").unwrap().as_usize().unwrap(), 4);
         let sched = parsed.get("sched").unwrap();
         assert_eq!(sched.get("preemptions").unwrap().as_usize().unwrap(), 2);
         // events_dropped shows up both under sched and at top level

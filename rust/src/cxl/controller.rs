@@ -138,6 +138,26 @@ pub fn latency(case: LatencyCase) -> LatencyBreakdown {
     }
 }
 
+/// Extra controller cycles to issue a near-memory-compute command over
+/// the plain read pipeline: the front-end parses the gather/reduce
+/// descriptor (row list or query header) and the scheduler reserves the
+/// NMC unit alongside the plane fetch.
+pub const NMC_ISSUE_CYCLES: u32 = 6;
+
+/// Load-to-use service time for one near-memory-compute request
+/// ([`crate::cxl::Transaction::GatherPlanes`] /
+/// [`crate::cxl::Transaction::ReduceKv`]): the read pipeline of the
+/// design plus the fixed [`NMC_ISSUE_CYCLES`] command-issue overhead
+/// (front-end descriptor parse + NMC-unit reservation). The
+/// data-dependent scan time is *not* here — it is charged on the
+/// per-shard NMC resource timeline (`bytes_scanned / nmc_gbps`).
+pub fn nmc_latency(case: LatencyCase) -> LatencyBreakdown {
+    let mut l = latency(case);
+    l.frontend += 2; // gather/reduce descriptor parse
+    l.scheduler += NMC_ISSUE_CYCLES - 2; // NMC unit reservation
+    l
+}
+
 /// Store-path service time for one block write. The write pipeline skips
 /// the decode tail (the codec engine is streaming on ingest and overlaps
 /// the DRAM burst almost entirely), but the compressed designs still pay a
@@ -251,6 +271,25 @@ mod tests {
         let delta = miss.total_cycles() - hit.total_cycles();
         assert_eq!(delta, META_MISS_WINDOW);
         assert!(delta >= TRCD + TCL);
+    }
+
+    #[test]
+    fn nmc_adds_fixed_issue_overhead_to_the_read_pipeline() {
+        for case in [
+            LatencyCase::Plain,
+            LatencyCase::GComp { metadata_hit: true },
+            LatencyCase::Trace { metadata_hit: true, ratio: 2.0, bypass: false },
+            LatencyCase::Trace { metadata_hit: false, ratio: 1.5, bypass: true },
+        ] {
+            let plain = latency(case);
+            let nmc = nmc_latency(case);
+            assert_eq!(nmc.total_cycles(), plain.total_cycles() + NMC_ISSUE_CYCLES);
+            // the overhead is pipeline-front, never a DRAM window
+            assert_eq!(nmc.trcd, plain.trcd);
+            assert_eq!(nmc.tcl, plain.tcl);
+            assert_eq!(nmc.burst, plain.burst);
+            assert_eq!(nmc.meta_miss, plain.meta_miss);
+        }
     }
 
     #[test]

@@ -43,7 +43,9 @@ use std::collections::{HashMap, HashSet};
 use std::ops::Range;
 use std::sync::{Arc, Mutex};
 
-use super::controller::{free_latency, latency, write_latency, LatencyBreakdown, LatencyCase};
+use super::controller::{
+    free_latency, latency, nmc_latency, write_latency, LatencyBreakdown, LatencyCase,
+};
 use super::link::Link;
 use super::metadata::{IndexCache, PlaneIndex, ENTRY_BYTES};
 use super::txn::{Completion, MemDevice, Payload, SubmissionQueue, Transaction, TxnId, TxnStats};
@@ -169,6 +171,9 @@ pub struct DeviceStats {
     pub link_bytes_in: u64,
     /// Metadata region reads caused by index-cache misses.
     pub metadata_dram_reads: u64,
+    /// Bytes the near-memory compute unit scanned or produced while
+    /// serving `GatherPlanes`/`ReduceKv` (charged on the NMC timeline).
+    pub nmc_bytes_scanned: u64,
     pub reads: u64,
     pub writes: u64,
 }
@@ -193,6 +198,7 @@ impl DeviceStats {
         self.link_bytes_out += o.link_bytes_out;
         self.link_bytes_in += o.link_bytes_in;
         self.metadata_dram_reads += o.metadata_dram_reads;
+        self.nmc_bytes_scanned += o.nmc_bytes_scanned;
         self.reads += o.reads;
         self.writes += o.writes;
     }
@@ -245,6 +251,13 @@ pub struct CxlDevice {
     pub link_in_tl: ResourceTimeline,
     /// Device→host link direction (standalone use only).
     pub link_out_tl: ResourceTimeline,
+    /// Near-memory compute unit (gather/reduce engine). Sequenced after
+    /// DDR service and before the outbound link transfer by
+    /// [`crate::sim::schedule_read_nmc`]; per shard when sharded.
+    pub nmc_tl: ResourceTimeline,
+    /// NMC scan/reduce throughput, bytes/ns (GB/s). Device-internal, so
+    /// well above the link but below raw DDR stream bandwidth.
+    pub nmc_gbps: f64,
     /// Device-DDR bandwidth for the service-time model, bytes/ns (GB/s).
     /// Behind a [`super::ShardedDevice`] the fleet's `shard_ddr_gbps`
     /// (seeded from this default at construction) is authoritative.
@@ -268,6 +281,11 @@ pub struct CxlDevice {
     lanes: Arc<LanePool>,
     /// Decoded-plane cache (wall-clock only; see [`DecodeCache`]).
     cache: DecodeCache,
+    /// KV window geometry per block address, recorded by `WriteKv` on
+    /// every design: the NMC transactions need token×channel shape to
+    /// gather rows / score tokens, and only TRACE's `Transform::Kv`
+    /// stores it in-band.
+    kv_geom: HashMap<u64, KvWindow>,
 }
 
 /// Default decoded-plane cache capacity: 256 entries ≈ 1 MB of decoded
@@ -287,6 +305,10 @@ impl CxlDevice {
             service_tl: ResourceTimeline::new("cxl-service"),
             link_in_tl: ResourceTimeline::new("link-in"),
             link_out_tl: ResourceTimeline::new("link-out"),
+            nmc_tl: ResourceTimeline::new("nmc"),
+            // half the DDR stream rate: the gather/reduce engine reads
+            // decoded planes out of device SRAM/DRAM and dot-products them
+            nmc_gbps: 128.0,
             // per-device DDR of the paper's system model (§IV-B, matching
             // SystemConfig::paper_default().ddr_bw = 256 GB/s)
             ddr_gbps: 256.0,
@@ -296,6 +318,7 @@ impl CxlDevice {
             pool_scratch: vec![Mutex::new(BlockScratch::new())],
             lanes: Arc::new(LanePool::inline()),
             cache: DecodeCache::new(DEFAULT_DECODE_CACHE_BLOCKS),
+            kv_geom: HashMap::new(),
         }
     }
 
@@ -384,6 +407,7 @@ impl CxlDevice {
         self.service_tl.reset();
         self.link_in_tl.reset();
         self.link_out_tl.reset();
+        self.nmc_tl.reset();
     }
 
     fn stored_bytes_of(s: &Stored) -> usize {
@@ -430,6 +454,9 @@ impl CxlDevice {
         fmt: Fmt,
         pre: Option<Stored>,
     ) -> f64 {
+        // an overwrite with a generic/weight block drops any KV geometry
+        // the address had — NMC transactions must not see stale shape
+        self.kv_geom.remove(&block_addr);
         let raw_len = words.len() * 2;
         let stored = pre.unwrap_or_else(|| match self.design {
             Design::Plain => Stored::Raw(u16s_to_bytes(words)),
@@ -458,7 +485,7 @@ impl CxlDevice {
         window: KvWindow,
         pre: Option<Stored>,
     ) -> f64 {
-        match self.design {
+        let ratio = match self.design {
             Design::Trace => {
                 let raw_len = kv_token_major.len() * 2;
                 let stored = pre.unwrap_or_else(|| {
@@ -473,7 +500,11 @@ impl CxlDevice {
                 self.commit_stored(block_addr, raw_len, stored)
             }
             _ => self.do_write_weights(block_addr, kv_token_major, Fmt::Bf16, pre),
-        }
+        };
+        // every design records the window shape so the NMC transactions
+        // can gather rows / score tokens against this block
+        self.kv_geom.insert(block_addr, window);
+        ratio
     }
 
     /// Full-precision read: returns the exact words the host wrote.
@@ -641,6 +672,161 @@ impl CxlDevice {
         }
     }
 
+    /// Shared NMC fetch: charge the DRAM read for the stream the device
+    /// compute engine consumes and return the decoded host-domain words.
+    /// `pre` is the pool/cache decode of the same stored-domain mask. No
+    /// link charge here — NMC callers ship only the reduced payload.
+    fn nmc_fetch_words(
+        &mut self,
+        block_addr: u64,
+        trace_mask: PlaneMask,
+        pre: Option<anyhow::Result<Vec<u16>>>,
+    ) -> anyhow::Result<Vec<u16>> {
+        let stored = self
+            .blocks
+            .get(&block_addr)
+            .ok_or_else(|| anyhow::anyhow!("no block at {block_addr:#x}"))?;
+        self.stats.reads += 1;
+        match stored {
+            Stored::Raw(d) => {
+                self.stats.dram_bytes_read += d.len() as u64;
+                match pre {
+                    Some(r) => r,
+                    None => Ok(bytes_to_u16s(d)),
+                }
+            }
+            Stored::Compressed { codec, data, raw_len } => {
+                self.stats.dram_bytes_read += data.len() as u64;
+                match pre {
+                    Some(r) => r,
+                    None => Ok(bytes_to_u16s(&codec::decompress_cow(*codec, data, *raw_len)?)),
+                }
+            }
+            Stored::Planes(b) => {
+                self.stats.dram_bytes_read += b.fetched_bytes(trace_mask) as u64;
+                match pre {
+                    Some(r) => r,
+                    None => {
+                        let mut out = Vec::with_capacity(b.n_elem);
+                        b.decode_planes_into_lanes(
+                            trace_mask,
+                            &mut self.scratch,
+                            &mut out,
+                            &self.lanes,
+                        )?;
+                        Ok(out)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Near-memory gather: decode the planes of `range` (baselines decode
+    /// the full container) and return only the selected token rows,
+    /// masked to the requested bit positions. The link is charged for the
+    /// gathered rows; the touched output bytes land on the NMC timeline.
+    fn do_gather_planes(
+        &mut self,
+        block_addr: u64,
+        rows: &[u32],
+        range: Range<usize>,
+        pre: Option<anyhow::Result<Vec<u16>>>,
+    ) -> anyhow::Result<Vec<u16>> {
+        let window = *self.kv_geom.get(&block_addr).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no KV window geometry at {block_addr:#x}: GatherPlanes serves WriteKv blocks"
+            )
+        })?;
+        if let Some(&bad) = rows.iter().find(|&&r| r as usize >= window.tokens) {
+            anyhow::bail!("gather row {bad} out of range: window holds {} tokens", window.tokens);
+        }
+        let (req, fetch) = match self.blocks.get(&block_addr) {
+            Some(Stored::Planes(b)) => {
+                let req = range_mask(&range, b.fmt.bits());
+                (req, planes_fetch_mask(b, req))
+            }
+            // the word-major baselines decode the full container; the
+            // request range only shapes the output and the link charge
+            _ => (range_mask(&range, 16), PlaneMask::full(Fmt::Bf16)),
+        };
+        let words = self.nmc_fetch_words(block_addr, fetch, pre)?;
+        let ch = window.channels;
+        let keep = (req.0 & 0xffff) as u16;
+        let mut out = Vec::with_capacity(rows.len() * ch);
+        for &r in rows {
+            let base = r as usize * ch;
+            anyhow::ensure!(base + ch <= words.len(), "gather row {r} beyond decoded block");
+            out.extend(words[base..base + ch].iter().map(|w| *w & keep));
+        }
+        // the gather engine touches every produced word once
+        self.stats.nmc_bytes_scanned += (out.len() * 2) as u64;
+        self.stats.link_bytes_out += (out.len() * req.count()).div_ceil(8) as u64;
+        Ok(out)
+    }
+
+    /// Near-memory reduce: decode the KV window at full precision, score
+    /// every token row against the BF16 query (f32 dot-product, fixed
+    /// channel order), and return the `top_k` best rows plus their
+    /// indices (ascending). The full-window scan is charged on the NMC
+    /// timeline; the link carries only `k` rows + `k` u32 indices out
+    /// (and the query in).
+    fn do_reduce_kv(
+        &mut self,
+        block_addr: u64,
+        query: &[u16],
+        top_k: usize,
+        pre: Option<anyhow::Result<Vec<u16>>>,
+    ) -> anyhow::Result<(Vec<u32>, Vec<u16>)> {
+        let window = *self.kv_geom.get(&block_addr).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no KV window geometry at {block_addr:#x}: ReduceKv serves WriteKv blocks"
+            )
+        })?;
+        anyhow::ensure!(
+            query.len() == window.channels,
+            "query length {} != window channels {}",
+            query.len(),
+            window.channels
+        );
+        anyhow::ensure!(top_k >= 1, "reduce top_k must be >= 1");
+        let fetch = match self.blocks.get(&block_addr) {
+            Some(Stored::Planes(b)) => PlaneMask::full(b.fmt),
+            _ => PlaneMask::full(Fmt::Bf16),
+        };
+        let words = self.nmc_fetch_words(block_addr, fetch, pre)?;
+        let ch = window.channels;
+        let tokens = window.tokens.min(words.len() / ch);
+        let q: Vec<f32> = query.iter().map(|&w| crate::formats::bf16_to_f32(w)).collect();
+        let scores: Vec<f32> = (0..tokens)
+            .map(|t| {
+                words[t * ch..(t + 1) * ch]
+                    .iter()
+                    .zip(&q)
+                    .map(|(&w, &qc)| crate::formats::bf16_to_f32(w) * qc)
+                    .sum()
+            })
+            .collect();
+        let k = top_k.min(tokens);
+        let mut order: Vec<u32> = (0..tokens as u32).collect();
+        // score descending, index ascending on ties — fully deterministic
+        order.sort_by(|&a, &b| {
+            scores[b as usize].total_cmp(&scores[a as usize]).then(a.cmp(&b))
+        });
+        let mut indices = order[..k].to_vec();
+        indices.sort_unstable();
+        let mut out = Vec::with_capacity(k * ch);
+        for &t in &indices {
+            out.extend_from_slice(&words[t as usize * ch..(t as usize + 1) * ch]);
+        }
+        // the reduce engine streams the whole decoded window once
+        self.stats.nmc_bytes_scanned += (tokens * ch * 2) as u64;
+        // the query rides inbound with the submission; only the selected
+        // rows + indices cross the link outbound
+        self.stats.link_bytes_in += (query.len() * 2) as u64;
+        self.stats.link_bytes_out += (out.len() * 2 + indices.len() * 4) as u64;
+        Ok((indices, out))
+    }
+
     /// Deallocate a stored block: drop the data and (TRACE) its plane
     /// index entry. A pure command — no byte counters move.
     fn do_free(&mut self, block_addr: u64) -> anyhow::Result<Payload> {
@@ -651,6 +837,7 @@ impl CxlDevice {
             self.index.remove(block_addr);
         }
         self.cache.invalidate(block_addr);
+        self.kv_geom.remove(&block_addr);
         Ok(Payload::Written)
     }
 
@@ -683,14 +870,21 @@ impl CxlDevice {
         }
     }
 
-    fn read_latency(&self, metadata_hit: bool, profile: (f64, bool)) -> LatencyBreakdown {
+    fn latency_case(&self, metadata_hit: bool, profile: (f64, bool)) -> LatencyCase {
         let (ratio, bypass) = profile;
-        let case = match self.design {
+        match self.design {
             Design::Plain => LatencyCase::Plain,
             Design::GComp => LatencyCase::GComp { metadata_hit },
             Design::Trace => LatencyCase::Trace { metadata_hit, ratio, bypass },
-        };
-        latency(case)
+        }
+    }
+
+    fn read_latency(&self, metadata_hit: bool, profile: (f64, bool)) -> LatencyBreakdown {
+        latency(self.latency_case(metadata_hit, profile))
+    }
+
+    fn nmc_read_latency(&self, metadata_hit: bool, profile: (f64, bool)) -> LatencyBreakdown {
+        nmc_latency(self.latency_case(metadata_hit, profile))
     }
 
     /// Functional execution with an optional precomputed pure result
@@ -749,6 +943,24 @@ impl CxlDevice {
                     self.read_latency(hit, profile),
                 )
             }
+            Transaction::GatherPlanes { block_addr, rows, range } => {
+                let hit = self.charge_metadata(block_addr);
+                let profile = self.block_profile(block_addr);
+                (
+                    self.do_gather_planes(block_addr, &rows, range, pre_words.take())
+                        .map(Payload::Words),
+                    self.nmc_read_latency(hit, profile),
+                )
+            }
+            Transaction::ReduceKv { block_addr, query, top_k } => {
+                let hit = self.charge_metadata(block_addr);
+                let profile = self.block_profile(block_addr);
+                (
+                    self.do_reduce_kv(block_addr, &query, top_k, pre_words.take())
+                        .map(|(indices, words)| Payload::Rows { indices, words }),
+                    self.nmc_read_latency(hit, profile),
+                )
+            }
             Transaction::Free { block_addr } => {
                 (self.do_free(block_addr), free_latency(self.design))
             }
@@ -797,7 +1009,9 @@ impl CxlDevice {
             }
             Transaction::ReadFull { .. }
             | Transaction::ReadView { .. }
-            | Transaction::ReadPlanes { .. } => self.plan_read(txn, ctx),
+            | Transaction::ReadPlanes { .. }
+            | Transaction::GatherPlanes { .. }
+            | Transaction::ReduceKv { .. } => self.plan_read(txn, ctx),
         }
     }
 
@@ -824,10 +1038,14 @@ impl CxlDevice {
                         // a format-mismatched view errors on the serial path
                         (view.fmt == b.fmt).then(|| view.mask())
                     }
-                    Transaction::ReadPlanes { range, .. } => {
+                    Transaction::ReadPlanes { range, .. }
+                    | Transaction::GatherPlanes { range, .. } => {
                         let req = range_mask(range, b.fmt.bits());
                         (req.0 != 0).then(|| planes_fetch_mask(b, req))
                     }
+                    // full-precision window scan — same decode (and cache
+                    // entry) as a ReadFull of the block
+                    Transaction::ReduceKv { .. } => Some(PlaneMask::full(b.fmt)),
                     _ => None,
                 };
                 mask.map(|m| (JobSpec::DecodePlanes(m), (addr, m.0)))
@@ -953,11 +1171,13 @@ impl CxlDevice {
                     now_ns,
                     super::txn::SchedResources {
                         service: &mut self.service_tl,
+                        nmc: &mut self.nmc_tl,
                         link_in: &mut self.link_in_tl,
                         link_out: &mut self.link_out_tl,
                         ddr_gbps: self.ddr_gbps,
                         link_gbps: self.link.gbps,
                         link_prop_ns: self.link.latency_ns,
+                        nmc_gbps: self.nmc_gbps,
                     },
                 );
                 c
@@ -1123,11 +1343,13 @@ impl MemDevice for CxlDevice {
             now_ns,
             super::txn::SchedResources {
                 service: &mut self.service_tl,
+                nmc: &mut self.nmc_tl,
                 link_in: &mut self.link_in_tl,
                 link_out: &mut self.link_out_tl,
                 ddr_gbps: self.ddr_gbps,
                 link_gbps: self.link.gbps,
                 link_prop_ns: self.link.latency_ns,
+                nmc_gbps: self.nmc_gbps,
             },
         );
         c
@@ -1176,6 +1398,18 @@ impl MemDevice for CxlDevice {
 
     fn block_footprint(&self, block_addr: u64) -> Option<usize> {
         self.blocks.get(&block_addr).map(Self::stored_bytes_of)
+    }
+
+    fn decode_cache_stats(&self) -> (u64, u64, usize) {
+        (self.cache.hits, self.cache.misses, self.cache.len())
+    }
+
+    fn nmc_busy_ns(&self) -> f64 {
+        self.nmc_tl.busy_ns()
+    }
+
+    fn data_rates(&self) -> (f64, f64, f64) {
+        (self.ddr_gbps, self.link.gbps, self.nmc_gbps)
     }
 }
 
@@ -1468,6 +1702,16 @@ mod tests {
                 view: PrecisionView::bf16_mantissa(2, 1),
             });
             sq.submit(Transaction::ReadPlanes { block_addr: 0x0, range: 9..16 });
+            sq.submit(Transaction::GatherPlanes {
+                block_addr: 0x0,
+                rows: vec![0, 7, 31],
+                range: 9..16,
+            });
+            sq.submit(Transaction::ReduceKv {
+                block_addr: 0x0,
+                query: kv[..64].to_vec(),
+                top_k: 3,
+            });
             sq.submit(Transaction::WriteKv {
                 block_addr: 0x0,
                 words: kv2.clone(),
@@ -1476,13 +1720,20 @@ mod tests {
             sq.submit(Transaction::ReadFull { block_addr: 0x0 }); // hazard read
             sq.submit(Transaction::ReadFull { block_addr: 0xbad000 }); // error
             sq.submit(Transaction::ReadFull { block_addr: 0x0 }); // repeat (cacheable)
+            // NMC behind the in-batch write: dirty address, serial path
+            sq.submit(Transaction::ReduceKv {
+                block_addr: 0x0,
+                query: kv2[..64].to_vec(),
+                top_k: 2,
+            });
             let cs = d.drain_at(&mut sq, 5.0);
             let stats = d.stats();
             (cs, stats)
         };
         let (base, base_stats) = run(1, 0, 1);
-        assert_eq!(base[4].result.as_ref().unwrap().clone().into_words().unwrap(), kv2);
-        assert!(base[5].result.is_err());
+        assert_eq!(base[6].result.as_ref().unwrap().clone().into_words().unwrap(), kv2);
+        assert!(base[7].result.is_err());
+        assert!(base[3].stats.nmc_bytes_scanned > 0 && base[4].stats.nmc_bytes_scanned > 0);
         for (pool, cache, lanes) in
             [(1, 256, 1), (4, 0, 1), (4, 256, 1), (1, 0, 4), (1, 256, 4), (4, 256, 4)]
         {
@@ -1498,6 +1749,13 @@ mod tests {
                 match (&c.result, &b.result) {
                     (Ok(Payload::Words(x)), Ok(Payload::Words(y))) => assert_eq!(x, y),
                     (Ok(Payload::Written), Ok(Payload::Written)) => {}
+                    (
+                        Ok(Payload::Rows { indices: xi, words: xw }),
+                        Ok(Payload::Rows { indices: yi, words: yw }),
+                    ) => {
+                        assert_eq!(xi, yi);
+                        assert_eq!(xw, yw);
+                    }
                     (Err(_), Err(_)) => {}
                     _ => panic!("result shape diverged"),
                 }
@@ -1530,5 +1788,205 @@ mod tests {
         // per-txn deltas sum to the cumulative counters
         let sum: u64 = cs.iter().map(|c| c.stats.dram_bytes_read).sum();
         assert_eq!(sum, d.stats().dram_bytes_read);
+    }
+
+    #[test]
+    fn gather_matches_host_side_row_extraction() {
+        let mut r = Rng::new(230);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let rows = vec![0u32, 5, 17, 31];
+        for range in [0..16usize, 9..16] {
+            let mut outs = Vec::new();
+            for mut d in all_designs() {
+                write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
+                let dense = d
+                    .submit_one(Transaction::ReadPlanes { block_addr: 0x0, range: range.clone() })
+                    .unwrap()
+                    .into_words()
+                    .unwrap();
+                let want: Vec<u16> = rows
+                    .iter()
+                    .flat_map(|&t| dense[t as usize * 64..(t as usize + 1) * 64].to_vec())
+                    .collect();
+                d.reset_stats();
+                let got = d
+                    .submit_one(Transaction::GatherPlanes {
+                        block_addr: 0x0,
+                        rows: rows.clone(),
+                        range: range.clone(),
+                    })
+                    .unwrap()
+                    .into_words()
+                    .unwrap();
+                assert_eq!(got, want, "{:?} range {range:?}", d.design);
+                assert!(
+                    d.stats().link_bytes_out < (kv.len() * 2) as u64,
+                    "{:?}: gathered rows must undercut a full-window transfer",
+                    d.design
+                );
+                outs.push(got);
+            }
+            assert!(outs.windows(2).all(|w| w[0] == w[1]), "designs agree on range {range:?}");
+        }
+    }
+
+    #[test]
+    fn reduce_kv_returns_topk_rows_and_indices() {
+        let mut r = Rng::new(231);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let query: Vec<u16> = kv[7 * 64..8 * 64].to_vec();
+        // host-side reference: f32 dot-product per token, top-4 by
+        // (score desc, index asc), returned in ascending index order
+        let score = |t: usize| -> f32 {
+            kv[t * 64..(t + 1) * 64]
+                .iter()
+                .zip(&query)
+                .map(|(&w, &q)| {
+                    crate::formats::bf16_to_f32(w) * crate::formats::bf16_to_f32(q)
+                })
+                .sum()
+        };
+        let mut order: Vec<u32> = (0..32).collect();
+        order.sort_by(|&a, &b| score(b as usize).total_cmp(&score(a as usize)).then(a.cmp(&b)));
+        let mut want_idx = order[..4].to_vec();
+        want_idx.sort_unstable();
+        let want_words: Vec<u16> = want_idx
+            .iter()
+            .flat_map(|&t| kv[t as usize * 64..(t as usize + 1) * 64].to_vec())
+            .collect();
+        for mut d in all_designs() {
+            write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
+            d.reset_stats();
+            let (idx, words) = d
+                .submit_one(Transaction::ReduceKv {
+                    block_addr: 0x0,
+                    query: query.clone(),
+                    top_k: 4,
+                })
+                .unwrap()
+                .into_rows()
+                .unwrap();
+            assert_eq!(idx, want_idx, "{:?}", d.design);
+            assert_eq!(words, want_words, "{:?}", d.design);
+            let s = d.stats();
+            assert_eq!(s.nmc_bytes_scanned, 32 * 64 * 2, "{:?}", d.design);
+            assert_eq!(s.link_bytes_out, (4 * 64 * 2 + 4 * 4) as u64, "{:?}", d.design);
+            assert_eq!(s.link_bytes_in, (64 * 2) as u64, "{:?}", d.design);
+        }
+    }
+
+    #[test]
+    fn nmc_error_completions() {
+        let mut r = Rng::new(232);
+        let kv = smooth_kv(&mut r, 32, 64);
+        for mut d in all_designs() {
+            // missing block
+            assert!(d
+                .submit_one(Transaction::ReduceKv {
+                    block_addr: 0xdead000,
+                    query: vec![0; 64],
+                    top_k: 2,
+                })
+                .is_err());
+            // weights block: no KV window geometry
+            d.submit_one(Transaction::WriteWeights {
+                block_addr: 0x1000,
+                words: kv.clone(),
+                fmt: Fmt::Bf16,
+            })
+            .unwrap();
+            assert!(d
+                .submit_one(Transaction::GatherPlanes {
+                    block_addr: 0x1000,
+                    rows: vec![0],
+                    range: 0..16,
+                })
+                .is_err());
+            write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
+            // query length must match the window's channel count
+            assert!(d
+                .submit_one(Transaction::ReduceKv {
+                    block_addr: 0x0,
+                    query: vec![0; 63],
+                    top_k: 2,
+                })
+                .is_err());
+            // out-of-range row index
+            assert!(d
+                .submit_one(Transaction::GatherPlanes {
+                    block_addr: 0x0,
+                    rows: vec![32],
+                    range: 0..16,
+                })
+                .is_err());
+            // freed address: geometry must die with the block
+            d.submit_one(Transaction::Free { block_addr: 0x0 }).unwrap();
+            assert!(d
+                .submit_one(Transaction::GatherPlanes {
+                    block_addr: 0x0,
+                    rows: vec![0],
+                    range: 0..16,
+                })
+                .is_err());
+        }
+        // corrupt compressed stream: the decode error surfaces in the
+        // completion instead of poisoning the device
+        for design in [Design::GComp, Design::Trace] {
+            let mut d = CxlDevice::new(design, CodecPolicy::AllBest);
+            write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
+            assert!(d.test_corrupt_block(0x0), "{design:?} stores a compressed stream");
+            assert!(
+                d.submit_one(Transaction::ReduceKv {
+                    block_addr: 0x0,
+                    query: kv[..64].to_vec(),
+                    top_k: 2,
+                })
+                .is_err(),
+                "{design:?}"
+            );
+            assert!(
+                d.submit_one(Transaction::GatherPlanes {
+                    block_addr: 0x0,
+                    rows: vec![0],
+                    range: 0..16,
+                })
+                .is_err(),
+                "{design:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn nmc_scan_lands_on_the_nmc_timeline_and_shrinks_link() {
+        let mut r = Rng::new(234);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let mut d = CxlDevice::new(Design::Trace, CodecPolicy::AllBest);
+        write_kv(&mut d, 0x0, &kv, KvWindow::new(32, 64));
+        d.reset_stats();
+        d.reset_time();
+        // a plain read never touches the NMC unit
+        read_full(&mut d, 0x0).unwrap();
+        assert_eq!(d.nmc_busy_ns(), 0.0);
+        let full_link = d.stats().link_bytes_out;
+        d.reset_stats();
+        let mut sq = super::super::txn::SubmissionQueue::new();
+        sq.submit(Transaction::ReduceKv { block_addr: 0x0, query: kv[..64].to_vec(), top_k: 4 });
+        let cs = d.drain_at(&mut sq, 0.0);
+        assert!(cs[0].result.is_ok());
+        assert!(cs[0].stats.nmc_bytes_scanned > 0);
+        let scan_ns = cs[0].stats.nmc_bytes_scanned as f64 / d.nmc_gbps;
+        assert_eq!(d.nmc_busy_ns(), scan_ns);
+        assert!(
+            d.stats().link_bytes_out < full_link / 4,
+            "reduced payload {} vs full {}",
+            d.stats().link_bytes_out,
+            full_link
+        );
+        // ready-at covers pipeline + scan + transfer + propagation
+        assert!(cs[0].ready_at_ns >= cs[0].latency_ns() + scan_ns + d.link.latency_ns);
+        assert_eq!(MemDevice::data_rates(&d), (256.0, 512.0, 128.0));
+        // reset_time clears the NMC unit with the other timelines
+        d.reset_time();
+        assert_eq!(d.nmc_busy_ns(), 0.0);
     }
 }

@@ -50,7 +50,7 @@ pub mod link;
 pub use device::{CxlDevice, Design, DeviceStats, DEFAULT_DECODE_CACHE_BLOCKS};
 pub use metadata::{IndexCache, PlaneIndex};
 pub use alias::AliasSpace;
-pub use controller::{latency, write_latency, LatencyBreakdown, LatencyCase};
+pub use controller::{latency, nmc_latency, write_latency, LatencyBreakdown, LatencyCase};
 pub use ppa::{ppa_for, PpaReport};
 pub use sharded::{shard_of, DispatchPolicy, ShardedDevice, STRIPE_BYTES};
 pub use txn::{Completion, MemDevice, Payload, SubmissionQueue, Transaction, TxnId, TxnStats};

@@ -207,15 +207,20 @@ impl ShardedDevice {
     ) -> Completion {
         let mut c = self.shards[idx].execute_prepped(id, txn, pre);
         c.shard = idx;
+        // split-borrow: the shard's service + NMC timelines alongside the
+        // fleet-shared link directions
+        let shard = &mut self.shards[idx];
         c.schedule(
             now_ns,
             super::txn::SchedResources {
-                service: &mut self.shards[idx].service_tl,
+                service: &mut shard.service_tl,
+                nmc: &mut shard.nmc_tl,
                 link_in: &mut self.link_in_tl,
                 link_out: &mut self.link_out_tl,
                 ddr_gbps: self.shard_ddr_gbps,
                 link_gbps: self.link.gbps,
                 link_prop_ns: self.link.latency_ns,
+                nmc_gbps: shard.nmc_gbps,
             },
         );
         c
@@ -360,6 +365,18 @@ impl MemDevice for ShardedDevice {
 
     fn shard_stats(&self) -> Vec<DeviceStats> {
         self.shards.iter().map(|s| s.stats).collect()
+    }
+
+    fn decode_cache_stats(&self) -> (u64, u64, usize) {
+        ShardedDevice::decode_cache_stats(self)
+    }
+
+    fn nmc_busy_ns(&self) -> f64 {
+        self.shards.iter().map(|s| s.nmc_tl.busy_ns()).sum()
+    }
+
+    fn data_rates(&self) -> (f64, f64, f64) {
+        (self.shard_ddr_gbps, self.link.gbps, self.shards[0].nmc_gbps)
     }
 }
 
@@ -506,6 +523,18 @@ mod tests {
                         range: 9..16,
                     });
                 }
+                if b % 4 == 1 {
+                    sq.submit(Transaction::GatherPlanes {
+                        block_addr: b * STRIPE_BYTES,
+                        rows: vec![0, 9, 31],
+                        range: 9..16,
+                    });
+                    sq.submit(Transaction::ReduceKv {
+                        block_addr: b * STRIPE_BYTES,
+                        query: kv[..64].to_vec(),
+                        top_k: 4,
+                    });
+                }
             }
             dev.drain_at(&mut sq, 42.0)
         };
@@ -552,6 +581,46 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn sharded_nmc_matches_single_device_and_charges_shard_units() {
+        let mut r = Rng::new(308);
+        let kv = smooth_kv(&mut r, 32, 64);
+        let mut one = loaded(1, 8, &kv);
+        let mut four = loaded(4, 8, &kv);
+        for dev in [&mut one, &mut four] {
+            dev.reset_time();
+            dev.reset_stats();
+        }
+        let submit = |dev: &mut ShardedDevice| {
+            let mut sq = SubmissionQueue::new();
+            for b in 0..8u64 {
+                sq.submit(Transaction::ReduceKv {
+                    block_addr: b * STRIPE_BYTES,
+                    query: kv[..64].to_vec(),
+                    top_k: 4,
+                });
+            }
+            dev.drain(&mut sq)
+        };
+        let a = submit(&mut one);
+        let b = submit(&mut four);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.result.as_ref().unwrap(), y.result.as_ref().unwrap());
+            assert_eq!(x.stats, y.stats);
+        }
+        assert_eq!(one.stats(), four.stats());
+        assert!(one.nmc_busy_ns() > 0.0);
+        assert!((one.nmc_busy_ns() - four.nmc_busy_ns()).abs() < 1e-9);
+        // consecutive stripes land on distinct shards, so every shard's
+        // own NMC unit carries a slice of the scan work
+        let per: Vec<f64> =
+            four.shard_devices().iter().map(|s| s.nmc_tl.busy_ns()).collect();
+        assert!(per.iter().all(|&x| x > 0.0), "{per:?}");
+        let (_, _, nmc_gbps) = four.data_rates();
+        assert_eq!(nmc_gbps, 128.0);
     }
 
     #[test]

@@ -24,7 +24,7 @@
 use std::collections::VecDeque;
 use std::ops::Range;
 
-use crate::sim::{schedule_read, schedule_write, ResourceTimeline};
+use crate::sim::{schedule_read, schedule_read_nmc, schedule_write, ResourceTimeline};
 
 use crate::bitplane::{KvWindow, PrecisionView};
 use crate::formats::Fmt;
@@ -51,6 +51,22 @@ pub enum Transaction {
     /// positions fall in `range` (`[start, end)`, 0 = LSB plane). At full
     /// range this is identical to `ReadFull` on every design.
     ReadPlanes { block_addr: u64, range: Range<usize> },
+    /// Near-memory gather: the device decodes the block (planes whose bit
+    /// positions fall in `range`, widened to the sign+exponent core on
+    /// KV-transformed blocks exactly like `ReadPlanes`) and returns only
+    /// the selected token `rows` of the stored KV window — the link is
+    /// charged for the gathered rows, not the whole window. Requires the
+    /// block to have been written through `WriteKv` (the device must know
+    /// the window geometry); row indices must be in-bounds.
+    GatherPlanes { block_addr: u64, rows: Vec<u32>, range: Range<usize> },
+    /// Near-memory reduce: the device decodes the KV window at full
+    /// precision, scores every token row against the BF16 `query`
+    /// (dot-product in f32, fixed channel order), and returns only the
+    /// `top_k` highest-scoring rows plus their indices
+    /// ([`Payload::Rows`]). The full-window scan is charged on the
+    /// per-shard NMC timeline; the link carries `k` rows + indices.
+    /// `query.len()` must equal the window's channel count.
+    ReduceKv { block_addr: u64, query: Vec<u16>, top_k: usize },
     /// Deallocate a stored block (index-entry invalidation; no DRAM data
     /// access). Issued when a page migrates back to HBM so device
     /// footprint and compression ratio track *live* residency.
@@ -66,6 +82,8 @@ impl Transaction {
             | Transaction::ReadFull { block_addr }
             | Transaction::ReadView { block_addr, .. }
             | Transaction::ReadPlanes { block_addr, .. }
+            | Transaction::GatherPlanes { block_addr, .. }
+            | Transaction::ReduceKv { block_addr, .. }
             | Transaction::Free { block_addr } => *block_addr,
         }
     }
@@ -77,7 +95,14 @@ impl Transaction {
             Transaction::ReadFull { .. }
                 | Transaction::ReadView { .. }
                 | Transaction::ReadPlanes { .. }
+                | Transaction::GatherPlanes { .. }
+                | Transaction::ReduceKv { .. }
         )
+    }
+
+    /// Whether this transaction runs device-side compute (NMC unit).
+    pub fn is_nmc(&self) -> bool {
+        matches!(self, Transaction::GatherPlanes { .. } | Transaction::ReduceKv { .. })
     }
 
     /// Short kind label for reports.
@@ -88,6 +113,8 @@ impl Transaction {
             Transaction::ReadFull { .. } => "read_full",
             Transaction::ReadView { .. } => "read_view",
             Transaction::ReadPlanes { .. } => "read_planes",
+            Transaction::GatherPlanes { .. } => "gather_planes",
+            Transaction::ReduceKv { .. } => "reduce_kv",
             Transaction::Free { .. } => "free",
         }
     }
@@ -100,13 +127,31 @@ pub enum Payload {
     Written,
     /// Read data as BF16-container words.
     Words(Vec<u16>),
+    /// Row-sparse NMC result (`ReduceKv`): the selected token-row indices
+    /// (ascending) and their concatenated BF16 words, `indices.len() *
+    /// channels` long.
+    Rows { indices: Vec<u32>, words: Vec<u16> },
 }
 
 impl Payload {
-    /// Unwrap a read payload, erroring on write acknowledgements.
+    /// Unwrap a read payload, erroring on write acknowledgements and on
+    /// row-sparse results (those carry indices the caller must not drop —
+    /// use [`Payload::into_rows`]).
     pub fn into_words(self) -> anyhow::Result<Vec<u16>> {
         match self {
             Payload::Words(w) => Ok(w),
+            Payload::Written => anyhow::bail!("transaction returned no read payload"),
+            Payload::Rows { .. } => {
+                anyhow::bail!("row-sparse NMC payload: use into_rows to keep the indices")
+            }
+        }
+    }
+
+    /// Unwrap a row-sparse NMC payload (`indices`, `words`).
+    pub fn into_rows(self) -> anyhow::Result<(Vec<u32>, Vec<u16>)> {
+        match self {
+            Payload::Rows { indices, words } => Ok((indices, words)),
+            Payload::Words(_) => anyhow::bail!("dense payload is not row-sparse"),
             Payload::Written => anyhow::bail!("transaction returned no read payload"),
         }
     }
@@ -121,6 +166,10 @@ pub struct TxnStats {
     pub link_bytes_in: u64,
     pub link_bytes_out: u64,
     pub metadata_dram_reads: u64,
+    /// Bytes the device-side NMC unit scanned/produced for this
+    /// transaction (0 for non-NMC transactions). Charged on the per-shard
+    /// NMC timeline, never on the link.
+    pub nmc_bytes_scanned: u64,
 }
 
 impl TxnStats {
@@ -132,6 +181,7 @@ impl TxnStats {
             link_bytes_in: now.link_bytes_in - before.link_bytes_in,
             link_bytes_out: now.link_bytes_out - before.link_bytes_out,
             metadata_dram_reads: now.metadata_dram_reads - before.metadata_dram_reads,
+            nmc_bytes_scanned: now.nmc_bytes_scanned - before.nmc_bytes_scanned,
         }
     }
 
@@ -192,7 +242,22 @@ impl Completion {
     /// direction with fixed propagation. Fills `issued_ns`/`ready_at_ns`.
     pub(crate) fn schedule(&mut self, now_ns: f64, res: SchedResources<'_>) {
         let service_ns = self.latency_ns() + self.stats.dram_bytes() as f64 / res.ddr_gbps;
-        let timing = if self.is_read {
+        let timing = if self.is_read && self.stats.nmc_bytes_scanned > 0 {
+            // NMC transaction: the device-side scan/reduce runs on the
+            // per-shard NMC unit between DDR service and the (reduced)
+            // link transfer
+            schedule_read_nmc(
+                res.service,
+                res.nmc,
+                res.link_out,
+                now_ns,
+                service_ns,
+                self.stats.nmc_bytes_scanned as f64 / res.nmc_gbps,
+                self.stats.link_bytes_out,
+                res.link_gbps,
+                res.link_prop_ns,
+            )
+        } else if self.is_read {
             schedule_read(
                 res.service,
                 res.link_out,
@@ -223,6 +288,8 @@ impl Completion {
 /// plus the (possibly fleet-shared) link directions.
 pub(crate) struct SchedResources<'a> {
     pub service: &'a mut ResourceTimeline,
+    /// The owning shard's near-memory-compute unit.
+    pub nmc: &'a mut ResourceTimeline,
     pub link_in: &'a mut ResourceTimeline,
     pub link_out: &'a mut ResourceTimeline,
     /// Device-DDR bandwidth, bytes/ns (GB/s).
@@ -231,6 +298,8 @@ pub(crate) struct SchedResources<'a> {
     pub link_gbps: f64,
     /// Fixed one-way link propagation, ns.
     pub link_prop_ns: f64,
+    /// NMC scan/reduce throughput, bytes/ns (GB/s).
+    pub nmc_gbps: f64,
 }
 
 /// FIFO of submitted-but-not-yet-executed transactions.
@@ -357,6 +426,28 @@ pub trait MemDevice {
     fn shard_stats(&self) -> Vec<DeviceStats> {
         vec![self.stats()]
     }
+
+    /// Decoded-plane cache counters `(hits, misses, live entries)`,
+    /// aggregated across shards. Wall-clock-only observability — the
+    /// engine's NMC cost model reads the hit rate; devices without a
+    /// cache report zeros.
+    fn decode_cache_stats(&self) -> (u64, u64, usize) {
+        (0, 0, 0)
+    }
+
+    /// Total busy time of the near-memory-compute units, summed across
+    /// shards, ns. Zero for devices without NMC support.
+    fn nmc_busy_ns(&self) -> f64 {
+        0.0
+    }
+
+    /// Modeled data-path rates `(ddr_gbps, link_gbps, nmc_gbps)` in
+    /// bytes/ns — what the host-side offload planner needs to compare
+    /// full-fetch link time against NMC scan + reduced-payload time.
+    /// Defaults match [`super::CxlDevice::new`]'s calibration.
+    fn data_rates(&self) -> (f64, f64, f64) {
+        (256.0, 512.0, 128.0)
+    }
 }
 
 #[cfg(test)]
@@ -390,13 +481,29 @@ mod tests {
         assert_eq!(w.block_addr(), 0x40);
         let r = Transaction::ReadPlanes { block_addr: 0x80, range: 9..16 };
         assert!(r.is_read());
+        assert!(!r.is_nmc());
         assert_eq!(r.kind(), "read_planes");
+        let g = Transaction::GatherPlanes { block_addr: 0xc0, rows: vec![0, 3], range: 0..16 };
+        assert!(g.is_read() && g.is_nmc());
+        assert_eq!(g.kind(), "gather_planes");
+        assert_eq!(g.block_addr(), 0xc0);
+        let k = Transaction::ReduceKv { block_addr: 0x100, query: vec![0; 4], top_k: 2 };
+        assert!(k.is_read() && k.is_nmc());
+        assert_eq!(k.kind(), "reduce_kv");
+        assert_eq!(k.block_addr(), 0x100);
     }
 
     #[test]
     fn payload_unwrap() {
         assert_eq!(Payload::Words(vec![3]).into_words().unwrap(), vec![3]);
         assert!(Payload::Written.into_words().is_err());
+        let rows = Payload::Rows { indices: vec![1, 4], words: vec![7, 8, 9, 10] };
+        assert!(rows.clone().into_words().is_err(), "rows must not silently drop indices");
+        let (idx, words) = rows.into_rows().unwrap();
+        assert_eq!(idx, vec![1, 4]);
+        assert_eq!(words, vec![7, 8, 9, 10]);
+        assert!(Payload::Words(vec![1]).into_rows().is_err());
+        assert!(Payload::Written.into_rows().is_err());
     }
 
     #[test]

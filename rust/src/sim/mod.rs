@@ -19,6 +19,10 @@
 //! * [`schedule_read`] / [`schedule_write`] — the canonical two-resource
 //!   transaction chains (device service ↔ link transfer) that turn a
 //!   completion's byte counts into an absolute ready-at time.
+//! * [`schedule_read_nmc`] — the three-resource near-memory-compute chain
+//!   (service → per-shard NMC unit → link), used by the device-side
+//!   gather/reduce transactions: the link is charged only for the reduced
+//!   payload, the scan cost lands on the NMC timeline.
 //!
 //! The device models ([`crate::cxl::CxlDevice`],
 //! [`crate::cxl::ShardedDevice`]) reserve their controller+DDR service and
@@ -33,4 +37,6 @@ pub mod timeline;
 
 pub use clock::SimClock;
 pub use event::EventQueue;
-pub use timeline::{schedule_read, schedule_write, Reservation, ResourceTimeline, TxnTiming};
+pub use timeline::{
+    schedule_read, schedule_read_nmc, schedule_write, Reservation, ResourceTimeline, TxnTiming,
+};

@@ -113,6 +113,30 @@ pub fn schedule_write(
     TxnTiming { issued_ns: now_ns, ready_ns: svc.end_ns }
 }
 
+/// Schedule a near-memory-compute read: controller+DDR service first,
+/// then the device-side compute unit scans/reduces the decoded window on
+/// its own serial timeline, and only the *reduced* payload crosses the
+/// outbound link (plus fixed propagation). The NMC stage is sequenced
+/// strictly between DDR service and link transfer — the compute unit
+/// cannot start before the planes are resident, and nothing ships before
+/// the reduction finishes.
+pub fn schedule_read_nmc(
+    service: &mut ResourceTimeline,
+    nmc: &mut ResourceTimeline,
+    link_out: &mut ResourceTimeline,
+    now_ns: f64,
+    service_ns: f64,
+    nmc_ns: f64,
+    link_bytes: u64,
+    link_gbps: f64,
+    link_prop_ns: f64,
+) -> TxnTiming {
+    let svc = service.reserve(now_ns, service_ns);
+    let red = nmc.reserve(svc.end_ns, nmc_ns);
+    let xfer = link_out.reserve(red.end_ns, link_bytes as f64 / link_gbps);
+    TxnTiming { issued_ns: now_ns, ready_ns: xfer.end_ns + link_prop_ns }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,6 +188,26 @@ mod tests {
         // a second read pipelines behind the first on both resources
         let t2 = schedule_read(&mut svc, &mut link, 10.0, 40.0, 512, 512.0, 70.0);
         assert_eq!(t2.ready_ns, 10.0 + 80.0 + 1.0 + 70.0);
+    }
+
+    #[test]
+    fn nmc_chain_orders_service_then_compute_then_link() {
+        let mut svc = ResourceTimeline::new("svc");
+        let mut nmc = ResourceTimeline::new("nmc");
+        let mut link = ResourceTimeline::new("link");
+        // 40 ns service, 8 ns reduction, 512 bytes at 512 B/ns, 70 ns prop
+        let t = schedule_read_nmc(&mut svc, &mut nmc, &mut link, 10.0, 40.0, 8.0, 512, 512.0, 70.0);
+        assert_eq!(t.issued_ns, 10.0);
+        assert_eq!(t.ready_ns, 10.0 + 40.0 + 8.0 + 1.0 + 70.0);
+        assert_eq!(nmc.busy_ns(), 8.0);
+        // a second NMC read pipelines behind the first on all three stages
+        let t2 =
+            schedule_read_nmc(&mut svc, &mut nmc, &mut link, 10.0, 40.0, 8.0, 512, 512.0, 70.0);
+        assert_eq!(t2.ready_ns, 10.0 + 80.0 + 8.0 + 1.0 + 70.0);
+        // a plain read shares the service + link stages but skips NMC
+        let plain = schedule_read(&mut svc, &mut link, 0.0, 40.0, 512, 512.0, 70.0);
+        assert!(plain.ready_ns > t2.ready_ns - 70.0 - 8.0);
+        assert_eq!(nmc.reservations(), 2);
     }
 
     #[test]

@@ -19,9 +19,15 @@
 /// File magic.
 pub const MAGIC: [u8; 4] = *b"TRCX";
 
-/// Current format version. Readers reject other versions; additive
-/// evolution bumps this (see `docs/TRACE_FORMAT.md` § Versioning).
-pub const VERSION: u8 = 1;
+/// Current format version. Writers always emit this; additive evolution
+/// bumps it (see `docs/TRACE_FORMAT.md` § Versioning). v2 added
+/// [`OP_NMC`] (near-memory offload counters).
+pub const VERSION: u8 = 2;
+
+/// Oldest version the reader still decodes. Version-gated opcodes
+/// ([`OP_NMC`] needs v2) are a decode error when they appear in an older
+/// stream, so a v1 trace is exactly the v1 grammar — no silent skips.
+pub const MIN_VERSION: u8 = 1;
 
 /// A request submission (replay input; not part of the delta chain).
 pub const OP_SUBMIT: u8 = 0x01;
@@ -39,6 +45,10 @@ pub const OP_FINISHED: u8 = 0x06;
 pub const OP_STEP: u8 = 0x07;
 /// Poll-log retention gap marker.
 pub const OP_EVENTS_DROPPED: u8 = 0x08;
+/// Near-memory offload counters (cumulative-counter deltas; v2+). Only
+/// emitted on steps where some delta is nonzero, so nmc-off captures are
+/// byte-identical to v1 apart from the header version.
+pub const OP_NMC: u8 = 0x09;
 /// Stream terminator: varint count of preceding records.
 pub const OP_END: u8 = 0xFF;
 

@@ -71,6 +71,12 @@ pub struct CaptureMeta {
     pub compute_ns: f64,
     pub prefill_chunk_pages: usize,
     pub prefill_ns_per_token: f64,
+    /// Near-memory offload planner enabled. Model-time-relevant (it
+    /// changes link traffic and step timing), so replay must mirror it;
+    /// tokens are bit-identical either way.
+    pub nmc: bool,
+    /// Top-k fraction the offload planner requests per page.
+    pub nmc_topk_frac: f64,
     /// Named scenario that generated the workload, if any.
     pub scenario: Option<String>,
     /// Workload generator seed (informational; Submit records are the
@@ -95,6 +101,8 @@ impl CaptureMeta {
             compute_ns: cfg.compute_ns,
             prefill_chunk_pages: cfg.prefill_chunk_pages,
             prefill_ns_per_token: cfg.prefill_ns_per_token,
+            nmc: cfg.nmc,
+            nmc_topk_frac: cfg.nmc_topk_frac,
             scenario: None,
             gen_seed: 0,
         }
@@ -132,6 +140,8 @@ impl CaptureMeta {
         o.insert("compute_ns".to_string(), num(self.compute_ns));
         o.insert("prefill_chunk_pages".to_string(), num(self.prefill_chunk_pages as f64));
         o.insert("prefill_ns_per_token".to_string(), num(self.prefill_ns_per_token));
+        o.insert("nmc".to_string(), Json::Bool(self.nmc));
+        o.insert("nmc_topk_frac".to_string(), num(self.nmc_topk_frac));
         match &self.scenario {
             Some(s) => o.insert("scenario".to_string(), Json::Str(s.clone())),
             None => o.insert("scenario".to_string(), Json::Null),
@@ -175,6 +185,9 @@ impl CaptureMeta {
             compute_ns: req_f64(j, "compute_ns")?,
             prefill_chunk_pages: j.req_usize("prefill_chunk_pages")?,
             prefill_ns_per_token: req_f64(j, "prefill_ns_per_token")?,
+            // absent in v1 captures: default to planner-off
+            nmc: matches!(j.get("nmc"), Some(Json::Bool(true))),
+            nmc_topk_frac: j.get("nmc_topk_frac").and_then(|v| v.as_f64()).unwrap_or(0.125),
             scenario,
             gen_seed: req_f64(j, "gen_seed")? as u64,
         })
@@ -192,6 +205,8 @@ impl CaptureMeta {
             compute_ns: self.compute_ns,
             prefill_chunk_pages: self.prefill_chunk_pages,
             prefill_ns_per_token: self.prefill_ns_per_token,
+            nmc: self.nmc,
+            nmc_topk_frac: self.nmc_topk_frac,
             ..EngineConfig::default()
         }
     }
@@ -226,14 +241,31 @@ mod tests {
         m.hbm_kv_bytes = 12345;
         m.scenario = Some("rag-fanout".to_string());
         m.gen_seed = 7;
+        m.nmc = true;
+        m.nmc_topk_frac = 0.25;
         let j = m.to_json();
         let parsed = Json::parse(&j.to_string()).unwrap();
         let m2 = CaptureMeta::from_json(&parsed).unwrap();
         assert_eq!(m, m2);
+        assert!(m2.engine_config().nmc);
+        assert_eq!(m2.engine_config().nmc_topk_frac, 0.25);
         // scenario None also survives
         let m3 = CaptureMeta::mock(m.dims.clone(), 1);
         let m4 = CaptureMeta::from_json(&Json::parse(&m3.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(m3, m4);
+    }
+
+    #[test]
+    fn v1_meta_without_nmc_fields_defaults_to_off() {
+        let m = CaptureMeta::mock(crate::runtime::MockBackend::tiny().dims().clone(), 5);
+        let mut j = m.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.remove("nmc");
+            o.remove("nmc_topk_frac");
+        }
+        let parsed = CaptureMeta::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert!(!parsed.nmc);
+        assert_eq!(parsed.nmc_topk_frac, 0.125);
     }
 
     #[test]

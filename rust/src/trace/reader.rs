@@ -50,6 +50,8 @@ pub enum TraceRecord {
         link_in: u64,
         link_out: u64,
     },
+    /// Near-memory offload counters (per-step deltas; v2+ streams only).
+    Nmc { at_ns: f64, offloads: u64, nmc_bytes_scanned: u64, link_bytes_saved: u64 },
     EventsDropped { at_ns: f64, count: u64 },
 }
 
@@ -85,7 +87,10 @@ impl Trace {
         let magic = c.bytes(4).context("trace header")?;
         ensure!(magic == MAGIC, "bad magic {magic:02x?}");
         let version = c.u8()?;
-        ensure!(version == VERSION, "unsupported trace version {version} (reader is v{VERSION})");
+        ensure!(
+            (MIN_VERSION..=VERSION).contains(&version),
+            "unsupported trace version {version} (reader accepts v{MIN_VERSION}..=v{VERSION})"
+        );
         let flags = c.u8()?;
         ensure!(flags == 0, "unknown flags {flags:#x}");
         let meta_len = c.varint()? as usize;
@@ -193,6 +198,19 @@ impl Trace {
                         dram_wr: c.varint()?,
                         link_in: c.varint()?,
                         link_out: c.varint()?,
+                    });
+                }
+                OP_NMC => {
+                    ensure!(
+                        version >= 2,
+                        "opcode {OP_NMC:#04x} (nmc) is not valid in a version {version} trace"
+                    );
+                    let at_ns = abs(&mut c)?;
+                    records.push(TraceRecord::Nmc {
+                        at_ns,
+                        offloads: c.varint()?,
+                        nmc_bytes_scanned: c.varint()?,
+                        link_bytes_saved: c.varint()?,
                     });
                 }
                 OP_EVENTS_DROPPED => {
@@ -310,6 +328,21 @@ impl Trace {
         t
     }
 
+    /// Near-memory offload totals over all Nmc records:
+    /// `(offloads, nmc_bytes_scanned, link_bytes_saved)`. All zero for
+    /// v1 traces and nmc-off captures (which carry no Nmc records).
+    pub fn nmc_totals(&self) -> (u64, u64, u64) {
+        let mut t = (0u64, 0u64, 0u64);
+        for r in &self.records {
+            if let TraceRecord::Nmc { offloads, nmc_bytes_scanned, link_bytes_saved, .. } = r {
+                t.0 += offloads;
+                t.1 += nmc_bytes_scanned;
+                t.2 += link_bytes_saved;
+            }
+        }
+        t
+    }
+
     /// Total events shed by the engine's poll log during the capture
     /// (the sink itself never sheds; these markers mirror the log's loss).
     pub fn events_dropped(&self) -> u64 {
@@ -413,6 +446,40 @@ mod tests {
         let tpot = t.tpot_by_seq();
         assert!((tpot[&0] - 2000.0).abs() < 1e-9);
         assert!(t.summary().contains("submits=2"));
+    }
+
+    #[test]
+    fn nmc_records_roundtrip_and_are_version_gated() {
+        let mut w = TraceWriter::new(&Json::Null);
+        w.record_event(&EngineEvent::Token { seq: 0, token: 7, index: 0, at_ns: 1000.0 });
+        w.record_nmc(1000.0, 3, 8192, 7000);
+        w.record_nmc(2000.0, 5, 12288, 11000);
+        let bytes = w.finish();
+        let t = Trace::parse(&bytes).unwrap();
+        assert_eq!(t.version, VERSION);
+        assert_eq!(t.records.len(), 3);
+        // records carry per-step deltas; totals re-sum to the cumulatives
+        assert!(matches!(
+            t.records[1],
+            TraceRecord::Nmc { offloads: 3, nmc_bytes_scanned: 8192, link_bytes_saved: 7000, at_ns }
+                if at_ns == 1000.0
+        ));
+        assert_eq!(t.nmc_totals(), (5, 12288, 11000));
+        // the same bytes relabeled v1 must fail to decode: OP_NMC is v2-only
+        let mut v1 = bytes.clone();
+        v1[4] = 1;
+        let err = Trace::parse(&v1).unwrap_err();
+        assert!(err.to_string().contains("not valid in a version 1"), "{err}");
+    }
+
+    #[test]
+    fn v1_traces_without_nmc_still_parse() {
+        let mut bytes = sample_trace();
+        bytes[4] = 1;
+        let t = Trace::parse(&bytes).unwrap();
+        assert_eq!(t.version, 1);
+        assert_eq!(t.records.len(), 10);
+        assert_eq!(t.nmc_totals(), (0, 0, 0));
     }
 
     #[test]

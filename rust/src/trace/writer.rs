@@ -26,6 +26,15 @@ struct StepBase {
     link_out: u64,
 }
 
+/// Snapshot of the cumulative NMC counters an Nmc record differences
+/// against.
+#[derive(Debug, Default, Clone, Copy)]
+struct NmcBase {
+    offloads: u64,
+    nmc_bytes_scanned: u64,
+    link_bytes_saved: u64,
+}
+
 /// Streaming trace encoder. Build with the capture metadata, feed it
 /// records, then [`TraceWriter::finish`] to get the final byte image.
 #[derive(Debug)]
@@ -35,6 +44,7 @@ pub struct TraceWriter {
     /// Previous observational timestamp (ns, rounded); the delta base.
     prev_ns: i64,
     base: StepBase,
+    nmc_base: NmcBase,
 }
 
 impl TraceWriter {
@@ -49,7 +59,13 @@ impl TraceWriter {
         let meta_bytes = meta.to_string().into_bytes();
         put_varint(&mut buf, meta_bytes.len() as u64);
         buf.extend_from_slice(&meta_bytes);
-        TraceWriter { buf, n_records: 0, prev_ns: 0, base: StepBase::default() }
+        TraceWriter {
+            buf,
+            n_records: 0,
+            prev_ns: 0,
+            base: StepBase::default(),
+            nmc_base: NmcBase::default(),
+        }
     }
 
     /// Encoded size so far (header + records, without the end record).
@@ -189,6 +205,36 @@ impl TraceWriter {
         self.n_records += 1;
     }
 
+    /// Per-step near-memory offload summary. Callers pass the
+    /// *cumulative* counters; the writer stores the per-step deltas and
+    /// skips the record entirely when nothing changed, so an nmc-off
+    /// capture carries no Nmc records at all.
+    pub fn record_nmc(
+        &mut self,
+        at_ns: f64,
+        offloads: u64,
+        nmc_bytes_scanned: u64,
+        link_bytes_saved: u64,
+    ) {
+        let cur = NmcBase { offloads, nmc_bytes_scanned, link_bytes_saved };
+        let deltas = [
+            cur.offloads.saturating_sub(self.nmc_base.offloads),
+            cur.nmc_bytes_scanned.saturating_sub(self.nmc_base.nmc_bytes_scanned),
+            cur.link_bytes_saved.saturating_sub(self.nmc_base.link_bytes_saved),
+        ];
+        if deltas.iter().all(|&d| d == 0) {
+            return; // before delta(): an elided record must not move prev_ns
+        }
+        let dt = zigzag(self.delta(at_ns));
+        self.buf.push(OP_NMC);
+        put_varint(&mut self.buf, dt);
+        for d in deltas {
+            put_varint(&mut self.buf, d);
+        }
+        self.nmc_base = cur;
+        self.n_records += 1;
+    }
+
     /// Terminate the stream and return the complete trace image.
     pub fn finish(mut self) -> Vec<u8> {
         self.buf.push(OP_END);
@@ -249,5 +295,25 @@ mod tests {
             response: Response { id: 3, tokens: vec![1, 2], prompt_len: 7, steps_in_flight: 2 },
         });
         assert_eq!(f.records(), 1);
+    }
+
+    #[test]
+    fn nmc_records_elide_zero_deltas() {
+        let mut w = TraceWriter::new(&Json::Null);
+        // nothing offloaded yet: no record, no prev_ns movement
+        w.record_nmc(10.0, 0, 0, 0);
+        assert_eq!(w.records(), 0);
+        let before = w.len();
+        w.record_nmc(20.0, 2, 8192, 7000);
+        assert_eq!(w.records(), 1);
+        assert!(w.len() > before);
+        // counters unchanged again → elided
+        w.record_nmc(30.0, 2, 8192, 7000);
+        assert_eq!(w.records(), 1);
+        // growth resumes the delta chain from the last *emitted* record
+        w.record_nmc(40.0, 3, 12288, 10500);
+        assert_eq!(w.records(), 2);
+        let bytes = w.finish();
+        assert_eq!(bytes[4], VERSION);
     }
 }

@@ -1,0 +1,115 @@
+//! NMC offload equivalence matrix (ISSUE 8 acceptance).
+//!
+//! Core invariant: enabling the near-memory offload planner changes
+//! *when and how many bytes move*, never *which tokens come out*. The
+//! device's KV rows are a lossless BF16 image of the host's
+//! authoritative `slot.kv`, and offload substitutes only full-precision
+//! spilled fetches, so across every device design, shard count, and
+//! pipeline mode the tokens must be bit-identical offload-on vs.
+//! offload-off. Host tuning knobs (decode worker pool, codec lanes) are
+//! wall-clock-only and must not perturb any modeled quantity.
+
+use trace_cxl::coordinator::{Engine, EngineConfig};
+use trace_cxl::cxl::{Design, DeviceStats, MemDevice};
+use trace_cxl::runtime::MockBackend;
+
+struct Run {
+    tokens: Vec<Vec<u32>>,
+    stats: DeviceStats,
+    model_ns: u64,
+    offloads: u64,
+    saved: u64,
+    stale: u64,
+}
+
+fn run(cfg: EngineConfig) -> Run {
+    let mut e = Engine::new(MockBackend::tiny(), cfg);
+    e.submit(vec![1, 2, 3, 4, 5, 6, 7, 8], 72);
+    e.submit(vec![9, 10, 11], 72);
+    e.run_to_completion(400).unwrap();
+    let mut rs = e.take_responses();
+    rs.sort_by_key(|r| r.id);
+    Run {
+        tokens: rs.into_iter().map(|r| r.tokens).collect(),
+        stats: e.device.stats(),
+        model_ns: e.metrics.model_ns.to_bits(),
+        offloads: e.metrics.nmc_offloads,
+        saved: e.metrics.link_bytes_saved,
+        stale: e.metrics.prefetch_stale,
+    }
+}
+
+fn cfg(design: Design, shards: usize, overlap: bool, nmc: bool) -> EngineConfig {
+    // hbm_kv_bytes = 0: every page spills, so the fetch planner sees
+    // offload candidates on every step
+    EngineConfig { design, shards, overlap, nmc, hbm_kv_bytes: 0, ..Default::default() }
+}
+
+#[test]
+fn tokens_are_bit_identical_offload_on_vs_off_across_the_matrix() {
+    let mut any_offloads = false;
+    for design in [Design::Plain, Design::GComp, Design::Trace] {
+        for shards in [1usize, 4] {
+            for overlap in [false, true] {
+                let tag = format!("{design:?} shards={shards} overlap={overlap}");
+                let off = run(cfg(design, shards, overlap, false));
+                let on = run(cfg(design, shards, overlap, true));
+                assert_eq!(off.tokens, on.tokens, "{tag}: offload changed tokens");
+                assert_eq!(off.offloads, 0, "{tag}: planner must stay cold when disabled");
+                assert_eq!(off.stats.nmc_bytes_scanned, 0, "{tag}");
+                if on.offloads > 0 {
+                    any_offloads = true;
+                    assert!(on.saved > 0, "{tag}: offloads must bank link savings");
+                    assert!(on.stats.nmc_bytes_scanned > 0, "{tag}");
+                    assert!(
+                        on.stats.link_bytes_out < off.stats.link_bytes_out,
+                        "{tag}: reduced payloads must shrink host-link reads \
+                         (on={} off={})",
+                        on.stats.link_bytes_out,
+                        off.stats.link_bytes_out
+                    );
+                } else {
+                    // the planner declined every candidate (e.g. Plain
+                    // never warms the decode cache): with zero offloads
+                    // the two runs must coincide exactly
+                    assert_eq!(on.stats, off.stats, "{tag}: idle planner perturbed traffic");
+                    assert_eq!(on.model_ns, off.model_ns, "{tag}: idle planner perturbed time");
+                }
+                if overlap {
+                    assert_eq!(on.stale, 0, "{tag}: offload decision must prefetch exactly");
+                }
+            }
+        }
+    }
+    assert!(any_offloads, "some matrix point must actually offload");
+}
+
+#[test]
+fn plain_design_never_offloads() {
+    // Plain stores raw words and never populates the decoded-plane
+    // cache, so its hit rate stays 0 and the cost model always prefers
+    // the full link transfer at these rates
+    for shards in [1usize, 4] {
+        let on = run(cfg(Design::Plain, shards, false, true));
+        assert_eq!(on.offloads, 0, "shards={shards}");
+        assert_eq!(on.stats.nmc_bytes_scanned, 0, "shards={shards}");
+    }
+}
+
+#[test]
+fn pool_and_codec_lane_knobs_never_perturb_offload_results() {
+    let base = run(cfg(Design::Trace, 4, true, true));
+    assert!(base.offloads > 0, "base config must offload");
+    for (pool, lanes) in [(4usize, 1usize), (1, 4), (4, 4)] {
+        let mut c = cfg(Design::Trace, 4, true, true);
+        c.pool_threads = pool;
+        c.codec_lanes = lanes;
+        let r = run(c);
+        let tag = format!("pool={pool} lanes={lanes}");
+        assert_eq!(r.tokens, base.tokens, "{tag}: tokens diverged");
+        assert_eq!(r.stats, base.stats, "{tag}: device traffic diverged");
+        assert_eq!(r.model_ns, base.model_ns, "{tag}: model time diverged");
+        assert_eq!(r.offloads, base.offloads, "{tag}: offload count diverged");
+        assert_eq!(r.saved, base.saved, "{tag}: link savings diverged");
+    }
+}

@@ -172,6 +172,42 @@ fn shared_prefix_workload_replays_identically() {
 }
 
 #[test]
+fn nmc_capture_replays_bit_identically_and_records_offloads() {
+    let mut meta = tiny_meta();
+    meta.hbm_kv_bytes = 0; // every page spills: the offload path is hot
+    meta.shards = 4;
+    meta.nmc = true;
+
+    let (bytes, fp) = capture(&meta);
+    let trace = Trace::parse(&bytes).unwrap();
+    assert_eq!(trace.version, 2);
+    let parsed = CaptureMeta::from_json(&trace.meta).unwrap();
+    assert!(parsed.nmc, "nmc flag must survive the meta header");
+    let (offloads, scanned, saved) = trace.nmc_totals();
+    assert!(offloads > 0 && scanned > 0 && saved > 0, "capture must record NMC activity");
+
+    let (bytes2, fp2) = replay(&trace);
+    assert_eq!(fp, fp2, "nmc replay fingerprint diverged");
+    assert_eq!(bytes, bytes2, "nmc trace files must be byte-identical");
+    assert_eq!(Trace::parse(&bytes2).unwrap().nmc_totals(), (offloads, scanned, saved));
+}
+
+#[test]
+fn v1_stream_with_nmc_opcode_is_a_decode_error() {
+    let mut meta = tiny_meta();
+    meta.hbm_kv_bytes = 0;
+    meta.shards = 4;
+    meta.nmc = true;
+    let (mut bytes, _) = capture(&meta);
+    assert!(Trace::parse(&bytes).is_ok());
+    // relabel the stream as v1: the OP_NMC records it carries are not
+    // part of the v1 grammar and must fail decode, not silently skip
+    bytes[4] = 1;
+    let err = Trace::parse(&bytes).unwrap_err();
+    assert!(err.to_string().contains("not valid in a version 1"), "{err}");
+}
+
+#[test]
 fn truncation_at_every_byte_is_a_decode_error() {
     let (bytes, _) = capture(&tiny_meta());
     assert!(Trace::parse(&bytes).is_ok());
