@@ -55,18 +55,24 @@ struct CountingAlloc;
 
 static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: pure pass-through to `System` plus a relaxed counter bump; every
+// contract (layout validity, pointer provenance) is forwarded unchanged
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller upholds `GlobalAlloc::alloc`'s layout contract
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
+    // SAFETY: caller passes a pointer previously returned by this allocator
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
+    // SAFETY: caller upholds `GlobalAlloc::realloc`'s contract
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
     }
+    // SAFETY: caller upholds `GlobalAlloc::alloc_zeroed`'s contract
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
         System.alloc_zeroed(layout)

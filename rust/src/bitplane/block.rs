@@ -27,8 +27,10 @@ pub const BLOCK_BYTES: usize = 4096;
 const MAX_PLANES: usize = 16;
 
 /// Shared base pointer for handing disjoint scratch rows to codec lanes.
-/// Safety of the accesses it enables is argued at each use site.
 struct RowBase(*mut u8);
+// SAFETY: sharing the raw base pointer across lane threads is sound
+// because every use derives a slice from a distinct, non-overlapping row
+// offset (argued at each use site); the pointee outlives the lane scope.
 unsafe impl Sync for RowBase {}
 
 /// How the block's content was transformed before plane packing.
@@ -262,6 +264,7 @@ impl DeviceBlock {
     /// caller-owned buffer: per-plane `decompress_into` straight into the
     /// scratch transpose rows, then one transpose into `out`. With warm
     /// buffers this touches the heap zero times.
+    // lint: zero-alloc
     pub fn decode_words_into(
         &self,
         mask: PlaneMask,
@@ -277,6 +280,7 @@ impl DeviceBlock {
     /// never share bytes; errors are surfaced in plane order, matching
     /// the serial loop's first-failure semantics bit for bit. Runs are
     /// allocation-free once scratch and `out` are warm, lanes or not.
+    // lint: zero-alloc
     pub fn decode_words_into_lanes(
         &self,
         mask: PlaneMask,
@@ -350,6 +354,7 @@ impl DeviceBlock {
 
     /// [`DeviceBlock::decode_full`] through a reusable scratch — the
     /// device hot path (zero allocations once scratch and `out` are warm).
+    // lint: zero-alloc
     pub fn decode_full_into(
         &self,
         scratch: &mut BlockScratch,
@@ -359,6 +364,7 @@ impl DeviceBlock {
     }
 
     /// [`DeviceBlock::decode_full_into`] with lane-parallel plane decode.
+    // lint: zero-alloc
     pub fn decode_full_into_lanes(
         &self,
         scratch: &mut BlockScratch,
@@ -386,6 +392,7 @@ impl DeviceBlock {
     }
 
     /// [`DeviceBlock::decode_planes`] through a reusable scratch.
+    // lint: zero-alloc
     pub fn decode_planes_into(
         &self,
         mask: PlaneMask,
@@ -396,6 +403,7 @@ impl DeviceBlock {
     }
 
     /// [`DeviceBlock::decode_planes_into`] with lane-parallel plane decode.
+    // lint: zero-alloc
     pub fn decode_planes_into_lanes(
         &self,
         mask: PlaneMask,
@@ -422,6 +430,7 @@ impl DeviceBlock {
     }
 
     /// [`DeviceBlock::decode_view`] through a reusable scratch.
+    // lint: zero-alloc
     pub fn decode_view_into(
         &self,
         view: &PrecisionView,
@@ -432,6 +441,7 @@ impl DeviceBlock {
     }
 
     /// [`DeviceBlock::decode_view_into`] with lane-parallel plane decode.
+    // lint: zero-alloc
     pub fn decode_view_into_lanes(
         &self,
         view: &PrecisionView,
@@ -451,6 +461,7 @@ impl DeviceBlock {
     /// 𝒯⁻¹ over a decoded word buffer, in place: borrows the stored
     /// `base_exp` (no clone, no throwaway [`KvTransform`]) and stages
     /// through the scratch word buffer.
+    // lint: zero-alloc
     fn inverse_topology_in_place(&self, scratch: &mut BlockScratch, words: &mut [u16]) {
         if let Transform::Kv { window, base_exp } = &self.transform {
             let mut stage = scratch.take_words();

@@ -141,6 +141,7 @@ impl KvTransform {
 
     /// In-place form of [`KvTransform::inverse_words`]: see the
     /// module-level `inverse_words_in_place` free function.
+    // lint: zero-alloc
     pub fn inverse_words_in_place(&self, words: &mut [u16], scratch: &mut Vec<u16>) {
         inverse_words_in_place(self.window, &self.base_exp, words, scratch);
     }
@@ -162,6 +163,7 @@ pub fn inverse_words_with(window: KvWindow, base_exp: &[u8], words: &[u16]) -> V
 /// exponent-delta) domain to the host token-major domain, staging through
 /// `scratch` (grown once, then reused). This is the form the device's
 /// zero-allocation decode scratch threads through `ReadFull`/`ReadPlanes`.
+// lint: zero-alloc
 pub fn inverse_words_in_place(
     window: KvWindow,
     base_exp: &[u8],

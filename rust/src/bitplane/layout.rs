@@ -124,6 +124,9 @@ pub fn transpose_to_planes_into(words: &[u16], bits: usize, out: &mut Vec<u8>) {
         }
         for g in tiles * 8..groups {
             let chunk = &words[g * 8..g * 8 + 8];
+            // SAFETY: `chunk` is exactly 8 u16s = 16 bytes, so reading one
+            // u128 stays in bounds; `read_unaligned` has no alignment
+            // requirement
             let x = unsafe { (chunk.as_ptr() as *const u128).read_unaligned() }.to_le();
             let (lo, hi) = deinterleave_bytes(x);
             let lb = transpose8(lo).to_le_bytes();

@@ -148,6 +148,7 @@ unsafe fn wild_copy(mut src: *const u8, mut dst: *mut u8, len: usize) {
 /// plane). Sequences near the buffer end take the exact-width scalar path.
 /// Error classification matches [`decompress_into_scalar`]: every bound is
 /// checked before any write.
+// lint: zero-alloc
 pub fn decompress_into(src: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
     let n = out.len();
     let mut w = 0usize; // write cursor into out
@@ -259,6 +260,7 @@ pub fn decompress_into(src: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
 /// differential tests and the `perf_hotpaths` speedup gates; not a
 /// production path.
 #[doc(hidden)]
+// lint: zero-alloc
 pub fn decompress_into_scalar(src: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
     let n = out.len();
     let mut w = 0usize;

@@ -110,6 +110,7 @@ unsafe fn wild_copy(mut src: *const u8, mut dst: *mut u8, len: usize) {
 /// returning a partially-written buffer. Segments near the end use the
 /// exact-width scalar path. Error classification is identical to
 /// [`decompress_into_scalar`]: every bound is checked before any write.
+// lint: zero-alloc
 pub fn decompress_into(src: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
     let n = out.len();
     let mut w = 0usize; // write cursor into out
@@ -201,6 +202,7 @@ pub fn compress_scalar(src: &[u8]) -> Vec<u8> {
 /// Byte-at-a-time predecessor of [`decompress_into`]. Reference for
 /// differential tests and the `perf_hotpaths` speedup gates.
 #[doc(hidden)]
+// lint: zero-alloc
 pub fn decompress_into_scalar(src: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
     let n = out.len();
     let mut w = 0usize;

@@ -18,6 +18,7 @@ pub fn decompress(src: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
 
 /// Allocation-free decode: fills `out` exactly (its length is the known
 /// decompressed size from the plane-index metadata).
+// lint: zero-alloc
 pub fn decompress_into(src: &[u8], out: &mut [u8]) -> anyhow::Result<()> {
     let written = zstd::bulk::decompress_to_buffer(src, out)
         .map_err(|e| anyhow::anyhow!("zstd decompress: {e}"))?;

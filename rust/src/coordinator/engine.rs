@@ -106,7 +106,7 @@ use crate::runtime::ModelBackend;
 use crate::sim::{EventQueue, ResourceTimeline, SimClock};
 use crate::tier::{HbmPartition, KvPageManager, KvPolicy, PageTier, PAGE_TOKENS};
 use crate::trace::TraceWriter;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::collections::{HashMap, HashSet};
 use std::time::Instant;
 
@@ -790,7 +790,8 @@ impl<B: ModelBackend> Engine<B> {
         let now = self.clock.now();
         let el = self.kv_entry_len;
         let pb = self.page_bytes();
-        let seq = self.slots[slot].req.as_ref().expect("preempting an occupied slot").id;
+        let seq =
+            self.slots[slot].req.as_ref().ok_or_else(|| anyhow!("preempting an empty slot"))?.id;
         let pos = self.slots[slot].pos;
 
         let hbm_pages: Vec<usize> = self
@@ -803,7 +804,7 @@ impl<B: ModelBackend> Engine<B> {
         let mut saved = 0usize;
         for &p in &hbm_pages {
             let words = self.page_words(slot, p);
-            let addr = self.pager.demote(seq, p).expect("HBM-resident page demotes");
+            let addr = self.pager.demote(seq, p).ok_or_else(|| anyhow!("no demote for {p}"))?;
             if let Err(e) = self.device.submit_one_at(
                 Transaction::WriteKv {
                     block_addr: addr,
@@ -828,7 +829,7 @@ impl<B: ModelBackend> Engine<B> {
                 .pager
                 .add_page(seq, p_last, false)
                 .cxl_addr
-                .expect("spilled page carries a device address");
+                .ok_or_else(|| anyhow!("spilled page {p_last} lacks a device address"))?;
             if let Err(e) = self.device.submit_one_at(
                 Transaction::WriteKv {
                     block_addr: addr,
@@ -843,7 +844,8 @@ impl<B: ModelBackend> Engine<B> {
             self.metrics.pages_spilled += 1;
             saved += 1;
         }
-        let mut req = self.slots[slot].req.take().expect("preempting an occupied slot");
+        let taken = self.slots[slot].req.take();
+        let mut req = taken.ok_or_else(|| anyhow!("slot {slot} emptied during preemption"))?;
         req.resume =
             Some(ResumeState { pos, cur_token: self.slots[slot].cur_token, hbm_pages });
         req.state = RequestState::Preempted;
@@ -863,7 +865,11 @@ impl<B: ModelBackend> Engine<B> {
     fn resume_slot(&mut self, slot: usize, mut req: Request) -> Result<()> {
         let now = self.clock.now();
         let el = self.kv_entry_len;
-        let rs = req.resume.take().expect("resumed request carries saved state");
+        let Some(rs) = req.resume.take() else {
+            // an invariant breach must not lose the request: requeue it
+            self.queue.requeue_front(req);
+            anyhow::bail!("resumed request has no saved state");
+        };
         let seq = req.id;
         let pos = rs.pos;
         let pb = self.page_bytes();
@@ -872,7 +878,11 @@ impl<B: ModelBackend> Engine<B> {
         let mut sq = SubmissionQueue::new();
         let mut routes: HashMap<TxnId, usize> = HashMap::new();
         for p in self.pager.seq_pages(seq) {
-            let addr = p.cxl_addr.expect("a preempted sequence is fully device-resident");
+            let Some(addr) = p.cxl_addr else {
+                req.resume = Some(rs);
+                self.queue.requeue_front(req);
+                anyhow::bail!("preempted page {} is not device-resident", p.index);
+            };
             routes.insert(sq.submit(Transaction::ReadFull { block_addr: addr }), p.index);
         }
         let mut kv = vec![0f32; pos * el];
@@ -909,8 +919,17 @@ impl<B: ModelBackend> Engine<B> {
         // must not lose the request: re-insert the record and requeue.
         if pos % PAGE_TOKENS != 0 {
             let p_last = pos / PAGE_TOKENS;
-            let meta = self.pager.remove_page(seq, p_last).expect("partial page was saved");
-            let addr = meta.cxl_addr.expect("saved partial page lives on the device");
+            let Some(meta) = self.pager.remove_page(seq, p_last) else {
+                req.resume = Some(rs);
+                self.queue.requeue_front(req);
+                anyhow::bail!("partial page {p_last} was not saved");
+            };
+            let Some(addr) = meta.cxl_addr else {
+                self.pager.pages.push(meta);
+                req.resume = Some(rs);
+                self.queue.requeue_front(req);
+                anyhow::bail!("saved partial page {p_last} lacks a device address");
+            };
             if let Err(e) = self.device.submit_one_at(Transaction::Free { block_addr: addr }, now)
             {
                 self.pager.pages.push(meta);
@@ -932,8 +951,13 @@ impl<B: ModelBackend> Engine<B> {
                 .seq_pages(seq)
                 .iter()
                 .find(|m| m.index == p)
-                .and_then(|m| m.cxl_addr)
-                .expect("demoted page holds a device address");
+                .and_then(|m| m.cxl_addr);
+            let Some(addr) = addr else {
+                // invariant breach — roll the allocation back and leave
+                // the page spilled, like a failed device Free
+                self.hbm.free_kv(pb);
+                break;
+            };
             if self.device.submit_one_at(Transaction::Free { block_addr: addr }, now).is_err() {
                 self.hbm.free_kv(pb);
                 break;
@@ -975,7 +999,8 @@ impl<B: ModelBackend> Engine<B> {
     /// interleaves consecutive spilled pages across shards.
     fn commit_page(&mut self, slot: usize, page: usize, now_ns: f64) -> Result<()> {
         let pb = self.page_bytes();
-        let req = self.slots[slot].req.as_ref().expect("page commit on an empty slot");
+        let req =
+            self.slots[slot].req.as_ref().ok_or_else(|| anyhow!("page commit on an empty slot"))?;
         let seq = req.id;
         if let Some(pfx) = req.prefix {
             if (page + 1) * PAGE_TOKENS <= pfx.tokens {
@@ -995,7 +1020,7 @@ impl<B: ModelBackend> Engine<B> {
             .pager
             .add_page(seq, page, false)
             .cxl_addr
-            .expect("spilled page carries a device address");
+            .ok_or_else(|| anyhow!("spilled page {page} lacks a device address"))?;
         self.device.submit_one_at(
             Transaction::WriteKv {
                 block_addr: addr,
@@ -1288,8 +1313,9 @@ impl<B: ModelBackend> Engine<B> {
             // otherwise leak into a step that no longer fetches them
             // (tier fell off the ladder, or the page moved back to HBM)
             let planned: HashSet<usize> = plan.iter().map(|op| op.page).collect();
-            let stale: Vec<usize> =
+            let mut stale: Vec<usize> =
                 self.slots[i].viewed.iter().copied().filter(|p| !planned.contains(p)).collect();
+            stale.sort_unstable();
             for page in stale {
                 let start = page * PAGE_TOKENS * el;
                 let end = (start + PAGE_TOKENS * el).min(self.slots[i].kv.len());
@@ -1446,6 +1472,8 @@ impl<B: ModelBackend> Engine<B> {
             // prefill-only step: chunk progress was charged in schedule()
             return Ok(0);
         }
+        // lint: allow(wall-clock) decode-throughput metric only; never
+        // feeds the modeled timeline
         let t_wall = Instant::now();
         let t0 = self.clock.now();
         let dims = self.backend.dims().clone();

@@ -260,7 +260,11 @@ impl ShardedDevice {
         let lanes: &LanePool =
             if jobs.len() <= 1 || self.pool.threads() <= 1 { &self.lanes } else { &inline };
         let results = self.pool.run(jobs, |w, _, job| {
-            job.run(&mut self.pool_scratch[w].lock().expect("scratch"), lanes)
+            // poison only means an earlier job panicked mid-decode; the
+            // buffers are reinitialized per job, so recover the guard
+            let mut scratch =
+                self.pool_scratch[w].lock().unwrap_or_else(|poison| poison.into_inner());
+            job.run(&mut scratch, lanes)
         });
         let mut outs: Vec<Vec<Option<JobOut>>> =
             plans.iter().map(|p| p.iter().map(|_| None).collect()).collect();
@@ -294,7 +298,10 @@ impl MemDevice for ShardedDevice {
         }
         let mut preps = self.precompute(&queues);
         let mut prep_for = |dev: &mut ShardedDevice, idx: usize| -> Option<Prep> {
-            let (plan, out) = preps[idx].pop_front().expect("one plan per queued txn");
+            // precompute built exactly one plan per queued txn; if that
+            // pairing ever broke, a `None` prep falls back to the serial
+            // decode path instead of panicking mid-drain
+            let (plan, out) = preps[idx].pop_front()?;
             dev.shards[idx].prep_from(plan, out)
         };
         match self.policy {
@@ -316,7 +323,9 @@ impl MemDevice for ShardedDevice {
                             .total_cmp(&self.shards[b].service_tl.busy_ns())
                     });
                     let Some(i) = next else { break };
-                    let (id, txn) = queues[i].pop_front().unwrap();
+                    // `next` only selects non-empty queues, so the pop
+                    // cannot miss; `else` closes the loop rather than panic
+                    let Some((id, txn)) = queues[i].pop_front() else { break };
                     let pre = prep_for(self, i);
                     out.push(self.service_prepped(i, id, txn, pre, now_ns));
                 }

@@ -387,7 +387,10 @@ pub trait MemDevice {
             "device completed {} of 1 transaction",
             completions.len()
         );
-        completions.pop().unwrap().result
+        match completions.pop() {
+            Some(c) => c.result,
+            None => anyhow::bail!("device returned no completion"),
+        }
     }
 
     /// [`Self::submit_one_at`] at model time 0.

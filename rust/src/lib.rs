@@ -85,6 +85,12 @@
 //! refcounted shared-prefix KV, agentic) that drive
 //! `benches/fig_scenarios.rs` and `tests/trace_replay.rs`.
 //!
+//! The determinism and hygiene rules behind all of these bit-identical
+//! claims are *statically enforced* by `pallas-lint` (`tools/lint`):
+//! wall-clock quarantine, map-iteration determinism, `// SAFETY:` on
+//! every `unsafe`, a no-panic policy in the device/sim/trace layers,
+//! and the `// lint: zero-alloc` contract. See `docs/LINT.md`.
+//!
 //! ## Crate layout
 //!
 //! Host/runtime side:

@@ -52,7 +52,7 @@ pub const OP_NMC: u8 = 0x09;
 /// Stream terminator: varint count of preceding records.
 pub const OP_END: u8 = 0xFF;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::util::varint::{get_varint, unzigzag};
 
@@ -111,7 +111,8 @@ impl<'a> Cursor<'a> {
 
     pub fn f64_le(&mut self) -> Result<f64> {
         let b = self.bytes(8)?;
-        Ok(f64::from_le_bytes(b.try_into().unwrap()))
+        let arr: [u8; 8] = b.try_into().map_err(|_| anyhow!("f64 needs 8 bytes"))?;
+        Ok(f64::from_le_bytes(arr))
     }
 }
 

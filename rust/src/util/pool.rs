@@ -447,6 +447,9 @@ mod tests {
         // the block-decode usage pattern: each index owns one row of a
         // shared flat buffer, handed out as a raw base pointer
         struct Base(*mut u8);
+        // SAFETY: each lane derives its slice from a distinct row offset,
+        // so no two threads ever touch the same bytes; `flat` outlives
+        // the pool run
         unsafe impl Sync for Base {}
         let pool = LanePool::new(3);
         let rows = 16usize;

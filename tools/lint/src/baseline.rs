@@ -1,0 +1,133 @@
+//! Baseline file handling: freeze legacy findings so only *new* debt
+//! fails CI.
+//!
+//! The format is one finding per line, tab-separated
+//! (`rule\tpath\tline\tmessage`), sorted, with `#` comment lines and
+//! blank lines ignored. Comparison is by multiset: a current finding
+//! matching a baseline line consumes one credit; leftover credits are
+//! reported as *stale* entries (fixed debt — prune with
+//! `--update-baseline`), leftover findings are *new* and fatal.
+//!
+//! Line numbers are part of the key on purpose: a baseline is a freeze,
+//! not a suppression — editing near frozen debt surfaces it again, which
+//! is the nudge to fix it. The repo's committed baseline is empty.
+
+use crate::rules::Finding;
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+const HEADER: &str = "\
+# pallas-lint baseline — frozen legacy findings, one per line.
+# Format: rule<TAB>path<TAB>line<TAB>message. Regenerate with:
+#   cargo run -p pallas-lint -- --update-baseline
+";
+
+/// One finding as a baseline line (no trailing newline).
+pub fn serialize(f: &Finding) -> String {
+    format!("{}\t{}\t{}\t{}", f.rule, f.path, f.line, f.msg)
+}
+
+/// Render a full baseline file for `findings`.
+pub fn render(findings: &[Finding]) -> String {
+    let mut lines: Vec<String> = findings.iter().map(serialize).collect();
+    lines.sort();
+    let mut out = String::from(HEADER);
+    for l in &lines {
+        out.push_str(l);
+        out.push('\n');
+    }
+    out
+}
+
+/// Load baseline entries; a missing file is an empty baseline.
+pub fn load(path: &Path) -> io::Result<Vec<String>> {
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e),
+    };
+    Ok(text
+        .lines()
+        .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+        .map(str::to_string)
+        .collect())
+}
+
+/// Result of comparing current findings against a baseline.
+pub struct Diff {
+    /// Findings not covered by the baseline — these fail the run.
+    pub new: Vec<Finding>,
+    /// Baseline entries with no matching finding — fixed debt to prune.
+    pub stale: Vec<String>,
+}
+
+/// Multiset-compare `findings` against baseline `entries`.
+pub fn diff(findings: &[Finding], entries: &[String]) -> Diff {
+    let mut credits: BTreeMap<&str, i64> = BTreeMap::new();
+    for e in entries {
+        *credits.entry(e.as_str()).or_insert(0) += 1;
+    }
+    let mut new = Vec::new();
+    for f in findings {
+        let key = serialize(f);
+        match credits.get_mut(key.as_str()) {
+            Some(c) if *c > 0 => *c -= 1,
+            _ => new.push(f.clone()),
+        }
+    }
+    let mut stale = Vec::new();
+    for (k, c) in credits {
+        for _ in 0..c {
+            stale.push(k.to_string());
+        }
+    }
+    Diff { new, stale }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(rule: &str, path: &str, line: usize) -> Finding {
+        Finding {
+            rule: rule.to_string(),
+            path: path.to_string(),
+            line,
+            msg: "m".to_string(),
+        }
+    }
+
+    #[test]
+    fn render_and_load_round_trip() {
+        let findings = vec![f("P1", "rust/src/cxl/b.rs", 7), f("D1", "rust/src/sim/a.rs", 3)];
+        let text = render(&findings);
+        assert!(text.starts_with('#'));
+        // parse back through the same filter `load` applies
+        let entries: Vec<String> = text
+            .lines()
+            .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+            .map(str::to_string)
+            .collect();
+        assert_eq!(entries.len(), 2);
+        assert!(entries[0].starts_with("D1\t"), "sorted output: {entries:?}");
+        let d = diff(&findings, &entries);
+        assert!(d.new.is_empty());
+        assert!(d.stale.is_empty());
+    }
+
+    #[test]
+    fn diff_is_multiset() {
+        let base = vec![serialize(&f("P1", "a.rs", 1))];
+        // two identical findings, one credit: the second is new
+        let findings = vec![f("P1", "a.rs", 1), f("P1", "a.rs", 1)];
+        let d = diff(&findings, &base);
+        assert_eq!(d.new.len(), 1);
+        assert!(d.stale.is_empty());
+        // no findings at all: the credit is stale
+        let d = diff(&[], &base);
+        assert!(d.new.is_empty());
+        assert_eq!(d.stale.len(), 1);
+    }
+}

@@ -1,0 +1,393 @@
+//! A hand-rolled, line/column-tracking Rust surface lexer.
+//!
+//! The rule engine does not need a full token tree — it needs to know, for
+//! every source line, *which bytes are code* and *which are comment text*,
+//! with string/char-literal contents reliably neutralized so that a
+//! pattern like `Instant::now` inside a string or a doc comment never
+//! trips a rule. `lex` produces exactly that view:
+//!
+//! * [`SrcLine::code`] — the line with every comment and every
+//!   string/char-literal content replaced by spaces (one space per
+//!   character, so column positions are preserved);
+//! * [`SrcLine::comment`] — the concatenated text of any `//` / `/* */`
+//!   comment on that line (the channel `// SAFETY:` and `// lint: ...`
+//!   annotations ride on);
+//! * [`SrcFile::test_lines`] — lines inside `#[cfg(test)]`-gated items,
+//!   found by brace tracking on the stripped code.
+//!
+//! Handled: nested `/* */`, `//` (incl. `///` and `//!`), `"…"` with
+//! escapes, raw strings `r"…"` / `r#"…"#` (any hash depth, plus `b`/`br`
+//! byte forms), char literals (incl. escapes) vs. lifetimes. This covers
+//! the entire grammar the rules care about without a `syn` dependency —
+//! nothing to vendor, nothing that can drift from the build toolchain.
+
+/// One lexed source line.
+#[derive(Debug, Clone)]
+pub struct SrcLine {
+    /// Source text with comments and literal contents blanked to spaces.
+    pub code: String,
+    /// Comment text carried by this line (empty if none).
+    pub comment: String,
+}
+
+/// A lexed file: per-line code/comment split plus `#[cfg(test)]` spans.
+#[derive(Debug)]
+pub struct SrcFile {
+    pub lines: Vec<SrcLine>,
+    /// `in_test[i]` is true when 1-based line `i + 1` sits inside a
+    /// `#[cfg(test)]`-gated item (module or fn).
+    pub in_test: Vec<bool>,
+}
+
+impl SrcFile {
+    /// Is 1-based line `line` inside a `#[cfg(test)]` item?
+    pub fn is_test_line(&self, line: usize) -> bool {
+        line >= 1 && self.in_test.get(line - 1).copied().unwrap_or(false)
+    }
+}
+
+/// Lexer state, tracked across lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Code,
+    LineComment,
+    /// Nested block comment depth.
+    BlockComment(u32),
+    /// Inside `"…"`; the flag records a pending `\` escape.
+    Str(bool),
+    /// Inside `r##"…"##`; the payload is the hash count.
+    RawStr(u32),
+    /// Inside `'…'`; the flag records a pending `\` escape.
+    CharLit(bool),
+}
+
+/// Is `c` part of an identifier?
+pub fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex a whole file into per-line code/comment views.
+pub fn lex(source: &str) -> SrcFile {
+    let mut lines = Vec::new();
+    let mut state = State::Code;
+    for raw in source.split('\n') {
+        let (line, next) = lex_line(raw, state);
+        state = match next {
+            // a `//` comment ends with its line
+            State::LineComment => State::Code,
+            s => s,
+        };
+        lines.push(line);
+    }
+    let in_test = mark_test_spans(&lines);
+    SrcFile { lines, in_test }
+}
+
+/// Lex a single line starting in `state`; returns the line and the state
+/// carried into the next line.
+fn lex_line(raw: &str, mut state: State) -> (SrcLine, State) {
+    let chars: Vec<char> = raw.chars().collect();
+    let mut code = String::with_capacity(raw.len());
+    let mut comment = String::new();
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        let d = chars.get(i + 1).copied();
+        match state {
+            State::Code => {
+                if c == '/' && d == Some('/') {
+                    state = State::LineComment;
+                    code.push(' ');
+                    // skip the second slash too; the comment text starts
+                    // after `//` (and after `///` / `//!` markers)
+                    code.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && d == Some('*') {
+                    state = State::BlockComment(1);
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    state = State::Str(false);
+                    code.push(' ');
+                    i += 1;
+                    continue;
+                }
+                // raw / byte string heads: r" r#" b" br" br#" …
+                if (c == 'r' || c == 'b') && !prev_is_ident(&code) {
+                    if let Some((hashes, consumed)) = raw_string_head(&chars, i) {
+                        state = State::RawStr(hashes);
+                        for _ in 0..consumed {
+                            code.push(' ');
+                        }
+                        i += consumed;
+                        continue;
+                    }
+                    if c == 'b' && d == Some('"') {
+                        state = State::Str(false);
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                        continue;
+                    }
+                }
+                if c == '\'' {
+                    // lifetime (`'a`) vs char literal (`'a'`, `'\n'`):
+                    // a backslash or a close-quote two ahead means literal
+                    let is_char = match d {
+                        Some('\\') => true,
+                        Some(x) if is_ident_char(x) => chars.get(i + 2) == Some(&'\''),
+                        Some(_) => true, // e.g. '(' — not a valid lifetime
+                        None => false,
+                    };
+                    if is_char {
+                        state = State::CharLit(false);
+                        code.push(' ');
+                        i += 1;
+                        continue;
+                    }
+                    // lifetime quote: keep as code (harmless)
+                    code.push(c);
+                    i += 1;
+                    continue;
+                }
+                code.push(c);
+                i += 1;
+            }
+            State::LineComment => {
+                comment.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '/' && d == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '*' && d == Some('/') {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                    continue;
+                }
+                comment.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            State::Str(escaped) => {
+                code.push(' ');
+                state = if escaped {
+                    State::Str(false)
+                } else if c == '\\' {
+                    State::Str(true)
+                } else if c == '"' {
+                    State::Code
+                } else {
+                    State::Str(false)
+                };
+                i += 1;
+            }
+            State::RawStr(hashes) => {
+                code.push(' ');
+                if c == '"' && closes_raw(&chars, i + 1, hashes) {
+                    for _ in 0..hashes {
+                        code.push(' ');
+                    }
+                    i += 1 + hashes as usize;
+                    state = State::Code;
+                    continue;
+                }
+                i += 1;
+            }
+            State::CharLit(escaped) => {
+                code.push(' ');
+                state = if escaped {
+                    State::CharLit(false)
+                } else if c == '\\' {
+                    State::CharLit(true)
+                } else if c == '\'' {
+                    State::Code
+                } else {
+                    State::CharLit(false)
+                };
+                i += 1;
+            }
+        }
+    }
+    (SrcLine { code, comment }, state)
+}
+
+/// Did the last pushed code char belong to an identifier? Guards the raw
+/// string head check so `br#"…"#` lexes as a string while a raw
+/// identifier like `r#fn` or a name ending in `…r` stays code.
+fn prev_is_ident(code: &str) -> bool {
+    code.chars().next_back().is_some_and(is_ident_char)
+}
+
+/// If `chars[i..]` starts a raw (byte) string head — `r"`, `r#…#"`,
+/// `br"`, `br#…#"` — return `(hash_count, chars_consumed_incl_quote)`.
+fn raw_string_head(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j - i + 1))
+    } else {
+        None
+    }
+}
+
+/// Does `chars[from..]` hold `hashes` consecutive `#`s (closing a raw
+/// string whose opening quote carried that many)?
+fn closes_raw(chars: &[char], from: usize, hashes: u32) -> bool {
+    (0..hashes as usize).all(|k| chars.get(from + k) == Some(&'#'))
+}
+
+/// Mark the lines belonging to `#[cfg(test)]`-gated items. From each
+/// attribute line, the gated item is the next brace-balanced block (a
+/// `mod tests { … }` or a gated fn); attribute-only and comment-only
+/// lines in between are included. Items without braces within the next
+/// few lines (e.g. a gated `use`) gate only their own line.
+fn mark_test_spans(lines: &[SrcLine]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut i = 0usize;
+    while i < lines.len() {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        // find the opening brace of the gated item
+        let mut open = None;
+        for (j, line) in lines.iter().enumerate().skip(i).take(8) {
+            if line.code.contains('{') {
+                open = Some(j);
+                break;
+            }
+        }
+        let Some(open) = open else {
+            in_test[i] = true;
+            i += 1;
+            continue;
+        };
+        // brace-track to the close of the item
+        let mut depth = 0i64;
+        let mut end = lines.len() - 1;
+        for (j, line) in lines.iter().enumerate().skip(open) {
+            for c in line.code.chars() {
+                match c {
+                    '{' => depth += 1,
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if depth <= 0 {
+                end = j;
+                break;
+            }
+        }
+        for flag in in_test.iter_mut().take(end + 1).skip(i) {
+            *flag = true;
+        }
+        i = end + 1;
+    }
+    in_test
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let f = lex("let x = \"Instant::now\"; // Instant::now\nlet y = 1;");
+        assert!(!f.lines[0].code.contains("Instant"));
+        assert!(f.lines[0].comment.contains("Instant::now"));
+        assert!(f.lines[0].code.contains("let x ="));
+        assert_eq!(f.lines[1].code, "let y = 1;");
+    }
+
+    #[test]
+    fn raw_strings_any_hash_depth() {
+        let f = lex("let s = r#\"unsafe \"quoted\" panic!\"#; let t = 2;");
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(!f.lines[0].code.contains("panic"));
+        assert!(f.lines[0].code.contains("let t = 2;"));
+        let f = lex("let s = br\"unsafe\"; let u = 3;");
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(f.lines[0].code.contains("let u = 3;"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let f = lex("a /* x /* y */ z */ b\nc");
+        assert!(f.lines[0].code.contains('a'));
+        assert!(f.lines[0].code.contains('b'));
+        assert!(!f.lines[0].code.contains('y'));
+        assert_eq!(f.lines[1].code, "c");
+    }
+
+    #[test]
+    fn multiline_block_comment_carries_state() {
+        let f = lex("a /* open\nstill comment unsafe\nclose */ b");
+        assert!(!f.lines[1].code.contains("unsafe"));
+        assert!(f.lines[1].comment.contains("unsafe"));
+        assert!(f.lines[2].code.contains('b'));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let f = lex("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(f.lines[0].code.contains("str"));
+        // a real char literal is blanked
+        let f = lex("let c = 'x'; let d = '\\n'; let e = 9;");
+        assert!(!f.lines[0].code.contains('x'));
+        assert!(f.lines[0].code.contains("let e = 9;"));
+    }
+
+    #[test]
+    fn multiline_string_carries_state() {
+        let f = lex("let s = \"line one\nunsafe line two\"; let z = 1;");
+        assert!(!f.lines[1].code.contains("unsafe"));
+        assert!(f.lines[1].code.contains("let z = 1;"));
+    }
+
+    #[test]
+    fn cfg_test_spans_cover_mod_blocks() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}";
+        let f = lex(src);
+        assert!(!f.is_test_line(1));
+        assert!(f.is_test_line(2));
+        assert!(f.is_test_line(4));
+        assert!(f.is_test_line(5));
+        assert!(!f.is_test_line(6));
+    }
+
+    #[test]
+    fn escaped_quote_in_string() {
+        let f = lex("let s = \"a\\\"unsafe\\\" b\"; let q = 4;");
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(f.lines[0].code.contains("let q = 4;"));
+    }
+}

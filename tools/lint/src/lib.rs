@@ -1,0 +1,41 @@
+//! `pallas-lint` — determinism / unsafe-hygiene / panic-policy static
+//! analysis for the TRACE reproduction.
+//!
+//! Every headline gate in this repo is a bit-identical claim (overlap,
+//! pool, lanes, NMC, trace capture→replay). This crate statically rules
+//! out the classic ways such claims rot: wall-clock reads in model-time
+//! code (D1), `HashMap` iteration order leaking into modeled numbers
+//! (D2), undocumented `unsafe` kernels (U1), panics in device paths
+//! (P1), and silent allocation creep in `// lint: zero-alloc` decode
+//! functions (A1). See `docs/LINT.md` for the full rule catalog,
+//! annotation syntax, and the baseline workflow.
+//!
+//! The crate is std-only: a hand-rolled surface lexer ([`lexer`]) feeds
+//! a line-local rule engine ([`rules`]); [`walk`] and [`baseline`]
+//! supply the deterministic file walk and the freeze file. The binary
+//! (`pallas-lint`) wires them to a CLI; CI runs it with findings-as-
+//! errors against `tools/lint/baseline.txt`.
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+pub mod walk;
+
+pub use rules::{lint_source, Finding, ALL_RULES};
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// Lint every tracked Rust source under `root` (a repo checkout).
+/// Findings come back sorted by `(path, line, rule)`.
+pub fn lint_repo(root: &Path, only: Option<&BTreeSet<String>>) -> io::Result<Vec<Finding>> {
+    let mut out = Vec::new();
+    for rel in walk::rust_sources(root)? {
+        let source = fs::read_to_string(root.join(&rel))?;
+        out.extend(rules::lint_source(&rel, &source, only));
+    }
+    out.sort();
+    Ok(out)
+}

@@ -1,0 +1,231 @@
+//! `pallas-lint` CLI: walk the repo, run the rules, gate on the
+//! baseline. See `docs/LINT.md` and `pallas-lint --help`.
+
+use pallas_lint::rules::{Finding, ALL_RULES};
+use pallas_lint::{baseline, lint_repo, walk};
+use std::collections::BTreeSet;
+use std::env;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+pallas-lint — determinism / unsafe-hygiene / panic-policy lints
+
+USAGE:
+    pallas-lint [OPTIONS]
+
+OPTIONS:
+    --root DIR          repo root (default: auto-detect from cwd upward)
+    --baseline FILE     baseline file (default: ROOT/tools/lint/baseline.txt)
+    --update-baseline   rewrite the baseline to the current findings and exit
+    --json FILE         write a JSON report to FILE ('-' for stdout)
+    --only R1,R2        run only the listed rules (of D1 D2 U1 P1 A1)
+    --list-rules        print the rule ids and exit
+    -h, --help          print this help
+
+EXIT CODES:
+    0  clean (no findings beyond the baseline)
+    1  new findings
+    2  usage or I/O error
+";
+
+struct Opts {
+    root: Option<PathBuf>,
+    baseline: Option<PathBuf>,
+    update: bool,
+    json: Option<String>,
+    only: Option<BTreeSet<String>>,
+    list_rules: bool,
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("pallas-lint: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run() -> Result<ExitCode, String> {
+    let opts = parse_args(env::args().skip(1))?;
+    if opts.list_rules {
+        for r in ALL_RULES {
+            println!("{r}");
+        }
+        return Ok(ExitCode::SUCCESS);
+    }
+    let root = match opts.root {
+        Some(r) => r,
+        None => {
+            let cwd = env::current_dir().map_err(|e| e.to_string())?;
+            find_root(&cwd).ok_or_else(|| {
+                "no repo root found (need a dir with Cargo.toml and rust/src); \
+                 pass --root"
+                    .to_string()
+            })?
+        }
+    };
+    let findings =
+        lint_repo(&root, opts.only.as_ref()).map_err(|e| format!("walking {root:?}: {e}"))?;
+    let baseline_path =
+        opts.baseline.unwrap_or_else(|| root.join("tools").join("lint").join("baseline.txt"));
+
+    if opts.update {
+        fs::write(&baseline_path, baseline::render(&findings))
+            .map_err(|e| format!("writing {baseline_path:?}: {e}"))?;
+        eprintln!(
+            "pallas-lint: baseline updated ({} findings) -> {baseline_path:?}",
+            findings.len()
+        );
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let entries =
+        baseline::load(&baseline_path).map_err(|e| format!("reading {baseline_path:?}: {e}"))?;
+    let diff = baseline::diff(&findings, &entries);
+
+    for f in &diff.new {
+        println!("{f}");
+    }
+    for s in &diff.stale {
+        eprintln!("pallas-lint: warning: stale baseline entry (fixed debt): {s}");
+    }
+    if let Some(dest) = &opts.json {
+        let report = json_report(&findings, &diff);
+        if dest == "-" {
+            println!("{report}");
+        } else {
+            fs::write(dest, report).map_err(|e| format!("writing {dest}: {e}"))?;
+        }
+    }
+    eprintln!(
+        "pallas-lint: {} finding(s) over {} file(s); {} new, {} baselined, {} stale",
+        findings.len(),
+        walk::rust_sources(&root).map(|v| v.len()).unwrap_or(0),
+        diff.new.len(),
+        findings.len() - diff.new.len(),
+        diff.stale.len()
+    );
+    if diff.new.is_empty() {
+        Ok(ExitCode::SUCCESS)
+    } else {
+        Ok(ExitCode::FAILURE)
+    }
+}
+
+fn parse_args<I: Iterator<Item = String>>(mut args: I) -> Result<Opts, String> {
+    let mut opts = Opts {
+        root: None,
+        baseline: None,
+        update: false,
+        json: None,
+        only: None,
+        list_rules: false,
+    };
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => opts.root = Some(PathBuf::from(need(&mut args, "--root")?)),
+            "--baseline" => opts.baseline = Some(PathBuf::from(need(&mut args, "--baseline")?)),
+            "--update-baseline" => opts.update = true,
+            "--json" => opts.json = Some(need(&mut args, "--json")?),
+            "--only" => {
+                let list = need(&mut args, "--only")?;
+                let mut set = BTreeSet::new();
+                for r in list.split(',').map(str::trim).filter(|r| !r.is_empty()) {
+                    if !ALL_RULES.contains(&r) {
+                        return Err(format!("unknown rule `{r}` (see --list-rules)"));
+                    }
+                    set.insert(r.to_string());
+                }
+                if set.is_empty() {
+                    return Err("--only needs at least one rule id".to_string());
+                }
+                opts.only = Some(set);
+            }
+            "--list-rules" => opts.list_rules = true,
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                std::process::exit(0);
+            }
+            other => return Err(format!("unknown argument `{other}` (try --help)")),
+        }
+    }
+    Ok(opts)
+}
+
+fn need<I: Iterator<Item = String>>(args: &mut I, flag: &str) -> Result<String, String> {
+    args.next().ok_or_else(|| format!("{flag} needs a value"))
+}
+
+/// Walk upward from `start` to the first directory that looks like the
+/// repo root (workspace manifest + rust/src).
+fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = Some(start.to_path_buf());
+    while let Some(d) = dir {
+        if d.join("Cargo.toml").is_file() && d.join("rust").join("src").is_dir() {
+            return Some(d);
+        }
+        dir = d.parent().map(Path::to_path_buf);
+    }
+    None
+}
+
+/// Hand-rolled JSON report: every finding (with its baseline status) plus
+/// the stale entries. No serde — the shape is flat and the escaping small.
+fn json_report(findings: &[Finding], diff: &baseline::Diff) -> String {
+    // count how many copies of each serialized finding are new
+    let mut new_counts: std::collections::BTreeMap<String, i64> = Default::default();
+    for f in &diff.new {
+        *new_counts.entry(baseline::serialize(f)).or_insert(0) += 1;
+    }
+    let mut out = String::from("{\n  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        let key = baseline::serialize(f);
+        let is_new = match new_counts.get_mut(&key) {
+            Some(c) if *c > 0 => {
+                *c -= 1;
+                true
+            }
+            _ => false,
+        };
+        let sep = if i == 0 { "" } else { "," };
+        let _ = write!(
+            out,
+            "{sep}\n    {{\"rule\": \"{}\", \"path\": \"{}\", \"line\": {}, \
+             \"new\": {is_new}, \"msg\": \"{}\"}}",
+            json_escape(&f.rule),
+            json_escape(&f.path),
+            f.line,
+            json_escape(&f.msg)
+        );
+    }
+    out.push_str("\n  ],\n  \"stale\": [");
+    for (i, s) in diff.stale.iter().enumerate() {
+        let sep = if i == 0 { "" } else { "," };
+        let _ = write!(out, "{sep}\n    \"{}\"", json_escape(s));
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}

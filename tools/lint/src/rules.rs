@@ -1,0 +1,802 @@
+//! The five `pallas-lint` rules (see `docs/LINT.md` for the catalog and
+//! the rationale tying each rule to the repo's bit-identical gates).
+//!
+//! | id | guards                                                        |
+//! |----|---------------------------------------------------------------|
+//! | D1 | wall-clock quarantine: no `Instant::now` in model-time code   |
+//! | D2 | `HashMap`/`HashSet` iteration in modeled-number modules       |
+//! | U1 | every `unsafe` carries an adjacent `// SAFETY:` argument      |
+//! | P1 | no `unwrap`/`expect`/`panic!` in `cxl/`, `sim/`, `trace/`     |
+//! | A1 | `// lint: zero-alloc` fns contain no allocating calls         |
+//!
+//! Escapes are inline annotations with a mandatory reason:
+//! `// lint: allow(wall-clock|map-iter|panic|alloc) <reason>` on the
+//! flagged line or a comment line directly above it. An annotation with
+//! no reason does not suppress — the finding notes it instead.
+//!
+//! Every rule works on the lexed code/comment split from [`crate::lexer`]
+//! (string and comment contents never trip a rule) and is purely
+//! line-local plus small upward/downward windows, so findings are stable
+//! and the whole pass is trivially deterministic.
+
+use crate::lexer::{lex, SrcFile};
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// All rule identifiers, in report order.
+pub const ALL_RULES: &[&str] = &["D1", "D2", "U1", "P1", "A1"];
+
+/// One diagnostic.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    /// Repo-relative path with forward slashes.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule id (`D1` … `A1`).
+    pub rule: String,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// Files D1 exempts wholesale: the wall-clock *metric* sites themselves.
+const D1_FILE_ALLOWLIST: &[&str] = &["rust/src/coordinator/metrics.rs"];
+
+/// Wall-clock reads D1 hunts for.
+const D1_PATTERNS: &[&str] = &["Instant::now", "SystemTime::now", "SystemTime::UNIX_EPOCH"];
+
+/// Module prefixes whose numbers feed `Metrics::to_json` or the modeled
+/// timelines — the D2 map-iteration scope.
+const D2_SCOPE: &[&str] =
+    &["rust/src/cxl/", "rust/src/sim/", "rust/src/coordinator/", "rust/src/trace/"];
+
+/// Iteration forms D2 flags on a hash-typed receiver.
+const D2_ITER_SUFFIXES: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".retain(",
+    ".drain(",
+];
+
+/// Order-restoring sinks that suppress a D2 finding when they appear on
+/// the flagged line or within the next two lines.
+const D2_SORTED_SINKS: &[&str] = &[
+    ".sort(",
+    ".sort_by(",
+    ".sort_by_key(",
+    ".sort_unstable(",
+    ".sort_unstable_by(",
+    ".sort_unstable_by_key(",
+    "BTreeMap",
+    "BTreeSet",
+];
+
+/// Module prefixes under the P1 panic policy (device transaction and
+/// model-time paths; tests and benches are exempt).
+const P1_SCOPE: &[&str] = &["rust/src/cxl/", "rust/src/sim/", "rust/src/trace/"];
+
+/// Panicking constructs P1 forbids.
+const P1_PATTERNS: &[&str] = &[".unwrap()", ".expect(", "panic!("];
+
+/// Allocating calls A1 scans `// lint: zero-alloc` bodies for.
+const A1_PATTERNS: &[&str] = &[
+    "Vec::new(",
+    "Vec::with_capacity(",
+    "vec![",
+    ".to_vec(",
+    ".collect(",
+    ".collect::<",
+    "format!(",
+    "format_args!(",
+    "Box::new(",
+    "String::new(",
+    "String::from(",
+    ".to_string(",
+    ".to_owned(",
+    ".clone(",
+    "HashMap::new(",
+    "HashSet::new(",
+    "BTreeMap::new(",
+    "BTreeSet::new(",
+];
+
+/// Lint one file's source. `rel_path` must be repo-relative with forward
+/// slashes — rule scopes are path-prefix based. `only` restricts to a
+/// subset of [`ALL_RULES`].
+pub fn lint_source(rel_path: &str, source: &str, only: Option<&BTreeSet<String>>) -> Vec<Finding> {
+    let file = lex(source);
+    let on = |rule: &str| match only {
+        Some(s) => s.contains(rule),
+        None => true,
+    };
+    let mut out = Vec::new();
+    if on("D1") {
+        rule_d1(rel_path, &file, &mut out);
+    }
+    if on("D2") {
+        rule_d2(rel_path, &file, &mut out);
+    }
+    if on("U1") {
+        rule_u1(rel_path, &file, &mut out);
+    }
+    if on("P1") {
+        rule_p1(rel_path, &file, &mut out);
+    }
+    if on("A1") {
+        rule_a1(rel_path, &file, &mut out);
+    }
+    out.sort();
+    out
+}
+
+// ---------------------------------------------------------------------------
+// shared text helpers (byte-oriented; all patterns are ASCII)
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+/// Byte positions where `pat` occurs in `code` with identifier boundaries:
+/// if `pat` starts (ends) with an identifier byte, the byte before (after)
+/// the occurrence must not be one.
+fn word_positions(code: &str, pat: &str) -> Vec<usize> {
+    let cb = code.as_bytes();
+    let pb = pat.as_bytes();
+    let mut out = Vec::new();
+    if pb.is_empty() {
+        return out;
+    }
+    let mut start = 0usize;
+    while start + pb.len() <= cb.len() {
+        let Some(rel) = code[start..].find(pat) else { break };
+        let p = start + rel;
+        let before_ok = !is_ident_byte(pb[0]) || p == 0 || !is_ident_byte(cb[p - 1]);
+        let end = p + pb.len();
+        let after_ok =
+            !is_ident_byte(pb[pb.len() - 1]) || end >= cb.len() || !is_ident_byte(cb[end]);
+        if before_ok && after_ok {
+            out.push(p);
+        }
+        start = p + 1;
+    }
+    out
+}
+
+fn contains_word(code: &str, pat: &str) -> bool {
+    !word_positions(code, pat).is_empty()
+}
+
+/// Result of looking for a `// lint: allow(<key>) <reason>` escape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Annotation {
+    None,
+    WithReason,
+    MissingReason,
+}
+
+/// Can line `j` (0-based) sit between an annotation/SAFETY comment and
+/// the code it covers? Comment-only lines and attribute lines qualify; a
+/// blank line or real code breaks the chain.
+fn is_skippable(file: &SrcFile, j: usize) -> bool {
+    let line = &file.lines[j];
+    let code = line.code.trim();
+    if code.is_empty() {
+        return !line.comment.trim().is_empty();
+    }
+    code.starts_with("#[")
+}
+
+/// Comment text with doc/continuation markers (`/`, `!`, `*`) and leading
+/// spaces stripped — annotations must sit at the start of their comment,
+/// so prose *mentioning* the marker syntax never matches.
+fn comment_payload(comment: &str) -> &str {
+    comment.trim_start_matches(|c: char| c == '/' || c == '!' || c == '*' || c == ' ')
+}
+
+/// Look for `lint: allow(<key>)` at the head of the comment on line `idx`
+/// (0-based) or of the contiguous comment/attribute block directly above.
+fn annotation(file: &SrcFile, idx: usize, key: &str) -> Annotation {
+    let needle = format!("lint: allow({key})");
+    let classify = |comment: &str| -> Option<Annotation> {
+        let payload = comment_payload(comment);
+        if !payload.starts_with(&needle) {
+            return None;
+        }
+        let rest = &payload[needle.len()..];
+        if rest.chars().any(|c| c.is_alphanumeric()) {
+            Some(Annotation::WithReason)
+        } else {
+            Some(Annotation::MissingReason)
+        }
+    };
+    if let Some(a) = classify(&file.lines[idx].comment) {
+        return a;
+    }
+    let mut j = idx;
+    while j > 0 && is_skippable(file, j - 1) {
+        j -= 1;
+        if let Some(a) = classify(&file.lines[j].comment) {
+            return a;
+        }
+    }
+    Annotation::None
+}
+
+/// Does line `idx` carry (or sit directly under) a `SAFETY:` comment?
+/// `/// # Safety` doc sections on `unsafe fn`/`unsafe impl` also count.
+fn has_safety_comment(file: &SrcFile, idx: usize) -> bool {
+    let hit = |comment: &str| comment.contains("SAFETY:") || comment.contains("# Safety");
+    if hit(&file.lines[idx].comment) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 && is_skippable(file, j - 1) {
+        j -= 1;
+        if hit(&file.lines[j].comment) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Note appended to a finding whose escape annotation lacks a reason.
+fn reason_note(a: Annotation) -> &'static str {
+    if a == Annotation::MissingReason {
+        " (annotation present but missing a reason)"
+    } else {
+        ""
+    }
+}
+
+fn path_in(path: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| path.starts_with(p))
+}
+
+// ---------------------------------------------------------------------------
+// D1 — wall-clock quarantine
+
+fn rule_d1(path: &str, file: &SrcFile, out: &mut Vec<Finding>) {
+    // library + vendored + tool code only: benches, examples, and tests
+    // measure wall time legitimately
+    if !path_in(path, &["rust/src/", "vendor/", "tools/"]) {
+        return;
+    }
+    if D1_FILE_ALLOWLIST.contains(&path) {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        if file.is_test_line(i + 1) {
+            continue;
+        }
+        let Some(pat) = D1_PATTERNS.iter().find(|p| contains_word(&line.code, p)) else {
+            continue;
+        };
+        let ann = annotation(file, i, "wall-clock");
+        if ann == Annotation::WithReason {
+            continue;
+        }
+        out.push(Finding {
+            path: path.to_string(),
+            line: i + 1,
+            rule: "D1".to_string(),
+            msg: format!(
+                "wall-clock read `{pat}` in model-time code; move it to a metric site or \
+                 annotate `// lint: allow(wall-clock) <reason>`{}",
+                reason_note(ann)
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// D2 — map-iteration determinism
+
+/// Collect identifiers bound to `HashMap`/`HashSet` in this file: struct
+/// fields and let/param bindings (`name: HashMap<…>`, `name: &'a mut
+/// HashSet<…>`, `name = HashMap::new()` …).
+fn hash_bindings(file: &SrcFile) -> BTreeSet<String> {
+    const TYPE_NEEDLES: &[&str] = &[
+        "HashMap<",
+        "HashSet<",
+        "HashMap::new",
+        "HashSet::new",
+        "HashMap::with_capacity",
+        "HashSet::with_capacity",
+    ];
+    let mut names = BTreeSet::new();
+    for line in &file.lines {
+        for needle in TYPE_NEEDLES {
+            for p in word_positions(&line.code, needle) {
+                if let Some(name) = binding_name(&line.code[..p]) {
+                    names.insert(name);
+                }
+            }
+        }
+    }
+    names
+}
+
+/// Given the text before a `HashMap<`/`HashSet<` occurrence, extract the
+/// identifier it is bound to: `name : [&]['a][mut] Hash…` or `name =
+/// Hash…`. Returns `None` for type positions that bind nothing (returns,
+/// generics, nested type arguments).
+fn binding_name(before: &str) -> Option<String> {
+    let mut v: Vec<u8> = before.trim_end().as_bytes().to_vec();
+    let pop_ws = |v: &mut Vec<u8>| {
+        while v.last().is_some_and(|b| b.is_ascii_whitespace()) {
+            v.pop();
+        }
+    };
+    let ends_with_word = |v: &[u8], w: &str| {
+        v.len() >= w.len()
+            && &v[v.len() - w.len()..] == w.as_bytes()
+            && (v.len() == w.len() || !is_ident_byte(v[v.len() - w.len() - 1]))
+    };
+    if ends_with_word(&v, "mut") {
+        v.truncate(v.len() - 3);
+        pop_ws(&mut v);
+    }
+    // a lifetime like `'a`
+    let mut k = 0usize;
+    while k < v.len() && is_ident_byte(v[v.len() - 1 - k]) {
+        k += 1;
+    }
+    if k > 0 && v.len() > k && v[v.len() - 1 - k] == b'\'' {
+        v.truncate(v.len() - k - 1);
+        pop_ws(&mut v);
+    }
+    while v.last() == Some(&b'&') {
+        v.pop();
+    }
+    pop_ws(&mut v);
+    match v.last() {
+        Some(&b':') | Some(&b'=') => {
+            // `::` would be a path segment, not a binding
+            if v.last() == Some(&b':') && v.len() >= 2 && v[v.len() - 2] == b':' {
+                return None;
+            }
+            v.pop();
+        }
+        _ => return None,
+    }
+    pop_ws(&mut v);
+    let mut k = 0usize;
+    while k < v.len() && is_ident_byte(v[v.len() - 1 - k]) {
+        k += 1;
+    }
+    if k == 0 || v[v.len() - k].is_ascii_digit() {
+        return None;
+    }
+    String::from_utf8(v[v.len() - k..].to_vec()).ok()
+}
+
+/// Does the text before an occurrence end in a `for … in [&][mut]` head?
+/// A dotted ownership path (`for x in &mut self.map`) is stripped first.
+fn preceded_by_in(before: &str) -> bool {
+    let mut v: Vec<u8> = before.trim_end().as_bytes().to_vec();
+    let pop_ws = |v: &mut Vec<u8>| {
+        while v.last().is_some_and(|b| b.is_ascii_whitespace()) {
+            v.pop();
+        }
+    };
+    while v.last() == Some(&b'.') {
+        v.pop();
+        while v.last().is_some_and(|&b| is_ident_byte(b)) {
+            v.pop();
+        }
+    }
+    pop_ws(&mut v);
+    if v.ends_with(b"mut") && v.len() > 3 && !is_ident_byte(v[v.len() - 4]) {
+        v.truncate(v.len() - 3);
+        pop_ws(&mut v);
+    }
+    while v.last() == Some(&b'&') {
+        v.pop();
+    }
+    pop_ws(&mut v);
+    v.ends_with(b"in") && (v.len() == 2 || !is_ident_byte(v[v.len() - 3]))
+}
+
+fn rule_d2(path: &str, file: &SrcFile, out: &mut Vec<Finding>) {
+    if !path_in(path, D2_SCOPE) {
+        return;
+    }
+    let names = hash_bindings(file);
+    if names.is_empty() {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        if file.is_test_line(i + 1) {
+            continue;
+        }
+        let Some(name) = flagged_receiver(file, i, &names) else { continue };
+        // a sorted sink right at the use site restores determinism
+        let sink_window = file.lines[i..(i + 3).min(file.lines.len())]
+            .iter()
+            .any(|l| D2_SORTED_SINKS.iter().any(|s| l.code.contains(s)));
+        if sink_window {
+            continue;
+        }
+        let ann = annotation(file, i, "map-iter");
+        if ann == Annotation::WithReason {
+            continue;
+        }
+        out.push(Finding {
+            path: path.to_string(),
+            line: i + 1,
+            rule: "D2".to_string(),
+            msg: format!(
+                "iteration over hash-ordered `{name}` in a modeled-number module; \
+                 collect-and-sort or annotate `// lint: allow(map-iter) <reason>`{}",
+                reason_note(ann)
+            ),
+        });
+    }
+}
+
+/// First hash-typed name on line `i` used in an iteration form, if any.
+fn flagged_receiver(file: &SrcFile, i: usize, names: &BTreeSet<String>) -> Option<String> {
+    let code = &file.lines[i].code;
+    for name in names {
+        for p in word_positions(code, name) {
+            let after = &code[p + name.len()..];
+            if D2_ITER_SUFFIXES.iter().any(|s| after.starts_with(s)) {
+                return Some(name.clone());
+            }
+            // rustfmt wraps long chains (`self.blocks` / `.values()` on
+            // the next line): when only whitespace follows the receiver,
+            // check the head of the following line too
+            if after.trim().is_empty() {
+                if let Some(next) = file.lines.get(i + 1) {
+                    let head = next.code.trim_start();
+                    if D2_ITER_SUFFIXES.iter().any(|s| head.starts_with(s)) {
+                        return Some(name.clone());
+                    }
+                }
+            }
+            if preceded_by_in(&code[..p]) {
+                return Some(name.clone());
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// U1 — unsafe hygiene
+
+fn rule_u1(path: &str, file: &SrcFile, out: &mut Vec<Finding>) {
+    for (i, line) in file.lines.iter().enumerate() {
+        if !contains_word(&line.code, "unsafe") {
+            continue;
+        }
+        if has_safety_comment(file, i) {
+            continue;
+        }
+        out.push(Finding {
+            path: path.to_string(),
+            line: i + 1,
+            rule: "U1".to_string(),
+            msg: "`unsafe` without an immediately preceding `// SAFETY:` comment \
+                  stating the invariant"
+                .to_string(),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// P1 — panic policy
+
+fn rule_p1(path: &str, file: &SrcFile, out: &mut Vec<Finding>) {
+    if !path_in(path, P1_SCOPE) {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        if file.is_test_line(i + 1) {
+            continue;
+        }
+        let Some(pat) = P1_PATTERNS.iter().find(|p| line.code.contains(*p)) else {
+            continue;
+        };
+        let ann = annotation(file, i, "panic");
+        if ann == Annotation::WithReason {
+            continue;
+        }
+        let shown = pat.trim_start_matches('.').trim_end_matches('(');
+        out.push(Finding {
+            path: path.to_string(),
+            line: i + 1,
+            rule: "P1".to_string(),
+            msg: format!(
+                "`{shown}` in device/model code; return an error completion or \
+                 annotate `// lint: allow(panic) <invariant>`{}",
+                reason_note(ann)
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A1 — zero-alloc contract
+
+fn rule_a1(path: &str, file: &SrcFile, out: &mut Vec<Finding>) {
+    for idx in 0..file.lines.len() {
+        if !comment_payload(&file.lines[idx].comment).starts_with("lint: zero-alloc") {
+            continue;
+        }
+        // the annotated fn: first `fn` within the next few lines
+        let fn_line = (idx..(idx + 10).min(file.lines.len()))
+            .find(|&j| contains_word(&file.lines[j].code, "fn"));
+        let Some(fn_line) = fn_line else {
+            out.push(Finding {
+                path: path.to_string(),
+                line: idx + 1,
+                rule: "A1".to_string(),
+                msg: "dangling `// lint: zero-alloc` annotation: no fn follows".to_string(),
+            });
+            continue;
+        };
+        let name = fn_name(&file.lines[fn_line].code);
+        let Some((open, close)) = body_span(file, fn_line) else {
+            out.push(Finding {
+                path: path.to_string(),
+                line: fn_line + 1,
+                rule: "A1".to_string(),
+                msg: format!("`// lint: zero-alloc` fn `{name}` has no body to scan"),
+            });
+            continue;
+        };
+        for j in open..=close {
+            let code = &file.lines[j].code;
+            let Some(pat) = A1_PATTERNS.iter().find(|p| code.contains(*p)) else {
+                continue;
+            };
+            let ann = annotation(file, j, "alloc");
+            if ann == Annotation::WithReason {
+                continue;
+            }
+            out.push(Finding {
+                path: path.to_string(),
+                line: j + 1,
+                rule: "A1".to_string(),
+                msg: format!(
+                    "allocating call `{pat}` inside `// lint: zero-alloc` fn `{name}`; \
+                     reuse scratch or annotate `// lint: allow(alloc) <reason>`{}",
+                    reason_note(ann)
+                ),
+            });
+        }
+    }
+}
+
+/// Name of the fn declared on `code` (best effort, for messages).
+fn fn_name(code: &str) -> String {
+    for p in word_positions(code, "fn") {
+        let rest = code[p + 2..].trim_start();
+        let name: String = rest.chars().take_while(|&c| is_ident_byte(c as u8)).collect();
+        if !name.is_empty() {
+            return name;
+        }
+    }
+    "?".to_string()
+}
+
+/// `(open_line, close_line)` (0-based) of the brace-balanced body starting
+/// at the first `{` at or after `fn_line`.
+fn body_span(file: &SrcFile, fn_line: usize) -> Option<(usize, usize)> {
+    let mut open = None;
+    for j in fn_line..(fn_line + 10).min(file.lines.len()) {
+        if file.lines[j].code.contains('{') {
+            open = Some(j);
+            break;
+        }
+        // a `;`-terminated signature has no body (trait method decl)
+        if file.lines[j].code.contains(';') {
+            return None;
+        }
+    }
+    let open = open?;
+    let mut depth = 0i64;
+    for j in open..file.lines.len() {
+        for c in file.lines[j].code.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if depth <= 0 {
+            return Some((open, j));
+        }
+    }
+    Some((open, file.lines.len() - 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(path: &str, src: &str) -> Vec<Finding> {
+        lint_source(path, src, None)
+    }
+
+    fn rules_of(fs: &[Finding]) -> Vec<&str> {
+        fs.iter().map(|f| f.rule.as_str()).collect()
+    }
+
+    #[test]
+    fn d1_flags_and_allows() {
+        let src = "fn t() -> Instant { Instant::now() }\n";
+        assert_eq!(rules_of(&run("rust/src/sim/clock.rs", src)), ["D1"]);
+        // annotation with a reason suppresses
+        let src = "// lint: allow(wall-clock) host-side progress log only\n\
+                   fn t() -> Instant { Instant::now() }\n";
+        assert!(run("rust/src/sim/clock.rs", src).is_empty());
+        // missing reason does not
+        let src = "// lint: allow(wall-clock)\nfn t() -> Instant { Instant::now() }\n";
+        let fs = run("rust/src/sim/clock.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains("missing a reason"), "{}", fs[0].msg);
+        // allow-listed metric file and out-of-scope bench are exempt
+        assert!(run("rust/src/coordinator/metrics.rs", "Instant::now()\n").is_empty());
+        assert!(run("rust/benches/perf.rs", "Instant::now()\n").is_empty());
+    }
+
+    #[test]
+    fn d1_ignores_strings_comments_tests() {
+        let src = "// Instant::now in prose\nconst S: &str = \"Instant::now\";\n\
+                   #[cfg(test)]\nmod tests {\n    fn t() { let _ = Instant::now(); }\n}\n";
+        assert!(run("rust/src/sim/clock.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d2_flags_iteration_forms() {
+        let src = "use std::collections::HashMap;\n\
+                   struct S { map: HashMap<u64, u64> }\n\
+                   fn f(s: &S) -> u64 { s.map.values().sum() }\n\
+                   fn g(s: &S) { for (k, _) in &s.map { drop(k); } }\n";
+        let fs = run("rust/src/cxl/x.rs", src);
+        assert_eq!(rules_of(&fs), ["D2", "D2"]);
+        assert_eq!(fs[0].line, 3);
+        assert_eq!(fs[1].line, 4);
+    }
+
+    #[test]
+    fn d2_sees_through_rustfmt_chain_wrap() {
+        let src = "struct S { blocks: HashMap<u64, u64> }\n\
+                   fn f(s: &S) -> u64 {\n\
+                       s.blocks\n\
+                           .values()\n\
+                           .sum()\n\
+                   }\n";
+        let fs = run("rust/src/cxl/x.rs", src);
+        assert_eq!(rules_of(&fs), ["D2"]);
+        assert_eq!(fs[0].line, 3);
+    }
+
+    #[test]
+    fn d2_sorted_sink_and_annotation_suppress() {
+        let src = "struct S { map: HashMap<u64, u64> }\n\
+                   fn f(s: &S) -> Vec<u64> {\n\
+                       let mut v: Vec<u64> = s.map.keys().copied().collect();\n\
+                       v.sort_unstable();\n\
+                       v\n\
+                   }\n\
+                   fn g(s: &S) -> usize {\n\
+                       // lint: allow(map-iter) count is order-independent\n\
+                       s.map.iter().count()\n\
+                   }\n";
+        assert!(run("rust/src/cxl/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d2_scope_and_vec_receivers_exempt() {
+        let src = "struct S { map: HashMap<u64, u64>, v: Vec<u64> }\n\
+                   fn f(s: &S) -> u64 { s.v.iter().sum() }\n";
+        assert!(run("rust/src/cxl/x.rs", src).is_empty());
+        let src = "struct S { map: HashMap<u64, u64> }\n\
+                   fn f(s: &S) -> u64 { s.map.values().sum() }\n";
+        assert!(run("rust/src/gen/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn u1_requires_safety_comment() {
+        let src = "fn f(p: *mut u8) { unsafe { p.write(0) } }\n";
+        assert_eq!(rules_of(&run("rust/src/codec/x.rs", src)), ["U1"]);
+        let src = "// SAFETY: p valid for writes by contract\n\
+                   fn f(p: *mut u8) { unsafe { p.write(0) } }\n";
+        assert!(run("rust/src/codec/x.rs", src).is_empty());
+        // doc `# Safety` section on an unsafe fn counts
+        let src = "/// # Safety\n/// caller upholds x\npub unsafe fn g() {}\n";
+        assert!(run("rust/src/codec/x.rs", src).is_empty());
+        // the word in a comment or string is not a trigger
+        let src = "// unsafe is discussed here\nlet s = \"unsafe\";\n";
+        assert!(run("rust/src/codec/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn p1_policy_and_exemptions() {
+        let src = "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n";
+        assert_eq!(rules_of(&run("rust/src/cxl/x.rs", src)), ["P1"]);
+        assert!(run("rust/src/codec/x.rs", src).is_empty(), "out of P1 scope");
+        let src = "fn f(x: Option<u8>) -> u8 {\n\
+                       // lint: allow(panic) invariant: caller checked is_some\n\
+                       x.unwrap()\n\
+                   }\n";
+        assert!(run("rust/src/cxl/x.rs", src).is_empty());
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { None::<u8>.unwrap(); }\n}\n";
+        assert!(run("rust/src/cxl/x.rs", src).is_empty());
+        // unwrap_or / expect_err do not match
+        let src = "fn f(x: Option<u8>) -> u8 { x.unwrap_or(0) }\n";
+        assert!(run("rust/src/cxl/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn a1_scans_annotated_bodies() {
+        let src = "// lint: zero-alloc\n\
+                   fn hot(out: &mut Vec<u8>) {\n\
+                       out.clear();\n\
+                       let v = Vec::new();\n\
+                       drop(v);\n\
+                   }\n\
+                   fn cold() -> Vec<u8> { Vec::new() }\n";
+        let fs = run("rust/src/codec/x.rs", src);
+        assert_eq!(rules_of(&fs), ["A1"]);
+        assert_eq!(fs[0].line, 4);
+        assert!(fs[0].msg.contains("hot"));
+    }
+
+    #[test]
+    fn a1_clean_body_and_inline_allow() {
+        let src = "// lint: zero-alloc\n\
+                   fn hot(out: &mut Vec<u8>, src: &[u8]) {\n\
+                       out.clear();\n\
+                       out.extend_from_slice(src);\n\
+                   }\n";
+        assert!(run("rust/src/codec/x.rs", src).is_empty());
+        let src = "// lint: zero-alloc\n\
+                   fn hot(n: usize) {\n\
+                       // lint: allow(alloc) error path only, never on success\n\
+                       let msg = format!(\"bad {n}\");\n\
+                       drop(msg);\n\
+                   }\n";
+        assert!(run("rust/src/codec/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn a1_dangling_annotation() {
+        let src = "// lint: zero-alloc\nconst X: u8 = 1;\n";
+        let fs = run("rust/src/codec/x.rs", src);
+        assert_eq!(rules_of(&fs), ["A1"]);
+        assert!(fs[0].msg.contains("dangling"));
+    }
+
+    #[test]
+    fn only_filter_restricts_rules() {
+        let src = "fn f(x: Option<u8>) -> u8 { unsafe { x.unwrap() } }\n";
+        let only: BTreeSet<String> = ["P1".to_string()].into_iter().collect();
+        let fs = lint_source("rust/src/cxl/x.rs", src, Some(&only));
+        assert_eq!(rules_of(&fs), ["P1"]);
+    }
+
+    #[test]
+    fn binding_name_forms() {
+        assert_eq!(binding_name("    map: ").as_deref(), Some("map"));
+        assert_eq!(binding_name("let mut routes: ").as_deref(), Some("routes"));
+        assert_eq!(binding_name("fn f(blocks: &'a ").as_deref(), Some("blocks"));
+        assert_eq!(binding_name("fn f(m: &'a mut ").as_deref(), Some("m"));
+        assert_eq!(binding_name("let planned = ").as_deref(), Some("planned"));
+        assert_eq!(binding_name("fn f() -> "), None);
+        assert_eq!(binding_name("Vec<u8>, "), None);
+        assert_eq!(binding_name("x: Wrapper<"), None);
+    }
+}

@@ -1,0 +1,78 @@
+//! Deterministic source-tree walker.
+//!
+//! Collects every `.rs` file under the lint roots, as repo-relative
+//! forward-slash paths in sorted order — the walk order is part of the
+//! tool's output contract (reports and baselines diff cleanly across
+//! machines and filesystems).
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Directories (relative to the repo root) the linter walks.
+pub const WALK_ROOTS: &[&str] =
+    &["rust/src", "rust/benches", "rust/tests", "examples", "vendor", "tools"];
+
+/// Directory names skipped wherever they appear: build output, lint
+/// fixtures (intentionally-bad snippets), VCS metadata.
+const EXCLUDED_DIRS: &[&str] = &["target", "fixtures", ".git"];
+
+/// All lintable sources under `root`, as sorted repo-relative paths.
+pub fn rust_sources(root: &Path) -> io::Result<Vec<String>> {
+    let mut files = Vec::new();
+    for r in WALK_ROOTS {
+        let dir = root.join(r);
+        if dir.is_dir() {
+            collect(&dir, &mut files)?;
+        }
+    }
+    let mut rels: Vec<String> = files
+        .iter()
+        .filter_map(|p| p.strip_prefix(root).ok())
+        .map(rel_str)
+        .collect();
+    rels.sort();
+    rels.dedup();
+    Ok(rels)
+}
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if p.is_dir() {
+            if !EXCLUDED_DIRS.contains(&name) {
+                collect(&p, out)?;
+            }
+        } else if name.ends_with(".rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Render a relative path with forward slashes regardless of platform.
+fn rel_str(p: &Path) -> String {
+    let parts: Vec<String> =
+        p.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_str_joins_with_forward_slashes() {
+        let p = Path::new("rust").join("src").join("lib.rs");
+        assert_eq!(rel_str(&p), "rust/src/lib.rs");
+    }
+
+    #[test]
+    fn fixtures_and_target_are_excluded() {
+        assert!(EXCLUDED_DIRS.contains(&"fixtures"));
+        assert!(EXCLUDED_DIRS.contains(&"target"));
+    }
+}

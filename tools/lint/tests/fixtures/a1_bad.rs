@@ -1,0 +1,7 @@
+//! A1 known-bad: allocation inside a zero-alloc decode path.
+
+// lint: zero-alloc
+pub fn decode_into(src: &[u8], out: &mut [u8]) {
+    let tmp: Vec<u8> = src.to_vec(); // BAD: allocates per call
+    out[..tmp.len()].copy_from_slice(&tmp);
+}

@@ -1,0 +1,16 @@
+//! A1 known-good: scratch reuse keeps the hot path allocation-free.
+
+// lint: zero-alloc
+pub fn decode_into(src: &[u8], out: &mut [u8]) {
+    let n = src.len().min(out.len());
+    out[..n].copy_from_slice(&src[..n]);
+}
+
+// lint: zero-alloc
+pub fn checked(src: &[u16]) -> Result<(), String> {
+    if src.is_empty() {
+        // lint: allow(alloc) error path only, never taken on success
+        return Err(format!("empty input of {} words", src.len()));
+    }
+    Ok(())
+}

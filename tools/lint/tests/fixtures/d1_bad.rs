@@ -1,0 +1,7 @@
+//! D1 known-bad: wall-clock read in model-time code.
+use std::time::Instant;
+
+pub fn model_step() -> f64 {
+    let t0 = Instant::now(); // BAD: wall clock in a modeled path
+    t0.elapsed().as_secs_f64()
+}

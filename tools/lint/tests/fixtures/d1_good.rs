@@ -1,0 +1,7 @@
+//! D1 known-good: annotated wall-clock metric site.
+use std::time::Instant;
+
+pub fn wall_metric() -> Instant {
+    // lint: allow(wall-clock) host-side throughput metric only
+    Instant::now()
+}

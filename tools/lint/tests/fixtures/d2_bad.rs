@@ -1,0 +1,18 @@
+//! D2 known-bad: hash iteration order feeding a modeled number.
+use std::collections::HashMap;
+
+pub struct Stats {
+    counts: HashMap<u64, u64>,
+}
+
+impl Stats {
+    pub fn first_key(&self) -> Option<u64> {
+        self.counts.keys().next().copied() // BAD: order-dependent
+    }
+
+    pub fn clear_all(&mut self) {
+        for (_k, v) in &mut self.counts {
+            *v = 0; // BAD: mutation order observable through side effects
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! D2 known-good: sorted sink or annotated order-independent fold.
+use std::collections::HashMap;
+
+pub struct Stats {
+    counts: HashMap<u64, u64>,
+}
+
+impl Stats {
+    pub fn sorted_keys(&self) -> Vec<u64> {
+        let mut keys: Vec<u64> = self.counts.keys().copied().collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    pub fn total(&self) -> u64 {
+        // lint: allow(map-iter) commutative sum over values
+        self.counts.values().sum()
+    }
+}

@@ -1,0 +1,8 @@
+//! P1 known-bad: panics in device completion plumbing.
+pub fn complete(result: Option<u32>) -> u32 {
+    result.unwrap() // BAD: device paths must not panic
+}
+
+pub fn widen(v: &[u8]) -> [u8; 4] {
+    v.try_into().expect("exactly four bytes")
+}

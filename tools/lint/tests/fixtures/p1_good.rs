@@ -1,0 +1,9 @@
+//! P1 known-good: error completions and documented invariants.
+pub fn complete(result: Option<u32>) -> Result<u32, String> {
+    result.ok_or_else(|| "missing completion".to_string())
+}
+
+pub fn head(v: &[u8]) -> u8 {
+    // lint: allow(panic) invariant: caller checked `v` is non-empty
+    v.first().copied().unwrap()
+}

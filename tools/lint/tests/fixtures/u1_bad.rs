@@ -1,0 +1,4 @@
+//! U1 known-bad: undocumented unsafe.
+pub fn zero(p: *mut u8) {
+    unsafe { p.write(0) } // BAD: no safety argument
+}

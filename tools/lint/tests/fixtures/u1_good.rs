@@ -1,0 +1,14 @@
+//! U1 known-good: every unsafe carries its invariant.
+pub fn zero(p: *mut u8, n: usize) {
+    for i in 0..n {
+        // SAFETY: caller guarantees `p..p+n` is valid for writes
+        unsafe { p.add(i).write(0) }
+    }
+}
+
+/// # Safety
+/// `p` must be valid for reads.
+pub unsafe fn read(p: *const u8) -> u8 {
+    // SAFETY: contract forwarded from this fn's `# Safety` section
+    unsafe { p.read() }
+}

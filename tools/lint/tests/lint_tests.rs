@@ -1,0 +1,105 @@
+//! Fixture coverage for every rule, the self-lint gate, the baseline
+//! round-trip, and the whole-repo gate against the committed baseline.
+
+use pallas_lint::rules::Finding;
+use pallas_lint::{baseline, lint_repo, lint_source, walk};
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    // tools/lint/ -> tools/ -> repo root
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..").canonicalize().unwrap()
+}
+
+fn lines_and_rules(fs: &[Finding]) -> Vec<(usize, &str)> {
+    fs.iter().map(|f| (f.line, f.rule.as_str())).collect()
+}
+
+#[test]
+fn d1_fixture_coverage() {
+    let bad = lint_source("rust/src/sim/fixture.rs", include_str!("fixtures/d1_bad.rs"), None);
+    assert_eq!(lines_and_rules(&bad), [(5, "D1")]);
+    let good = lint_source("rust/src/sim/fixture.rs", include_str!("fixtures/d1_good.rs"), None);
+    assert!(good.is_empty(), "{good:?}");
+}
+
+#[test]
+fn d2_fixture_coverage() {
+    let bad = lint_source("rust/src/cxl/fixture.rs", include_str!("fixtures/d2_bad.rs"), None);
+    assert_eq!(lines_and_rules(&bad), [(10, "D2"), (14, "D2")]);
+    let good = lint_source("rust/src/cxl/fixture.rs", include_str!("fixtures/d2_good.rs"), None);
+    assert!(good.is_empty(), "{good:?}");
+}
+
+#[test]
+fn u1_fixture_coverage() {
+    let bad = lint_source("rust/src/codec/fixture.rs", include_str!("fixtures/u1_bad.rs"), None);
+    assert_eq!(lines_and_rules(&bad), [(3, "U1")]);
+    let good = lint_source("rust/src/codec/fixture.rs", include_str!("fixtures/u1_good.rs"), None);
+    assert!(good.is_empty(), "{good:?}");
+}
+
+#[test]
+fn p1_fixture_coverage() {
+    let bad = lint_source("rust/src/cxl/fixture.rs", include_str!("fixtures/p1_bad.rs"), None);
+    assert_eq!(lines_and_rules(&bad), [(3, "P1"), (7, "P1")]);
+    let good = lint_source("rust/src/cxl/fixture.rs", include_str!("fixtures/p1_good.rs"), None);
+    assert!(good.is_empty(), "{good:?}");
+}
+
+#[test]
+fn a1_fixture_coverage() {
+    let bad = lint_source("rust/src/codec/fixture.rs", include_str!("fixtures/a1_bad.rs"), None);
+    assert_eq!(lines_and_rules(&bad), [(5, "A1")]);
+    let good = lint_source("rust/src/codec/fixture.rs", include_str!("fixtures/a1_good.rs"), None);
+    assert!(good.is_empty(), "{good:?}");
+}
+
+#[test]
+fn fixture_paths_out_of_scope_stay_silent() {
+    // the same bad snippets lint clean outside their rule's scope
+    let p1 = lint_source("rust/src/codec/fixture.rs", include_str!("fixtures/p1_bad.rs"), None);
+    assert!(p1.is_empty(), "{p1:?}");
+    let d1 = lint_source("rust/benches/fixture.rs", include_str!("fixtures/d1_bad.rs"), None);
+    assert!(d1.is_empty(), "{d1:?}");
+}
+
+#[test]
+fn lint_is_clean_on_its_own_source() {
+    let root = repo_root();
+    let mut checked = 0usize;
+    for rel in walk::rust_sources(&root).unwrap() {
+        if !rel.starts_with("tools/lint/") {
+            continue;
+        }
+        let src = std::fs::read_to_string(root.join(&rel)).unwrap();
+        let fs = lint_source(&rel, &src, None);
+        assert!(fs.is_empty(), "{rel}: {fs:?}");
+        checked += 1;
+    }
+    assert!(checked >= 6, "walked only {checked} lint sources");
+}
+
+#[test]
+fn baseline_round_trip_over_real_findings() {
+    // `--update-baseline` then a clean re-run, through the library API:
+    // render whatever the repo currently yields, reload it, diff clean
+    let root = repo_root();
+    let findings = lint_repo(&root, None).unwrap();
+    let tmp = std::env::temp_dir().join(format!("pallas-lint-baseline-{}.txt", std::process::id()));
+    std::fs::write(&tmp, baseline::render(&findings)).unwrap();
+    let entries = baseline::load(&tmp).unwrap();
+    std::fs::remove_file(&tmp).unwrap();
+    let diff = baseline::diff(&findings, &entries);
+    assert!(diff.new.is_empty(), "round-trip left new findings: {:?}", diff.new);
+    assert!(diff.stale.is_empty(), "round-trip left stale entries: {:?}", diff.stale);
+}
+
+#[test]
+fn repo_is_clean_against_committed_baseline() {
+    let root = repo_root();
+    let findings = lint_repo(&root, None).unwrap();
+    let entries = baseline::load(&root.join("tools").join("lint").join("baseline.txt")).unwrap();
+    let diff = baseline::diff(&findings, &entries);
+    let listing: Vec<String> = diff.new.iter().map(|f| f.to_string()).collect();
+    assert!(diff.new.is_empty(), "new lint findings:\n{}", listing.join("\n"));
+}
