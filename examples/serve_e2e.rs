@@ -87,6 +87,16 @@ fn run<B: ModelBackend>(backend: B, args: &Args, backend_name: &str) -> anyhow::
     let hbm_kv = args.get_u64("hbm-kv", (dims.kv_entry_len() * 2 * 20) as u64);
     let overlap = args.flag("overlap");
     let nmc = args.flag("nmc");
+    // --faults SEED: run the whole workload under a seeded chaos plan
+    // (bit flips, metadata corruption, transients, stalls — all
+    // repairable: guards + retries are on, docs/FAULTS.md). The serving
+    // results must be bit-identical to a fault-free run.
+    let faults = match args.get("faults") {
+        Some(s) => Some(trace_cxl::cxl::FaultPlan::chaos(
+            s.parse::<u64>().map_err(|_| anyhow::anyhow!("--faults takes a seed"))?,
+        )),
+        None => None,
+    };
     let mut engine = Engine::new(
         backend,
         EngineConfig {
@@ -100,6 +110,7 @@ fn run<B: ModelBackend>(backend: B, args: &Args, backend_name: &str) -> anyhow::
             compute_ns,
             sched,
             nmc,
+            faults,
             ..Default::default()
         },
     );
@@ -116,6 +127,7 @@ fn run<B: ModelBackend>(backend: B, args: &Args, backend_name: &str) -> anyhow::
         meta.scenario = scenario.clone();
         meta.gen_seed = seed;
         meta.nmc = nmc;
+        meta.faults = faults;
         engine.set_trace_sink(TraceWriter::new(&meta.to_json()));
     }
 
@@ -284,6 +296,27 @@ fn run<B: ModelBackend>(backend: B, args: &Args, backend_name: &str) -> anyhow::
             human_bytes(d.nmc_bytes_scanned as f64)
         );
     }
+    if faults.is_some() {
+        let d = engine.device.stats();
+        println!(
+            "chaos: {} injected, {} detected, {} repaired, {} retried, {} failed over; \
+             engine failovers {}, requeues {}, pages degraded {}",
+            d.faults_injected,
+            d.faults_detected,
+            d.faults_repaired,
+            d.faults_retried,
+            d.faults_failed_over,
+            m.fault_failovers,
+            m.fault_requeues,
+            m.pages_degraded
+        );
+    }
+    if let Some(path) = args.get("faults-report") {
+        let json = m.to_json(&engine.device.stats());
+        let report = json.get("faults").cloned().unwrap_or(trace_cxl::util::json::Json::Null);
+        std::fs::write(path, report.to_string())?;
+        println!("faults report -> {path}");
+    }
     if args.flag("json") {
         println!("\n-- metrics.json --\n{}", m.to_json(&engine.device.stats()));
     }
@@ -323,6 +356,13 @@ fn run<B: ModelBackend>(backend: B, args: &Args, backend_name: &str) -> anyhow::
     }
     anyhow::ensure!(m.requests_finished as usize == n_requests, "all requests must finish");
     anyhow::ensure!(m.pages_spilled > 0, "workload must exercise the CXL spill path");
+    if faults.is_some() {
+        // the chaos gate: every injected fault is repairable by design,
+        // so a degraded request or an unrecoverable block is a bug
+        let d = engine.device.stats();
+        anyhow::ensure!(d.faults_unrecoverable == 0, "chaos plan must stay repairable");
+        anyhow::ensure!(m.requests_degraded == 0, "no request may finish degraded");
+    }
     anyhow::ensure!(lifetime_ratio > 1.0, "model KV must compress");
     anyhow::ensure!(
         engine.device.len() == 0,

@@ -99,7 +99,8 @@ use super::request::{
 use super::sched::{QueuedView, SchedKind, SchedView, SchedulerPolicy, SlotView};
 use crate::codec::CodecPolicy;
 use crate::cxl::{
-    CxlDevice, Design, MemDevice, Payload, ShardedDevice, SubmissionQueue, Transaction, TxnId,
+    CxlDevice, Design, FaultError, MemDevice, Payload, ShardedDevice, SubmissionQueue,
+    Transaction, TxnId,
 };
 use crate::formats::{bf16_from_f32, bf16_to_f32};
 use crate::runtime::ModelBackend;
@@ -170,6 +171,13 @@ pub struct EngineConfig {
     /// Fraction of a page's [`PAGE_TOKENS`] rows an offloaded fetch asks
     /// the device to return (rounded up, clamped to `1..=PAGE_TOKENS`).
     pub nmc_topk_frac: f64,
+    /// Deterministic fault plan installed on the device tier at
+    /// construction (docs/FAULTS.md). `None` (default) — and
+    /// `Some(FaultPlan::disabled(..))` — are bit-identical to the
+    /// fault-free engine. With a plan whose guards + retries are on, the
+    /// engine recovers device faults through failover → requeue →
+    /// degraded serving instead of failing the step.
+    pub faults: Option<crate::cxl::FaultPlan>,
 }
 
 impl Default for EngineConfig {
@@ -191,6 +199,7 @@ impl Default for EngineConfig {
             codec_lanes: 1,
             nmc: false,
             nmc_topk_frac: 0.125,
+            faults: None,
         }
     }
 }
@@ -331,7 +340,34 @@ pub struct Engine<B: ModelBackend> {
     pub metrics: Metrics,
     responses: Vec<Response>,
     kv_entry_len: usize,
+    /// Pages served in degraded mode (rung 4 of the recovery ladder,
+    /// docs/FAULTS.md), keyed by `(seq, page)`. Skipped by
+    /// [`Self::fetch_plan`] — the host copy is authoritative and the
+    /// device block is known-bad.
+    degraded_pages: HashSet<(u64, usize)>,
+    /// Consecutive failover count per `(seq, page)`; a page that keeps
+    /// faulting after [`FAILOVER_LIMIT`] heal attempts is degraded
+    /// instead of failed over forever.
+    fault_repeat: HashMap<(u64, usize), u32>,
+    /// Snapshot of the device fault counters at the end of the previous
+    /// step; deltas become [`EngineEvent::FaultInjected`] /
+    /// [`EngineEvent::Retried`] / [`EngineEvent::Repaired`].
+    fault_cursor: FaultCursor,
 }
+
+/// End-of-step snapshot of the device-tier fault counters.
+#[derive(Clone, Copy, Default)]
+struct FaultCursor {
+    injected: u64,
+    retried: u64,
+    repaired: u64,
+    retry_delay_ns: f64,
+}
+
+/// A `(seq, page)` that faults unrecoverably more than this many times is
+/// degraded (rung 4) instead of endlessly re-healed — rewrites that do
+/// not stick mean the address itself is bad.
+const FAILOVER_LIMIT: u32 = 3;
 
 impl<B: ModelBackend> Engine<B> {
     pub fn new(backend: B, cfg: EngineConfig) -> Engine<B> {
@@ -355,6 +391,9 @@ impl<B: ModelBackend> Engine<B> {
             if cfg.codec_lanes > 1 {
                 d.set_codec_lanes(cfg.codec_lanes);
             }
+            if let Some(plan) = cfg.faults {
+                d.install_fault_plan(plan);
+            }
             Box::new(d)
         } else {
             let mut d = CxlDevice::new(cfg.design, cfg.codec);
@@ -362,6 +401,9 @@ impl<B: ModelBackend> Engine<B> {
             d.set_decode_cache(cfg.decode_cache_blocks);
             if cfg.codec_lanes > 1 {
                 d.set_codec_lanes(cfg.codec_lanes);
+            }
+            if let Some(plan) = cfg.faults {
+                d.install_fault_plan(plan);
             }
             Box::new(d)
         };
@@ -396,6 +438,9 @@ impl<B: ModelBackend> Engine<B> {
             nmc_pending_sel: (0.0, 0),
             metrics: Metrics::new(),
             responses: Vec::new(),
+            degraded_pages: HashSet::new(),
+            fault_repeat: HashMap::new(),
+            fault_cursor: FaultCursor::default(),
         }
     }
 
@@ -1124,8 +1169,17 @@ impl<B: ModelBackend> Engine<B> {
     /// pages must be read from the device and through which tier.
     /// `total_pages` sets the importance-ranking length — the prefetcher
     /// passes the *predicted next-step* page count so tier assignments
-    /// match what the next step's demand path will derive.
-    fn fetch_plan(&self, pages: &[(usize, Option<u64>)], total_pages: usize) -> Vec<FetchOp> {
+    /// match what the next step's demand path will derive. `seq` keys the
+    /// degraded-page skip set: a page already served in degraded mode
+    /// (docs/FAULTS.md rung 4) stays on the host copy. Both callers
+    /// (prefetch issue and demand gather) pass it, so the prefetch fence
+    /// stays exact.
+    fn fetch_plan(
+        &self,
+        seq: u64,
+        pages: &[(usize, Option<u64>)],
+        total_pages: usize,
+    ) -> Vec<FetchOp> {
         // importance: recency-weighted (newest hottest), page 0 coldest
         let imp: Vec<f64> = (0..total_pages).map(|k| (k + 1) as f64).collect();
         let tiers = self.cfg.policy.assign(&imp);
@@ -1135,6 +1189,9 @@ impl<B: ModelBackend> Engine<B> {
             let Some(addr) = cxl_addr else {
                 continue; // HBM-resident: already in the slot's work buffer
             };
+            if self.degraded_pages.contains(&(seq, *page)) {
+                continue; // degraded: the device block is known-bad
+            }
             let tier = tiers.get(k).copied().unwrap_or(PageTier::Bf16);
             if tier.view().is_none() {
                 continue; // dropped page: served from the work buffer
@@ -1307,7 +1364,7 @@ impl<B: ModelBackend> Engine<B> {
         for &i in active {
             let seq = self.slots[i].req.as_ref().expect("active slot has a request").id;
             let pages = self.seq_page_list(seq);
-            let plan = self.fetch_plan(&pages, pages.len());
+            let plan = self.fetch_plan(seq, &pages, pages.len());
             page_lists.insert(i, pages);
             // restore pages whose stale reduced-precision scatter would
             // otherwise leak into a step that no longer fetches them
@@ -1341,6 +1398,7 @@ impl<B: ModelBackend> Engine<B> {
         self.metrics.prefetch_stale += prefetched.len() as u64;
 
         if !sq.is_empty() {
+            let mut faulted: Vec<(usize, FetchOp)> = Vec::new();
             for c in self.device.drain_at(&mut sq, now) {
                 let (slot, op) = routes[&c.id];
                 fetch_ready = fetch_ready.max(c.ready_at_ns);
@@ -1355,12 +1413,24 @@ impl<B: ModelBackend> Engine<B> {
                     }
                 });
                 if let Err(e) = scattered {
+                    // typed fault-layer errors enter the recovery ladder
+                    // (docs/FAULTS.md) instead of failing the step — but
+                    // only when a fault plan is installed; anything else
+                    // is a real device/engine desync and must surface
+                    if self.cfg.faults.is_some() && e.downcast_ref::<FaultError>().is_some() {
+                        faulted.push((slot, op));
+                        continue;
+                    }
                     // hand the taken buffers back before surfacing the
                     // device error, or the next step would see empty
                     // attention buffers and panic
                     self.restore_work(kvs);
                     return Err(e);
                 }
+            }
+            if let Err(e) = self.recover_faulted(&mut kvs, faulted, now) {
+                self.restore_work(kvs);
+                return Err(e);
             }
         }
         // fold the NMC planner inputs only now — after every demand drain
@@ -1393,6 +1463,131 @@ impl<B: ModelBackend> Engine<B> {
                 self.slots[i].work = buf;
             }
         }
+    }
+
+    /// The engine half of the recovery ladder (docs/FAULTS.md). The
+    /// device layer already exhausted rung 1 (checksum repair and
+    /// retry/backoff); every op here terminally failed its read. In
+    /// order, per faulted page:
+    ///
+    /// * **failover** — re-issue the original spill write from the host's
+    ///   authoritative copy (healing the block and rebuilding its guard)
+    ///   and serve the page from the host this step;
+    /// * **requeue** — if the failover write itself faults (e.g. the
+    ///   shard is inside an outage window), preempt the request and
+    ///   requeue it at the head of the admission queue so it resumes once
+    ///   the shard recovers — the sequence is never dropped;
+    /// * **degrade** — if preemption also fails, or the same page keeps
+    ///   faulting past [`FAILOVER_LIMIT`] heals, serve it from the host
+    ///   copy at reduced KV precision, flag the request, and stop
+    ///   fetching that page (the device block is known-bad).
+    ///
+    /// Non-fault errors still propagate: they mean engine/device desync,
+    /// not injected damage.
+    fn recover_faulted(
+        &mut self,
+        kvs: &mut [Vec<f32>],
+        faulted: Vec<(usize, FetchOp)>,
+        now: f64,
+    ) -> Result<()> {
+        for (slot, op) in faulted {
+            let Some(req) = self.slots[slot].req.as_ref() else {
+                continue; // slot already preempted by an earlier rung
+            };
+            let seq = req.id;
+            let repeats = self.fault_repeat.entry((seq, op.page)).or_insert(0);
+            *repeats += 1;
+            if *repeats > FAILOVER_LIMIT {
+                // rewrites do not stick: the address itself is bad
+                self.degrade_page(&mut kvs[slot], slot, seq, &op, now);
+                continue;
+            }
+            match self.failover_fetch(&mut kvs[slot], slot, &op, now) {
+                Ok(()) => {
+                    self.metrics.fault_failovers += 1;
+                }
+                Err(e) if e.downcast_ref::<FaultError>().is_some() => {
+                    // the shard cannot take the heal write either (outage
+                    // or terminal transient): park the request
+                    match self.preempt_slot(slot) {
+                        Ok(req) => {
+                            self.queue.requeue_front(req);
+                            self.metrics.fault_requeues += 1;
+                            kvs[slot] = Vec::new();
+                        }
+                        Err(_) => {
+                            // preemption could not store either; the host
+                            // copy is still intact — serve degraded
+                            self.degrade_page(&mut kvs[slot], slot, seq, &op, now);
+                        }
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    /// Rung 2: the device copy of a spilled page is unreadable but the
+    /// host's copy is authoritative — re-issue the original spill write
+    /// (the block is rebuilt and re-guarded at the same address) and
+    /// serve the page from the host this step, full precision.
+    fn failover_fetch(
+        &mut self,
+        buf: &mut [f32],
+        slot: usize,
+        op: &FetchOp,
+        now: f64,
+    ) -> Result<()> {
+        let el = self.kv_entry_len;
+        let words = self.page_words(slot, op.page);
+        self.device.submit_one_at(
+            Transaction::WriteKv {
+                block_addr: op.addr,
+                words,
+                window: crate::bitplane::KvWindow::new(PAGE_TOKENS, el),
+            },
+            now,
+        )?;
+        let start = op.page * PAGE_TOKENS * el;
+        let end = (start + PAGE_TOKENS * el).min(self.slots[slot].kv.len());
+        buf[start..end].copy_from_slice(&self.slots[slot].kv[start..end]);
+        self.slots[slot].viewed.remove(&op.page);
+        Ok(())
+    }
+
+    /// Rung 4: serve the page from the host copy at reduced precision
+    /// (the drop-ladder's degraded tier: BF16 with the low 4 mantissa
+    /// bits cleared), flag the request, and retire the device block from
+    /// the fetch plan. The reduction is applied to the authoritative copy
+    /// so every later step — and any preemption spill — sees the same
+    /// values; serving stays deterministic.
+    fn degrade_page(
+        &mut self,
+        buf: &mut [f32],
+        slot: usize,
+        seq: u64,
+        op: &FetchOp,
+        now: f64,
+    ) {
+        let el = self.kv_entry_len;
+        let start = op.page * PAGE_TOKENS * el;
+        let end = (start + PAGE_TOKENS * el).min(self.slots[slot].kv.len());
+        for x in &mut self.slots[slot].kv[start..end] {
+            *x = bf16_to_f32(bf16_from_f32(*x) & !0xF);
+        }
+        buf[start..end].copy_from_slice(&self.slots[slot].kv[start..end]);
+        self.slots[slot].viewed.remove(&op.page);
+        if self.degraded_pages.insert((seq, op.page)) {
+            self.metrics.pages_degraded += 1;
+        }
+        if let Some(req) = self.slots[slot].req.as_mut() {
+            if !req.degraded {
+                req.degraded = true;
+                self.metrics.requests_degraded += 1;
+            }
+        }
+        self.push_event(EngineEvent::Degraded { seq, at_ns: now, page: op.page });
     }
 
     /// Predict step N+1's spilled-page fetch set and issue it at
@@ -1429,7 +1624,7 @@ impl<B: ModelBackend> Engine<B> {
             // gather and prefetch issue, so it is still current
             let pages = &page_lists[&i];
             let n_pages = pages.len() + usize::from(commits_page);
-            for op in self.fetch_plan(pages, n_pages) {
+            for op in self.fetch_plan(seq, pages, n_pages) {
                 routes.insert(sq.submit(self.txn_of(i, &op)), (i, seq, op));
             }
         }
@@ -1439,7 +1634,20 @@ impl<B: ModelBackend> Engine<B> {
         for c in self.device.drain_at(&mut sq, issue_ns) {
             let (slot, seq, op) = routes[&c.id];
             let ready_ns = c.ready_at_ns;
-            let (rows, words) = match c.result? {
+            let payload = match c.result {
+                Ok(p) => p,
+                // a faulted prefetch is simply not recorded: next step's
+                // demand fetch hits the same fault and runs the recovery
+                // ladder with the work buffers in hand
+                Err(e)
+                    if self.cfg.faults.is_some()
+                        && e.downcast_ref::<FaultError>().is_some() =>
+                {
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            let (rows, words) = match payload {
                 Payload::Rows { indices, words } => (Some(indices), words),
                 p => (None, p.into_words()?),
             };
@@ -1447,6 +1655,40 @@ impl<B: ModelBackend> Engine<B> {
             self.inflight.push(ready_ns, Prefetched { slot, seq, op, words, rows, ready_ns });
         }
         Ok(())
+    }
+
+    /// Fold the step's device-tier fault activity into the event log and
+    /// metrics: the delta of the cumulative device fault counters since
+    /// the previous step becomes [`EngineEvent::FaultInjected`] /
+    /// [`EngineEvent::Retried`] / [`EngineEvent::Repaired`] stamped at
+    /// this step's completion time. With no fault plan the counters never
+    /// move and this is a no-op.
+    fn emit_fault_events(&mut self, at_ns: f64) {
+        if self.cfg.faults.is_none() {
+            return;
+        }
+        let dev = self.device.stats();
+        let cur = FaultCursor {
+            injected: dev.faults_injected,
+            retried: dev.faults_retried,
+            repaired: dev.faults_repaired,
+            retry_delay_ns: dev.faults_retry_delay_ns,
+        };
+        let prev = std::mem::replace(&mut self.fault_cursor, cur);
+        let injected = cur.injected - prev.injected;
+        if injected > 0 {
+            self.push_event(EngineEvent::FaultInjected { at_ns, count: injected });
+        }
+        let retried = cur.retried - prev.retried;
+        if retried > 0 {
+            let delay_ns = cur.retry_delay_ns - prev.retry_delay_ns;
+            self.metrics.retry_delay_ns.push(delay_ns / retried as f64);
+            self.push_event(EngineEvent::Retried { at_ns, count: retried, delay_ns });
+        }
+        let repaired = cur.repaired - prev.repaired;
+        if repaired > 0 {
+            self.push_event(EngineEvent::Repaired { at_ns, count: repaired });
+        }
     }
 
     /// Run one engine step: release arrivals, apply the scheduler's plan
@@ -1487,6 +1729,15 @@ impl<B: ModelBackend> Engine<B> {
             *t = self.slots[i].cur_token;
         }
         let (kvs, fetch_ready, page_lists) = self.gather_kvs(&active)?;
+        // the recovery ladder's requeue rung may have parked a slot
+        // mid-gather: drop it from this step's decode set
+        let active: Vec<usize> =
+            active.into_iter().filter(|&i| self.slots[i].req.is_some()).collect();
+        if active.is_empty() {
+            self.restore_work(kvs);
+            self.emit_fault_events(self.clock.now());
+            return Ok(0);
+        }
         let restore_ready = std::mem::replace(&mut self.restore_ready_ns, 0.0);
         let compute_start = fetch_ready.max(t0).max(restore_ready);
         let compute_done = self.compute_tl.reserve(compute_start, self.cfg.compute_ns).end_ns;
@@ -1566,6 +1817,7 @@ impl<B: ModelBackend> Engine<B> {
                     prompt_len: done.prompt.len(),
                     tokens: done.generated.clone(),
                     steps_in_flight: steps,
+                    degraded: done.degraded,
                 };
                 self.push_event(EngineEvent::Finished {
                     seq: done.id,
@@ -1582,6 +1834,14 @@ impl<B: ModelBackend> Engine<B> {
                     self.device
                         .submit_one_at(Transaction::Free { block_addr: addr }, compute_done)?;
                 }
+                if !self.degraded_pages.is_empty() {
+                    // lint: allow(map-iter) order-independent retain
+                    self.degraded_pages.retain(|&(s, _)| s != done.id);
+                }
+                if !self.fault_repeat.is_empty() {
+                    // lint: allow(map-iter) order-independent retain
+                    self.fault_repeat.retain(|&(s, _), _| s != done.id);
+                }
                 self.slots[i] = Slot::empty();
             }
         }
@@ -1591,6 +1851,7 @@ impl<B: ModelBackend> Engine<B> {
         self.metrics.step_model_ns.push(compute_done - t0);
         self.clock.advance_to(compute_done);
         self.metrics.model_ns = self.clock.now();
+        self.emit_fault_events(compute_done);
         // mirror the device's decoded-plane cache counters (wall-clock
         // telemetry; kept out of DeviceStats so traffic equality across
         // cache configurations stays byte-exact)

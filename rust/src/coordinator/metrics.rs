@@ -31,9 +31,38 @@ use crate::util::stats::Summary;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-/// Log₂ bucket count of [`Metrics::queue_delay_histogram`]: `[0, 1µs)`,
-/// then doubling up to `[2^(N-2), 2^(N-1) µs)`, then overflow.
+/// Log₂ bucket count of [`Metrics::queue_delay_histogram`] and
+/// [`Metrics::retry_delay_histogram`]: `[0, 1µs)`, then doubling up to
+/// `[2^(N-2), 2^(N-1) µs)`, then overflow.
 pub const QUEUE_DELAY_BUCKETS: usize = 14;
+
+/// Shared log₂-µs bucketing behind the delay histograms:
+/// `(upper_bound_us, count)` with `f64::INFINITY` closing the last
+/// bucket. Bucket 0 is `[0, 1µs]`, bucket k is `(2^(k-1), 2^k µs]`.
+fn log2_us_histogram(values_ns: &[f64]) -> Vec<(f64, u64)> {
+    let mut counts = vec![0u64; QUEUE_DELAY_BUCKETS + 1];
+    for &d in values_ns {
+        let us = d / 1000.0;
+        let b = if us.is_finite() && us > 1.0 {
+            (us.log2().ceil() as usize).min(QUEUE_DELAY_BUCKETS)
+        } else {
+            0 // ≤ 1µs or non-finite
+        };
+        counts[b] += 1;
+    }
+    counts
+        .into_iter()
+        .enumerate()
+        .map(|(k, c)| {
+            let le = if k >= QUEUE_DELAY_BUCKETS {
+                f64::INFINITY
+            } else {
+                (1u64 << k) as f64
+            };
+            (le, c)
+        })
+        .collect()
+}
 
 /// Engine-wide metrics.
 #[derive(Debug)]
@@ -107,6 +136,19 @@ pub struct Metrics {
     /// stays byte-exact).
     pub decode_cache_hits: u64,
     pub decode_cache_misses: u64,
+    /// Recovery-ladder counters (docs/FAULTS.md): unrecoverable device
+    /// reads healed by re-issuing the spill write from the host copy.
+    pub fault_failovers: u64,
+    /// Requests parked (preempted + requeued) because their shard could
+    /// not take the failover write either.
+    pub fault_requeues: u64,
+    /// Pages permanently served from the host copy at reduced precision.
+    pub pages_degraded: u64,
+    /// Requests carrying at least one degraded page.
+    pub requests_degraded: u64,
+    /// Per-step mean retry backoff charged by the device tier, ns (one
+    /// sample per step that retried anything).
+    pub retry_delay_ns: Vec<f64>,
 }
 
 impl Default for Metrics {
@@ -144,6 +186,11 @@ impl Default for Metrics {
             link_bytes_saved: 0,
             decode_cache_hits: 0,
             decode_cache_misses: 0,
+            fault_failovers: 0,
+            fault_requeues: 0,
+            pages_degraded: 0,
+            requests_degraded: 0,
+            retry_delay_ns: Vec::new(),
         }
     }
 }
@@ -223,28 +270,18 @@ impl Metrics {
     /// `(upper_bound_us, count)` with `f64::INFINITY` closing the last
     /// bucket. Bucket 0 is `[0, 1µs]`, bucket k is `(2^(k-1), 2^k µs]`.
     pub fn queue_delay_histogram(&self) -> Vec<(f64, u64)> {
-        let mut counts = vec![0u64; QUEUE_DELAY_BUCKETS + 1];
-        for &d in &self.queue_delay_ns {
-            let us = d / 1000.0;
-            let b = if us.is_finite() && us > 1.0 {
-                (us.log2().ceil() as usize).min(QUEUE_DELAY_BUCKETS)
-            } else {
-                0 // ≤ 1µs (admission in the arrival step) or non-finite
-            };
-            counts[b] += 1;
-        }
-        counts
-            .into_iter()
-            .enumerate()
-            .map(|(k, c)| {
-                let le = if k >= QUEUE_DELAY_BUCKETS {
-                    f64::INFINITY
-                } else {
-                    (1u64 << k) as f64
-                };
-                (le, c)
-            })
-            .collect()
+        log2_us_histogram(&self.queue_delay_ns)
+    }
+
+    /// Retry-backoff summary (per-step mean device retry delay, ns).
+    pub fn retry_delay(&self) -> Summary {
+        Summary::of(&self.retry_delay_ns)
+    }
+
+    /// Retry-delay histogram, same log₂ microsecond buckets as
+    /// [`Self::queue_delay_histogram`].
+    pub fn retry_delay_histogram(&self) -> Vec<(f64, u64)> {
+        log2_us_histogram(&self.retry_delay_ns)
     }
 
     pub fn request_latency_steps(&self) -> Summary {
@@ -353,6 +390,37 @@ impl Metrics {
         let mut decode_cache = BTreeMap::new();
         decode_cache.insert("hits".to_string(), num(self.decode_cache_hits as f64));
         decode_cache.insert("misses".to_string(), num(self.decode_cache_misses as f64));
+        // fault-injection + recovery report: device-tier counters (what
+        // the substrate injected/detected/repaired) plus the engine's
+        // ladder counters (failover/requeue/degrade) — the chaos gate and
+        // CI smoke read this object
+        let mut faults = BTreeMap::new();
+        faults.insert("injected".to_string(), num(dev.faults_injected as f64));
+        faults.insert("detected".to_string(), num(dev.faults_detected as f64));
+        faults.insert("repaired".to_string(), num(dev.faults_repaired as f64));
+        faults.insert("retried".to_string(), num(dev.faults_retried as f64));
+        faults.insert("failed_over_device".to_string(), num(dev.faults_failed_over as f64));
+        faults.insert("unrecoverable".to_string(), num(dev.faults_unrecoverable as f64));
+        faults.insert("retry_delay_total_ns".to_string(), num(dev.faults_retry_delay_ns));
+        faults.insert("failovers".to_string(), num(self.fault_failovers as f64));
+        faults.insert("requeues".to_string(), num(self.fault_requeues as f64));
+        faults.insert("pages_degraded".to_string(), num(self.pages_degraded as f64));
+        faults.insert("requests_degraded".to_string(), num(self.requests_degraded as f64));
+        faults.insert("retry_delay_ns".to_string(), summary(&self.retry_delay()));
+        let retry_hist: Vec<Json> = self
+            .retry_delay_histogram()
+            .into_iter()
+            .map(|(le, c)| {
+                let mut b = BTreeMap::new();
+                b.insert(
+                    "le_us".to_string(),
+                    num(if le.is_finite() { le } else { -1.0 }),
+                );
+                b.insert("count".to_string(), num(c as f64));
+                Json::Obj(b)
+            })
+            .collect();
+        faults.insert("retry_delay_hist".to_string(), Json::Arr(retry_hist));
         let mut o = BTreeMap::new();
         o.insert("engine_steps".to_string(), num(self.engine_steps as f64));
         o.insert("prefills".to_string(), num(self.prefills as f64));
@@ -377,6 +445,7 @@ impl Metrics {
         o.insert("device".to_string(), Json::Obj(device));
         o.insert("nmc".to_string(), Json::Obj(nmc));
         o.insert("decode_cache".to_string(), Json::Obj(decode_cache));
+        o.insert("faults".to_string(), Json::Obj(faults));
         Json::Obj(o)
     }
 }
@@ -541,5 +610,42 @@ mod tests {
                 .unwrap(),
             0
         );
+    }
+
+    #[test]
+    fn faults_object_reports_device_and_engine_counters() {
+        let mut m = Metrics::new();
+        m.fault_failovers = 2;
+        m.fault_requeues = 1;
+        m.pages_degraded = 3;
+        m.requests_degraded = 1;
+        m.retry_delay_ns = vec![800.0, 2500.0]; // buckets 0 and 2
+        let dev = DeviceStats {
+            faults_injected: 10,
+            faults_detected: 9,
+            faults_repaired: 8,
+            faults_retried: 4,
+            faults_retry_delay_ns: 3300.0,
+            ..Default::default()
+        };
+        let parsed = Json::parse(&m.to_json(&dev).to_string()).unwrap();
+        let f = parsed.get("faults").unwrap();
+        assert_eq!(f.get("injected").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(f.get("detected").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(f.get("repaired").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(f.get("retried").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(f.get("failovers").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(f.get("requeues").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(f.get("pages_degraded").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(f.get("requests_degraded").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            f.get("retry_delay_ns").unwrap().get("n").unwrap().as_usize().unwrap(),
+            2
+        );
+        let hist = f.get("retry_delay_hist").unwrap().as_arr().unwrap();
+        assert_eq!(hist.len(), QUEUE_DELAY_BUCKETS + 1);
+        let counted: f64 =
+            hist.iter().map(|b| b.get("count").unwrap().as_f64().unwrap()).sum();
+        assert_eq!(counted as u64, 2);
     }
 }

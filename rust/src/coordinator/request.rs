@@ -105,6 +105,11 @@ pub struct Request {
     pub finished_ns: Option<f64>,
     /// Shared-prefix declaration, if the request rides a prefix-KV share.
     pub prefix: Option<PrefixShare>,
+    /// At least one of this request's KV pages was served in degraded
+    /// mode (reduced precision) after an unrecoverable device fault —
+    /// rung 4 of the recovery ladder (docs/FAULTS.md). The request still
+    /// completes; this flag is the per-request honesty marker.
+    pub degraded: bool,
 }
 
 impl Request {
@@ -125,6 +130,7 @@ impl Request {
             first_token_ns: None,
             finished_ns: None,
             prefix: None,
+            degraded: false,
         }
     }
 
@@ -154,6 +160,10 @@ pub struct Response {
     pub tokens: Vec<u32>,
     pub prompt_len: usize,
     pub steps_in_flight: u64,
+    /// At least one KV page was served at reduced precision after the
+    /// device copy went unrecoverable (docs/FAULTS.md rung 4). The
+    /// tokens are best-effort, not bit-exact.
+    pub degraded: bool,
 }
 
 /// One entry of the engine's streaming event log
@@ -181,6 +191,20 @@ pub enum EngineEvent {
     /// explicitly instead of inferring it. `at_ns` is the timestamp of the
     /// newest shed event. Not request-scoped.
     EventsDropped { at_ns: f64, count: u64 },
+    /// The device tier injected `count` faults this step (bit-flips,
+    /// metadata corruption, transient failures, stalls — docs/FAULTS.md).
+    /// Engine-scoped: injection happens below request routing.
+    FaultInjected { at_ns: f64, count: u64 },
+    /// `count` transactions were retried after transient faults this
+    /// step; `delay_ns` is the total backoff charged on model time.
+    Retried { at_ns: f64, count: u64, delay_ns: f64 },
+    /// `count` damaged blocks were detected and repaired in place from
+    /// checksums + XOR parity this step.
+    Repaired { at_ns: f64, count: u64 },
+    /// A KV page of request `seq` was unrecoverable on the device and is
+    /// now served from the host copy at reduced precision (rung 4 of the
+    /// recovery ladder). The request carries [`Request::degraded`].
+    Degraded { seq: u64, at_ns: f64, page: usize },
 }
 
 impl EngineEvent {
@@ -192,8 +216,12 @@ impl EngineEvent {
             | EngineEvent::Token { seq, .. }
             | EngineEvent::Preempted { seq, .. }
             | EngineEvent::Resumed { seq, .. }
-            | EngineEvent::Finished { seq, .. } => *seq,
-            EngineEvent::EventsDropped { .. } => u64::MAX,
+            | EngineEvent::Finished { seq, .. }
+            | EngineEvent::Degraded { seq, .. } => *seq,
+            EngineEvent::EventsDropped { .. }
+            | EngineEvent::FaultInjected { .. }
+            | EngineEvent::Retried { .. }
+            | EngineEvent::Repaired { .. } => u64::MAX,
         }
     }
 
@@ -205,7 +233,11 @@ impl EngineEvent {
             | EngineEvent::Preempted { at_ns, .. }
             | EngineEvent::Resumed { at_ns, .. }
             | EngineEvent::Finished { at_ns, .. }
-            | EngineEvent::EventsDropped { at_ns, .. } => *at_ns,
+            | EngineEvent::EventsDropped { at_ns, .. }
+            | EngineEvent::FaultInjected { at_ns, .. }
+            | EngineEvent::Retried { at_ns, .. }
+            | EngineEvent::Repaired { at_ns, .. }
+            | EngineEvent::Degraded { at_ns, .. } => *at_ns,
         }
     }
 }

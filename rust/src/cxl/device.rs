@@ -46,6 +46,9 @@ use std::sync::{Arc, Mutex};
 use super::controller::{
     free_latency, latency, nmc_latency, write_latency, LatencyBreakdown, LatencyCase,
 };
+use super::faults::{
+    self, BlockGuard, FaultDirective, FaultError, FaultPlan, FaultState, GuardVerdict,
+};
 use super::link::Link;
 use super::metadata::{IndexCache, PlaneIndex, ENTRY_BYTES};
 use super::txn::{Completion, MemDevice, Payload, SubmissionQueue, Transaction, TxnId, TxnStats};
@@ -77,6 +80,27 @@ pub(crate) enum Stored {
     Compressed { codec: CodecKind, data: Vec<u8>, raw_len: usize },
     /// TRACE: plane-disaggregated block.
     Planes(DeviceBlock),
+}
+
+/// A stored block's byte streams in canonical storage order — the unit of
+/// fault-layer protection ([`BlockGuard`] checksums one stream each and
+/// keeps an XOR parity over all of them).
+fn stored_streams(s: &Stored) -> Vec<&[u8]> {
+    match s {
+        Stored::Raw(d) => vec![d.as_slice()],
+        Stored::Compressed { data, .. } => vec![data.as_slice()],
+        Stored::Planes(b) => b.planes.iter().map(|p| p.data.as_slice()).collect(),
+    }
+}
+
+/// Mutable view of the same streams, for corruption injection and parity
+/// repair.
+fn stored_streams_mut(s: &mut Stored) -> Vec<&mut Vec<u8>> {
+    match s {
+        Stored::Raw(d) => vec![d],
+        Stored::Compressed { data, .. } => vec![data],
+        Stored::Planes(b) => b.planes.iter_mut().map(|p| &mut p.data).collect(),
+    }
 }
 
 /// Cache key for a whole-block word decode (GComp): plane masks never
@@ -182,6 +206,24 @@ pub struct DeviceStats {
     pub nmc_bytes_scanned: u64,
     pub reads: u64,
     pub writes: u64,
+    /// Faults injected by the installed [`super::faults::FaultPlan`]
+    /// (bit flips, metadata corruption, transients, stalls, outage hits).
+    /// All `faults_*` counters stay zero with no plan installed, so
+    /// stats equality against a fault-free run is unaffected.
+    pub faults_injected: u64,
+    /// Corruptions detected by block-guard verification.
+    pub faults_detected: u64,
+    /// Corruptions repaired (parity rebuild or guard-metadata rebuild).
+    pub faults_repaired: u64,
+    /// Retry attempts charged for transient faults.
+    pub faults_retried: u64,
+    /// Transactions that exhausted retries (or hit an outage window) and
+    /// completed via the slow failover path.
+    pub faults_failed_over: u64,
+    /// Reads that hit damage beyond single-stream repair.
+    pub faults_unrecoverable: u64,
+    /// Total model-time retry/backoff/outage delay charged, ns.
+    pub faults_retry_delay_ns: f64,
 }
 
 impl DeviceStats {
@@ -207,6 +249,13 @@ impl DeviceStats {
         self.nmc_bytes_scanned += o.nmc_bytes_scanned;
         self.reads += o.reads;
         self.writes += o.writes;
+        self.faults_injected += o.faults_injected;
+        self.faults_detected += o.faults_detected;
+        self.faults_repaired += o.faults_repaired;
+        self.faults_retried += o.faults_retried;
+        self.faults_failed_over += o.faults_failed_over;
+        self.faults_unrecoverable += o.faults_unrecoverable;
+        self.faults_retry_delay_ns += o.faults_retry_delay_ns;
     }
 }
 
@@ -292,6 +341,10 @@ pub struct CxlDevice {
     /// gather rows / score tokens, and only TRACE's `Transform::Kv`
     /// stores it in-band.
     kv_geom: HashMap<u64, KvWindow>,
+    /// Fault-injection plan + guard/recovery state (docs/FAULTS.md). No
+    /// plan installed ⇒ every fault path is skipped and the device is
+    /// bit-identical to one built before the fault layer existed.
+    pub(crate) faults: FaultState,
 }
 
 /// Default decoded-plane cache capacity: 256 entries ≈ 1 MB of decoded
@@ -325,7 +378,21 @@ impl CxlDevice {
             lanes: Arc::new(LanePool::inline()),
             cache: DecodeCache::new(DEFAULT_DECODE_CACHE_BLOCKS),
             kv_geom: HashMap::new(),
+            faults: FaultState::default(),
         }
+    }
+
+    /// Install a deterministic fault plan (docs/FAULTS.md). Guards are
+    /// built for blocks written *after* installation; installing
+    /// [`FaultPlan::disabled`] is bit-identical to no plan at all.
+    pub fn install_fault_plan(&mut self, plan: FaultPlan) {
+        self.faults.plan = Some(plan);
+    }
+
+    /// Mark this device as shard `idx` of a fleet: the fault processes
+    /// are salted per shard so shards fail independently.
+    pub(crate) fn set_fault_shard(&mut self, idx: u64) {
+        self.faults.shard = idx;
     }
 
     /// Set the batch worker width (1 = serial). Purely a wall-clock knob:
@@ -370,14 +437,36 @@ impl CxlDevice {
         (self.cache.hits, self.cache.misses, self.cache.len())
     }
 
-    /// Test hook: truncate the largest compressed stream of the block at
-    /// `addr` (a TRACE plane or a GComp block body), modeling in-DRAM
-    /// corruption so robustness tests can drive the decode error path
-    /// end-to-end. Returns false if no such block/stream exists. Not part
-    /// of the device model.
-    #[doc(hidden)]
-    pub fn test_corrupt_block(&mut self, addr: u64) -> bool {
+    /// The fault layer's corruption primitive, shared by the seeded
+    /// injection processes and the test/chaos hooks so both drive the
+    /// exact code path production recovery uses. Guarded block: flip one
+    /// deterministic bit in one stored stream (round-robin over streams —
+    /// single-stream damage, repairable from parity). Unguarded block:
+    /// the legacy truncation of the largest compressed stream (loudly
+    /// detected by the codecs). Returns `false` if the block has no
+    /// corruptible stream.
+    pub fn corrupt_block(&mut self, addr: u64) -> bool {
         self.cache.invalidate(addr);
+        if self.faults.guards.contains_key(&addr) {
+            let epoch = self.faults.epoch;
+            let Some(stored) = self.blocks.get_mut(&addr) else {
+                return false;
+            };
+            let mut streams = stored_streams_mut(stored);
+            let n = streams.len();
+            for off in 0..n {
+                let k = (epoch as usize + off) % n;
+                let s = &mut *streams[k];
+                if s.is_empty() {
+                    continue;
+                }
+                let pos = s.len() / 2;
+                s[pos] ^= 1 << (epoch % 8);
+                self.faults.epoch = epoch + 1 + off as u64;
+                return true;
+            }
+            return false;
+        }
         match self.blocks.get_mut(&addr) {
             Some(Stored::Planes(b)) => {
                 let Some(p) = b
@@ -407,6 +496,27 @@ impl CxlDevice {
         }
     }
 
+    /// Legacy name for [`Self::corrupt_block`], kept so existing tests
+    /// keep driving the shared corruption primitive. Not part of the
+    /// device model.
+    #[doc(hidden)]
+    pub fn test_corrupt_block(&mut self, addr: u64) -> bool {
+        self.corrupt_block(addr)
+    }
+
+    /// Chaos hook: declare the block at `addr` damaged beyond repair
+    /// (multi-stream loss). Takes effect on guarded reads once a fault
+    /// plan is installed; a rewrite of the address heals it.
+    #[doc(hidden)]
+    pub fn test_kill_block(&mut self, addr: u64) -> bool {
+        if !self.blocks.contains_key(&addr) {
+            return false;
+        }
+        self.cache.invalidate(addr);
+        self.faults.dead.insert(addr);
+        true
+    }
+
     /// Clear the model-time timelines (free at t=0, zero busy time)
     /// without touching stored data or byte counters.
     pub fn reset_time(&mut self) {
@@ -424,6 +534,11 @@ impl CxlDevice {
         }
     }
 
+    /// Total guard bytes currently resident (footprint accounting).
+    pub fn guard_bytes(&self) -> u64 {
+        self.faults.guard_bytes()
+    }
+
     /// Uncompressed bytes of the device's current contents.
     pub fn stored_raw_bytes(&self) -> usize {
         // lint: allow(map-iter) commutative sum over values
@@ -438,7 +553,10 @@ impl CxlDevice {
     }
 
     /// Commit a stored block: byte/write accounting, (TRACE) plane-index
-    /// entry, strict decoded-plane cache invalidation. Returns the ratio.
+    /// entry, strict decoded-plane cache invalidation, and — when the
+    /// fault plan guards blocks — checksum + parity construction, charged
+    /// as extra DRAM written (kept out of the returned write ratio, which
+    /// describes the codec alone). Returns the ratio.
     fn commit_stored(&mut self, block_addr: u64, raw_len: usize, stored: Stored) -> f64 {
         self.stats.link_bytes_in += raw_len as u64;
         self.stats.writes += 1;
@@ -447,6 +565,16 @@ impl CxlDevice {
         }
         let stored_len = Self::stored_bytes_of(&stored);
         self.stats.dram_bytes_written += stored_len as u64;
+        if self.faults.plan.is_some_and(|p| p.guard) {
+            let guard = {
+                let streams = stored_streams(&stored);
+                BlockGuard::build(&streams)
+            };
+            self.stats.dram_bytes_written += guard.stored_bytes();
+            self.faults.guards.insert(block_addr, guard);
+            // a rewrite of a dead address heals it: fresh data, fresh guard
+            self.faults.dead.remove(&block_addr);
+        }
         self.blocks.insert(block_addr, stored);
         self.cache.invalidate(block_addr);
         raw_len as f64 / stored_len.max(1) as f64
@@ -845,6 +973,8 @@ impl CxlDevice {
         }
         self.cache.invalidate(block_addr);
         self.kv_geom.remove(&block_addr);
+        self.faults.guards.remove(&block_addr);
+        self.faults.dead.remove(&block_addr);
         Ok(Payload::Written)
     }
 
@@ -894,6 +1024,184 @@ impl CxlDevice {
         nmc_latency(self.latency_case(metadata_hit, profile))
     }
 
+    /// [`Self::fault_preflight`] over a whole batch in submission order.
+    /// Cheap no-op (all-default directives, no counter movement) when no
+    /// plan is installed.
+    pub(crate) fn fault_directives(
+        &mut self,
+        batch: &[(TxnId, Transaction)],
+        now_ns: f64,
+    ) -> Vec<FaultDirective> {
+        if self.faults.plan.is_none() {
+            return vec![FaultDirective::default(); batch.len()];
+        }
+        batch.iter().map(|(_, txn)| self.fault_preflight(txn, now_ns)).collect()
+    }
+
+    /// Fault-layer pre-pass for one transaction, run serially *before*
+    /// batch planning so the pool decoders see post-injection,
+    /// post-repair bytes. Rolls every enabled fault process off the
+    /// per-device transaction counter (deterministic per plan seed and
+    /// shard), mutates storage (injected corruption, parity repair,
+    /// guard rebuild) and folds everything else — byte charges, extra
+    /// model-time service, terminal failure — into a [`FaultDirective`]
+    /// applied inside [`Self::execute_prepped`] so per-transaction stats
+    /// deltas still sum to the cumulative counters. Returns the default
+    /// (all-zero) directive when no plan is installed.
+    pub(crate) fn fault_preflight(&mut self, txn: &Transaction, now_ns: f64) -> FaultDirective {
+        let mut fd = FaultDirective::default();
+        let Some(plan) = self.faults.plan else {
+            return fd;
+        };
+        let n = self.faults.txns;
+        self.faults.txns += 1;
+        let shard = self.faults.shard;
+        let seed = plan.seed;
+        let r = plan.rates;
+
+        // 1. Shard outage window: with retries enabled the transaction
+        //    defers past the window (slow but successful); without, it
+        //    fails terminally.
+        if let Some(rem) = faults::outage_remaining_ns(&plan, shard, now_ns) {
+            fd.note.injected += 1;
+            if plan.max_retries > 0 {
+                let delay = rem + plan.backoff_ns;
+                fd.extra_service_ns += delay;
+                fd.note.retry_delay_ns += delay;
+                fd.note.failed_over += 1;
+            } else {
+                fd.fail = Some(FaultError::ShardOutage);
+                return fd;
+            }
+        }
+
+        // 2. Transient failures with bounded exponential backoff. Each
+        //    attempt rolls independently; with retries enabled an
+        //    exhausted budget fails over to a slow path instead of
+        //    failing, so a seeded chaos run can guarantee `failed == 0`.
+        if r.transient > 0.0 {
+            let attempt_roll =
+                |a: u32| faults::roll(seed, faults::salt::TRANSIENT + ((a as u64) << 8), shard, n);
+            if attempt_roll(0) < r.transient {
+                fd.note.injected += 1;
+                let mut recovered = false;
+                for a in 1..=plan.max_retries {
+                    let backoff = plan.backoff_ns * f64::from(1u32 << (a - 1));
+                    fd.extra_service_ns += backoff;
+                    fd.note.retry_delay_ns += backoff;
+                    fd.note.retries += 1;
+                    if attempt_roll(a) >= r.transient {
+                        recovered = true;
+                        break;
+                    }
+                }
+                if !recovered {
+                    if plan.max_retries > 0 {
+                        // slow-path re-issue after the last backoff
+                        let penalty = plan.backoff_ns * f64::from(1u32 << plan.max_retries);
+                        fd.extra_service_ns += penalty;
+                        fd.note.retry_delay_ns += penalty;
+                        fd.note.failed_over += 1;
+                    } else {
+                        fd.fail = Some(FaultError::Transient { attempts: 1 });
+                        return fd;
+                    }
+                }
+            }
+        }
+
+        // 3. Controller stall: extra service time, nothing else.
+        if r.stall > 0.0 && faults::roll(seed, faults::salt::STALL, shard, n) < r.stall {
+            fd.note.injected += 1;
+            fd.extra_service_ns += r.stall_ns;
+        }
+
+        let addr = txn.block_addr();
+        let is_read = txn.is_read();
+
+        // 4. Media corruption, injected on guarded reads just before the
+        //    verify pass exercises detection + repair end-to-end. At most
+        //    ONE media fault per read: a flipped stream is repaired from
+        //    parity and a corrupted guard is rebuilt from intact streams,
+        //    but both at once would make verification rebuild the guard
+        //    over the damaged stream — canonicalizing the corruption.
+        //    The injector models independent single-fault events, which
+        //    is what keeps a chaos plan repairable by construction.
+        if is_read && self.faults.guards.contains_key(&addr) {
+            let flipped = r.bitflip > 0.0
+                && faults::roll(seed, faults::salt::BITFLIP, shard, n) < r.bitflip
+                && self.corrupt_block(addr);
+            if flipped {
+                fd.note.injected += 1;
+            } else if r.meta_corrupt > 0.0
+                && faults::roll(seed, faults::salt::META, shard, n) < r.meta_corrupt
+            {
+                if let Some(g) = self.faults.guards.get_mut(&addr) {
+                    g.corrupt_meta();
+                    fd.note.injected += 1;
+                }
+            }
+        }
+
+        // 5. Guard verification on reads: checksum every stream, repair
+        //    single-stream damage from parity, rebuild a corrupted guard
+        //    from the (intact) streams. All verification traffic is
+        //    charged so compression ratios stay honest.
+        if is_read {
+            if self.faults.dead.contains(&addr) {
+                fd.note.unrecoverable += 1;
+                fd.fail = Some(FaultError::Unrecoverable);
+                return fd;
+            }
+            let verdict = match (self.faults.guards.get(&addr), self.blocks.get_mut(&addr)) {
+                (Some(g), Some(stored)) => {
+                    fd.verify_dram_read +=
+                        faults::GUARD_STREAM_META_BYTES * g.n_streams() as u64
+                            + faults::GUARD_SELF_SUM_BYTES;
+                    let mut streams = stored_streams_mut(stored);
+                    Some(g.verify_repair(&mut streams))
+                }
+                _ => None,
+            };
+            match verdict {
+                None | Some(GuardVerdict::Clean) => {}
+                Some(GuardVerdict::Repaired { bytes, .. }) => {
+                    fd.note.detected += 1;
+                    fd.note.repaired += 1;
+                    // parity read + rebuilt stream written back
+                    if let Some(g) = self.faults.guards.get(&addr) {
+                        fd.verify_dram_read += g.stored_bytes();
+                    }
+                    fd.repair_dram_written += bytes;
+                    self.cache.invalidate(addr);
+                }
+                Some(GuardVerdict::MetaBad) => {
+                    fd.note.detected += 1;
+                    fd.note.repaired += 1;
+                    // rebuild the guard from the current streams: read
+                    // every stream, write the fresh guard
+                    if let Some(stored) = self.blocks.get(&addr) {
+                        let guard = {
+                            let streams = stored_streams(stored);
+                            fd.verify_dram_read +=
+                                streams.iter().map(|s| s.len() as u64).sum::<u64>();
+                            BlockGuard::build(&streams)
+                        };
+                        fd.repair_dram_written += guard.stored_bytes();
+                        self.faults.guards.insert(addr, guard);
+                    }
+                }
+                Some(GuardVerdict::Unrecoverable) => {
+                    fd.note.detected += 1;
+                    fd.note.unrecoverable += 1;
+                    self.faults.dead.insert(addr);
+                    fd.fail = Some(FaultError::Unrecoverable);
+                }
+            }
+        }
+        fd
+    }
+
     /// Functional execution with an optional precomputed pure result
     /// (`pre`): the batch pool's decode/encode output or a decoded-plane
     /// cache hit — no resource-timeline scheduling (`issued_ns`/
@@ -901,16 +1209,72 @@ impl CxlDevice {
     /// latency modeling, and storage mutation run identically with or
     /// without `pre` — only the codec/transpose work is skipped — so
     /// completions are bit-identical to the serial, cache-off path.
+    /// `fd` is the fault directive from [`Self::fault_preflight`]
+    /// (default = no faults): its byte charges land inside this
+    /// transaction's stats delta, and a terminal `fd.fail` produces an
+    /// error completion that still charges metadata and pipeline latency
+    /// — a failed transaction occupies the controller too.
     pub(crate) fn execute_prepped(
         &mut self,
         id: TxnId,
         txn: Transaction,
         pre: Option<Prep>,
+        fd: FaultDirective,
     ) -> Completion {
         let before = self.stats;
         let block_addr = txn.block_addr();
         let kind = txn.kind();
         let is_read = txn.is_read();
+        // Fault-directive accounting lands inside this transaction's
+        // stats delta: guard verification as DRAM reads, parity/guard
+        // repair as DRAM writes, plus the observability counters. All
+        // zero when no fault plan is installed.
+        self.stats.dram_bytes_read += fd.verify_dram_read;
+        self.stats.dram_bytes_written += fd.repair_dram_written;
+        self.stats.faults_injected += u64::from(fd.note.injected);
+        self.stats.faults_detected += u64::from(fd.note.detected);
+        self.stats.faults_repaired += u64::from(fd.note.repaired);
+        self.stats.faults_retried += u64::from(fd.note.retries);
+        self.stats.faults_failed_over += u64::from(fd.note.failed_over);
+        self.stats.faults_unrecoverable += u64::from(fd.note.unrecoverable);
+        self.stats.faults_retry_delay_ns += fd.note.retry_delay_ns;
+        if let Some(fe) = fd.fail {
+            // A terminally failed transaction still occupies the
+            // controller: charge the metadata lookup and the pipeline
+            // latency exactly like the success path, then surface the
+            // typed error. Callers schedule the completion on the
+            // resource timelines like any other.
+            let breakdown = match &txn {
+                Transaction::WriteWeights { .. } | Transaction::WriteKv { .. } => {
+                    write_latency(self.design, 1.0)
+                }
+                Transaction::Free { .. } => free_latency(self.design),
+                Transaction::GatherPlanes { .. } | Transaction::ReduceKv { .. } => {
+                    let hit = self.charge_metadata(block_addr);
+                    let profile = self.block_profile(block_addr);
+                    self.nmc_read_latency(hit, profile)
+                }
+                _ => {
+                    let hit = self.charge_metadata(block_addr);
+                    let profile = self.block_profile(block_addr);
+                    self.read_latency(hit, profile)
+                }
+            };
+            return Completion {
+                id,
+                block_addr,
+                kind,
+                shard: 0,
+                result: Err(anyhow::Error::new(fe)),
+                stats: TxnStats::delta(&before, &self.stats),
+                latency: Some(breakdown),
+                is_read,
+                issued_ns: 0.0,
+                ready_at_ns: 0.0,
+                extra_service_ns: fd.extra_service_ns,
+                fault: Some(fd.note),
+            };
+        }
         let (mut pre_words, pre_stored) = match pre {
             Some(Prep::Words(w)) => (Some(w), None),
             Some(Prep::Stored(s)) => (None, Some(s)),
@@ -983,6 +1347,8 @@ impl CxlDevice {
             is_read,
             issued_ns: 0.0,
             ready_at_ns: 0.0,
+            extra_service_ns: fd.extra_service_ns,
+            fault: fd.note.any().then_some(fd.note),
         }
     }
 
@@ -1173,15 +1539,20 @@ impl CxlDevice {
         batch: Vec<(TxnId, Transaction)>,
         now_ns: f64,
     ) -> Vec<Completion> {
+        // Fault pre-pass strictly before planning: injected corruption
+        // and parity repair must have mutated the stored bytes before
+        // the pool decoders read them.
+        let directives = self.fault_directives(&batch, now_ns);
         let plans = self.plan_batch(&batch);
         let outs = self.run_jobs(&batch, &plans);
         batch
             .into_iter()
             .zip(plans)
             .zip(outs)
-            .map(|(((id, txn), plan), out)| {
+            .zip(directives)
+            .map(|((((id, txn), plan), out), fd)| {
                 let pre = self.prep_from(plan, out);
-                let mut c = self.execute_prepped(id, txn, pre);
+                let mut c = self.execute_prepped(id, txn, pre, fd);
                 c.schedule(
                     now_ns,
                     super::txn::SchedResources {
@@ -1350,10 +1721,13 @@ impl MemDevice for CxlDevice {
     }
 
     fn execute_at(&mut self, id: TxnId, txn: Transaction, now_ns: f64) -> Completion {
+        // fault pre-pass before the prep decode, same order as the batch
+        // path (injection/repair must precede the codec work)
+        let fd = self.fault_preflight(&txn, now_ns);
         // route through the batch path so single reads also consult (and
         // warm) the decoded-plane cache
         let pre = self.prep_single(&txn);
-        let mut c = self.execute_prepped(id, txn, pre);
+        let mut c = self.execute_prepped(id, txn, pre, fd);
         c.schedule(
             now_ns,
             super::txn::SchedResources {
@@ -1401,7 +1775,7 @@ impl MemDevice for CxlDevice {
             Design::GComp => self.blocks.len() * 8, // block pointer + length
             Design::Plain => 0,
         };
-        data + meta
+        data + meta + self.faults.guard_bytes() as usize
     }
 
     fn overall_ratio(&self) -> f64 {
@@ -1426,6 +1800,18 @@ impl MemDevice for CxlDevice {
 
     fn data_rates(&self) -> (f64, f64, f64) {
         (self.ddr_gbps, self.link.gbps, self.nmc_gbps)
+    }
+
+    fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.install_fault_plan(plan);
+    }
+
+    fn corrupt_block(&mut self, block_addr: u64) -> bool {
+        CxlDevice::corrupt_block(self, block_addr)
+    }
+
+    fn test_kill_block(&mut self, block_addr: u64) -> bool {
+        CxlDevice::test_kill_block(self, block_addr)
     }
 }
 

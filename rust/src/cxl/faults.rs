@@ -1,0 +1,621 @@
+//! Deterministic fault-injection substrate and block-guard recovery layer.
+//!
+//! The paper's correctness contract is "bit-exact or a fault, nothing in
+//! between" (§III-D). This module supplies both halves for a production
+//! device tier:
+//!
+//! * [`FaultPlan`] — a seeded, **model-time-driven** description of the
+//!   fault environment: per-shard Bernoulli processes for plane bit-flips,
+//!   guard-metadata corruption, transient transaction failures and shard
+//!   stalls, plus periodic shard outage windows. Every decision is a pure
+//!   function of `(seed, salt, shard, txn-counter)` — no wall clock, no
+//!   shared RNG stream — so a chaos run replays bit-identically from its
+//!   trace capture (docs/FAULTS.md § Determinism contract).
+//! * [`BlockGuard`] — per-stream FNV checksums plus an XOR parity stream
+//!   over a stored block. Verified on every guarded read; single-stream
+//!   damage (bit flip *or* truncation) is detected **and repaired** from
+//!   parity, multi-stream damage is detected and surfaced as
+//!   [`FaultError::Unrecoverable`]. Guard bytes are charged as extra
+//!   stored/fetched traffic so compression ratios stay honest.
+//! * [`FaultError`] — the typed error vocabulary the engine's recovery
+//!   ladder (failover → requeue → degrade) keys on via `downcast_ref`.
+//!
+//! The device consumes the plan through a preflight pass
+//! (`CxlDevice::fault_preflight`) that folds every decision into a
+//! [`FaultDirective`]: byte charges, model-time service penalties
+//! (retry/backoff, stall, outage deferral) and an optional terminal
+//! failure. Execution applies the directive inside the transaction so
+//! per-txn [`crate::cxl::TxnStats`] deltas still sum to the cumulative
+//! device stats.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+
+/// Bytes of guard metadata per protected stream: an 8-byte FNV checksum
+/// plus a 4-byte recorded length (truncation repair needs the length).
+pub const GUARD_STREAM_META_BYTES: u64 = 12;
+/// Bytes of the guard's self-checksum (detects metadata corruption).
+pub const GUARD_SELF_SUM_BYTES: u64 = 8;
+
+/// Per-process fault probabilities and window shapes. All probabilities
+/// are per-transaction Bernoulli rates in `[0, 1]`; windows are model-time
+/// nanoseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultRates {
+    /// Probability a guarded read first suffers a single-bit flip in one
+    /// stored stream (repairable from parity).
+    pub bitflip: f64,
+    /// Probability a guarded read first suffers guard-metadata corruption
+    /// (detected by the guard self-checksum; guard is rebuilt).
+    pub meta_corrupt: f64,
+    /// Probability a transaction attempt fails transiently (retried with
+    /// exponential backoff on model time).
+    pub transient: f64,
+    /// Probability a transaction is stalled by `stall_ns` of extra
+    /// controller service time.
+    pub stall: f64,
+    /// Extra model-time service charged by a stall, in ns.
+    pub stall_ns: f64,
+    /// Period of the per-shard outage square wave, in ns (`0` = no
+    /// outages).
+    pub outage_period_ns: f64,
+    /// Length of the outage window at the start of each period, in ns.
+    pub outage_len_ns: f64,
+}
+
+impl FaultRates {
+    /// All processes off.
+    pub fn zero() -> Self {
+        FaultRates {
+            bitflip: 0.0,
+            meta_corrupt: 0.0,
+            transient: 0.0,
+            stall: 0.0,
+            stall_ns: 0.0,
+            outage_period_ns: 0.0,
+            outage_len_ns: 0.0,
+        }
+    }
+}
+
+/// A seeded, deterministic fault environment for one device or fleet.
+///
+/// Installed with [`crate::cxl::MemDevice::set_fault_plan`] (or
+/// `EngineConfig::faults`). Every decision derives from `seed`, the
+/// owning shard index, and a per-device monotonic transaction counter;
+/// two runs with the same plan, workload, and dispatch order inject
+/// byte-identical fault sequences.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Root seed for every fault decision.
+    pub seed: u64,
+    /// Per-process rates and window shapes.
+    pub rates: FaultRates,
+    /// Build + verify [`BlockGuard`]s (checksums + parity). Costs extra
+    /// stored/fetched bytes; required for repair.
+    pub guard: bool,
+    /// Bounded retries for transient failures and outage deferral. With
+    /// `max_retries > 0` transient faults and outages never terminally
+    /// fail — exhausted retries fail over to a slow path instead.
+    pub max_retries: u32,
+    /// Base backoff charged on the service timeline; attempt `r` waits
+    /// `backoff_ns * 2^(r-1)` model-ns.
+    pub backoff_ns: f64,
+}
+
+impl FaultPlan {
+    /// Plan that is installed but injects nothing and guards nothing.
+    /// Runs bit-identically to no plan at all (`tests/chaos_equiv.rs`).
+    pub fn disabled(seed: u64) -> Self {
+        FaultPlan { seed, rates: FaultRates::zero(), guard: false, max_retries: 0, backoff_ns: 0.0 }
+    }
+
+    /// Guards on, zero injection: pure checksum/parity adder. Tokens and
+    /// link traffic stay identical; device DRAM grows by the guard bytes.
+    pub fn guarded(seed: u64) -> Self {
+        FaultPlan { seed, rates: FaultRates::zero(), guard: true, max_retries: 0, backoff_ns: 0.0 }
+    }
+
+    /// The default chaos storm used by the CI gate: every fault injected
+    /// at this rate is repairable, and recovery is enabled, so a run must
+    /// finish with zero degraded requests and bit-identical tokens.
+    pub fn chaos(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            rates: FaultRates {
+                bitflip: 0.02,
+                meta_corrupt: 0.005,
+                transient: 0.02,
+                stall: 0.02,
+                stall_ns: 500.0,
+                outage_period_ns: 0.0,
+                outage_len_ns: 0.0,
+            },
+            guard: true,
+            max_retries: 3,
+            backoff_ns: 200.0,
+        }
+    }
+
+    /// Add periodic per-shard outage windows to the plan.
+    pub fn with_outages(mut self, period_ns: f64, len_ns: f64) -> Self {
+        self.rates.outage_period_ns = period_ns;
+        self.rates.outage_len_ns = len_ns;
+        self
+    }
+
+    /// True if no process can ever fire (guards may still be on).
+    pub fn quiescent(&self) -> bool {
+        let r = &self.rates;
+        r.bitflip == 0.0
+            && r.meta_corrupt == 0.0
+            && r.transient == 0.0
+            && r.stall == 0.0
+            && (r.outage_period_ns <= 0.0 || r.outage_len_ns <= 0.0)
+    }
+}
+
+/// Typed fault failures surfaced through `Completion::result`. The engine
+/// classifies device errors with `err.downcast_ref::<FaultError>()` to
+/// route them into the recovery ladder; any other device error still
+/// fails the step as before.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultError {
+    /// Transient failure with retries disabled (or exhausted with
+    /// `max_retries == 0`); `attempts` counts the tries charged.
+    Transient { attempts: u32 },
+    /// The owning shard was inside an outage window and deferral was
+    /// disabled (`max_retries == 0`).
+    ShardOutage,
+    /// Guarded block damaged beyond single-stream repair (or previously
+    /// declared dead). The stored data is gone; only failover or
+    /// degraded serving can satisfy the read.
+    Unrecoverable,
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultError::Transient { attempts } => {
+                write!(f, "transient device fault persisted across {attempts} attempt(s)")
+            }
+            FaultError::ShardOutage => write!(f, "shard unavailable: inside an outage window"),
+            FaultError::Unrecoverable => {
+                write!(f, "block unrecoverable: damage exceeds single-stream parity repair")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// Per-transaction fault accounting, folded into the device counters and
+/// surfaced on the `Completion` for observability.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultNote {
+    /// Faults injected into this transaction (flips, meta corruption,
+    /// transients, stalls, outage hits).
+    pub injected: u32,
+    /// Corruptions detected by guard verification.
+    pub detected: u32,
+    /// Corruptions repaired (parity rebuild or guard rebuild).
+    pub repaired: u32,
+    /// Retry attempts charged (transient process).
+    pub retries: u32,
+    /// Total model-time retry/backoff/outage delay charged, in ns.
+    pub retry_delay_ns: f64,
+    /// Transaction took the slow failover path (exhausted retries or
+    /// outage deferral) but still completed.
+    pub failed_over: u32,
+    /// Unrecoverable damage encountered.
+    pub unrecoverable: u32,
+}
+
+impl FaultNote {
+    /// True if anything at all happened to this transaction.
+    pub fn any(&self) -> bool {
+        self.injected != 0
+            || self.detected != 0
+            || self.repaired != 0
+            || self.retries != 0
+            || self.failed_over != 0
+            || self.unrecoverable != 0
+    }
+}
+
+/// Outcome of the device preflight pass for one transaction: what to
+/// charge and whether to fail. All byte charges are deferred into
+/// `execute_prepped` so they land inside that transaction's
+/// [`crate::cxl::TxnStats`] delta.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct FaultDirective {
+    /// Terminal failure (error completion), if any.
+    pub fail: Option<FaultError>,
+    /// Accounting for counters/events.
+    pub note: FaultNote,
+    /// Extra model-time service (stalls, backoff, outage deferral), ns.
+    pub extra_service_ns: f64,
+    /// Guard-verification bytes to charge as device DRAM reads.
+    pub verify_dram_read: u64,
+    /// Repair bytes to charge as device DRAM writes.
+    pub repair_dram_written: u64,
+}
+
+/// Verdict of a guard verification pass over a block's stored streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GuardVerdict {
+    /// All checksums match.
+    Clean,
+    /// Exactly one stream mismatched and was rebuilt from parity.
+    Repaired {
+        /// Index of the repaired stream.
+        stream: usize,
+        /// Bytes rewritten into the stream.
+        bytes: u64,
+    },
+    /// Two or more streams damaged — parity cannot reconstruct.
+    Unrecoverable,
+    /// The guard's own metadata failed its self-checksum.
+    MetaBad,
+}
+
+/// Per-stream checksums plus an XOR parity stream over one stored block.
+///
+/// For multi-stream blocks (bit-plane layouts) the parity stream is the
+/// byte-wise XOR of all streams padded to the longest; any single damaged
+/// stream is rebuilt as `parity ^ XOR(other streams)`. Single-stream
+/// blocks (raw / whole-block compressed) get a full replica as their
+/// "parity" — the honest cost of mirroring when there is nothing to
+/// parity against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockGuard {
+    sums: Vec<u64>,
+    lens: Vec<u32>,
+    parity: Vec<u8>,
+    meta_sum: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+impl BlockGuard {
+    /// Build a guard over the block's stored streams, in storage order.
+    pub fn build(streams: &[&[u8]]) -> Self {
+        let sums: Vec<u64> = streams.iter().map(|s| fnv1a(s)).collect();
+        let lens: Vec<u32> = streams.iter().map(|s| s.len() as u32).collect();
+        let max = streams.iter().map(|s| s.len()).max().unwrap_or(0);
+        let mut parity = vec![0u8; max];
+        for s in streams {
+            for (i, &b) in s.iter().enumerate() {
+                parity[i] ^= b;
+            }
+        }
+        let mut g = BlockGuard { sums, lens, parity, meta_sum: 0 };
+        g.meta_sum = g.compute_meta_sum();
+        g
+    }
+
+    fn compute_meta_sum(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for (&s, &l) in self.sums.iter().zip(self.lens.iter()) {
+            for b in s.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+            for b in l.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        }
+        h ^= fnv1a(&self.parity);
+        h.wrapping_mul(FNV_PRIME)
+    }
+
+    /// Guard metadata intact?
+    pub fn meta_ok(&self) -> bool {
+        self.meta_sum == self.compute_meta_sum()
+    }
+
+    /// Deterministically corrupt the guard metadata (fault injection).
+    pub fn corrupt_meta(&mut self) {
+        self.meta_sum ^= 1;
+    }
+
+    /// Number of streams covered.
+    pub fn n_streams(&self) -> usize {
+        self.sums.len()
+    }
+
+    /// Bytes this guard occupies in device DRAM: parity stream + per-
+    /// stream checksum/length records + self-checksum. Charged on write
+    /// and accounted in the device footprint.
+    pub fn stored_bytes(&self) -> u64 {
+        self.parity.len() as u64
+            + GUARD_STREAM_META_BYTES * self.sums.len() as u64
+            + GUARD_SELF_SUM_BYTES
+    }
+
+    /// Verify every stream; repair at most one damaged stream from
+    /// parity. `streams` must be the block's stored streams in the same
+    /// order as [`BlockGuard::build`] saw them.
+    pub fn verify_repair(&self, streams: &mut [&mut Vec<u8>]) -> GuardVerdict {
+        if !self.meta_ok() {
+            return GuardVerdict::MetaBad;
+        }
+        if streams.len() != self.sums.len() {
+            return GuardVerdict::Unrecoverable;
+        }
+        let mut bad: Option<usize> = None;
+        for (k, s) in streams.iter().enumerate() {
+            let ok = s.len() as u32 == self.lens[k] && fnv1a(s) == self.sums[k];
+            if !ok {
+                if bad.is_some() {
+                    return GuardVerdict::Unrecoverable;
+                }
+                bad = Some(k);
+            }
+        }
+        let Some(k) = bad else { return GuardVerdict::Clean };
+        // Rebuild stream k byte-wise: parity ^ XOR of every other stream.
+        let want = self.lens[k] as usize;
+        let mut fixed = vec![0u8; want];
+        for (i, f) in fixed.iter_mut().enumerate() {
+            let mut b = *self.parity.get(i).unwrap_or(&0);
+            for (j, s) in streams.iter().enumerate() {
+                if j != k {
+                    b ^= *s.get(i).unwrap_or(&0);
+                }
+            }
+            *f = b;
+        }
+        if fnv1a(&fixed) != self.sums[k] {
+            return GuardVerdict::Unrecoverable;
+        }
+        *streams[k] = fixed;
+        GuardVerdict::Repaired { stream: k, bytes: want as u64 }
+    }
+}
+
+/// Per-device fault runtime state: the installed plan, the monotonic
+/// transaction counter fault decisions key on (submission-queue ids
+/// restart per queue and cannot be used), the corruption-primitive
+/// round-robin epoch, the block guards, and the dead-block set.
+#[derive(Debug, Default)]
+pub(crate) struct FaultState {
+    pub plan: Option<FaultPlan>,
+    /// Monotonic count of transactions preflighted on this device.
+    pub txns: u64,
+    /// Round-robin cursor for the corruption primitive's stream choice.
+    pub epoch: u64,
+    /// Index of this device within its fleet (0 for a lone device).
+    pub shard: u64,
+    pub guards: HashMap<u64, BlockGuard>,
+    pub dead: HashSet<u64>,
+}
+
+impl FaultState {
+    /// Total guard bytes resident in device DRAM (footprint accounting).
+    pub fn guard_bytes(&self) -> u64 {
+        // lint: allow(map-iter) commutative sum over guard sizes
+        self.guards.values().map(|g| g.stored_bytes()).sum()
+    }
+}
+
+/// splitmix64-style avalanche mix of the plan seed with per-decision
+/// salts. Stateless: the same `(seed, salt, shard, n)` always yields the
+/// same value, which is what makes chaos runs replayable.
+pub(crate) fn mix(seed: u64, salt: u64, shard: u64, n: u64) -> u64 {
+    let mut z = seed
+        .wrapping_add(salt.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add(shard.wrapping_mul(0xBF58_476D_1CE4_E5B9))
+        .wrapping_add(n.wrapping_mul(0x94D0_49BB_1331_11EB));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Uniform `[0, 1)` roll from a mixed value.
+pub(crate) fn roll(seed: u64, salt: u64, shard: u64, n: u64) -> f64 {
+    (mix(seed, salt, shard, n) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Decision salts — distinct per process so processes are independent.
+pub(crate) mod salt {
+    pub const BITFLIP: u64 = 0x01;
+    pub const META: u64 = 0x02;
+    pub const TRANSIENT: u64 = 0x03;
+    pub const STALL: u64 = 0x04;
+    pub const OUTAGE_PHASE: u64 = 0x05;
+}
+
+/// Is model-time `now_ns` inside shard `shard`'s outage window? The
+/// square wave has period `outage_period_ns` with the first
+/// `outage_len_ns` of each period down; each shard's wave is phase-
+/// shifted by a seeded offset so shards never all fail at once. Returns
+/// the remaining window length when inside.
+pub(crate) fn outage_remaining_ns(plan: &FaultPlan, shard: u64, now_ns: f64) -> Option<f64> {
+    let period = plan.rates.outage_period_ns;
+    let len = plan.rates.outage_len_ns;
+    if period <= 0.0 || len <= 0.0 {
+        return None;
+    }
+    let phase_frac =
+        (mix(plan.seed, salt::OUTAGE_PHASE, shard, 0) >> 11) as f64 / (1u64 << 53) as f64;
+    let shifted = now_ns + phase_frac * period;
+    let into = shifted - (shifted / period).floor() * period;
+    if into < len {
+        Some(len - into)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn streams3() -> Vec<Vec<u8>> {
+        vec![vec![1, 2, 3, 4, 5], vec![9, 8, 7], vec![0xAA; 8]]
+    }
+
+    #[test]
+    fn mix_is_deterministic_and_salt_sensitive() {
+        assert_eq!(mix(42, 1, 0, 7), mix(42, 1, 0, 7));
+        assert_ne!(mix(42, 1, 0, 7), mix(42, 2, 0, 7));
+        assert_ne!(mix(42, 1, 0, 7), mix(42, 1, 1, 7));
+        assert_ne!(mix(42, 1, 0, 7), mix(43, 1, 0, 7));
+        let r = roll(42, 1, 0, 7);
+        assert!((0.0..1.0).contains(&r));
+    }
+
+    #[test]
+    fn guard_verifies_clean_streams() {
+        let owned = streams3();
+        let refs: Vec<&[u8]> = owned.iter().map(|v| v.as_slice()).collect();
+        let g = BlockGuard::build(&refs);
+        assert!(g.meta_ok());
+        assert_eq!(g.n_streams(), 3);
+        let mut s = streams3();
+        let mut muts: Vec<&mut Vec<u8>> = s.iter_mut().collect();
+        assert_eq!(g.verify_repair(&mut muts), GuardVerdict::Clean);
+    }
+
+    #[test]
+    fn guard_repairs_single_stream_bitflip_and_truncation() {
+        let owned = streams3();
+        let refs: Vec<&[u8]> = owned.iter().map(|v| v.as_slice()).collect();
+        let g = BlockGuard::build(&refs);
+
+        // Bit flip in stream 1.
+        let mut s = streams3();
+        s[1][0] ^= 0x40;
+        {
+            let mut muts: Vec<&mut Vec<u8>> = s.iter_mut().collect();
+            match g.verify_repair(&mut muts) {
+                GuardVerdict::Repaired { stream: 1, bytes: 3 } => {}
+                v => panic!("expected repair of stream 1, got {v:?}"),
+            }
+        }
+        assert_eq!(s, streams3());
+
+        // Truncation of stream 0 (the legacy corruption primitive).
+        let mut s = streams3();
+        s[0].truncate(2);
+        {
+            let mut muts: Vec<&mut Vec<u8>> = s.iter_mut().collect();
+            match g.verify_repair(&mut muts) {
+                GuardVerdict::Repaired { stream: 0, bytes: 5 } => {}
+                v => panic!("expected repair of stream 0, got {v:?}"),
+            }
+        }
+        assert_eq!(s, streams3());
+    }
+
+    #[test]
+    fn guard_reports_multi_stream_damage_as_unrecoverable() {
+        let owned = streams3();
+        let refs: Vec<&[u8]> = owned.iter().map(|v| v.as_slice()).collect();
+        let g = BlockGuard::build(&refs);
+        let mut s = streams3();
+        s[0][0] ^= 1;
+        s[2][3] ^= 1;
+        let mut muts: Vec<&mut Vec<u8>> = s.iter_mut().collect();
+        assert_eq!(g.verify_repair(&mut muts), GuardVerdict::Unrecoverable);
+    }
+
+    #[test]
+    fn guard_meta_corruption_is_detected() {
+        let owned = streams3();
+        let refs: Vec<&[u8]> = owned.iter().map(|v| v.as_slice()).collect();
+        let mut g = BlockGuard::build(&refs);
+        g.corrupt_meta();
+        assert!(!g.meta_ok());
+        let mut s = streams3();
+        let mut muts: Vec<&mut Vec<u8>> = s.iter_mut().collect();
+        assert_eq!(g.verify_repair(&mut muts), GuardVerdict::MetaBad);
+    }
+
+    #[test]
+    fn single_stream_guard_is_a_full_replica() {
+        let data = vec![7u8; 64];
+        let g = BlockGuard::build(&[&data]);
+        // parity == the stream itself, so repair works with zero peers
+        let mut s = vec![vec![0u8; 64]];
+        s[0][10] = 1;
+        let mut muts: Vec<&mut Vec<u8>> = s.iter_mut().collect();
+        match g.verify_repair(&mut muts) {
+            GuardVerdict::Repaired { stream: 0, bytes: 64 } => {}
+            v => panic!("expected replica repair, got {v:?}"),
+        }
+        assert_eq!(s[0], data);
+        assert_eq!(g.stored_bytes(), 64 + GUARD_STREAM_META_BYTES + GUARD_SELF_SUM_BYTES);
+    }
+
+    #[test]
+    fn outage_windows_are_periodic_and_phase_shifted() {
+        let plan = FaultPlan::disabled(9).with_outages(10_000.0, 1_000.0);
+        let mut down_hits = 0u32;
+        let mut up_hits = 0u32;
+        for k in 0..200 {
+            let t = k as f64 * 499.0;
+            if outage_remaining_ns(&plan, 0, t).is_some() {
+                down_hits += 1;
+            } else {
+                up_hits += 1;
+            }
+        }
+        // ~10% duty cycle: both states must be visited.
+        assert!(down_hits > 0 && up_hits > 0);
+        // Deterministic per (plan, shard, time).
+        assert_eq!(
+            outage_remaining_ns(&plan, 3, 12_345.0).is_some(),
+            outage_remaining_ns(&plan, 3, 12_345.0).is_some()
+        );
+        // Remaining time decreases inside a window.
+        let mut t = 0.0;
+        let mut seen: Option<(f64, f64)> = None;
+        while t < 40_000.0 {
+            if let Some(rem) = outage_remaining_ns(&plan, 1, t) {
+                if let Some((pt, prem)) = seen {
+                    if t - pt < 500.0 {
+                        assert!(rem < prem, "remaining must shrink within a window");
+                    }
+                }
+                seen = Some((t, rem));
+            } else {
+                seen = None;
+            }
+            t += 100.0;
+        }
+    }
+
+    #[test]
+    fn plan_constructors_have_expected_shapes() {
+        assert!(FaultPlan::disabled(1).quiescent());
+        assert!(!FaultPlan::disabled(1).guard);
+        assert!(FaultPlan::guarded(1).quiescent());
+        assert!(FaultPlan::guarded(1).guard);
+        let c = FaultPlan::chaos(1);
+        assert!(!c.quiescent());
+        assert!(c.guard && c.max_retries > 0);
+        assert!(!FaultPlan::disabled(1).with_outages(100.0, 10.0).quiescent());
+    }
+
+    #[test]
+    fn fault_error_displays_and_downcasts() {
+        let e = anyhow::Error::new(FaultError::Transient { attempts: 4 });
+        assert!(e.downcast_ref::<FaultError>().is_some());
+        assert!(e.to_string().contains("4 attempt"));
+        assert!(FaultError::ShardOutage.to_string().contains("outage"));
+        assert!(FaultError::Unrecoverable.to_string().contains("unrecoverable"));
+    }
+}

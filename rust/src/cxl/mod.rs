@@ -36,6 +36,11 @@
 //!   arbitration.
 //! * [`ppa`] — component-level area/power model (Table V).
 //! * [`link`] — CXL link transfer model (bandwidth ceilings).
+//! * [`faults`] — deterministic fault injection ([`FaultPlan`]) and the
+//!   self-healing layer: per-stream checksums + XOR parity
+//!   ([`faults::BlockGuard`]), bounded retry/backoff on model time,
+//!   shard outage windows, and the typed [`FaultError`] vocabulary the
+//!   engine's recovery ladder keys on (docs/FAULTS.md).
 
 pub mod device;
 pub mod txn;
@@ -46,8 +51,10 @@ pub mod controller;
 pub mod scheduler;
 pub mod ppa;
 pub mod link;
+pub mod faults;
 
 pub use device::{CxlDevice, Design, DeviceStats, DEFAULT_DECODE_CACHE_BLOCKS};
+pub use faults::{FaultError, FaultNote, FaultPlan, FaultRates};
 pub use metadata::{IndexCache, PlaneIndex};
 pub use alias::AliasSpace;
 pub use controller::{latency, nmc_latency, write_latency, LatencyBreakdown, LatencyCase};

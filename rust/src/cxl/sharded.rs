@@ -34,6 +34,7 @@ use crate::sim::ResourceTimeline;
 use crate::util::{LanePool, WorkerPool};
 
 use super::device::{build_job, CxlDevice, Design, DeviceStats, JobOut, Plan, PlanCtx, Prep};
+use super::faults::{FaultDirective, FaultPlan};
 use super::link::Link;
 use super::scheduler::round_robin_drain;
 use super::txn::{Completion, MemDevice, SubmissionQueue, Transaction, TxnId};
@@ -151,6 +152,30 @@ impl ShardedDevice {
         }
     }
 
+    /// Install one fault plan across the fleet: every shard gets the same
+    /// plan (same seed) but is salted by its shard index, so the shards'
+    /// fault processes are independent yet jointly deterministic
+    /// (docs/FAULTS.md).
+    pub fn install_fault_plan(&mut self, plan: FaultPlan) {
+        for (i, s) in self.shards.iter_mut().enumerate() {
+            s.set_fault_shard(i as u64);
+            s.install_fault_plan(plan);
+        }
+    }
+
+    /// Fault-layer corruption primitive, routed to the owning shard.
+    pub fn corrupt_block(&mut self, block_addr: u64) -> bool {
+        let idx = self.shard_of(block_addr);
+        self.shards[idx].corrupt_block(block_addr)
+    }
+
+    /// Chaos hook: kill the block on its owning shard (unrecoverable).
+    #[doc(hidden)]
+    pub fn test_kill_block(&mut self, block_addr: u64) -> bool {
+        let idx = self.shard_of(block_addr);
+        self.shards[idx].test_kill_block(block_addr)
+    }
+
     /// Aggregate `(hits, misses, live entries)` over all shard caches.
     pub fn decode_cache_stats(&self) -> (u64, u64, usize) {
         self.shards.iter().fold((0, 0, 0), |(h, m, l), s| {
@@ -203,9 +228,10 @@ impl ShardedDevice {
         id: TxnId,
         txn: Transaction,
         pre: Option<Prep>,
+        fd: FaultDirective,
         now_ns: f64,
     ) -> Completion {
-        let mut c = self.shards[idx].execute_prepped(id, txn, pre);
+        let mut c = self.shards[idx].execute_prepped(id, txn, pre, fd);
         c.shard = idx;
         // split-borrow: the shard's service + NMC timelines alongside the
         // fleet-shared link directions
@@ -286,8 +312,9 @@ impl MemDevice for ShardedDevice {
 
     fn execute_at(&mut self, id: TxnId, txn: Transaction, now_ns: f64) -> Completion {
         let idx = self.shard_of(txn.block_addr());
+        let fd = self.shards[idx].fault_preflight(&txn, now_ns);
         let pre = self.shards[idx].prep_single(&txn);
-        self.service_prepped(idx, id, txn, pre, now_ns)
+        self.service_prepped(idx, id, txn, pre, fd, now_ns)
     }
 
     fn drain_at(&mut self, sq: &mut SubmissionQueue, now_ns: f64) -> Vec<Completion> {
@@ -296,21 +323,36 @@ impl MemDevice for ShardedDevice {
         while let Some((id, txn)) = sq.pop() {
             queues[shard_of(txn.block_addr(), n)].push_back((id, txn));
         }
+        // Per-shard fault pre-pass in FIFO order, strictly before the
+        // fleet pool decodes any stored bytes (injection/repair mutate
+        // them). Each shard rolls off its own transaction counter, so
+        // the directives are independent of dispatch policy.
+        let mut fds: Vec<VecDeque<FaultDirective>> = queues
+            .iter()
+            .enumerate()
+            .map(|(i, q)| {
+                q.iter().map(|(_, t)| self.shards[i].fault_preflight(t, now_ns)).collect()
+            })
+            .collect();
         let mut preps = self.precompute(&queues);
-        let mut prep_for = |dev: &mut ShardedDevice, idx: usize| -> Option<Prep> {
-            // precompute built exactly one plan per queued txn; if that
-            // pairing ever broke, a `None` prep falls back to the serial
-            // decode path instead of panicking mid-drain
-            let (plan, out) = preps[idx].pop_front()?;
-            dev.shards[idx].prep_from(plan, out)
+        let mut prep_for = |dev: &mut ShardedDevice, idx: usize| -> (Option<Prep>, FaultDirective) {
+            // precompute built exactly one plan (and one directive) per
+            // queued txn; if that pairing ever broke, a `None` prep falls
+            // back to the serial decode path instead of panicking
+            let fd = fds[idx].pop_front().unwrap_or_default();
+            let pre = match preps[idx].pop_front() {
+                Some((plan, out)) => dev.shards[idx].prep_from(plan, out),
+                None => None,
+            };
+            (pre, fd)
         };
         match self.policy {
             DispatchPolicy::RoundRobin => round_robin_drain(queues)
                 .into_iter()
                 .map(|(id, txn)| {
                     let idx = shard_of(txn.block_addr(), n);
-                    let pre = prep_for(self, idx);
-                    self.service_prepped(idx, id, txn, pre, now_ns)
+                    let (pre, fd) = prep_for(self, idx);
+                    self.service_prepped(idx, id, txn, pre, fd, now_ns)
                 })
                 .collect(),
             DispatchPolicy::LeastLoaded => {
@@ -326,8 +368,8 @@ impl MemDevice for ShardedDevice {
                     // `next` only selects non-empty queues, so the pop
                     // cannot miss; `else` closes the loop rather than panic
                     let Some((id, txn)) = queues[i].pop_front() else { break };
-                    let pre = prep_for(self, i);
-                    out.push(self.service_prepped(i, id, txn, pre, now_ns));
+                    let (pre, fd) = prep_for(self, i);
+                    out.push(self.service_prepped(i, id, txn, pre, fd, now_ns));
                 }
                 out
             }
@@ -386,6 +428,18 @@ impl MemDevice for ShardedDevice {
 
     fn data_rates(&self) -> (f64, f64, f64) {
         (self.shard_ddr_gbps, self.link.gbps, self.shards[0].nmc_gbps)
+    }
+
+    fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.install_fault_plan(plan);
+    }
+
+    fn corrupt_block(&mut self, block_addr: u64) -> bool {
+        ShardedDevice::corrupt_block(self, block_addr)
+    }
+
+    fn test_kill_block(&mut self, block_addr: u64) -> bool {
+        ShardedDevice::test_kill_block(self, block_addr)
     }
 }
 

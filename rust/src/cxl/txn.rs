@@ -216,6 +216,15 @@ pub struct Completion {
     /// durably stored. Includes queueing on the device's resource
     /// timelines, so `ready_at_ns - issued_ns >= latency_ns()`.
     pub ready_at_ns: f64,
+    /// Extra model-time service charged by the fault layer (retry
+    /// backoff, stalls, outage deferral). Zero when no fault plan is
+    /// installed, which keeps [`Completion::schedule`] bit-identical to
+    /// the fault-free path (`x + 0.0 == x` for every non-negative `x`).
+    pub extra_service_ns: f64,
+    /// Fault-layer accounting for this transaction, `Some` only when
+    /// something was injected, detected, repaired, or retried
+    /// (docs/FAULTS.md).
+    pub fault: Option<crate::cxl::faults::FaultNote>,
 }
 
 impl Completion {
@@ -241,7 +250,8 @@ impl Completion {
     /// latency + DRAM bytes at the DDR bandwidth), then the matching link
     /// direction with fixed propagation. Fills `issued_ns`/`ready_at_ns`.
     pub(crate) fn schedule(&mut self, now_ns: f64, res: SchedResources<'_>) {
-        let service_ns = self.latency_ns() + self.stats.dram_bytes() as f64 / res.ddr_gbps;
+        let service_ns =
+            self.latency_ns() + self.stats.dram_bytes() as f64 / res.ddr_gbps + self.extra_service_ns;
         let timing = if self.is_read && self.stats.nmc_bytes_scanned > 0 {
             // NMC transaction: the device-side scan/reduce runs on the
             // per-shard NMC unit between DDR service and the (reduced)
@@ -450,6 +460,29 @@ pub trait MemDevice {
     /// Defaults match [`super::CxlDevice::new`]'s calibration.
     fn data_rates(&self) -> (f64, f64, f64) {
         (256.0, 512.0, 128.0)
+    }
+
+    /// Install a deterministic fault plan (docs/FAULTS.md). Devices
+    /// without fault support ignore it; [`super::CxlDevice`] and
+    /// [`super::ShardedDevice`] override this. Installing
+    /// `FaultPlan::disabled(..)` is bit-identical to never calling this.
+    fn set_fault_plan(&mut self, _plan: crate::cxl::faults::FaultPlan) {}
+
+    /// Deterministically corrupt one stored stream of a block: a
+    /// repairable single-bit flip when the block is guarded, the legacy
+    /// truncation otherwise. Returns `false` if the block has no
+    /// corruptible stream. Test/chaos hook.
+    fn corrupt_block(&mut self, _block_addr: u64) -> bool {
+        false
+    }
+
+    /// Mark a stored block dead: every read of it terminally fails with
+    /// [`crate::cxl::FaultError::Unrecoverable`] until it is rewritten.
+    /// Drives the engine's failover rung in chaos tests. Returns `false`
+    /// if the address is unknown or the device has no fault support.
+    #[doc(hidden)]
+    fn test_kill_block(&mut self, _block_addr: u64) -> bool {
+        false
     }
 }
 

@@ -75,6 +75,20 @@
 //! (`tests/sched_equiv.rs`); `benches/fig_sched_qos.rs` gates the
 //! QoS-vs-throughput tradeoff under overload. See `docs/SERVING.md`.
 //!
+//! The whole stack can run under seeded **fault injection**
+//! ([`cxl::FaultPlan`], installed via `EngineConfig::faults`): bit flips,
+//! metadata corruption, transient failures, stalls, and shard outages —
+//! all rolled from model time, all deterministic per seed. Recovery is
+//! layered: per-stream checksums + XOR parity repair damaged blocks on
+//! read, transients retry with exponential backoff, dead blocks fail
+//! over to a re-issued spill write, and a persistently dying page is
+//! served degraded (reduced precision, flagged on the
+//! [`coordinator::Response`]) rather than wedging the run. A guarded
+//! read returns bit-identical data or an error — never silently wrong
+//! data — and with no plan installed the substrate vanishes from every
+//! modeled number (`tests/chaos_equiv.rs`, `tests/failure_injection.rs`).
+//! See `docs/FAULTS.md`.
+//!
 //! Every serving run can be captured as a compact binary trace and
 //! replayed bit-identically: [`trace`] defines the varint/delta record
 //! format (`docs/TRACE_FORMAT.md`), the engine-side sink
@@ -110,7 +124,8 @@
 //!
 //! * [`cxl`] — transaction layer ([`cxl::txn`]), the device models
 //!   ([`cxl::device`], [`cxl::sharded`]), plane-index metadata, alias
-//!   decode, plane-aware + shard scheduling, pipeline latency, PPA.
+//!   decode, plane-aware + shard scheduling, pipeline latency, PPA, and
+//!   the fault-injection / self-healing substrate ([`cxl::faults`]).
 //! * [`bitplane`] — bit-plane disaggregation, the KV transform, plane
 //!   masks, guard-plane rounding, reconstruction (paper Eq. 1–8).
 //! * [`codec`] — LZ4 (from scratch), ZSTD wrapper, RLE, per-plane

@@ -170,6 +170,12 @@ pub fn diff(a: &Trace, b: &Trace) -> TraceDiff {
             b.events_dropped()
         ));
     }
+    // fault activity (all zero for fault-free / pre-v3 captures, so this
+    // axis is silent unless a chaos run actually diverged)
+    let (fa, fb) = (a.fault_totals(), b.fault_totals());
+    if fa != fb {
+        d.lines.push(format!("faults: {fa:?} vs {fb:?}"));
+    }
     d
 }
 
@@ -207,6 +213,19 @@ mod tests {
         let d = diff(&a, &b);
         assert!(!d.is_empty());
         assert!(d.report().contains("diverge at index 1"), "{}", d.report());
+    }
+
+    #[test]
+    fn fault_totals_divergence_is_reported() {
+        let faulty = |count: u64| {
+            let mut w = TraceWriter::new(&Json::Null);
+            w.record_submit(0, 5.0, SlaClass::Batch, 1, None, &[1]);
+            w.record_event(&EngineEvent::Repaired { at_ns: 1000.0, count });
+            Trace::parse(&w.finish()).unwrap()
+        };
+        let d = diff(&faulty(2), &faulty(3));
+        assert!(d.report().contains("faults:"), "{}", d.report());
+        assert!(diff(&faulty(2), &faulty(2)).is_empty());
     }
 
     #[test]

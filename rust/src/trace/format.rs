@@ -21,8 +21,10 @@ pub const MAGIC: [u8; 4] = *b"TRCX";
 
 /// Current format version. Writers always emit this; additive evolution
 /// bumps it (see `docs/TRACE_FORMAT.md` § Versioning). v2 added
-/// [`OP_NMC`] (near-memory offload counters).
-pub const VERSION: u8 = 2;
+/// [`OP_NMC`] (near-memory offload counters); v3 added [`OP_FAULT`]
+/// (fault-injection and recovery events) and the optional `faults`
+/// metadata field.
+pub const VERSION: u8 = 3;
 
 /// Oldest version the reader still decodes. Version-gated opcodes
 /// ([`OP_NMC`] needs v2) are a decode error when they appear in an older
@@ -49,8 +51,25 @@ pub const OP_EVENTS_DROPPED: u8 = 0x08;
 /// emitted on steps where some delta is nonzero, so nmc-off captures are
 /// byte-identical to v1 apart from the header version.
 pub const OP_NMC: u8 = 0x09;
+/// Fault-injection / recovery event (v3+). A subtype byte follows the
+/// timestamp delta: [`FAULT_INJECTED`], [`FAULT_RETRIED`],
+/// [`FAULT_REPAIRED`], [`FAULT_DEGRADED`]. Only emitted when a fault
+/// plan is installed, so fault-free captures are byte-identical to v2
+/// apart from the header version.
+pub const OP_FAULT: u8 = 0x0A;
 /// Stream terminator: varint count of preceding records.
 pub const OP_END: u8 = 0xFF;
+
+/// [`OP_FAULT`] subtype: `count` faults injected this step.
+pub const FAULT_INJECTED: u8 = 0;
+/// [`OP_FAULT`] subtype: `count` retries, total backoff `delay_ns`
+/// (nanosecond-rounded varint).
+pub const FAULT_RETRIED: u8 = 1;
+/// [`OP_FAULT`] subtype: `count` blocks repaired from checksums+parity.
+pub const FAULT_REPAIRED: u8 = 2;
+/// [`OP_FAULT`] subtype: request `seq` page `page` degraded to the
+/// reduced-precision host-copy path.
+pub const FAULT_DEGRADED: u8 = 3;
 
 use anyhow::{anyhow, bail, ensure, Result};
 

@@ -14,7 +14,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::codec::CodecPolicy;
 use crate::coordinator::{Engine, EngineConfig, SchedKind};
-use crate::cxl::Design;
+use crate::cxl::faults::FaultRates;
+use crate::cxl::{Design, FaultPlan};
 use crate::runtime::{MockBackend, ModelDims};
 use crate::util::json::Json;
 
@@ -82,6 +83,11 @@ pub struct CaptureMeta {
     /// Workload generator seed (informational; Submit records are the
     /// authoritative replay inputs).
     pub gen_seed: u64,
+    /// Fault plan the capture ran under (docs/FAULTS.md). Model-time-
+    /// and token-relevant, so replay must install the identical plan —
+    /// a chaos capture then replays bit-for-bit. Absent in pre-v3
+    /// captures: fault-free.
+    pub faults: Option<FaultPlan>,
 }
 
 impl CaptureMeta {
@@ -105,6 +111,7 @@ impl CaptureMeta {
             nmc_topk_frac: cfg.nmc_topk_frac,
             scenario: None,
             gen_seed: 0,
+            faults: cfg.faults,
         }
     }
 
@@ -147,6 +154,21 @@ impl CaptureMeta {
             None => o.insert("scenario".to_string(), Json::Null),
         };
         o.insert("gen_seed".to_string(), num(self.gen_seed as f64));
+        if let Some(p) = self.faults {
+            let mut f = BTreeMap::new();
+            f.insert("seed".to_string(), num(p.seed as f64));
+            f.insert("guard".to_string(), Json::Bool(p.guard));
+            f.insert("max_retries".to_string(), num(p.max_retries as f64));
+            f.insert("backoff_ns".to_string(), num(p.backoff_ns));
+            f.insert("bitflip".to_string(), num(p.rates.bitflip));
+            f.insert("meta_corrupt".to_string(), num(p.rates.meta_corrupt));
+            f.insert("transient".to_string(), num(p.rates.transient));
+            f.insert("stall".to_string(), num(p.rates.stall));
+            f.insert("stall_ns".to_string(), num(p.rates.stall_ns));
+            f.insert("outage_period_ns".to_string(), num(p.rates.outage_period_ns));
+            f.insert("outage_len_ns".to_string(), num(p.rates.outage_len_ns));
+            o.insert("faults".to_string(), Json::Obj(f));
+        }
         Json::Obj(o)
     }
 
@@ -171,6 +193,25 @@ impl CaptureMeta {
             Some(Json::Str(s)) => Some(s.clone()),
             Some(other) => bail!("meta: scenario must be a string, got {other}"),
         };
+        // absent in pre-v3 captures: fault-free
+        let faults = match j.get("faults") {
+            None | Some(Json::Null) => None,
+            Some(f) => Some(FaultPlan {
+                seed: req_f64(f, "seed")? as u64,
+                guard: matches!(f.get("guard"), Some(Json::Bool(true))),
+                max_retries: req_f64(f, "max_retries")? as u32,
+                backoff_ns: req_f64(f, "backoff_ns")?,
+                rates: FaultRates {
+                    bitflip: req_f64(f, "bitflip")?,
+                    meta_corrupt: req_f64(f, "meta_corrupt")?,
+                    transient: req_f64(f, "transient")?,
+                    stall: req_f64(f, "stall")?,
+                    stall_ns: req_f64(f, "stall_ns")?,
+                    outage_period_ns: req_f64(f, "outage_period_ns")?,
+                    outage_len_ns: req_f64(f, "outage_len_ns")?,
+                },
+            }),
+        };
         Ok(CaptureMeta {
             backend: j.req_str("backend")?.to_string(),
             backend_seed: req_f64(j, "backend_seed")? as u64,
@@ -190,6 +231,7 @@ impl CaptureMeta {
             nmc_topk_frac: j.get("nmc_topk_frac").and_then(|v| v.as_f64()).unwrap_or(0.125),
             scenario,
             gen_seed: req_f64(j, "gen_seed")? as u64,
+            faults,
         })
     }
 
@@ -207,6 +249,7 @@ impl CaptureMeta {
             prefill_ns_per_token: self.prefill_ns_per_token,
             nmc: self.nmc,
             nmc_topk_frac: self.nmc_topk_frac,
+            faults: self.faults,
             ..EngineConfig::default()
         }
     }
@@ -266,6 +309,23 @@ mod tests {
         let parsed = CaptureMeta::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert!(!parsed.nmc);
         assert_eq!(parsed.nmc_topk_frac, 0.125);
+    }
+
+    #[test]
+    fn fault_plan_roundtrips_and_defaults_to_none() {
+        let mut m = CaptureMeta::mock(crate::runtime::MockBackend::tiny().dims().clone(), 3);
+        m.faults = Some(FaultPlan::chaos(99).with_outages(50_000.0, 2_000.0));
+        let parsed = Json::parse(&m.to_json().to_string()).unwrap();
+        let m2 = CaptureMeta::from_json(&parsed).unwrap();
+        assert_eq!(m, m2);
+        assert_eq!(m2.engine_config().faults, m.faults);
+        // fault-free captures omit the field entirely; pre-v3 metas
+        // (which never had it) parse to None
+        let clean = CaptureMeta::mock(m.dims.clone(), 3);
+        let j = clean.to_json();
+        assert!(j.get("faults").is_none());
+        let c2 = CaptureMeta::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(c2.faults, None);
     }
 
     #[test]

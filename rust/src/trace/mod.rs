@@ -38,6 +38,6 @@ pub mod meta;
 
 pub use diff::{diff, TraceDiff};
 pub use meta::CaptureMeta;
-pub use reader::{SubmitRec, Trace, TraceRecord, TrafficTotals};
+pub use reader::{FaultTotals, SubmitRec, Trace, TraceRecord, TrafficTotals};
 pub use replay::resubmit;
 pub use writer::TraceWriter;

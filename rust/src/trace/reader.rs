@@ -53,6 +53,27 @@ pub enum TraceRecord {
     /// Near-memory offload counters (per-step deltas; v2+ streams only).
     Nmc { at_ns: f64, offloads: u64, nmc_bytes_scanned: u64, link_bytes_saved: u64 },
     EventsDropped { at_ns: f64, count: u64 },
+    /// Faults injected by the device tier this step (v3+ streams only).
+    FaultInjected { at_ns: f64, count: u64 },
+    /// Retries after transient faults; `delay_ns` is the total backoff
+    /// (nanosecond-rounded) charged on model time this step.
+    Retried { at_ns: f64, count: u64, delay_ns: u64 },
+    /// Blocks repaired in place from checksums + XOR parity this step.
+    Repaired { at_ns: f64, count: u64 },
+    /// One KV page of `seq` fell to the degraded (reduced-precision
+    /// host-copy) serving path.
+    Degraded { seq: u64, at_ns: f64, page: usize },
+}
+
+/// Run-level fault totals accumulated over all fault records
+/// ([`Trace::fault_totals`]).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct FaultTotals {
+    pub injected: u64,
+    pub retried: u64,
+    pub retry_delay_ns: u64,
+    pub repaired: u64,
+    pub degraded: u64,
 }
 
 /// Run-level traffic totals accumulated over all Step records.
@@ -217,6 +238,31 @@ impl Trace {
                     let at_ns = abs(&mut c)?;
                     records.push(TraceRecord::EventsDropped { at_ns, count: c.varint()? });
                 }
+                OP_FAULT => {
+                    ensure!(
+                        version >= 3,
+                        "opcode {OP_FAULT:#04x} (fault) is not valid in a version {version} trace"
+                    );
+                    let at_ns = abs(&mut c)?;
+                    let sub = c.u8()?;
+                    records.push(match sub {
+                        FAULT_INJECTED => {
+                            TraceRecord::FaultInjected { at_ns, count: c.varint()? }
+                        }
+                        FAULT_RETRIED => TraceRecord::Retried {
+                            at_ns,
+                            count: c.varint()?,
+                            delay_ns: c.varint()?,
+                        },
+                        FAULT_REPAIRED => TraceRecord::Repaired { at_ns, count: c.varint()? },
+                        FAULT_DEGRADED => TraceRecord::Degraded {
+                            seq: c.varint()?,
+                            at_ns,
+                            page: c.varint()? as usize,
+                        },
+                        b => bail!("bad fault subtype {b:#x}"),
+                    });
+                }
                 OP_END => {
                     let n = c.varint()?;
                     ensure!(
@@ -343,6 +389,25 @@ impl Trace {
         t
     }
 
+    /// Fault-activity totals over all fault records. All zero for pre-v3
+    /// traces and fault-free captures (which carry no fault records).
+    pub fn fault_totals(&self) -> FaultTotals {
+        let mut t = FaultTotals::default();
+        for r in &self.records {
+            match r {
+                TraceRecord::FaultInjected { count, .. } => t.injected += count,
+                TraceRecord::Retried { count, delay_ns, .. } => {
+                    t.retried += count;
+                    t.retry_delay_ns += delay_ns;
+                }
+                TraceRecord::Repaired { count, .. } => t.repaired += count,
+                TraceRecord::Degraded { .. } => t.degraded += 1,
+                _ => {}
+            }
+        }
+        t
+    }
+
     /// Total events shed by the engine's poll log during the capture
     /// (the sink itself never sheds; these markers mirror the log's loss).
     pub fn events_dropped(&self) -> u64 {
@@ -410,7 +475,13 @@ mod tests {
         w.record_event(&EngineEvent::Finished {
             seq: 0,
             at_ns: 6000.0,
-            response: Response { id: 0, tokens: vec![7, 8], prompt_len: 3, steps_in_flight: 2 },
+            response: Response {
+                id: 0,
+                tokens: vec![7, 8],
+                prompt_len: 3,
+                steps_in_flight: 2,
+                degraded: false,
+            },
         });
         w.finish()
     }
@@ -470,6 +541,49 @@ mod tests {
         v1[4] = 1;
         let err = Trace::parse(&v1).unwrap_err();
         assert!(err.to_string().contains("not valid in a version 1"), "{err}");
+    }
+
+    #[test]
+    fn fault_records_roundtrip_and_are_version_gated() {
+        let mut w = TraceWriter::new(&Json::Null);
+        w.record_event(&EngineEvent::FaultInjected { at_ns: 1000.0, count: 4 });
+        w.record_event(&EngineEvent::Retried { at_ns: 1000.0, count: 2, delay_ns: 600.4 });
+        w.record_event(&EngineEvent::Repaired { at_ns: 2000.0, count: 3 });
+        w.record_event(&EngineEvent::Degraded { seq: 7, at_ns: 3000.0, page: 2 });
+        let bytes = w.finish();
+        let t = Trace::parse(&bytes).unwrap();
+        assert_eq!(t.version, VERSION);
+        assert_eq!(t.records.len(), 4);
+        assert!(matches!(
+            t.records[0],
+            TraceRecord::FaultInjected { count: 4, at_ns } if at_ns == 1000.0
+        ));
+        // delay rounds to whole ns
+        assert!(matches!(t.records[1], TraceRecord::Retried { count: 2, delay_ns: 600, .. }));
+        assert!(matches!(
+            t.records[3],
+            TraceRecord::Degraded { seq: 7, page: 2, at_ns } if at_ns == 3000.0
+        ));
+        let totals = t.fault_totals();
+        assert_eq!(
+            totals,
+            FaultTotals {
+                injected: 4,
+                retried: 2,
+                retry_delay_ns: 600,
+                repaired: 3,
+                degraded: 1
+            }
+        );
+        // the same bytes relabeled v2 must fail to decode: OP_FAULT is v3-only
+        let mut v2 = bytes.clone();
+        v2[4] = 2;
+        let err = Trace::parse(&v2).unwrap_err();
+        assert!(err.to_string().contains("not valid in a version 2"), "{err}");
+        // truncation inside a fault record is still an error everywhere
+        for cut in 0..bytes.len() {
+            assert!(Trace::parse(&bytes[..cut]).is_err(), "cut at {cut} must not parse");
+        }
     }
 
     #[test]

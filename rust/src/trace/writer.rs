@@ -162,6 +162,32 @@ impl TraceWriter {
                 put_varint(&mut self.buf, dt);
                 put_varint(&mut self.buf, *count);
             }
+            EngineEvent::FaultInjected { count, .. } => {
+                self.buf.push(OP_FAULT);
+                put_varint(&mut self.buf, dt);
+                self.buf.push(FAULT_INJECTED);
+                put_varint(&mut self.buf, *count);
+            }
+            EngineEvent::Retried { count, delay_ns, .. } => {
+                self.buf.push(OP_FAULT);
+                put_varint(&mut self.buf, dt);
+                self.buf.push(FAULT_RETRIED);
+                put_varint(&mut self.buf, *count);
+                put_varint(&mut self.buf, delay_ns.round() as u64);
+            }
+            EngineEvent::Repaired { count, .. } => {
+                self.buf.push(OP_FAULT);
+                put_varint(&mut self.buf, dt);
+                self.buf.push(FAULT_REPAIRED);
+                put_varint(&mut self.buf, *count);
+            }
+            EngineEvent::Degraded { seq, page, .. } => {
+                self.buf.push(OP_FAULT);
+                put_varint(&mut self.buf, dt);
+                self.buf.push(FAULT_DEGRADED);
+                put_varint(&mut self.buf, *seq);
+                put_varint(&mut self.buf, *page as u64);
+            }
         }
         self.n_records += 1;
     }
@@ -292,7 +318,13 @@ mod tests {
         f.record_event(&EngineEvent::Finished {
             seq: 3,
             at_ns: 5.0,
-            response: Response { id: 3, tokens: vec![1, 2], prompt_len: 7, steps_in_flight: 2 },
+            response: Response {
+                id: 3,
+                tokens: vec![1, 2],
+                prompt_len: 7,
+                steps_in_flight: 2,
+                degraded: false,
+            },
         });
         assert_eq!(f.records(), 1);
     }

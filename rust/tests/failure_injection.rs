@@ -120,6 +120,140 @@ fn device_read_after_partial_overwrite_is_consistent() {
 }
 
 #[test]
+fn guarded_devices_detect_or_repair_across_the_full_matrix() {
+    // the self-healing contract, full-stack: for every design × shard
+    // count × codec-lane count × decode-cache setting, damaging a
+    // guarded block and reading it back must either return bit-identical
+    // data (repaired from checksums + parity) or an error — never
+    // silently wrong data
+    use trace_cxl::cxl::{
+        CxlDevice, Design, FaultPlan, MemDevice, ShardedDevice, Transaction,
+        DEFAULT_DECODE_CACHE_BLOCKS,
+    };
+    let mut rng = Rng::new(907);
+    let kv = KvGen::default_for(32).generate(&mut rng, 32);
+    let addrs = [0x0u64, 0x1000, 0x2000, 0x3000];
+    for design in [Design::Plain, Design::GComp, Design::Trace] {
+        for shards in [1usize, 4] {
+            for lanes in [1usize, 4] {
+                for cache in [0usize, DEFAULT_DECODE_CACHE_BLOCKS] {
+                    let tag = format!("{design:?}/s{shards}/l{lanes}/c{cache}");
+                    let mut dev: Box<dyn MemDevice> = if shards > 1 {
+                        let mut d = ShardedDevice::new(shards, design, CodecPolicy::FastBest);
+                        d.set_codec_lanes(lanes);
+                        d.set_decode_cache(cache);
+                        Box::new(d)
+                    } else {
+                        let mut d = CxlDevice::new(design, CodecPolicy::FastBest);
+                        d.set_codec_lanes(lanes);
+                        d.set_decode_cache(cache);
+                        Box::new(d)
+                    };
+                    dev.set_fault_plan(FaultPlan::guarded(11));
+                    for &a in &addrs {
+                        dev.submit_one(Transaction::WriteKv {
+                            block_addr: a,
+                            words: kv.clone(),
+                            window: KvWindow::new(32, 32),
+                        })
+                        .unwrap();
+                    }
+                    for &a in &addrs {
+                        assert!(dev.corrupt_block(a), "{tag}: block {a:#x} not corruptible");
+                        match dev.submit_one(Transaction::ReadFull { block_addr: a }) {
+                            Ok(p) => assert_eq!(
+                                p.into_words().unwrap(),
+                                kv,
+                                "{tag}: {a:#x} repaired read must be bit-identical"
+                            ),
+                            Err(_) => {} // loud detection: acceptable
+                        }
+                    }
+                    let st = dev.stats();
+                    assert!(
+                        st.faults_detected >= addrs.len() as u64,
+                        "{tag}: every damaged read must be detected (got {})",
+                        st.faults_detected
+                    );
+                    assert_eq!(
+                        st.faults_detected,
+                        st.faults_repaired + st.faults_unrecoverable,
+                        "{tag}: every detection must resolve to repair or a loud error"
+                    );
+                    // a killed (multi-stream loss) block fails loudly and
+                    // stays failed until a rewrite heals it
+                    assert!(dev.test_kill_block(addrs[0]), "{tag}: kill");
+                    assert!(
+                        dev.submit_one(Transaction::ReadFull { block_addr: addrs[0] }).is_err(),
+                        "{tag}: dead block must error, not fabricate data"
+                    );
+                    dev.submit_one(Transaction::WriteKv {
+                        block_addr: addrs[0],
+                        words: kv.clone(),
+                        window: KvWindow::new(32, 32),
+                    })
+                    .unwrap();
+                    let healed = dev
+                        .submit_one(Transaction::ReadFull { block_addr: addrs[0] })
+                        .unwrap()
+                        .into_words()
+                        .unwrap();
+                    assert_eq!(healed, kv, "{tag}: rewrite must heal the dead block");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn error_completions_occupy_the_controller_like_successes() {
+    // an error completion must be scheduled on the same resource
+    // timelines as a success: same reservation count, a real (nonzero)
+    // ready-at time — failed transactions occupy the controller too
+    use trace_cxl::cxl::{CxlDevice, Design, FaultPlan, MemDevice, SubmissionQueue, Transaction};
+    let mut rng = Rng::new(908);
+    let kv = KvGen::default_for(32).generate(&mut rng, 32);
+    let build = || {
+        let mut d = CxlDevice::new(Design::Trace, CodecPolicy::FastBest);
+        d.install_fault_plan(FaultPlan::guarded(5));
+        d.submit_one(Transaction::WriteKv {
+            block_addr: 0x0,
+            words: kv.clone(),
+            window: KvWindow::new(32, 32),
+        })
+        .unwrap();
+        d
+    };
+    // success path
+    let mut ok_dev = build();
+    let base_res = ok_dev.service_tl.reservations();
+    let mut sq = SubmissionQueue::new();
+    sq.submit(Transaction::ReadFull { block_addr: 0x0 });
+    let ok = ok_dev.drain_at(&mut sq, 1000.0).pop().unwrap();
+    assert!(ok.result.is_ok());
+    // error path: same read, but the block is dead
+    let mut err_dev = build();
+    err_dev.test_kill_block(0x0);
+    let mut sq = SubmissionQueue::new();
+    sq.submit(Transaction::ReadFull { block_addr: 0x0 });
+    let err = err_dev.drain_at(&mut sq, 1000.0).pop().unwrap();
+    assert!(err.result.is_err());
+    assert_eq!(
+        err_dev.service_tl.reservations() - base_res,
+        ok_dev.service_tl.reservations() - base_res,
+        "error completions must reserve the controller timeline like successes"
+    );
+    assert!(err.issued_ns >= 1000.0, "error completion carries a real issue time");
+    assert!(
+        err.ready_at_ns > err.issued_ns,
+        "error completion carries a timeline-derived ready-at time"
+    );
+    // both occupy the device for model time; the error still charges the
+    // metadata + pipeline path even though no data moved
+    assert!(err_dev.service_tl.busy_ns() > 0.0);
+}
+
+#[test]
 fn failed_transactions_complete_as_errors_without_poisoning_the_batch() {
     // a missing block mid-batch must yield an error completion while the
     // rest of the submission drains normally — never a panic, never

@@ -180,7 +180,7 @@ fn nmc_capture_replays_bit_identically_and_records_offloads() {
 
     let (bytes, fp) = capture(&meta);
     let trace = Trace::parse(&bytes).unwrap();
-    assert_eq!(trace.version, 2);
+    assert_eq!(trace.version, 3);
     let parsed = CaptureMeta::from_json(&trace.meta).unwrap();
     assert!(parsed.nmc, "nmc flag must survive the meta header");
     let (offloads, scanned, saved) = trace.nmc_totals();
